@@ -1,0 +1,117 @@
+//! Ablation A: the mixed quantization rule vs forcing one scheme
+//! everywhere (paper §III-A's design choice).
+//!
+//! Mixed must (a) never lose accuracy vs the forced schemes — every
+//! layer still meets the half-step bound — and (b) match or beat
+//! all-asymmetric compressibility while avoiding all-symmetric's
+//! accuracy blowup on zero-straddling layers.
+
+use entrollm::entropy::shannon_entropy;
+use entrollm::huffman::{CodeSpec, FreqTable};
+use entrollm::metrics::Table;
+use entrollm::quant::{dequantize, quantize_forced, quantize_mixed, BitWidth, Scheme};
+use entrollm::rng::Rng;
+use entrollm::runtime::load_weights_bin;
+use entrollm::tensor::TensorF32;
+
+fn synth_layers(seed: u64) -> Vec<(String, TensorF32)> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for i in 0..24 {
+        let n = 4096 + rng.below(8192);
+        // A third of layers single-signed (gates/biases in real nets).
+        let data: Vec<f32> = if i % 3 == 0 {
+            (0..n).map(|_| rng.range_f32(0.0, 0.12)).collect()
+        } else {
+            rng.gaussian_vec(n, 0.0, 0.04)
+        };
+        out.push((format!("l{i}"), TensorF32::new(vec![n], data).unwrap()));
+    }
+    out
+}
+
+fn evaluate(
+    layers: &[(String, TensorF32)],
+    bits: BitWidth,
+    scheme: Option<Scheme>,
+) -> (f64, f64, f64) {
+    let mut freq = FreqTable::new();
+    let mut worst_rel_err = 0.0f64;
+    for (_, w) in layers {
+        let q = match scheme {
+            None => quantize_mixed(w, bits),
+            Some(s) => quantize_forced(w, bits, s),
+        };
+        freq.add_symbols(q.symbols.data());
+        let dq = dequantize(&q);
+        let (mn, mx) = w.min_max().unwrap();
+        let range = (mx - mn).max(1e-9);
+        for (a, b) in w.data().iter().zip(dq.data()) {
+            worst_rel_err = worst_rel_err.max(((a - b).abs() / range) as f64);
+        }
+    }
+    let spec = CodeSpec::build(&freq).unwrap();
+    (
+        shannon_entropy(freq.counts()),
+        spec.expected_bits(&freq),
+        worst_rel_err,
+    )
+}
+
+fn main() {
+    let mut table = Table::new(
+        "Ablation A: mixed vs forced quantization schemes",
+        &["weights", "bits", "scheme", "entropy", "eff. bits", "worst err (% of range)"],
+    );
+
+    let mut run_set = |set_name: &str, layers: &[(String, TensorF32)]| {
+        for bits in [BitWidth::U8, BitWidth::U4] {
+            let mut results = Vec::new();
+            for (scheme, name) in [
+                (None, "mixed (paper)"),
+                (Some(Scheme::SymmetricUnsigned), "all-symmetric"),
+                (Some(Scheme::Asymmetric), "all-asymmetric"),
+            ] {
+                let (h, eff, err) = evaluate(layers, bits, scheme);
+                table.row(&[
+                    set_name.into(),
+                    bits.to_string(),
+                    name.into(),
+                    format!("{h:.3}"),
+                    format!("{eff:.3}"),
+                    format!("{:.2}%", err * 100.0),
+                ]);
+                results.push((name, eff, err));
+            }
+            let (_, _, mixed_err) = (results[0].0, results[0].1, results[0].2);
+            let sym_err = results[1].2;
+            let asym_eff = results[2].1;
+            let mixed_eff = results[0].1;
+            // Mixed accuracy must match asymmetric-level accuracy...
+            assert!(
+                mixed_err <= results[2].2 * 1.5 + 1e-3,
+                "mixed err {mixed_err} vs asym {}",
+                results[2].2
+            );
+            // ...and all-symmetric on zero-straddling layers wastes half
+            // the grid (err >= mixed).
+            assert!(sym_err >= mixed_err - 1e-9, "symmetric can't beat mixed accuracy");
+            // Compressibility: mixed within a small margin of the best.
+            assert!(
+                mixed_eff <= asym_eff + 0.25,
+                "mixed eff {mixed_eff} vs asym {asym_eff}"
+            );
+        }
+    };
+
+    run_set("synthetic (24 layers)", &synth_layers(0xAB1A));
+    if let Ok(ws) = load_weights_bin("artifacts/weights.bin") {
+        let big: Vec<_> = ws.into_iter().filter(|(_, t)| t.numel() > 1000).collect();
+        run_set("trained tiny-LM", &big);
+    } else {
+        eprintln!("(artifacts missing — trained row skipped)");
+    }
+
+    table.emit("ablation_quant");
+    println!("ablation A OK: mixed keeps asymmetric accuracy at (near-)best compressibility");
+}

@@ -1,0 +1,165 @@
+//! Hot-path microbenchmarks — the §Perf working set.
+//!
+//! Covers every stage a request touches: Huffman LUT decode (the edge
+//! bring-up cost), encode, quantization, bit I/O, parallel decode
+//! scaling, and — when artifacts exist — the PJRT prefill/decode steps
+//! and a full engine round trip. Numbers land in bench_results/ and
+//! EXPERIMENTS.md §Perf tracks before/after for each optimization.
+
+use entrollm::bench::{fmt_secs, Bench};
+use entrollm::bitio::{BitReader, BitWriter};
+use entrollm::coordinator::{Backend, Engine, EngineConfig, Request};
+use entrollm::corpus::ByteTokenizer;
+use entrollm::decode::ParallelDecoder;
+use entrollm::huffman::{encode_with_own_code, Decoder, FreqTable};
+use entrollm::metrics::Table;
+use entrollm::pipeline::{build_elm, load_backend, Flavor};
+use entrollm::quant::{quantize_mixed, BitWidth};
+use entrollm::rng::Rng;
+use entrollm::tensor::TensorF32;
+
+fn main() {
+    let bench = Bench::new();
+    let mut table = Table::new("Hot-path microbenchmarks", &["op", "rate", "unit"]);
+    let n = 1_000_000usize;
+    let mut rng = Rng::new(0x407);
+    let w = TensorF32::new(vec![n], rng.gaussian_vec(n, 0.0, 0.04)).unwrap();
+
+    // Quantization throughput.
+    let stats = bench.run("quantize_mixed u8 (1M)", || {
+        std::hint::black_box(quantize_mixed(&w, BitWidth::U8));
+    });
+    table.row(&[
+        "quantize_mixed u8".into(),
+        format!("{:.1}", n as f64 / stats.median.as_secs_f64() / 1e6),
+        "Mparam/s".into(),
+    ]);
+
+    let syms = quantize_mixed(&w, BitWidth::U8).symbols.into_data();
+    let freq = FreqTable::from_symbols(&syms);
+    let (spec, enc) = encode_with_own_code(&syms).unwrap();
+    let _ = freq;
+
+    // Huffman encode.
+    let encoder = entrollm::huffman::Encoder::new(&spec);
+    let stats = bench.run("huffman encode (1M syms)", || {
+        std::hint::black_box(encoder.encode_to_vec(&syms).unwrap());
+    });
+    table.row(&[
+        "huffman encode".into(),
+        format!("{:.1}", n as f64 / stats.median.as_secs_f64() / 1e6),
+        "Msym/s".into(),
+    ]);
+
+    // Huffman LUT decode — THE edge hot path.
+    let dec = Decoder::new(&spec).unwrap();
+    let mut out = vec![0u8; syms.len()];
+    let stats = bench.run("huffman LUT decode (1M syms)", || {
+        dec.decode_into(&enc, &mut out).unwrap();
+    });
+    let serial_rate = n as f64 / stats.median.as_secs_f64() / 1e6;
+    table.row(&[
+        "huffman LUT decode".into(),
+        format!("{serial_rate:.1}"),
+        "Msym/s".into(),
+    ]);
+
+    // Bit-serial oracle for comparison (how much the LUT buys).
+    let slow = Bench {
+        measure_for: std::time::Duration::from_millis(400),
+        ..Bench::new()
+    };
+    let stats = slow.run("huffman bit-serial decode (1M syms)", || {
+        std::hint::black_box(dec.decode_bit_serial(&enc, syms.len()).unwrap());
+    });
+    table.row(&[
+        "huffman bit-serial decode".into(),
+        format!("{:.1}", n as f64 / stats.median.as_secs_f64() / 1e6),
+        "Msym/s".into(),
+    ]);
+
+    // Raw BitReader consumption rate.
+    let mut writer = BitWriter::new();
+    for i in 0..n {
+        writer.write_bits((i % 64) as u64, 6);
+    }
+    let bits = writer.into_bytes();
+    let stats = bench.run("bitreader 6-bit fields (1M)", || {
+        let mut r = BitReader::new(&bits);
+        let mut acc = 0u32;
+        for _ in 0..n {
+            acc = acc.wrapping_add(r.read_bits(6).unwrap());
+        }
+        std::hint::black_box(acc);
+    });
+    table.row(&[
+        "bitreader read_bits(6)".into(),
+        format!("{:.1}", n as f64 / stats.median.as_secs_f64() / 1e6),
+        "Mfield/s".into(),
+    ]);
+
+    // Parallel decode on the trained model (whole-model wall time).
+    if std::path::Path::new("artifacts/weights.bin").exists() {
+        let (model, _) = build_elm("artifacts", BitWidth::U8).unwrap();
+        for threads in [1usize, 4] {
+            let pd = ParallelDecoder::new(threads);
+            let (_, st) = pd.decode_model(&model).unwrap();
+            table.row(&[
+                format!("parallel decode trained model (T={threads})"),
+                format!("{:.1}", st.symbols_per_sec() / 1e6),
+                "Msym/s".into(),
+            ]);
+        }
+
+        // PJRT phases on the real engine.
+        let (backend, _) = load_backend("artifacts", Flavor::U8, 4).unwrap();
+        let rt_prompt = ByteTokenizer.encode("the model runs on the edge");
+        let (_, d) = bench.once("pjrt prefill (cold)", || {
+            backend.runtime().prefill(&rt_prompt).unwrap()
+        });
+        table.row(&["pjrt prefill cold".into(), fmt_secs(d.as_secs_f64()), "per prompt".into()]);
+        let slow = Bench {
+            measure_for: std::time::Duration::from_secs(2),
+            warmup_for: std::time::Duration::from_millis(300),
+            batches: 7,
+        };
+        let stats = slow.run("pjrt prefill (warm)", || {
+            std::hint::black_box(backend.runtime().prefill(&rt_prompt).unwrap());
+        });
+        table.row(&[
+            "pjrt prefill warm".into(),
+            fmt_secs(stats.median.as_secs_f64()),
+            "per prompt".into(),
+        ]);
+
+        // Engine: tokens/sec at full occupancy.
+        let b = backend.cfg().batch;
+        let mut engine = Engine::new(backend, EngineConfig::default());
+        for i in 0..b as u64 {
+            engine
+                .submit(Request::greedy(i, ByteTokenizer.encode("the edge model"), 48))
+                .unwrap();
+        }
+        let t0 = std::time::Instant::now();
+        let rs = engine.run_to_completion(10_000).unwrap();
+        let wall = t0.elapsed();
+        let toks: usize = rs.iter().map(|r| r.tokens.len()).sum();
+        table.row(&[
+            format!("engine tokens/s (B={b} full occupancy)"),
+            format!("{:.1}", toks as f64 / wall.as_secs_f64()),
+            "tok/s".into(),
+        ]);
+        table.row(&[
+            "engine decode step".into(),
+            fmt_secs(
+                engine.stats().decode_lat.mean().as_secs_f64(),
+            ),
+            "per step".into(),
+        ]);
+    } else {
+        eprintln!("(artifacts missing — PJRT/engine rows skipped)");
+    }
+
+    table.emit("hotpath");
+    assert!(serial_rate > 20.0, "LUT decoder below 20 Msym/s — regression");
+}

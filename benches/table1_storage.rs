@@ -1,0 +1,134 @@
+//! Table I (storage rows): effective bits for uint8/uint4 after mixed
+//! quantization + model-global Huffman coding.
+//!
+//! Three synthetic "model families" stand in for smolLM/phi3/mistral
+//! (scaled-down layer counts, same Gaussian weight statistics — see
+//! DESIGN.md §Substitutions #1), plus the *real trained* tiny-LM when
+//! artifacts exist. Paper reference bands: uint8 → 5.58–5.92 effective
+//! bits; uint4 → 1.39–1.62.
+
+use entrollm::bench::fmt_bytes;
+use entrollm::metrics::Table;
+use entrollm::pipeline::build_elm;
+use entrollm::quant::BitWidth;
+use entrollm::rng::Rng;
+use entrollm::store::compress;
+use entrollm::tensor::TensorF32;
+
+/// A scaled-down stand-in for one of the paper's model families.
+///
+/// The decisive statistic for effective bits is the **outlier-to-σ
+/// ratio**: per-tensor max-abs quantization maps `[−max, max]` onto the
+/// grid, so a Gaussian bulk with `max ≈ k·σ` occupies `≈ levels/(2k)`
+/// grid steps and pools to entropy `≈ log2(levels·σ/(2·max)·√(2πe))`.
+/// Trained LLM weights have heavy tails with `k ≈ 8–15` (the very
+/// phenomenon AWQ/SpQR target), which is what puts the paper's models
+/// at 5.58–5.92 effective bits (uint8) and 1.39–1.62 (uint4).
+struct Family {
+    name: &'static str,
+    dim: usize,
+    layers: usize,
+    /// Weight std in float units.
+    std: f32,
+    /// Outlier magnitude in σ units (`k` above).
+    outlier_sigma: f32,
+}
+
+const FAMILIES: &[Family] = &[
+    Family { name: "smolLM-like (1.7B @ 1/2048)", dim: 96, layers: 6, std: 0.050, outlier_sigma: 9.0 },
+    Family { name: "phi3-like (3.8B @ 1/2048)", dim: 128, layers: 8, std: 0.035, outlier_sigma: 12.0 },
+    Family { name: "mistral-like (7B @ 1/2048)", dim: 160, layers: 10, std: 0.045, outlier_sigma: 10.0 },
+];
+
+fn synth_layers(f: &Family, seed: u64) -> Vec<(String, TensorF32)> {
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    for i in 0..f.layers {
+        for (kind, rows, cols) in [
+            ("wq", f.dim, f.dim),
+            ("wk", f.dim, f.dim),
+            ("wv", f.dim, f.dim),
+            ("wo", f.dim, f.dim),
+            ("w_in", f.dim, 4 * f.dim),
+            ("w_out", 4 * f.dim, f.dim),
+        ] {
+            let n = rows * cols;
+            // Per-layer mean jitter keeps some layers single-signed.
+            let mean = if (i + kind.len()) % 5 == 0 { 2.5 * f.std } else { 0.0 };
+            let mut data = rng.gaussian_vec(n, mean, f.std);
+            // Heavy tail: ~0.1% of entries are ±k·σ outliers (see the
+            // Family docs — this is what sets the paper's bit bands).
+            let n_outliers = (n / 1000).max(2);
+            for _ in 0..n_outliers {
+                let idx = rng.below(n);
+                let sign = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+                data[idx] = mean + sign * f.outlier_sigma * f.std;
+            }
+            layers.push((
+                format!("blocks.{i}.{kind}"),
+                TensorF32::new(vec![rows, cols], data).unwrap(),
+            ));
+        }
+    }
+    layers
+}
+
+fn main() {
+    let mut table = Table::new(
+        "Table I (storage): effective bits per weight",
+        &[
+            "model", "params", "fp16", "uint8 fixed", "uint8 eff.bits", "uint4 fixed",
+            "uint4 eff.bits", "u8 saving", "u4 saving",
+        ],
+    );
+
+    let mut add_row = |name: &str, layers: &[(String, TensorF32)]| {
+        let (_, r8) = compress(layers, BitWidth::U8).unwrap();
+        let (_, r4) = compress(layers, BitWidth::U4).unwrap();
+        table.row(&[
+            name.to_string(),
+            format!("{}", r8.n_params),
+            fmt_bytes(r8.fp16_bytes),
+            fmt_bytes(r8.fixed_bytes),
+            format!("{:.2}", r8.effective_bits),
+            fmt_bytes(r4.fixed_bytes),
+            format!("{:.2}", r4.effective_bits),
+            format!("{:.0}%", 100.0 * (1.0 - r8.effective_bits / 8.0)),
+            format!("{:.0}%", 100.0 * (1.0 - r4.effective_bits / 4.0)),
+        ]);
+        // Paper-shape assertions: entropy coding must save, and save
+        // relatively more at 4-bit.
+        assert!(r8.effective_bits < 8.0 && r4.effective_bits < 4.0);
+        assert!(
+            (1.0 - r4.effective_bits / 4.0) > (1.0 - r8.effective_bits / 8.0),
+            "uint4 must save relatively more (paper: 65% vs 30%)"
+        );
+    };
+
+    for f in FAMILIES {
+        let layers = synth_layers(f, 0x7AB1E1);
+        add_row(f.name, &layers);
+    }
+
+    // The real trained model, when artifacts exist.
+    if std::path::Path::new("artifacts/weights.bin").exists() {
+        let (_, r8) = build_elm("artifacts", BitWidth::U8).unwrap();
+        let (_, r4) = build_elm("artifacts", BitWidth::U4).unwrap();
+        table.row(&[
+            "tiny-LM (trained, 0.8M)".into(),
+            format!("{}", r8.n_params),
+            fmt_bytes(r8.fp16_bytes),
+            fmt_bytes(r8.fixed_bytes),
+            format!("{:.2}", r8.effective_bits),
+            fmt_bytes(r4.fixed_bytes),
+            format!("{:.2}", r4.effective_bits),
+            format!("{:.0}%", 100.0 * (1.0 - r8.effective_bits / 8.0)),
+            format!("{:.0}%", 100.0 * (1.0 - r4.effective_bits / 4.0)),
+        ]);
+    } else {
+        eprintln!("(artifacts missing — trained-model row skipped; run `make artifacts`)");
+    }
+
+    table.emit("table1_storage");
+    println!("paper reference: uint8 effective bits 5.58-5.92 | uint4 1.39-1.62");
+}

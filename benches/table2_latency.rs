@@ -1,0 +1,133 @@
+//! Table II: latency breakdown on the Jetson P3450 cost model with
+//! measured decoder inputs, plus the §IV-D theoretical-vs-achieved
+//! speedup accounting and a real thread-scaling sweep of the parallel
+//! decoder.
+
+use entrollm::bench::fmt_secs;
+use entrollm::decode::{ParallelDecoder, Strategy};
+use entrollm::device::{table2_workloads, LatencyModel, JETSON_P3450};
+use entrollm::metrics::Table;
+use entrollm::pipeline::build_elm;
+use entrollm::quant::BitWidth;
+
+/// phi3-mini-shaped segment byte sizes at a given effective bit width:
+/// 32 decoder layers (fused qkv, o, gate_up, down) + embedding. Used to
+/// evaluate the §III-C scheduler over the *real* tensor structure of
+/// the paper's subject model without materializing 3.8 B weights.
+fn phi3_segment_bytes(eff_bits: f64) -> Vec<usize> {
+    let d = 3072usize;
+    let mut sizes = vec![32_064 * d]; // embedding
+    for _ in 0..32 {
+        sizes.push(d * 9216); // fused qkv
+        sizes.push(d * d); // o_proj
+        sizes.push(d * 16_384); // gate_up
+        sizes.push(8192 * d); // down
+    }
+    sizes
+        .into_iter()
+        .map(|n| (n as f64 * eff_bits / 8.0) as usize)
+        .collect()
+}
+
+const PHI3_PARAMS: usize = 3_800_000_000;
+const PREFILL_TOKENS: usize = 512;
+
+fn main() {
+    let have = std::path::Path::new("artifacts/weights.bin").exists();
+    let model = LatencyModel::new(JETSON_P3450);
+
+    let mut table = Table::new(
+        "Table II: phi3-scale latency on Jetson P3450 (modeled from measured inputs)",
+        &["task", "encoding", "w/o huffman", "w/ huffman", "delta"],
+    );
+    for bits in [BitWidth::U8, BitWidth::U4] {
+        // Workload characterization: phi3's effective bits are the
+        // paper's measurement of its weight distribution (our trained
+        // tiny-LM's distribution is wider — its own bits appear in
+        // table1_storage). Scheduling imbalance is OUR shuffled deal
+        // evaluated over phi3's real tensor-segment structure.
+        let eff = if bits == BitWidth::U8 { 5.58 } else { 1.39 };
+        let imb = Strategy::Shuffled { seed: 0x5EED }
+            .imbalance_for_sizes(&phi3_segment_bytes(eff), 4);
+        let (wo, wi) =
+            table2_workloads(PHI3_PARAMS, bits.bits(), eff, PREFILL_TOKENS, 4, imb);
+        let bw = model.breakdown(&wo);
+        let bh = model.breakdown(&wi);
+        let enc = bits.to_string();
+        table.row(&[
+            "pre-fill".into(),
+            enc.clone(),
+            fmt_secs(bw.prefill.total),
+            fmt_secs(bh.prefill.total),
+            format!("{:+.1}%", 100.0 * (1.0 - bh.prefill.total / bw.prefill.total)),
+        ]);
+        table.row(&[
+            "token generation".into(),
+            enc.clone(),
+            fmt_secs(bw.token_gen.total),
+            fmt_secs(bh.token_gen.total),
+            format!("{:.2}x", bw.token_gen.total / bh.token_gen.total),
+        ]);
+        table.row(&[
+            "parallel decoding".into(),
+            enc.clone(),
+            "-".into(),
+            fmt_secs(bh.parallel_decode),
+            "once/seq".into(),
+        ]);
+        table.row(&[
+            "first token latency".into(),
+            enc.clone(),
+            fmt_secs(bw.first_token),
+            fmt_secs(bh.first_token),
+            format!("{:+.1}%", 100.0 * (bh.first_token / bw.first_token - 1.0)),
+        ]);
+
+        // Shape assertions against the paper.
+        let speedup = bw.token_gen.total / bh.token_gen.total;
+        let theory = bits.bits() as f64 / eff;
+        assert!(speedup > 1.0 && speedup < theory, "achieved must trail theory");
+        if bits == BitWidth::U8 {
+            assert!(speedup > 1.15 && speedup < 1.45, "uint8 speedup {speedup}");
+        } else {
+            assert!(speedup > 1.8, "uint4 speedup {speedup}");
+        }
+        assert!(
+            bh.first_token > bw.first_token,
+            "first token slightly worse with upfront decode (paper: 27.18→29.89s)"
+        );
+    }
+    table.emit("table2_latency");
+
+    // Real decoder thread-scaling (work accounting; single-core hosts
+    // show the work split even when wallclock can't parallelize).
+    if have {
+        let mut scale = Table::new(
+            "Parallel decode scaling (real decoder, trained uint8 model)",
+            &["threads", "wall", "Msym/s", "symbol imbalance", "max thread share"],
+        );
+        let (m, _) = build_elm("artifacts", BitWidth::U8).unwrap();
+        for threads in [1usize, 2, 4, 8] {
+            let (_, stats) = ParallelDecoder::new(threads)
+                .with_strategy(Strategy::Shuffled { seed: 0x5EED })
+                .decode_model(&m)
+                .unwrap();
+            let max_share = stats
+                .threads
+                .iter()
+                .map(|t| t.symbols)
+                .max()
+                .unwrap_or(0) as f64
+                / stats.total_symbols() as f64;
+            scale.row(&[
+                threads.to_string(),
+                fmt_secs(stats.wall.as_secs_f64()),
+                format!("{:.1}", stats.symbols_per_sec() / 1e6),
+                format!("{:.3}", stats.symbol_imbalance()),
+                format!("{:.2}", max_share),
+            ]);
+        }
+        scale.emit("table2_decode_scaling");
+    }
+    println!("paper reference: uint8 token-gen 1.32x, uint4 2.47x; decode 6.66s / 1.66s");
+}

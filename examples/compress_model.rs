@@ -1,0 +1,64 @@
+//! Compress the *trained* tiny-LM artifacts into ELM containers and
+//! print the Table I storage rows (requires `make artifacts`).
+//!
+//! This is the paper's "cloud processing" path on real learned weights:
+//! effective bits land well below the fixed quantized width because
+//! trained weight distributions are near-Gaussian (paper Fig. 4 / [27]).
+
+use entrollm::bench::fmt_bytes;
+use entrollm::entropy::{distribution_stats, Histogram};
+use entrollm::huffman::FreqTable;
+use entrollm::pipeline::build_elm;
+use entrollm::quant::BitWidth;
+use entrollm::store::decode_layer;
+
+fn main() -> entrollm::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    println!("compressing trained weights from {artifacts}/weights.bin\n");
+
+    for bits in [BitWidth::U8, BitWidth::U4] {
+        let (model, report) = build_elm(&artifacts, bits)?;
+        let out = format!("model_{bits}.elm");
+        model.save(&out)?;
+
+        println!("=== {bits} → {out} ===");
+        println!("  parameters      : {}", report.n_params);
+        println!("  fp16 baseline   : {}", fmt_bytes(report.fp16_bytes));
+        println!(
+            "  fixed {}     : {} ({}x vs fp16)",
+            bits,
+            fmt_bytes(report.fixed_bytes),
+            report.fp16_bytes / report.fixed_bytes.max(1)
+        );
+        println!("  huffman payload : {}", fmt_bytes(report.encoded_bytes));
+        println!("  entropy         : {:.3} bits/param", report.entropy_bits);
+        println!("  effective bits  : {:.3} bits/param", report.effective_bits);
+        println!(
+            "  storage saving  : {:.1}% vs fixed {}",
+            100.0 * (1.0 - report.effective_bits / bits.bits() as f64),
+            bits
+        );
+        let sym = report
+            .schemes
+            .iter()
+            .filter(|(_, s)| *s == entrollm::quant::Scheme::SymmetricUnsigned)
+            .count();
+        println!(
+            "  layer schemes   : {sym} symmetric-unsigned, {} asymmetric",
+            report.schemes.len() - sym
+        );
+
+        // Fig. 4 companion: pooled symbol histogram + moments.
+        let mut freq = FreqTable::new();
+        for i in 0..model.layers.len() {
+            freq.add_symbols(decode_layer(&model, i)?.symbols.data());
+        }
+        let s = distribution_stats(&freq)?;
+        println!(
+            "  distribution    : mean {:.1} std {:.1} skew {:+.2} kurtosis {:+.2}",
+            s.mean, s.std, s.skewness, s.kurtosis
+        );
+        println!("{}", Histogram::from_freq(&freq, bits.levels()).to_ascii(48, 16));
+    }
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Quickstart: the EntroLLM pipeline on synthetic weights, no artifacts
+//! needed — run with `cargo run --release --example quickstart`.
+//!
+//! Walks Algorithm 1 end to end:
+//! 1. make some "trained" layers (Gaussian weights, like Fig. 4 assumes),
+//! 2. mixed-quantize + Huffman-encode into an ELM container (cloud side),
+//! 3. parallel-decode it back on T threads (edge side),
+//! 4. verify losslessness and print the storage accounting.
+
+use entrollm::bench::fmt_bytes;
+use entrollm::decode::ParallelDecoder;
+use entrollm::quant::{dequantize, quantize_mixed, BitWidth};
+use entrollm::rng::Rng;
+use entrollm::store::{compress, ElmModel};
+use entrollm::tensor::TensorF32;
+
+fn main() -> entrollm::Result<()> {
+    // 1. Synthetic model: a few transformer-shaped layers. Real flows
+    //    load trained weights (see examples/compress_model.rs).
+    let mut rng = Rng::new(42);
+    let mut layers = Vec::new();
+    for i in 0..6 {
+        let (rows, cols) = if i % 3 == 2 { (256, 1024) } else { (256, 256) };
+        let n = rows * cols;
+        // Mix single-signed and zero-straddling layers so both branches
+        // of the mixed scheme (§III-A) get exercised.
+        let data = if i % 4 == 3 {
+            (0..n).map(|_| rng.range_f32(0.0, 0.1)).collect()
+        } else {
+            rng.gaussian_vec(n, 0.0, 0.04)
+        };
+        layers.push((
+            format!("blocks.{i}.w"),
+            TensorF32::new(vec![rows, cols], data)?,
+        ));
+    }
+    let n_params: usize = layers.iter().map(|(_, t)| t.numel()).sum();
+    println!("synthetic model: {} layers, {n_params} params", layers.len());
+
+    for bits in [BitWidth::U8, BitWidth::U4] {
+        // 2. Cloud side: mixed quantization + model-global Huffman code.
+        let (model, report) = compress(&layers, bits)?;
+        println!("\n=== {bits} ===");
+        println!("  fp16 baseline   : {}", fmt_bytes(report.fp16_bytes));
+        println!("  fixed-width     : {}", fmt_bytes(report.fixed_bytes));
+        println!("  huffman payload : {}", fmt_bytes(report.encoded_bytes));
+        println!(
+            "  effective bits  : {:.3} (entropy {:.3})",
+            report.effective_bits, report.entropy_bits
+        );
+
+        // Round-trip through disk like a real deployment.
+        let path = std::env::temp_dir().join(format!("quickstart_{bits}.elm"));
+        model.save(&path)?;
+        let loaded = ElmModel::load(&path)?;
+
+        // 3. Edge side: parallel Huffman decode (§III-C).
+        let (decoded, stats) = ParallelDecoder::new(4).decode_model(&loaded)?;
+        println!(
+            "  parallel decode : {:.2} ms on {} threads ({:.1} Msym/s)",
+            stats.wall.as_secs_f64() * 1e3,
+            stats.threads.len(),
+            stats.symbols_per_sec() / 1e6
+        );
+
+        // 4. Lossless check: decoded symbols == direct quantization, and
+        //    dequantized weights within half a quantization step.
+        for ((name, w), q) in layers.iter().zip(&decoded) {
+            let direct = quantize_mixed(w, bits);
+            assert_eq!(q.symbols.data(), direct.symbols.data(), "{name}");
+            let dq = dequantize(q);
+            let bound = entrollm::quant::max_error_bound(&q.params);
+            for (a, b) in w.data().iter().zip(dq.data()) {
+                assert!((a - b).abs() <= bound);
+            }
+        }
+        println!("  losslessness    : verified on all layers");
+        std::fs::remove_file(&path).ok();
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

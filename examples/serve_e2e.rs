@@ -1,0 +1,134 @@
+//! End-to-end serving driver (the repo's headline validation run):
+//! load the trained tiny-LM, compress to uint8 ELM, **parallel-decode**
+//! it, bring up the TCP server on the real PJRT engine, fire a batch of
+//! concurrent clients, and report latency/throughput. Results are
+//! recorded in EXPERIMENTS.md §E2E.
+//!
+//! The PJRT client is not `Send`, so the engine runs on the main thread
+//! and the load-generating clients run on spawned threads.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example serve_e2e [artifacts_dir] [n_requests]`
+
+use entrollm::bench::fmt_secs;
+use entrollm::coordinator::{Engine, EngineConfig};
+use entrollm::corpus::MarkovCorpus;
+use entrollm::pipeline::{load_backend, Flavor};
+use entrollm::server::{serve, Client};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> entrollm::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let n_requests: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    let max_tokens = 24;
+
+    // --- edge bring-up: ELM decode + PJRT load ---
+    let t0 = Instant::now();
+    let (backend, decode_stats) = load_backend(&artifacts, Flavor::U8, 4)?;
+    let bringup = t0.elapsed();
+    if let Some(s) = &decode_stats {
+        println!(
+            "parallel huffman decode: {} symbols in {} ({:.1} Msym/s, imbalance {:.2})",
+            s.total_symbols(),
+            fmt_secs(s.wall.as_secs_f64()),
+            s.symbols_per_sec() / 1e6,
+            s.symbol_imbalance()
+        );
+    }
+    println!(
+        "engine bring-up (decode + compile + upload): {}",
+        fmt_secs(bringup.as_secs_f64())
+    );
+
+    // --- clients on spawned threads; engine serves on this thread ---
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let mut corpus = MarkovCorpus::new(0xE2E);
+    let prompts = corpus.prompts(n_requests, 6);
+    let t1 = Instant::now();
+    let client_threads: Vec<_> = prompts
+        .into_iter()
+        .enumerate()
+        .map(|(i, prompt)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).expect("connect");
+                let t = Instant::now();
+                let reply = c.request(&prompt, max_tokens, 0.0).expect("request");
+                let wall = t.elapsed();
+                let text = reply.get("text").unwrap().as_str().unwrap().to_string();
+                let tokens = reply.get("tokens").unwrap().as_usize().unwrap();
+                (i, wall, tokens, text)
+            })
+        })
+        .collect();
+
+    // Watcher joins the clients, then stops the server loop.
+    let stop_w = stop.clone();
+    let watcher = std::thread::spawn(move || {
+        let mut total_tokens = 0usize;
+        let mut latencies = Vec::new();
+        let mut samples = Vec::new();
+        for t in client_threads {
+            let (i, wall, tokens, text) = t.join().expect("client");
+            total_tokens += tokens;
+            latencies.push(wall);
+            if i < 3 {
+                samples.push((i, wall, tokens, text));
+            }
+        }
+        // Give the engine a beat to settle, then stop it.
+        std::thread::sleep(Duration::from_millis(20));
+        stop_w.store(true, Ordering::Relaxed);
+        (total_tokens, latencies, samples)
+    });
+
+    let mut engine = Engine::new(backend, EngineConfig::default());
+    let served = serve(&mut engine, listener, stop.clone())?;
+    let (total_tokens, mut latencies, samples) = watcher.join().expect("watcher");
+    let wall = t1.elapsed();
+
+    for (i, lat, tokens, text) in &samples {
+        println!(
+            "  [{i}] {tokens} tok in {}: {:?}",
+            fmt_secs(lat.as_secs_f64()),
+            text
+        );
+    }
+    let stats = engine.stats();
+    latencies.sort_unstable();
+    println!("\n=== serve_e2e summary (uint8, {n_requests} concurrent requests) ===");
+    println!("  served           : {served} requests, {total_tokens} tokens");
+    println!("  wallclock        : {}", fmt_secs(wall.as_secs_f64()));
+    println!(
+        "  throughput       : {:.1} tok/s, {:.2} req/s",
+        total_tokens as f64 / wall.as_secs_f64(),
+        served as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "  client latency   : p50 {} p95 {} max {}",
+        fmt_secs(latencies[latencies.len() / 2].as_secs_f64()),
+        fmt_secs(latencies[latencies.len() * 95 / 100].as_secs_f64()),
+        fmt_secs(latencies.last().unwrap().as_secs_f64()),
+    );
+    println!(
+        "  engine           : {} decode steps, occupancy {:.2} slots",
+        stats.decode_steps,
+        stats.mean_occupancy(),
+    );
+    println!("  engine prefill   : {}", stats.prefill_lat.summary());
+    println!("  engine decode    : {}", stats.decode_lat.summary());
+    let q = engine.queue_stats();
+    println!("  queue            : admitted {} rejected {}", q.admitted, q.rejected);
+    assert_eq!(served as usize, n_requests, "all requests must complete");
+    println!("\nserve_e2e OK");
+    Ok(())
+}

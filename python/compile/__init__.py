@@ -1,0 +1,4 @@
+"""Build-time compile package: L2 model, L1 kernels, AOT lowering.
+
+Never imported at runtime — the rust binary consumes artifacts/ only.
+"""

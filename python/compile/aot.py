@@ -1,0 +1,281 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the rust runtime.
+
+Emits, per model variant:
+
+* ``prefill_f32.hlo.txt`` / ``decode_f32.hlo.txt``   — fp32 baseline
+* ``prefill_quant.hlo.txt`` / ``decode_quant.hlo.txt`` — quantized path
+  (u8 symbol buffers + per-layer scale/zero-point; the SAME executables
+  serve uint8 and uint4 ELM models — uint4 symbols are u8 values < 16)
+
+plus ``manifest.json`` (the PJRT calling convention: exact argument
+name/shape/dtype order per executable) and ``golden.json`` (reference
+outputs the rust integration tests assert against).
+
+HLO *text* — not ``HloModuleProto.serialize()`` — is the interchange
+format: jax ≥ 0.5 emits protos with 64-bit instruction ids that
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    TINY,
+    Config,
+    decode_step,
+    flat_from_params,
+    flat_weight_spec,
+    param_shapes,
+    params_from_flat,
+    prefill,
+    quantized_names,
+    train_forward,
+)
+from .quantize import quantize_tree
+
+# ------------------------------------------------------------- hlo lowering
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    rust side unwraps a single tuple output)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def load_weights_bin(path: str) -> dict:
+    """Read the ETW1 container written by train.py."""
+    import struct
+
+    with open(path, "rb") as f:
+        assert f.read(4) == b"ETW1", "bad weights.bin magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        params = {}
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            (rank,) = struct.unpack("<B", f.read(1))
+            dims = [struct.unpack("<Q", f.read(8))[0] for _ in range(rank)]
+            n = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(4 * n), dtype=np.float32).reshape(dims)
+            params[name] = jnp.asarray(data)
+    return params
+
+
+# ----------------------------------------------------------- spec plumbing
+
+
+def io_spec(cfg: Config, which: str, quant: bool) -> list[dict]:
+    """Argument list (name/shape/dtype, in order) for one executable."""
+    l, b, ms = cfg.n_layers, cfg.decode_batch, cfg.max_seq
+    h, hd = cfg.n_heads, cfg.head_dim
+    if which == "prefill":
+        args = [
+            {"name": "tokens", "shape": [1, cfg.prefill_len], "dtype": "i32"},
+            {"name": "length", "shape": [], "dtype": "i32"},
+        ]
+    elif which == "score":
+        # Teacher-forced scoring for perplexity eval: full logits over a
+        # fixed window (rust pipeline::eval_ppl, Table I quality rows).
+        args = [
+            {"name": "tokens", "shape": [1, cfg.prefill_len], "dtype": "i32"},
+        ]
+    elif which == "decode":
+        args = [
+            {"name": "tokens", "shape": [b], "dtype": "i32"},
+            {"name": "pos", "shape": [b], "dtype": "i32"},
+            {"name": "k_cache", "shape": [l, b, ms, h, hd], "dtype": "f32"},
+            {"name": "v_cache", "shape": [l, b, ms, h, hd], "dtype": "f32"},
+        ]
+    else:
+        raise ValueError(which)
+    for name, shape, dtype in flat_weight_spec(cfg, quant):
+        args.append({"name": name, "shape": list(shape), "dtype": dtype})
+    return args
+
+
+def abstract_args(spec: list[dict]):
+    dt = {"i32": jnp.int32, "f32": jnp.float32, "u8": jnp.uint8}
+    return [jax.ShapeDtypeStruct(tuple(a["shape"]), dt[a["dtype"]]) for a in spec]
+
+
+def lower_variant(cfg: Config, which: str, quant: bool) -> str:
+    """Lower one executable to HLO text."""
+    n_fixed = {"prefill": 2, "score": 1, "decode": 4}[which]
+
+    def fn(*args):
+        fixed, flat = args[:n_fixed], list(args[n_fixed:])
+        params = params_from_flat(cfg, quant, flat)
+        if which == "prefill":
+            tokens, length = fixed
+            out = prefill(cfg, params, tokens, length)
+        elif which == "score":
+            (tokens,) = fixed
+            out = (train_forward(cfg, params, tokens),)
+        else:
+            tokens, pos, k, v = fixed
+            out = decode_step(cfg, params, tokens, pos, k, v)
+        return tuple(out)
+
+    spec = io_spec(cfg, which, quant)
+    lowered = jax.jit(fn).lower(*abstract_args(spec))
+    return to_hlo_text(lowered)
+
+
+# -------------------------------------------------------------- golden data
+
+
+def golden_outputs(cfg: Config, params_f32: dict, out_dir: str) -> dict:
+    """Reference outputs for the rust integration tests + the python side
+    of Table I quality rows."""
+    qnames = quantized_names(cfg)
+    variants = {"f32": params_f32}
+    qmeta = {}
+    for bits, tag in ((8, "u8"), (4, "u4")):
+        qp, meta = quantize_tree(
+            {k: np.asarray(v) for k, v in params_f32.items()}, bits, set(qnames)
+        )
+        variants[tag] = {
+            k: ({"sym": jnp.asarray(v["sym"]), "scale": v["scale"], "zp": v["zp"]}
+                if isinstance(v, dict) else jnp.asarray(v))
+            for k, v in qp.items()
+        }
+        qmeta[tag] = {
+            name: {"scheme": m.scheme, "scale": m.scale, "zero_point": m.zero_point}
+            for name, m in meta.items()
+        }
+
+    # Fixed prompt: "the model runs on the edge" byte tokens, padded.
+    prompt = "the model runs on the edge "
+    ptoks = np.frombuffer(prompt.encode(), np.uint8).astype(np.int32)
+    length = len(ptoks)
+    tokens = np.zeros((1, cfg.prefill_len), np.int32)
+    tokens[0, :length] = ptoks
+
+    # Held-out eval windows for perplexity (same data rust eval-ppl uses).
+    with open(os.path.join(out_dir, "eval.txt")) as f:
+        eval_text = f.read()
+    ev = np.frombuffer(eval_text.encode(), np.uint8).copy()
+    ev[ev >= 128] = ord("?")
+    ev = ev.astype(np.int32)
+    n_win, seq = 16, cfg.prefill_len
+    windows = np.stack(
+        [ev[i * seq : i * seq + seq + 1] for i in range(n_win)]
+    )
+
+    golden = {
+        "prompt": prompt,
+        "prompt_tokens": ptoks.tolist(),
+        "prefill_length": length,
+        "eval_windows": n_win,
+        "variants": {},
+        "quant_meta": qmeta,
+    }
+    for tag, params in variants.items():
+        quant = tag != "f32"
+        logits, k, v = prefill(cfg, params, jnp.asarray(tokens), jnp.int32(length))
+        logits = np.asarray(logits)[0]
+        # One decode step from the prefill state (slot 0 of a padded batch).
+        b = cfg.decode_batch
+        kb = jnp.tile(k, (1, b, 1, 1, 1))
+        vb = jnp.tile(v, (1, b, 1, 1, 1))
+        ntok = int(np.argmax(logits))
+        dtoks = jnp.full((b,), ntok, jnp.int32)
+        dpos = jnp.full((b,), length, jnp.int32)
+        dlogits, _, _ = decode_step(cfg, params, dtoks, dpos, kb, vb)
+        dlogits = np.asarray(dlogits)[0]
+
+        # Perplexity over eval windows (full forward, teacher-forced).
+        logp = jax.nn.log_softmax(
+            train_forward(cfg, params, jnp.asarray(windows[:, :-1])), axis=-1
+        )
+        ll = jnp.take_along_axis(logp, jnp.asarray(windows[:, 1:])[..., None], -1)
+        nll = float(-jnp.mean(ll))
+        golden["variants"][tag] = {
+            "prefill_logits_head": [float(x) for x in logits[:8]],
+            "prefill_argmax": int(np.argmax(logits)),
+            "decode_logits_head": [float(x) for x in dlogits[:8]],
+            "decode_argmax": int(np.argmax(dlogits)),
+            "eval_nll_nats": nll,
+            "eval_char_ppl": float(np.exp(nll)),
+        }
+        print(
+            f"  golden[{tag}]: prefill argmax {golden['variants'][tag]['prefill_argmax']}"
+            f" eval ppl {golden['variants'][tag]['eval_char_ppl']:.3f}"
+        )
+    return golden
+
+
+# -------------------------------------------------------------------- main
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    cfg: Config = TINY
+
+    params = load_weights_bin(os.path.join(args.out, "weights.bin"))
+    assert set(params) == set(param_shapes(cfg)), "weights.bin/model mismatch"
+
+    executables = {}
+    for which in ("prefill", "decode", "score"):
+        for quant, tag in ((False, "f32"), (True, "quant")):
+            name = f"{which}_{tag}"
+            print(f"lowering {name} ...")
+            hlo = lower_variant(cfg, which, quant)
+            fname = f"{name}.hlo.txt"
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(hlo)
+            executables[name] = {
+                "file": fname,
+                "args": io_spec(cfg, which, quant),
+                "outputs": (
+                    ["logits"] if which == "score" else ["logits", "k_cache", "v_cache"]
+                ),
+            }
+            print(f"  wrote {fname} ({len(hlo)//1024} KiB)")
+
+    print("computing golden outputs ...")
+    golden = golden_outputs(cfg, params, args.out)
+    with open(os.path.join(args.out, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=2)
+
+    manifest = {
+        "format": 1,
+        "config": {
+            "vocab": cfg.vocab,
+            "dim": cfg.dim,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "ffn": cfg.ffn,
+            "max_seq": cfg.max_seq,
+            "prefill_len": cfg.prefill_len,
+            "decode_batch": cfg.decode_batch,
+            "n_params": cfg.n_params(),
+        },
+        "quantized_names": quantized_names(cfg),
+        "weights": "weights.bin",
+        "eval_text": "eval.txt",
+        "golden": "golden.json",
+        "executables": executables,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1 Pallas kernels for the EntroLLM compute hot-spot.
+
+``dequant_matmul`` is the production kernel (fused integer-weight matmul
+with affine dequantization); ``ref`` holds the pure-jnp oracles used by
+pytest.
+"""
+
+from .dequant_matmul import dequant_matmul, int_matmul  # noqa: F401

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: fused integer-weight matmul (the EntroLLM hot spot).
+
+The paper's decode phase streams quantized weights from memory and
+dequantizes on the fly before the matmul (on the Jetson this was CUDA
+pack/unpack kernels; §IV-D). On TPU-shaped hardware the analogous design
+is a Pallas kernel whose *only* HBM traffic for weights is the uint8
+symbol tile: the tile is cast and multiplied inside VMEM, so fp32 weights
+never exist in HBM (DESIGN.md §Hardware-Adaptation).
+
+Decomposition used here::
+
+    x @ (W_sym * s + z)  ==  s * (x @ W_sym) + z * rowsum(x)
+
+so the kernel proper is the integer-weight matmul ``x @ W_sym`` — the
+bandwidth-critical part — and the affine correction is two cheap jnp ops
+applied outside (they fuse into the surrounding HLO).
+
+All ``pallas_call``s use ``interpret=True``: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute, and correctness /
+AOT artifacts in this repo are CPU-hosted (see DESIGN.md).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM tile sizes. On a real TPU these target the MXU's 128×128
+# systolic array; under interpret=True they only shape the emitted loop
+# nest. K is kept whole per tile (weights stream K-major, one pass).
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _int_matmul_kernel(x_ref, w_ref, o_ref):
+    """One (BLOCK_M, BLOCK_N) output tile: cast the u8 weight tile in
+    VMEM and hit the MXU with an f32 matmul."""
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def int_matmul(x, w_sym, *, block_m: int = BLOCK_M, block_n: int = BLOCK_N):
+    """``x @ w_sym`` with ``x: f32[M, K]``, ``w_sym: u8[K, N]`` → f32[M, N].
+
+    The weight tile is the only non-f32 input: this is the kernel the
+    effective-bits saving acts on (fewer bytes per weight ⇒ fewer HBM
+    bytes per output tile).
+    """
+    m, k = x.shape
+    k2, n = w_sym.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        _int_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w_sym)
+
+
+@partial(jax.named_call, name="dequant_matmul")
+def dequant_matmul(x, w_sym, scale, zero_point):
+    """``x @ dequant(w_sym)`` where ``dequant(w) = w * scale + zero_point``.
+
+    * ``x``: f32[M, K] activations.
+    * ``w_sym``: u8[K, N] quantization symbols (uint8 levels, or uint4
+      levels stored one-per-byte).
+    * ``scale``/``zero_point``: scalars (f32) — the layer's (s, z) from
+      the mixed quantization scheme (paper eq. 1/2; z = 0 for the
+      symmetric-unsigned branch).
+
+    Uses the affine decomposition so the Pallas kernel touches only the
+    integer tile; the correction terms fuse into neighboring HLO ops.
+    """
+    mm = int_matmul(x, w_sym)
+    rowsum = jnp.sum(x, axis=-1, keepdims=True)
+    return scale * mm + zero_point * rowsum

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+pytest checks every kernel against these references over swept shapes
+(see python/tests/test_kernel.py); this is the core L1 correctness
+signal called out in DESIGN.md §Testing.
+"""
+
+import jax.numpy as jnp
+
+
+def int_matmul_ref(x, w_sym):
+    """Reference for kernels.dequant_matmul.int_matmul."""
+    return jnp.dot(x, w_sym.astype(jnp.float32))
+
+
+def dequant_ref(w_sym, scale, zero_point):
+    """Reference dequantization: ``w * s + z`` (both schemes — z = 0 for
+    symmetric-unsigned; matches rust quant::QuantParams::dequant_one)."""
+    return w_sym.astype(jnp.float32) * scale + zero_point
+
+
+def dequant_matmul_ref(x, w_sym, scale, zero_point):
+    """Reference for kernels.dequant_matmul.dequant_matmul: materialize
+    the fp32 weights, then matmul."""
+    return jnp.dot(x, dequant_ref(w_sym, scale, zero_point))

@@ -1,0 +1,313 @@
+"""L2: decoder-only transformer whose weight matmuls consume *quantized*
+integer weights through the L1 Pallas kernel.
+
+The same block code serves three roles:
+
+* ``train_forward`` — fp32 training/eval forward over a full batch
+  (used by train.py; also the fp32 ppl baseline);
+* ``prefill`` — single-request prompt pass that fills a KV cache and
+  returns next-token logits (AOT-lowered, B=1, fixed prompt buffer);
+* ``decode_step`` — one incremental token for a fixed batch of slots
+  with device-resident KV caches (AOT-lowered; the serving hot path).
+
+Weights enter as a dict; each "linear" entry is either an fp32 array
+(training / fp32 baseline artifacts) or a ``{"sym": u8, "scale": f32,
+"zp": f32}`` triple (quantized artifacts), in which case the matmul runs
+through ``kernels.dequant_matmul`` — the fused integer-weight kernel —
+so fp32 weights are never materialized for the big matmuls.
+
+Canonical AOT argument ordering is defined by ``flat_weight_spec`` and
+recorded in artifacts/manifest.json; the rust runtime assembles its
+PJRT inputs from that manifest (python never runs at serve time).
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dequant_matmul
+
+
+@dataclass(frozen=True)
+class Config:
+    """Model hyper-parameters (must match artifacts/manifest.json)."""
+
+    vocab: int = 128
+    dim: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    ffn: int = 512
+    max_seq: int = 160
+    prefill_len: int = 64
+    decode_batch: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.n_heads
+
+    def n_params(self) -> int:
+        d, f = self.dim, self.ffn
+        per_block = 4 * d * d + 2 * d * f + 2 * d
+        return self.vocab * self.dim + self.n_layers * per_block + d
+
+
+TINY = Config()
+
+
+def quantized_names(cfg: Config) -> list[str]:
+    """Weight tensors that get quantized: all the large 2-D matrices.
+
+    Norms stay fp32 — they are <0.1% of parameters (the paper quantizes
+    weight matrices; norm/bias storage is negligible).
+    """
+    names = ["embed"]
+    for i in range(cfg.n_layers):
+        for kind in ("wq", "wk", "wv", "wo", "w_in", "w_out"):
+            names.append(f"blocks.{i}.{kind}")
+    return names
+
+
+def param_shapes(cfg: Config) -> dict[str, tuple[int, ...]]:
+    """Canonical name → shape map (storage order)."""
+    shapes: dict[str, tuple[int, ...]] = {"embed": (cfg.vocab, cfg.dim)}
+    for i in range(cfg.n_layers):
+        shapes[f"blocks.{i}.wq"] = (cfg.dim, cfg.dim)
+        shapes[f"blocks.{i}.wk"] = (cfg.dim, cfg.dim)
+        shapes[f"blocks.{i}.wv"] = (cfg.dim, cfg.dim)
+        shapes[f"blocks.{i}.wo"] = (cfg.dim, cfg.dim)
+        shapes[f"blocks.{i}.w_in"] = (cfg.dim, cfg.ffn)
+        shapes[f"blocks.{i}.w_out"] = (cfg.ffn, cfg.dim)
+        shapes[f"blocks.{i}.ln1"] = (cfg.dim,)
+        shapes[f"blocks.{i}.ln2"] = (cfg.dim,)
+    shapes["ln_f"] = (cfg.dim,)
+    return shapes
+
+
+def init_params(cfg: Config, seed: int = 0) -> dict:
+    """fp32 init (scaled normal) for training."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else cfg.dim
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) * (fan_in ** -0.5) * 0.7
+            )
+    return params
+
+
+# ------------------------------------------------------------------ layers
+
+
+def _linear(x, w):
+    """Matmul against an fp32 array or a quantized triple.
+
+    ``x``: f32[..., K]. Quantized triples route through the L1 Pallas
+    kernel (fused integer matmul + affine correction).
+    """
+    if isinstance(w, dict):
+        lead = x.shape[:-1]
+        k = x.shape[-1]
+        x2 = x.reshape((-1, k))
+        y2 = dequant_matmul(x2, w["sym"], w["scale"], w["zp"])
+        return y2.reshape(lead + (y2.shape[-1],))
+    return jnp.dot(x, w)
+
+
+def _table(w):
+    """Materialize an embedding-style table as fp32 (cheap: V×D)."""
+    if isinstance(w, dict):
+        return w["sym"].astype(jnp.float32) * w["scale"] + w["zp"]
+    return w
+
+
+def _rmsnorm(x, g):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _pos_encoding(cfg: Config) -> jnp.ndarray:
+    """Fixed sinusoidal table [max_seq, dim] (constant-folded into HLO)."""
+    pos = jnp.arange(cfg.max_seq, dtype=jnp.float32)[:, None]
+    i = jnp.arange(cfg.dim // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2.0 * i / cfg.dim)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def _split_heads(cfg: Config, x):
+    # [..., S, D] -> [..., S, H, HD]
+    return x.reshape(x.shape[:-1] + (cfg.n_heads, cfg.head_dim))
+
+
+def _attn_full(cfg: Config, q, k, v):
+    """Full causal attention for train/prefill. q,k,v: [B,S,H,HD]."""
+    s = q.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(cfg.head_dim))
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(causal[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out.reshape(out.shape[:2] + (cfg.dim,))
+
+
+def _block_full(cfg: Config, params, i: int, x):
+    """One transformer block over a full sequence. x: [B,S,D].
+
+    Returns the block output plus this block's K/V (for prefill caching).
+    """
+    p = lambda kind: params[f"blocks.{i}.{kind}"]
+    h = _rmsnorm(x, params[f"blocks.{i}.ln1"])
+    q = _split_heads(cfg, _linear(h, p("wq")))
+    k = _split_heads(cfg, _linear(h, p("wk")))
+    v = _split_heads(cfg, _linear(h, p("wv")))
+    x = x + _linear(_attn_full(cfg, q, k, v), p("wo"))
+    h = _rmsnorm(x, params[f"blocks.{i}.ln2"])
+    x = x + _linear(jax.nn.gelu(_linear(h, p("w_in"))), p("w_out"))
+    return x, k, v
+
+
+def _logits(cfg: Config, params, x):
+    """Tied-embedding LM head. x: [..., D] -> [..., V]."""
+    emb = _table(params["embed"])  # [V, D]
+    h = _rmsnorm(x, params["ln_f"])
+    return jnp.dot(h, emb.T)
+
+
+# ------------------------------------------------------------- train / eval
+
+
+def train_forward(cfg: Config, params, tokens):
+    """Full-sequence logits for training/eval. tokens: i32[B,S] → [B,S,V]."""
+    x = _table(params["embed"])[tokens] + _pos_encoding(cfg)[None, : tokens.shape[1]]
+    for i in range(cfg.n_layers):
+        x, _, _ = _block_full(cfg, params, i, x)
+    return _logits(cfg, params, x)
+
+
+def loss_fn(cfg: Config, params, tokens):
+    """Next-token cross-entropy (nats). tokens: i32[B,S]."""
+    logits = train_forward(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+# --------------------------------------------------------------- AOT fwds
+
+
+def prefill(cfg: Config, params, tokens, length):
+    """Prompt pass for one request.
+
+    ``tokens``: i32[1, prefill_len] (prompt padded on the right),
+    ``length``: i32 scalar — number of valid prompt tokens.
+
+    Returns ``(logits f32[1, vocab], k f32[L,1,MS,H,HD], v ...)`` where
+    the KV caches hold positions [0, prefill_len) (entries ≥ ``length``
+    are pad garbage; the decode loop writes each generated token at
+    index ``pos`` starting from ``length`` and masks reads to
+    ``[0, pos]``, so garbage is overwritten before it is ever visible —
+    see rust coordinator::kv).
+    """
+    s = tokens.shape[1]
+    x = _table(params["embed"])[tokens] + _pos_encoding(cfg)[None, :s]
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        x, k, v = _block_full(cfg, params, i, x)
+        pad = cfg.max_seq - s
+        ks.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))))
+        vs.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+    # Next-token logits at the last *valid* prompt position.
+    last = jax.lax.dynamic_index_in_dim(x, length - 1, axis=1, keepdims=False)
+    logits = _logits(cfg, params, last)
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_step(cfg: Config, params, tokens, pos, k_cache, v_cache):
+    """One generation step for a batch of slots.
+
+    ``tokens``: i32[B] (token just sampled per slot), ``pos``: i32[B]
+    (cache index to write; the token attends to [0, pos]), caches:
+    f32[L, B, MS, H, HD]. Returns ``(logits f32[B, V], k, v)``.
+    """
+    b = tokens.shape[0]
+    pe = _pos_encoding(cfg)[pos]  # [B, D]
+    x = _table(params["embed"])[tokens] + pe  # [B, D]
+    x = x[:, None, :]  # [B, 1, D]
+    new_k, new_v = [], []
+    span = jnp.arange(cfg.max_seq)  # [MS]
+    for i in range(cfg.n_layers):
+        p = lambda kind: params[f"blocks.{i}.{kind}"]
+        h = _rmsnorm(x, params[f"blocks.{i}.ln1"])
+        q = _split_heads(cfg, _linear(h, p("wq")))  # [B,1,H,HD]
+        k1 = _split_heads(cfg, _linear(h, p("wk")))[:, 0]  # [B,H,HD]
+        v1 = _split_heads(cfg, _linear(h, p("wv")))[:, 0]
+        # Scatter this step's K/V into the caches at per-slot positions.
+        onehot = (span[None, :] == pos[:, None]).astype(jnp.float32)  # [B,MS]
+        k = k_cache[i] * (1.0 - onehot)[..., None, None] + onehot[..., None, None] * k1[:, None]
+        v = v_cache[i] * (1.0 - onehot)[..., None, None] + onehot[..., None, None] * v1[:, None]
+        # Attend over [0, pos].
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(cfg.head_dim))
+        valid = (span[None, :] <= pos[:, None])[:, None, None, :]  # [B,1,1,MS]
+        scores = jnp.where(valid, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        att = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, 1, cfg.dim)
+        x = x + _linear(att, p("wo"))
+        h = _rmsnorm(x, params[f"blocks.{i}.ln2"])
+        x = x + _linear(jax.nn.gelu(_linear(h, p("w_in"))), p("w_out"))
+        new_k.append(k)
+        new_v.append(v)
+    logits = _logits(cfg, params, x[:, 0])
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# ------------------------------------------------- flat AOT argument spec
+
+
+def flat_weight_spec(cfg: Config, quant: bool) -> list[tuple[str, tuple[int, ...], str]]:
+    """Canonical flat weight-argument list: (name, shape, dtype).
+
+    This ordering IS the PJRT calling convention; it is serialized into
+    artifacts/manifest.json and consumed by rust runtime::artifacts.
+    """
+    qnames = set(quantized_names(cfg)) if quant else set()
+    spec = []
+    for name, shape in param_shapes(cfg).items():
+        if name in qnames:
+            spec.append((f"{name}.sym", shape, "u8"))
+            spec.append((f"{name}.scale", (), "f32"))
+            spec.append((f"{name}.zp", (), "f32"))
+        else:
+            spec.append((name, shape, "f32"))
+    return spec
+
+
+def params_from_flat(cfg: Config, quant: bool, flat: list) -> dict:
+    """Rebuild the params dict from flat AOT arguments."""
+    qnames = set(quantized_names(cfg)) if quant else set()
+    params = {}
+    it = iter(flat)
+    for name in param_shapes(cfg):
+        if name in qnames:
+            params[name] = {"sym": next(it), "scale": next(it), "zp": next(it)}
+        else:
+            params[name] = next(it)
+    rest = list(it)
+    assert not rest, f"{len(rest)} unconsumed flat args"
+    return params
+
+
+def flat_from_params(cfg: Config, quant: bool, params: dict) -> list:
+    """Flatten a params dict into the canonical AOT argument order."""
+    qnames = set(quantized_names(cfg)) if quant else set()
+    flat = []
+    for name in param_shapes(cfg):
+        if name in qnames:
+            w = params[name]
+            flat += [w["sym"], jnp.float32(w["scale"]), jnp.float32(w["zp"])]
+        else:
+            flat.append(params[name])
+    return flat

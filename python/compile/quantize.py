@@ -1,0 +1,90 @@
+"""Python mirror of the rust mixed-quantization scheme (paper §III-A).
+
+The rust implementation (``rust/src/quant.rs``) is the source of truth
+for serving; this mirror exists so the AOT path can produce quantized
+weight buffers for golden-output generation and so pytest can check the
+two implementations agree bit-for-bit (test_quantize.py fixtures are
+regenerated against rust via the integration test in rust/tests/).
+
+Scheme selection (Algorithm 1 line 5): a layer whose weights are
+single-signed (``max * min >= 0``) takes symmetric-unsigned quantization
+(eq. 1); a layer straddling zero takes asymmetric (eq. 2). Dequantization
+is uniformly ``w = sym * scale + zero_point`` (zero_point = 0 for the
+symmetric branch; scale may be negative for all-negative layers).
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+
+LEVELS = {4: 16, 8: 256}
+
+
+@dataclass(frozen=True)
+class QuantParams:
+    """Per-layer grid parameters (mirror of rust quant::QuantParams)."""
+
+    scheme: str  # "symmetric_unsigned" | "asymmetric"
+    bits: int  # 4 | 8
+    scale: float
+    zero_point: float
+
+
+def choose_scheme(w: np.ndarray) -> str:
+    """Paper's rule: single-signed layers go symmetric-unsigned."""
+    if w.size == 0 or float(w.max()) * float(w.min()) >= 0.0:
+        return "symmetric_unsigned"
+    return "asymmetric"
+
+
+def quantize(w: np.ndarray, bits: int, scheme: str | None = None):
+    """Quantize one layer. Returns (symbols u8 ndarray, QuantParams)."""
+    levels = LEVELS[bits]
+    w = np.asarray(w, dtype=np.float32)
+    if scheme is None:
+        scheme = choose_scheme(w)
+    if w.size == 0:
+        mn = mx = 0.0
+    else:
+        mn = float(w.min())
+        mx = float(w.max())
+    if scheme == "symmetric_unsigned":
+        extreme = mx if abs(mx) >= abs(mn) else mn
+        scale = 1.0 if extreme == 0.0 else extreme / (levels - 1)
+        zero_point = 0.0
+        q = np.rint(w / np.float32(scale))
+    elif scheme == "asymmetric":
+        zero_point = mn
+        rng = mx - mn
+        scale = 1.0 if rng == 0.0 else rng / (levels - 1)
+        q = np.rint((w - np.float32(zero_point)) / np.float32(scale))
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    sym = np.clip(q, 0, levels - 1).astype(np.uint8)
+    return sym, QuantParams(scheme, bits, float(np.float32(scale)), float(np.float32(zero_point)))
+
+
+def dequantize(sym: np.ndarray, params: QuantParams) -> np.ndarray:
+    """Uniform inverse: ``sym * scale + zero_point`` as f32."""
+    return (
+        sym.astype(np.float32) * np.float32(params.scale)
+        + np.float32(params.zero_point)
+    )
+
+
+def quantize_tree(params: dict, bits: int, quantize_names) -> tuple[dict, dict]:
+    """Quantize the fp32 weight dict of the L2 model.
+
+    Returns ``(qparams, meta)`` where ``qparams`` replaces each array
+    named in ``quantize_names`` by a dict ``{"sym", "scale", "zp"}`` and
+    leaves the rest (norms etc.) fp32; ``meta`` maps name → QuantParams.
+    """
+    out, meta = {}, {}
+    for name, w in params.items():
+        if name in quantize_names:
+            sym, qp = quantize(np.asarray(w), bits)
+            out[name] = {"sym": sym, "scale": qp.scale, "zp": qp.zero_point}
+            meta[name] = qp
+        else:
+            out[name] = np.asarray(w, dtype=np.float32)
+    return out, meta

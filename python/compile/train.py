@@ -1,0 +1,207 @@
+"""Build-time training of the tiny char-LM (DESIGN.md §Substitutions #1).
+
+The paper evaluates pre-trained 1.7–7 B checkpoints that are unavailable
+offline; instead we *train* a small decoder-only LM on a seeded
+synthetic corpus so the Table I quality rows (fp32 vs uint8 vs uint4
+perplexity) are measured on a model that has actually learned its data
+distribution — quantization-robustness claims are meaningless on random
+weights.
+
+Outputs (under ``--out``, default ``../artifacts``):
+
+* ``weights.bin``  — trained fp32 weights, ETW1 format (rust loads this)
+* ``eval.txt``     — held-out corpus slice for perplexity evaluation
+* ``train_log.json`` — loss curve + final train/val loss (EXPERIMENTS.md)
+
+Runs once from ``make artifacts``; never at serve time.
+"""
+
+import argparse
+import json
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import TINY, Config, init_params, loss_fn, param_shapes
+
+# ----------------------------------------------------------------- corpus
+
+WORDS = [
+    "the", "model", "edge", "device", "weight", "memory", "bandwidth", "token",
+    "layer", "quantized", "entropy", "huffman", "decode", "encode", "parallel",
+    "thread", "cache", "inference", "latency", "storage", "compression",
+    "symbol", "stream", "segment", "tensor", "matrix", "vector", "scale",
+    "zero", "point", "bits", "fast", "small", "large", "runs", "loads",
+    "stores", "maps", "reduces", "achieves", "requires", "and", "of", "on",
+    "with", "for", "to", "a", "in", "is",
+]
+
+
+def make_corpus(n_chars: int, seed: int) -> str:
+    """Order-1 Markov word chain — same flavor as rust corpus::MarkovCorpus
+    (Zipf-ish skew, fully seeded). Exact cross-language equality is not
+    required; both sides just need a learnable, stable distribution."""
+    rng = np.random.default_rng(seed)
+    n = len(WORDS)
+    trans = rng.random((n, n)).astype(np.float64) * 0.05
+    for i in range(n):
+        for _ in range(4):
+            trans[i, rng.integers(n)] += rng.random() * 2.0
+    trans /= trans.sum(axis=1, keepdims=True)
+    out, state, i = [], 0, 0
+    total = 0
+    while total < n_chars:
+        w = WORDS[state]
+        out.append(w)
+        total += len(w) + 1
+        state = int(rng.choice(n, p=trans[state]))
+        i += 1
+        if i % 12 == 0:
+            out[-1] += "."
+    return " ".join(out)[:n_chars]
+
+
+def tokenize(text: str) -> np.ndarray:
+    """Byte-level tokenizer (mirror of rust corpus::ByteTokenizer)."""
+    b = np.frombuffer(text.encode(), dtype=np.uint8).copy()
+    b[b >= 128] = ord("?")
+    return b.astype(np.int32)
+
+
+# ------------------------------------------------------------------ adam
+
+
+def adam_init(params):
+    zeros = lambda: {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros(), "v": zeros(), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    new_m, new_v, new_p = {}, {}, {}
+    for k in params:
+        m = b1 * state["m"][k] + (1 - b1) * grads[k]
+        v = b2 * state["v"][k] + (1 - b2) * grads[k] ** 2
+        mhat = m / (1 - b1**t)
+        vhat = v / (1 - b2**t)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        new_m[k], new_v[k] = m, v
+    return new_p, {"m": new_m, "v": new_v, "t": t}
+
+
+# ------------------------------------------------------------ ETW1 format
+
+
+def save_weights_bin(path: str, params: dict, order: list[str]) -> None:
+    """ETW1: magic | u32 count | per tensor: u16 name_len, name, u8 rank,
+    u64 dims..., f32 row-major data. Loaded by rust runtime::weights."""
+    with open(path, "wb") as f:
+        f.write(b"ETW1")
+        f.write(struct.pack("<I", len(order)))
+        for name in order:
+            w = np.asarray(params[name], dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", w.ndim))
+            for d in w.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(w.tobytes())
+
+
+# ------------------------------------------------------------------ main
+
+
+def batches(tokens: np.ndarray, batch: int, seq: int, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    hi = len(tokens) - seq - 1
+    for _ in range(steps):
+        idx = rng.integers(0, hi, size=batch)
+        yield np.stack([tokens[i : i + seq + 1] for i in idx])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=int(os.environ.get("ENTROLLM_TRAIN_STEPS", 400)))
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--force", action="store_true", help="retrain even if weights exist")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    done = all(
+        os.path.exists(os.path.join(args.out, f))
+        for f in ("weights.bin", "eval.txt", "train_log.json")
+    )
+    if done and not args.force:
+        print("weights.bin/eval.txt already present — skipping training (use --force)")
+        return
+
+    cfg: Config = TINY
+    seq = cfg.prefill_len
+    text = make_corpus(220_000, seed=args.seed + 1)
+    toks = tokenize(text)
+    split = int(len(toks) * 0.9)
+    train_toks, val_toks = toks[:split], toks[split:]
+
+    params = init_params(cfg, seed=args.seed)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt_m, opt_v, opt_t, batch, lr):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+        new_p, new_s = adam_update(params, grads, {"m": opt_m, "v": opt_v, "t": opt_t}, lr)
+        return loss, new_p, new_s["m"], new_s["v"], new_s["t"]
+
+    @jax.jit
+    def val_loss_fn(params, batch):
+        return loss_fn(cfg, params, batch)
+
+    print(f"training tiny LM: {cfg.n_params():,} params, {args.steps} steps")
+    t0 = time.time()
+    log = []
+    m, v, t = opt["m"], opt["v"], opt["t"]
+    for i, b in enumerate(batches(train_toks, args.batch, seq, args.steps, args.seed + 2)):
+        # Cosine decay with a short warmup.
+        warm = min(1.0, (i + 1) / 40)
+        lr = args.lr * warm * 0.5 * (1 + np.cos(np.pi * i / max(1, args.steps)))
+        loss, params, m, v, t = step(params, m, v, t, jnp.asarray(b), lr)
+        if i % 50 == 0 or i == args.steps - 1:
+            log.append({"step": i, "loss": float(loss), "lr": float(lr)})
+            print(f"  step {i:4d} loss {float(loss):.4f} lr {lr:.2e}")
+
+    # Validation loss on fixed windows.
+    vrng = np.random.default_rng(args.seed + 3)
+    vidx = vrng.integers(0, len(val_toks) - seq - 1, size=32)
+    vbatch = np.stack([val_toks[j : j + seq + 1] for j in vidx])
+    vloss = float(val_loss_fn(params, jnp.asarray(vbatch)))
+    ppl_char = float(np.exp(vloss))
+    print(f"val loss {vloss:.4f} (char-ppl {ppl_char:.2f}) in {time.time()-t0:.1f}s")
+
+    order = list(param_shapes(cfg).keys())
+    save_weights_bin(os.path.join(args.out, "weights.bin"), params, order)
+    with open(os.path.join(args.out, "eval.txt"), "w") as f:
+        f.write(text[split:])
+    with open(os.path.join(args.out, "train_log.json"), "w") as f:
+        json.dump(
+            {
+                "steps": args.steps,
+                "final_train_loss": log[-1]["loss"] if log else None,
+                "val_loss_nats": vloss,
+                "val_char_ppl": ppl_char,
+                "curve": log,
+                "n_params": cfg.n_params(),
+            },
+            f,
+            indent=2,
+        )
+    print(f"wrote weights.bin / eval.txt / train_log.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""AOT contract tests: io specs, manifest consistency, and (when the
+artifacts exist) golden-file sanity. Lowering itself is exercised by
+`make artifacts`; these tests pin the *contract* the rust side reads."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import abstract_args, io_spec
+from compile.model import TINY, flat_weight_spec, quantized_names
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_io_spec_prefill_order():
+    spec = io_spec(TINY, "prefill", quant=True)
+    assert spec[0]["name"] == "tokens"
+    assert spec[0]["shape"] == [1, TINY.prefill_len]
+    assert spec[1]["name"] == "length"
+    # Weight args follow in canonical order; first is the embed triple.
+    assert spec[2]["name"] == "embed.sym"
+    assert spec[2]["dtype"] == "u8"
+    assert spec[3]["name"] == "embed.scale"
+    assert spec[4]["name"] == "embed.zp"
+
+
+def test_io_spec_decode_has_kv():
+    spec = io_spec(TINY, "decode", quant=False)
+    names = [a["name"] for a in spec[:4]]
+    assert names == ["tokens", "pos", "k_cache", "v_cache"]
+    assert spec[2]["shape"] == [
+        TINY.n_layers, TINY.decode_batch, TINY.max_seq, TINY.n_heads, TINY.head_dim,
+    ]
+
+
+def test_weight_spec_counts():
+    q = flat_weight_spec(TINY, quant=True)
+    f = flat_weight_spec(TINY, quant=False)
+    nq = len(quantized_names(TINY))
+    # Each quantized tensor contributes 3 args; fp32 tensors 1.
+    assert len(q) == len(f) + 2 * nq
+    assert sum(1 for a in q if a[2] == "u8") == nq
+
+
+def test_abstract_args_shapes():
+    spec = io_spec(TINY, "score", quant=True)
+    aas = abstract_args(spec)
+    assert aas[0].shape == (1, TINY.prefill_len)
+    assert str(aas[0].dtype) == "int32"
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+def test_manifest_matches_current_spec():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["format"] == 1
+    assert m["config"]["n_params"] == TINY.n_params()
+    assert m["quantized_names"] == quantized_names(TINY)
+    for which in ("prefill", "decode", "score"):
+        for tag, quant in (("f32", False), ("quant", True)):
+            got = m["executables"][f"{which}_{tag}"]["args"]
+            want = io_spec(TINY, which, quant)
+            assert got == want, f"{which}_{tag} arg spec drifted"
+            assert os.path.exists(
+                os.path.join(ART, m["executables"][f"{which}_{tag}"]["file"])
+            )
+
+
+@needs_artifacts
+def test_golden_quality_ordering():
+    """The Table I shape: ppl(f32) <= ppl(u8) << ppl(u4)-ish ordering."""
+    with open(os.path.join(ART, "golden.json")) as f:
+        g = json.load(f)
+    p_f32 = g["variants"]["f32"]["eval_char_ppl"]
+    p_u8 = g["variants"]["u8"]["eval_char_ppl"]
+    p_u4 = g["variants"]["u4"]["eval_char_ppl"]
+    assert p_f32 <= p_u8 * 1.01, "u8 must track f32 closely"
+    assert p_u8 < p_u4, "u4 must degrade more than u8"
+    assert p_f32 < 10, "trained model must beat random (ppl 128)"
+
+
+@needs_artifacts
+def test_golden_has_reference_logits():
+    with open(os.path.join(ART, "golden.json")) as f:
+        g = json.load(f)
+    for tag in ("f32", "u8", "u4"):
+        v = g["variants"][tag]
+        assert len(v["prefill_logits_head"]) == 8
+        assert len(v["decode_logits_head"]) == 8
+        assert 0 <= v["prefill_argmax"] < 128

@@ -1,0 +1,152 @@
+"""L2 model invariants: decode-step chain == full forward, prefill
+consistency, quantized-path sanity, flat-arg spec roundtrip."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    Config,
+    decode_step,
+    flat_from_params,
+    flat_weight_spec,
+    init_params,
+    loss_fn,
+    param_shapes,
+    params_from_flat,
+    prefill,
+    quantized_names,
+    train_forward,
+)
+from compile.quantize import quantize_tree
+
+# A miniature config so tests run fast under interpret-mode Pallas.
+SMALL = Config(
+    vocab=32, dim=32, n_layers=2, n_heads=2, ffn=64, max_seq=24,
+    prefill_len=8, decode_batch=2,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(SMALL, seed=3)
+
+
+@pytest.fixture(scope="module")
+def qparams(params):
+    qp, _ = quantize_tree(
+        {k: np.asarray(v) for k, v in params.items()}, 8, set(quantized_names(SMALL))
+    )
+    return {
+        k: ({"sym": jnp.asarray(v["sym"]), "scale": v["scale"], "zp": v["zp"]}
+            if isinstance(v, dict) else jnp.asarray(v))
+        for k, v in qp.items()
+    }
+
+
+def test_param_count_formula(params):
+    total = sum(int(np.prod(np.shape(v))) for v in params.values())
+    assert total == SMALL.n_params()
+
+
+def test_prefill_matches_full_forward(params):
+    toks = np.zeros((1, SMALL.prefill_len), np.int32)
+    prompt = np.array([3, 7, 11], np.int32)
+    toks[0, :3] = prompt
+    logits, k, v = prefill(SMALL, params, jnp.asarray(toks), jnp.int32(3))
+    full = train_forward(SMALL, params, jnp.asarray(toks[:, :3]))
+    np.testing.assert_allclose(
+        np.asarray(logits)[0], np.asarray(full)[0, 2], rtol=1e-4, atol=1e-4
+    )
+    assert k.shape == (SMALL.n_layers, 1, SMALL.max_seq, SMALL.n_heads, SMALL.head_dim)
+
+
+def test_decode_chain_equals_full_forward(params):
+    """Greedy-decode 4 steps via the KV cache; logits at each step must
+    match a from-scratch full forward over the growing sequence."""
+    prompt = [5, 9, 2]
+    toks = np.zeros((1, SMALL.prefill_len), np.int32)
+    toks[0, : len(prompt)] = prompt
+    logits, k, v = prefill(SMALL, params, jnp.asarray(toks), jnp.int32(len(prompt)))
+    b = SMALL.decode_batch
+    k = jnp.tile(k, (1, b, 1, 1, 1))
+    v = jnp.tile(v, (1, b, 1, 1, 1))
+    seq = list(prompt)
+    cur = int(np.argmax(np.asarray(logits)[0]))
+    pos = len(prompt)
+    for _ in range(4):
+        seq.append(cur)
+        dl, k, v = decode_step(
+            SMALL,
+            params,
+            jnp.full((b,), cur, jnp.int32),
+            jnp.full((b,), pos, jnp.int32),
+            k,
+            v,
+        )
+        full = train_forward(SMALL, params, jnp.asarray([seq], jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(dl)[0], np.asarray(full)[0, -1], rtol=1e-3, atol=1e-3
+        )
+        cur = int(np.argmax(np.asarray(dl)[0]))
+        pos += 1
+
+
+def test_quant_path_close_to_f32(params, qparams):
+    toks = np.zeros((1, SMALL.prefill_len), np.int32)
+    toks[0, :4] = [1, 2, 3, 4]
+    lf, _, _ = prefill(SMALL, params, jnp.asarray(toks), jnp.int32(4))
+    lq, _, _ = prefill(SMALL, qparams, jnp.asarray(toks), jnp.int32(4))
+    # uint8 quantization noise is small; rankings should broadly agree.
+    cos = float(
+        np.dot(np.asarray(lf)[0], np.asarray(lq)[0])
+        / (np.linalg.norm(lf) * np.linalg.norm(lq))
+    )
+    assert cos > 0.98, f"cosine {cos}"
+
+
+def test_decode_slots_are_independent(params):
+    """Different tokens per slot must give different logits per slot and
+    not leak across batch lanes."""
+    b = SMALL.decode_batch
+    k = jnp.zeros((SMALL.n_layers, b, SMALL.max_seq, SMALL.n_heads, SMALL.head_dim))
+    v = jnp.zeros_like(k)
+    toks = jnp.asarray(np.arange(b, dtype=np.int32))
+    pos = jnp.zeros((b,), jnp.int32)
+    logits, k2, _ = decode_step(SMALL, params, toks, pos, k, v)
+    l = np.asarray(logits)
+    assert not np.allclose(l[0], l[1])
+    # Writing at pos 0 changed each slot's own cache row only.
+    k2 = np.asarray(k2)
+    assert not np.allclose(k2[:, 0, 0], k2[:, 1, 0])
+
+
+def test_flat_spec_roundtrip(params):
+    for quant in (False, True):
+        if quant:
+            qp, _ = quantize_tree(
+                {k: np.asarray(v) for k, v in params.items()},
+                8,
+                set(quantized_names(SMALL)),
+            )
+            src = {
+                k: ({"sym": jnp.asarray(v["sym"]), "scale": v["scale"], "zp": v["zp"]}
+                    if isinstance(v, dict) else jnp.asarray(v))
+                for k, v in qp.items()
+            }
+        else:
+            src = params
+        flat = flat_from_params(SMALL, quant, src)
+        spec = flat_weight_spec(SMALL, quant)
+        assert len(flat) == len(spec)
+        back = params_from_flat(SMALL, quant, flat)
+        assert set(back) == set(param_shapes(SMALL))
+
+
+def test_loss_decreases_with_teacher_signal(params):
+    """Sanity: loss on structured (repeating) data < loss on an adversarial
+    constant-shift sequence for a trained... here just check finiteness
+    and shape plumbing of loss_fn."""
+    toks = np.tile(np.arange(8, dtype=np.int32), (2, 2))[:, : SMALL.prefill_len]
+    loss = float(loss_fn(SMALL, params, jnp.asarray(toks)))
+    assert np.isfinite(loss) and loss > 0

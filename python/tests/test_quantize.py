@@ -1,0 +1,89 @@
+"""Mixed-quantization mirror: the python side must agree with the rust
+source of truth (scheme rule, grid math, reconstruction bound)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quantize import LEVELS, choose_scheme, dequantize, quantize, quantize_tree
+
+
+def test_scheme_rule_matches_paper():
+    assert choose_scheme(np.array([0.1, 0.9])) == "symmetric_unsigned"
+    assert choose_scheme(np.array([-0.1, -0.9])) == "symmetric_unsigned"
+    assert choose_scheme(np.array([-0.1, 0.9])) == "asymmetric"
+    assert choose_scheme(np.array([0.0, 0.5])) == "symmetric_unsigned"
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize(
+    "mean,std", [(0.0, 0.05), (0.2, 0.02), (-0.3, 0.08)]
+)
+def test_reconstruction_error_half_step(bits, mean, std):
+    rng = np.random.default_rng(1)
+    w = rng.normal(mean, std, size=4096).astype(np.float32)
+    sym, qp = quantize(w, bits)
+    assert sym.max() < LEVELS[bits]
+    back = dequantize(sym, qp)
+    bound = abs(qp.scale) / 2 + 1e-6
+    assert np.max(np.abs(back - w)) <= bound
+
+
+def test_all_negative_layer_negative_scale():
+    w = -np.abs(np.random.default_rng(2).normal(0.2, 0.1, 256)).astype(np.float32)
+    sym, qp = quantize(w, 8)
+    assert qp.scheme == "symmetric_unsigned"
+    assert qp.scale < 0
+    back = dequantize(sym, qp)
+    assert np.max(np.abs(back - w)) <= abs(qp.scale) / 2 + 1e-6
+
+
+def test_asymmetric_endpoints_exact():
+    w = np.array([-1.0, 0.25, 2.0], np.float32)
+    sym, qp = quantize(w, 8)
+    assert qp.scheme == "asymmetric"
+    back = dequantize(sym, qp)
+    assert abs(back[0] - -1.0) < 1e-5
+    assert abs(back[2] - 2.0) < 1e-5
+
+
+def test_constant_and_zero_layers():
+    z, qz = quantize(np.zeros(16, np.float32), 4)
+    assert (dequantize(z, qz) == 0).all()
+    c, qc = quantize(np.full(16, 0.37, np.float32), 8)
+    assert np.allclose(dequantize(c, qc), 0.37, atol=1e-6)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    bits=st.sampled_from([4, 8]),
+    n=st.integers(1, 2000),
+    mode=st.integers(0, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_error_bound(bits, n, mode, seed):
+    rng = np.random.default_rng(seed)
+    if mode == 0:
+        w = rng.normal(0, 0.1, n)
+    elif mode == 1:
+        w = rng.uniform(0, 1, n)
+    elif mode == 2:
+        w = rng.uniform(-3, -0.5, n)
+    else:
+        w = rng.normal(0.4, 1.5, n)
+    w = w.astype(np.float32)
+    sym, qp = quantize(w, bits)
+    assert sym.dtype == np.uint8 and sym.max() < LEVELS[bits]
+    back = dequantize(sym, qp)
+    assert np.max(np.abs(back - w)) <= abs(qp.scale) / 2 + 1e-5
+
+
+def test_quantize_tree_splits_quant_and_f32():
+    params = {
+        "w": np.random.default_rng(3).normal(0, 0.1, (8, 8)).astype(np.float32),
+        "ln": np.ones(8, np.float32),
+    }
+    out, meta = quantize_tree(params, 8, {"w"})
+    assert set(meta) == {"w"}
+    assert isinstance(out["w"], dict) and out["w"]["sym"].shape == (8, 8)
+    assert isinstance(out["ln"], np.ndarray)

@@ -1,0 +1,257 @@
+//! Comparators for the paper's evaluation:
+//!
+//! * [`fixed_pack`] / [`fixed_unpack`] — plain fixed-width bit packing
+//!   (the "w/o Huffman" arm of Table II and the uint8/uint4 columns of
+//!   Table I before entropy coding);
+//! * [`CodebookCoder`] — a QMoE-style fixed-dictionary coder (§II-C's
+//!   related work). It maps frequent symbol *pairs* to fixed-width
+//!   dictionary indices; because every codeword has the same length it
+//!   is **not Shannon-rate optimal**, which is exactly the paper's
+//!   argument for Huffman. The `baseline_codebook` bench regenerates
+//!   that comparison;
+//! * [`gzip_bytes`] — DEFLATE over the packed weights, a strong generic
+//!   entropy+dictionary baseline.
+
+use crate::bitio::{pack_u4, unpack_u4, BitReader, BitWriter};
+use crate::quant::BitWidth;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+
+/// Pack quantization symbols at their fixed width (no entropy coding).
+pub fn fixed_pack(symbols: &[u8], bits: BitWidth) -> Result<Vec<u8>> {
+    match bits {
+        BitWidth::U8 => Ok(symbols.to_vec()),
+        BitWidth::U4 => pack_u4(symbols),
+    }
+}
+
+/// Inverse of [`fixed_pack`].
+pub fn fixed_unpack(packed: &[u8], bits: BitWidth, n: usize) -> Result<Vec<u8>> {
+    match bits {
+        BitWidth::U8 => {
+            if packed.len() != n {
+                return Err(Error::InvalidArg(format!(
+                    "fixed_unpack: {} bytes for {n} u8 symbols",
+                    packed.len()
+                )));
+            }
+            Ok(packed.to_vec())
+        }
+        BitWidth::U4 => unpack_u4(packed, n),
+    }
+}
+
+/// DEFLATE-compress a byte buffer (generic baseline).
+pub fn gzip_bytes(data: &[u8]) -> Result<Vec<u8>> {
+    let mut enc = flate2::write::GzEncoder::new(Vec::new(), flate2::Compression::default());
+    enc.write_all(data)?;
+    Ok(enc.finish()?)
+}
+
+/// Decompress [`gzip_bytes`] output.
+pub fn gunzip_bytes(data: &[u8]) -> Result<Vec<u8>> {
+    let mut dec = flate2::read::GzDecoder::new(data);
+    let mut out = Vec::new();
+    dec.read_to_end(&mut out)?;
+    Ok(out)
+}
+
+/// Number of dictionary slots for symbol pairs.
+const PAIR_SLOTS: usize = 4096;
+/// Codeword width: 1 flag bit + 12-bit payload.
+const CW_BITS: u8 = 13;
+
+/// QMoE-style fixed-dictionary coder over symbol pairs.
+///
+/// Codewords are all [`CW_BITS`] wide: `0 | pair_index` emits two symbols
+/// from the dictionary; `1 | symbol | 4 zero pad` escapes one literal
+/// symbol. Frequent pairs therefore cost 6.5 bits/symbol and escapes 13 —
+/// fixed-length codes cannot track the source entropy the way Huffman's
+/// variable-length codes do.
+#[derive(Debug, Clone)]
+pub struct CodebookCoder {
+    /// Dictionary: pair → index.
+    index_of: HashMap<(u8, u8), u16>,
+    /// Inverse dictionary.
+    pairs: Vec<(u8, u8)>,
+}
+
+impl CodebookCoder {
+    /// Build the dictionary from training symbols: the [`PAIR_SLOTS`]
+    /// most frequent adjacent pairs.
+    pub fn train(symbols: &[u8]) -> Self {
+        let mut counts: HashMap<(u8, u8), u64> = HashMap::new();
+        for w in symbols.windows(2) {
+            *counts.entry((w[0], w[1])).or_insert(0) += 1;
+        }
+        let mut ranked: Vec<((u8, u8), u64)> = counts.into_iter().collect();
+        ranked.sort_by_key(|&(p, c)| (std::cmp::Reverse(c), p));
+        let pairs: Vec<(u8, u8)> = ranked
+            .into_iter()
+            .take(PAIR_SLOTS)
+            .map(|(p, _)| p)
+            .collect();
+        let index_of = pairs
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i as u16))
+            .collect();
+        CodebookCoder { index_of, pairs }
+    }
+
+    /// Greedy encode: consume a dictionary pair when possible, else
+    /// escape one literal.
+    pub fn encode(&self, symbols: &[u8]) -> Vec<u8> {
+        let mut w = BitWriter::with_capacity(symbols.len());
+        let mut i = 0;
+        while i < symbols.len() {
+            if i + 1 < symbols.len() {
+                if let Some(&idx) = self.index_of.get(&(symbols[i], symbols[i + 1])) {
+                    w.write_bits(idx as u64, CW_BITS); // flag bit 0 implicit in 13-bit value < 4096
+                    i += 2;
+                    continue;
+                }
+            }
+            // Escape: 1 | symbol | 4 pad bits.
+            w.write_bits((1 << 12) | ((symbols[i] as u64) << 4), CW_BITS);
+            i += 1;
+        }
+        w.into_bytes()
+    }
+
+    /// Decode exactly `n` symbols.
+    pub fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<u8>> {
+        let mut r = BitReader::new(bytes);
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            if r.remaining_bits() < CW_BITS as usize {
+                return Err(Error::Format("codebook stream exhausted".into()));
+            }
+            let cw = r.read_bits(CW_BITS)?;
+            if cw & (1 << 12) != 0 {
+                out.push(((cw >> 4) & 0xFF) as u8);
+            } else {
+                let idx = (cw & 0xFFF) as usize;
+                let &(a, b) = self
+                    .pairs
+                    .get(idx)
+                    .ok_or_else(|| Error::Format(format!("codebook index {idx} out of range")))?;
+                out.push(a);
+                if out.len() < n {
+                    out.push(b);
+                } else {
+                    return Err(Error::Format("codebook pair overruns output".into()));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Encoded bits per symbol for a stream (without materializing it).
+    pub fn bits_per_symbol(&self, symbols: &[u8]) -> f64 {
+        if symbols.is_empty() {
+            return 0.0;
+        }
+        let mut bits = 0u64;
+        let mut i = 0;
+        while i < symbols.len() {
+            if i + 1 < symbols.len() && self.index_of.contains_key(&(symbols[i], symbols[i + 1])) {
+                bits += CW_BITS as u64;
+                i += 2;
+            } else {
+                bits += CW_BITS as u64;
+                i += 1;
+            }
+        }
+        bits as f64 / symbols.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::huffman::{encode_with_own_code, FreqTable};
+    use crate::rng::Rng;
+
+    fn gaussian_symbols(n: usize, levels: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let g = rng.gaussian_f32(levels as f32 / 2.0, levels as f32 / 8.0);
+                (g.round().max(0.0) as usize).min(levels - 1) as u8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fixed_pack_roundtrips_both_widths() {
+        let mut rng = Rng::new(1);
+        let u8s: Vec<u8> = (0..999).map(|_| rng.below(256) as u8).collect();
+        let u4s: Vec<u8> = (0..999).map(|_| rng.below(16) as u8).collect();
+        assert_eq!(
+            fixed_unpack(&fixed_pack(&u8s, BitWidth::U8).unwrap(), BitWidth::U8, 999).unwrap(),
+            u8s
+        );
+        assert_eq!(
+            fixed_unpack(&fixed_pack(&u4s, BitWidth::U4).unwrap(), BitWidth::U4, 999).unwrap(),
+            u4s
+        );
+    }
+
+    #[test]
+    fn gzip_roundtrip() {
+        let data = gaussian_symbols(10_000, 256, 2);
+        let z = gzip_bytes(&data).unwrap();
+        assert_eq!(gunzip_bytes(&z).unwrap(), data);
+        assert!(z.len() < data.len());
+    }
+
+    #[test]
+    fn codebook_roundtrips() {
+        let syms = gaussian_symbols(20_000, 16, 3);
+        let cb = CodebookCoder::train(&syms);
+        let enc = cb.encode(&syms);
+        assert_eq!(cb.decode(&enc, syms.len()).unwrap(), syms);
+    }
+
+    #[test]
+    fn codebook_roundtrips_odd_lengths_and_escapes() {
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let n = 1 + rng.below(500);
+            let syms: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            // Train on different data so escapes are exercised.
+            let cb = CodebookCoder::train(&gaussian_symbols(5000, 16, 5));
+            let enc = cb.encode(&syms);
+            assert_eq!(cb.decode(&enc, n).unwrap(), syms, "n={n}");
+        }
+    }
+
+    #[test]
+    fn huffman_beats_codebook_on_gaussian_weights() {
+        // The paper's §II-C argument: fixed-length dictionary codes are
+        // not Shannon-optimal. On a Gaussian uint4 histogram Huffman must
+        // achieve fewer bits/symbol.
+        let syms = gaussian_symbols(100_000, 16, 6);
+        let cb = CodebookCoder::train(&syms);
+        let cb_bits = cb.bits_per_symbol(&syms);
+        let freq = FreqTable::from_symbols(&syms);
+        let (spec, _) = encode_with_own_code(&syms).unwrap();
+        let hf_bits = spec.expected_bits(&freq);
+        assert!(
+            hf_bits < cb_bits,
+            "huffman {hf_bits} must beat codebook {cb_bits}"
+        );
+    }
+
+    #[test]
+    fn codebook_bits_estimate_matches_encoding() {
+        let syms = gaussian_symbols(9_999, 16, 7);
+        let cb = CodebookCoder::train(&syms);
+        let bits_est = cb.bits_per_symbol(&syms) * syms.len() as f64;
+        let enc = cb.encode(&syms);
+        let actual_bits = enc.len() as f64 * 8.0;
+        assert!((actual_bits - bits_est).abs() < 8.0, "padding only");
+    }
+}

@@ -1,0 +1,188 @@
+//! In-tree micro-benchmark harness (offline build: no criterion).
+//!
+//! `cargo bench` targets declare `harness = false` and drive this module
+//! directly. The harness does what criterion's core loop does — warmup,
+//! repeated timed batches, robust statistics — without the dependency.
+//! Results print as aligned text and accumulate into
+//! `bench_results/*.csv` for EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+/// Result statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    /// Case name.
+    pub name: String,
+    /// Median batch time per iteration.
+    pub median: Duration,
+    /// 10th percentile.
+    pub p10: Duration,
+    /// 90th percentile.
+    pub p90: Duration,
+    /// Iterations per batch used.
+    pub iters_per_batch: u64,
+    /// Batches measured.
+    pub batches: usize,
+}
+
+impl Stats {
+    /// Iterations/second at the median.
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.median.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Benchmark runner with a time budget per case.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    /// Target measurement time per case.
+    pub measure_for: Duration,
+    /// Warmup time per case.
+    pub warmup_for: Duration,
+    /// Batches to split the measurement into.
+    pub batches: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            measure_for: Duration::from_millis(800),
+            warmup_for: Duration::from_millis(200),
+            batches: 15,
+        }
+    }
+}
+
+impl Bench {
+    /// Default-configured runner.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick configuration for slow end-to-end cases.
+    pub fn slow() -> Self {
+        Bench {
+            measure_for: Duration::from_secs(2),
+            warmup_for: Duration::from_millis(300),
+            batches: 7,
+        }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    /// Returns robust per-iteration statistics and prints a line.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        // Warmup + calibration: how many iters fit in a batch?
+        let cal_start = Instant::now();
+        let mut cal_iters = 0u64;
+        while cal_start.elapsed() < self.warmup_for || cal_iters == 0 {
+            f();
+            cal_iters += 1;
+            if cal_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = cal_start.elapsed().as_secs_f64() / cal_iters as f64;
+        let batch_time = self.measure_for.as_secs_f64() / self.batches as f64;
+        let iters_per_batch = ((batch_time / per_iter.max(1e-9)) as u64).clamp(1, 10_000_000);
+
+        let mut samples: Vec<Duration> = Vec::with_capacity(self.batches);
+        for _ in 0..self.batches {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_batch {
+                f();
+            }
+            samples.push(t0.elapsed() / iters_per_batch as u32);
+        }
+        samples.sort_unstable();
+        let q = |frac: f64| samples[((samples.len() - 1) as f64 * frac) as usize];
+        let stats = Stats {
+            name: name.to_string(),
+            median: q(0.5),
+            p10: q(0.1),
+            p90: q(0.9),
+            iters_per_batch,
+            batches: self.batches,
+        };
+        println!(
+            "{:<48} median {:>12?}  p10 {:>12?}  p90 {:>12?}  ({} it/batch)",
+            stats.name, stats.median, stats.p10, stats.p90, stats.iters_per_batch
+        );
+        stats
+    }
+
+    /// Time a single execution of `f` (for expensive one-shot phases
+    /// like whole-model decode).
+    pub fn once<T>(&self, name: &str, f: impl FnOnce() -> T) -> (T, Duration) {
+        let t0 = Instant::now();
+        let out = f();
+        let d = t0.elapsed();
+        println!("{name:<48} once   {d:>12?}");
+        (out, d)
+    }
+}
+
+/// Format seconds human-readably for table cells.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} µs", s * 1e6)
+    }
+}
+
+/// Format bytes human-readably.
+pub fn fmt_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_produces_ordered_quantiles() {
+        let b = Bench {
+            measure_for: Duration::from_millis(30),
+            warmup_for: Duration::from_millis(5),
+            batches: 5,
+        };
+        let mut x = 0u64;
+        let stats = b.run("noop-ish", || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(stats.p10 <= stats.median && stats.median <= stats.p90);
+        assert!(stats.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn once_returns_value_and_duration() {
+        let b = Bench::new();
+        let (v, d) = b.once("compute", || 21 * 2);
+        assert_eq!(v, 42);
+        assert!(d > Duration::ZERO);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_secs(2.5), "2.50 s");
+        assert_eq!(fmt_secs(0.0025), "2.50 ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.50 µs");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+}

@@ -1,0 +1,370 @@
+//! Bit-level I/O: the substrate under the Huffman codec and the
+//! fixed-width bit-packing baselines.
+//!
+//! Conventions:
+//!
+//! * **MSB-first** within each byte — the first bit written is the most
+//!   significant bit of byte 0. This matches the canonical-Huffman LUT
+//!   decoder in [`crate::huffman`], which peeks a fixed-width window of
+//!   upcoming bits as an integer.
+//! * Streams are **byte-aligned at segment boundaries**: every encoded
+//!   tensor segment starts on a fresh byte (padding bits are zero). This
+//!   is precisely what makes the paper's §III-C parallel decoding
+//!   possible — segment starts are known in advance.
+
+use crate::{Error, Result};
+
+/// Maximum number of bits a single `write_bits`/`read_bits` call may move.
+pub const MAX_BITS: u8 = 57; // keeps the 64-bit accumulator simple
+
+/// Append-only MSB-first bit writer.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits used in the final byte (0 ⇒ byte-aligned).
+    partial_bits: u8,
+}
+
+impl BitWriter {
+    /// New empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// New writer with reserved capacity (in bytes).
+    pub fn with_capacity(bytes: usize) -> Self {
+        BitWriter {
+            buf: Vec::with_capacity(bytes),
+            partial_bits: 0,
+        }
+    }
+
+    /// Total bits written so far.
+    pub fn bit_len(&self) -> usize {
+        if self.partial_bits == 0 {
+            self.buf.len() * 8
+        } else {
+            (self.buf.len() - 1) * 8 + self.partial_bits as usize
+        }
+    }
+
+    /// Write the low `len` bits of `code`, MSB of the field first.
+    ///
+    /// `len == 0` is a no-op. Panics if `len > MAX_BITS` or `code` has
+    /// bits above `len` (that would silently corrupt the stream).
+    #[inline]
+    pub fn write_bits(&mut self, code: u64, len: u8) {
+        debug_assert!(len <= MAX_BITS, "write_bits len {len}");
+        debug_assert!(
+            len == 64 || code < (1u64 << len),
+            "code {code:#x} wider than {len} bits"
+        );
+        let mut remaining = len;
+        while remaining > 0 {
+            if self.partial_bits == 0 {
+                self.buf.push(0);
+            }
+            let free = 8 - self.partial_bits;
+            let take = free.min(remaining);
+            // Bits of `code` we are emitting now: the `take` bits just
+            // below position `remaining`.
+            let chunk = ((code >> (remaining - take)) & ((1u64 << take) - 1)) as u8;
+            let last = self.buf.last_mut().unwrap();
+            *last |= chunk << (free - take);
+            self.partial_bits = (self.partial_bits + take) % 8;
+            remaining -= take;
+        }
+    }
+
+    /// Write a single bit.
+    #[inline]
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u64, 1);
+    }
+
+    /// Pad with zero bits to the next byte boundary.
+    pub fn align_byte(&mut self) {
+        self.partial_bits = 0;
+    }
+
+    /// Finish and return the underlying bytes (zero-padded to a byte).
+    pub fn into_bytes(mut self) -> Vec<u8> {
+        self.align_byte();
+        self.buf
+    }
+
+    /// Borrow the bytes written so far (final byte may be partial).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// MSB-first bit reader over a byte slice.
+///
+/// Maintains a 64-bit look-ahead accumulator so the Huffman LUT decoder
+/// can `peek` up to 32 bits and `consume` a variable count in O(1).
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    /// Index of the next byte to refill from.
+    next_byte: usize,
+    /// Accumulator: upcoming bits left-aligned (bit 63 = next bit).
+    acc: u64,
+    /// Number of valid bits in `acc`.
+    acc_bits: u8,
+    /// Total bits consumed so far.
+    consumed: usize,
+}
+
+impl<'a> BitReader<'a> {
+    /// Reader over the whole slice.
+    pub fn new(bytes: &'a [u8]) -> Self {
+        let mut r = BitReader {
+            bytes,
+            next_byte: 0,
+            acc: 0,
+            acc_bits: 0,
+            consumed: 0,
+        };
+        r.refill();
+        r
+    }
+
+    /// Total bits in the underlying slice.
+    pub fn total_bits(&self) -> usize {
+        self.bytes.len() * 8
+    }
+
+    /// Bits consumed so far.
+    pub fn bit_pos(&self) -> usize {
+        self.consumed
+    }
+
+    /// Bits remaining.
+    pub fn remaining_bits(&self) -> usize {
+        self.total_bits() - self.consumed
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        while self.acc_bits <= 56 && self.next_byte < self.bytes.len() {
+            self.acc |= (self.bytes[self.next_byte] as u64) << (56 - self.acc_bits);
+            self.next_byte += 1;
+            self.acc_bits += 8;
+        }
+    }
+
+    /// Peek the next `n` bits (MSB-first) as an integer **without**
+    /// consuming. If fewer than `n` bits remain, the missing low bits
+    /// read as zero (the Huffman decoder relies on this for its final
+    /// symbols). `n <= 32`.
+    #[inline]
+    pub fn peek_bits(&self, n: u8) -> u32 {
+        debug_assert!(n <= 32);
+        if n == 0 {
+            return 0;
+        }
+        (self.acc >> (64 - n as u64)) as u32
+    }
+
+    /// Consume `n` bits. Returns an error if that overruns the stream.
+    #[inline]
+    pub fn consume(&mut self, n: u8) -> Result<()> {
+        if n as usize > self.remaining_bits() {
+            return Err(Error::Format(format!(
+                "bitstream overrun: consume {n} with {} left",
+                self.remaining_bits()
+            )));
+        }
+        self.acc <<= n;
+        self.acc_bits -= n;
+        self.consumed += n as usize;
+        self.refill();
+        Ok(())
+    }
+
+    /// Read `n <= 32` bits MSB-first.
+    #[inline]
+    pub fn read_bits(&mut self, n: u8) -> Result<u32> {
+        let v = self.peek_bits(n);
+        self.consume(n)?;
+        Ok(v)
+    }
+
+    /// Read one bit.
+    #[inline]
+    pub fn read_bit(&mut self) -> Result<bool> {
+        Ok(self.read_bits(1)? != 0)
+    }
+}
+
+/// Pack a slice of 4-bit symbols (values `< 16`, one per byte) into
+/// nibbles, high nibble first. This is the *uncompressed* uint4 layout
+/// used by the no-Huffman baseline and by the PJRT weight buffers.
+pub fn pack_u4(symbols: &[u8]) -> Result<Vec<u8>> {
+    if let Some(&bad) = symbols.iter().find(|&&s| s >= 16) {
+        return Err(Error::InvalidArg(format!("pack_u4: symbol {bad} >= 16")));
+    }
+    let mut out = Vec::with_capacity(symbols.len().div_ceil(2));
+    for pair in symbols.chunks(2) {
+        let hi = pair[0] << 4;
+        let lo = if pair.len() == 2 { pair[1] } else { 0 };
+        out.push(hi | lo);
+    }
+    Ok(out)
+}
+
+/// Inverse of [`pack_u4`]; `n` is the original symbol count (needed
+/// because an odd count leaves a padding nibble).
+pub fn unpack_u4(packed: &[u8], n: usize) -> Result<Vec<u8>> {
+    if n.div_ceil(2) != packed.len() {
+        return Err(Error::InvalidArg(format!(
+            "unpack_u4: {} bytes cannot hold {n} nibbles",
+            packed.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(n);
+    for (i, &b) in packed.iter().enumerate() {
+        out.push(b >> 4);
+        if 2 * i + 1 < n {
+            out.push(b & 0x0F);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn single_bits_roundtrip() {
+        let bits = [true, false, true, true, false, false, true, false, true];
+        let mut w = BitWriter::new();
+        for &b in &bits {
+            w.write_bit(b);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &b in &bits {
+            assert_eq!(r.read_bit().unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn msb_first_layout() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b1, 1);
+        w.write_bits(0b01, 2);
+        w.write_bits(0b10011, 5);
+        // 1 01 10011 => 0b1011_0011
+        assert_eq!(w.into_bytes(), vec![0b1011_0011]);
+    }
+
+    #[test]
+    fn cross_byte_fields() {
+        let mut w = BitWriter::new();
+        w.write_bits(0x3FF, 10); // ten 1-bits
+        w.write_bits(0, 6);
+        let bytes = w.into_bytes();
+        assert_eq!(bytes, vec![0xFF, 0xC0]);
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(10).unwrap(), 0x3FF);
+        assert_eq!(r.read_bits(6).unwrap(), 0);
+    }
+
+    #[test]
+    fn align_byte_pads_with_zeros() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.align_byte();
+        w.write_bits(0xAB, 8);
+        let bytes = w.into_bytes();
+        assert_eq!(bytes, vec![0b1010_0000, 0xAB]);
+    }
+
+    #[test]
+    fn bit_len_tracks_partial_bytes() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.write_bits(0b11, 2);
+        assert_eq!(w.bit_len(), 2);
+        w.write_bits(0x7F, 7);
+        assert_eq!(w.bit_len(), 9);
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let bytes = [0b1100_1010, 0b0101_0101];
+        let r = BitReader::new(&bytes);
+        assert_eq!(r.peek_bits(4), 0b1100);
+        assert_eq!(r.peek_bits(4), 0b1100);
+        assert_eq!(r.peek_bits(12), 0b1100_1010_0101);
+    }
+
+    #[test]
+    fn peek_past_end_reads_zero() {
+        let bytes = [0b1000_0000];
+        let mut r = BitReader::new(&bytes);
+        r.consume(7).unwrap();
+        assert_eq!(r.peek_bits(8), 0); // 1 real bit (0) + 7 phantom zeros
+        assert_eq!(r.remaining_bits(), 1);
+    }
+
+    #[test]
+    fn consume_overrun_errors() {
+        let bytes = [0xFF];
+        let mut r = BitReader::new(&bytes);
+        r.consume(8).unwrap();
+        assert!(r.consume(1).is_err());
+    }
+
+    #[test]
+    fn random_field_roundtrip_property() {
+        // Property: any sequence of (value, width) fields roundtrips.
+        let mut rng = Rng::new(0xB17);
+        for _case in 0..200 {
+            let n_fields = 1 + rng.below(64);
+            let fields: Vec<(u64, u8)> = (0..n_fields)
+                .map(|_| {
+                    let len = 1 + rng.below(32) as u8;
+                    let val = rng.next_u64() & ((1u64 << len) - 1);
+                    (val, len)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, l) in &fields {
+                w.write_bits(v, l);
+            }
+            let total_bits = w.bit_len();
+            let bytes = w.into_bytes();
+            assert_eq!(bytes.len(), total_bits.div_ceil(8));
+            let mut r = BitReader::new(&bytes);
+            for &(v, l) in &fields {
+                assert_eq!(r.read_bits(l).unwrap() as u64, v, "field len {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_u4_roundtrip() {
+        let mut rng = Rng::new(0x44);
+        for n in [0usize, 1, 2, 3, 7, 8, 1023] {
+            let syms: Vec<u8> = (0..n).map(|_| rng.below(16) as u8).collect();
+            let packed = pack_u4(&syms).unwrap();
+            assert_eq!(packed.len(), n.div_ceil(2));
+            assert_eq!(unpack_u4(&packed, n).unwrap(), syms);
+        }
+    }
+
+    #[test]
+    fn pack_u4_rejects_wide_symbols() {
+        assert!(pack_u4(&[3, 16]).is_err());
+    }
+
+    #[test]
+    fn unpack_u4_rejects_bad_length() {
+        assert!(unpack_u4(&[0xAB], 3).is_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! Hand-rolled CLI argument parsing (offline build: no clap).
+//!
+//! Grammar: `entrollm <command> [--flag value]... [--switch]... [positional]...`
+//! Flags may use `--key value` or `--key=value`.
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First token (the subcommand).
+    pub command: String,
+    /// `--key value` pairs.
+    pub flags: BTreeMap<String, String>,
+    /// Bare `--switch` tokens.
+    pub switches: Vec<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument tokens (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut args = Args {
+            command,
+            ..Default::default()
+        };
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    args.switches.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Required string flag.
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.flags
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| Error::InvalidArg(format!("missing required --{key}")))
+    }
+
+    /// Optional string flag with default.
+    pub fn opt<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    /// Optional parsed flag with default.
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::InvalidArg(format!("--{key}: cannot parse {v:?}"))),
+        }
+    }
+
+    /// Is a bare switch present?
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_switches_positionals() {
+        // NB: a bare switch directly followed by a positional would be
+        // parsed as `--switch value` (documented grammar limitation), so
+        // switches go last.
+        let a = parse(&[
+            "compress", "--bits", "4", "--out=model.elm", "input.npz", "--verbose",
+        ]);
+        assert_eq!(a.command, "compress");
+        assert_eq!(a.req("bits").unwrap(), "4");
+        assert_eq!(a.opt("out", ""), "model.elm");
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["input.npz"]);
+    }
+
+    #[test]
+    fn missing_required_flag_errors() {
+        let a = parse(&["serve"]);
+        assert!(a.req("port").is_err());
+    }
+
+    #[test]
+    fn opt_parse_types_and_defaults() {
+        let a = parse(&["x", "--threads", "8"]);
+        assert_eq!(a.opt_parse("threads", 4usize).unwrap(), 8);
+        assert_eq!(a.opt_parse("missing", 4usize).unwrap(), 4);
+        let bad = parse(&["x", "--threads", "lots"]);
+        assert!(bad.opt_parse("threads", 4usize).is_err());
+    }
+
+    #[test]
+    fn trailing_switch_without_value() {
+        let a = parse(&["x", "--fast"]);
+        assert!(a.has("fast"));
+        assert!(a.flags.is_empty());
+    }
+
+    #[test]
+    fn empty_argv() {
+        let a = parse(&[]);
+        assert_eq!(a.command, "");
+    }
+}

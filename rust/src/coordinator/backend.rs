@@ -1,0 +1,215 @@
+//! The execution backend the engine drives.
+//!
+//! [`Backend`] abstracts "prefill one prompt" and "decode one batched
+//! step" so the engine's batching/slot logic is testable without PJRT
+//! artifacts ([`MockBackend`]) and production runs on the AOT
+//! executables ([`PjrtBackend`]).
+
+use super::kv::KvMirror;
+use crate::runtime::{ModelRuntime, PrefillOut};
+use crate::Result;
+
+/// Shape constants the engine needs from a backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackendCfg {
+    /// Decode batch width (slot count).
+    pub batch: usize,
+    /// KV capacity in tokens.
+    pub max_seq: usize,
+    /// Prefill prompt buffer length.
+    pub prefill_len: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+}
+
+/// Engine-facing execution interface.
+pub trait Backend {
+    /// Shape constants.
+    fn cfg(&self) -> BackendCfg;
+
+    /// Run one prompt; returns (logits `[vocab]`, single-slot K, V).
+    fn prefill(&mut self, prompt: &[u32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)>;
+
+    /// Install a prefilled sequence into batch slot `slot`.
+    fn set_slot(&mut self, slot: usize, k1: &[f32], v1: &[f32]) -> Result<()>;
+
+    /// One decode step over all slots; returns logits `[batch, vocab]`
+    /// flattened row-major. KV state advances internally.
+    fn decode(&mut self, tokens: &[u32], pos: &[u32]) -> Result<Vec<f32>>;
+}
+
+// ------------------------------------------------------------------- PJRT
+
+/// Production backend over the AOT PJRT executables.
+///
+/// KV caches live on device between steps; the host [`KvMirror`] is
+/// refreshed only when a slot must be spliced (admission), which is the
+/// continuous-batching slow path.
+pub struct PjrtBackend {
+    rt: ModelRuntime,
+    mirror: KvMirror,
+    device_kv: Option<(crate::runtime::DeviceBuffer, crate::runtime::DeviceBuffer)>,
+}
+
+impl PjrtBackend {
+    /// Wrap a loaded runtime.
+    pub fn new(rt: ModelRuntime) -> Self {
+        let c = rt.config().clone();
+        let mirror = KvMirror::new(c.n_layers, c.decode_batch, c.max_seq, c.n_heads, c.head_dim);
+        PjrtBackend {
+            rt,
+            mirror,
+            device_kv: None,
+        }
+    }
+
+    /// Access the underlying runtime (for eval tooling).
+    pub fn runtime(&self) -> &ModelRuntime {
+        &self.rt
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn cfg(&self) -> BackendCfg {
+        let c = self.rt.config();
+        BackendCfg {
+            batch: c.decode_batch,
+            max_seq: c.max_seq,
+            prefill_len: c.prefill_len,
+            vocab: c.vocab,
+        }
+    }
+
+    fn prefill(&mut self, prompt: &[u32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let PrefillOut {
+            logits,
+            k_cache,
+            v_cache,
+        } = self.rt.prefill(prompt)?;
+        Ok((logits, k_cache, v_cache))
+    }
+
+    fn set_slot(&mut self, slot: usize, k1: &[f32], v1: &[f32]) -> Result<()> {
+        // Bring the device state home first (other slots are mid-flight).
+        if let Some((kb, vb)) = self.device_kv.take() {
+            let (k, v) = self.rt.download_kv(&kb, &vb)?;
+            self.mirror.refresh_from(k, v)?;
+        }
+        self.mirror.splice_slot(slot, k1, v1)?;
+        Ok(())
+    }
+
+    fn decode(&mut self, tokens: &[u32], pos: &[u32]) -> Result<Vec<f32>> {
+        if self.mirror.dirty || self.device_kv.is_none() {
+            let (kb, vb) = self.rt.upload_kv(&self.mirror.k, &self.mirror.v)?;
+            self.device_kv = Some((kb, vb));
+            self.mirror.dirty = false;
+        }
+        let (kb, vb) = self.device_kv.take().expect("kv uploaded above");
+        let out = self.rt.decode_step(tokens, pos, &kb, &vb)?;
+        self.device_kv = Some((out.k_cache, out.v_cache));
+        Ok(out.logits)
+    }
+}
+
+// ------------------------------------------------------------------- mock
+
+/// Deterministic fake backend for engine unit tests.
+///
+/// Prefill "logits" put all mass on `(sum(prompt) + 1) % vocab`; decode
+/// advances each slot's token by `slot + 1` (mod vocab). KV contents are
+/// slot-tagged so tests can verify splicing.
+pub struct MockBackend {
+    /// Shape constants.
+    pub cfg: BackendCfg,
+    layers: usize,
+    heads: usize,
+    head_dim: usize,
+    /// Decode steps executed.
+    pub steps: usize,
+    /// Prefills executed.
+    pub prefills: usize,
+    /// Mirror (public for test inspection).
+    pub mirror: KvMirror,
+}
+
+impl MockBackend {
+    /// Mock with small default shapes.
+    pub fn new(batch: usize, max_seq: usize, vocab: usize) -> Self {
+        let (layers, heads, head_dim) = (2, 2, 4);
+        MockBackend {
+            cfg: BackendCfg {
+                batch,
+                max_seq,
+                prefill_len: max_seq / 2,
+                vocab,
+            },
+            layers,
+            heads,
+            head_dim,
+            steps: 0,
+            prefills: 0,
+            mirror: KvMirror::new(layers, batch, max_seq, heads, head_dim),
+        }
+    }
+
+    fn onehot(&self, tok: u32) -> Vec<f32> {
+        let mut l = vec![0.0f32; self.cfg.vocab];
+        l[(tok as usize) % self.cfg.vocab] = 10.0;
+        l
+    }
+}
+
+impl Backend for MockBackend {
+    fn cfg(&self) -> BackendCfg {
+        self.cfg
+    }
+
+    fn prefill(&mut self, prompt: &[u32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.prefills += 1;
+        let next = (prompt.iter().sum::<u32>() + 1) % self.cfg.vocab as u32;
+        let n = self.layers * self.cfg.max_seq * self.heads * self.head_dim;
+        let tag = prompt.first().copied().unwrap_or(0) as f32;
+        Ok((self.onehot(next), vec![tag; n], vec![-tag; n]))
+    }
+
+    fn set_slot(&mut self, slot: usize, k1: &[f32], v1: &[f32]) -> Result<()> {
+        self.mirror.splice_slot(slot, k1, v1)
+    }
+
+    fn decode(&mut self, tokens: &[u32], pos: &[u32]) -> Result<Vec<f32>> {
+        assert_eq!(tokens.len(), self.cfg.batch);
+        assert_eq!(pos.len(), self.cfg.batch);
+        self.steps += 1;
+        let mut out = Vec::with_capacity(self.cfg.batch * self.cfg.vocab);
+        for (slot, &t) in tokens.iter().enumerate() {
+            let next = (t + slot as u32 + 1) % self.cfg.vocab as u32;
+            out.extend_from_slice(&self.onehot(next));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_is_deterministic() {
+        let mut b = MockBackend::new(2, 16, 32);
+        let (l1, k1, _) = b.prefill(&[3, 4]).unwrap();
+        let (l2, _, _) = b.prefill(&[3, 4]).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(k1[0], 3.0);
+        assert_eq!(b.prefills, 2);
+    }
+
+    #[test]
+    fn mock_decode_advances_per_slot() {
+        let mut b = MockBackend::new(2, 16, 32);
+        let logits = b.decode(&[5, 5], &[0, 0]).unwrap();
+        let row = |s: usize| &logits[s * 32..(s + 1) * 32];
+        assert_eq!(crate::coordinator::sampler::argmax(row(0)), 6);
+        assert_eq!(crate::coordinator::sampler::argmax(row(1)), 7);
+    }
+}

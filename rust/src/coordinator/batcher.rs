@@ -1,0 +1,136 @@
+//! Bounded FIFO admission queue with occupancy statistics.
+//!
+//! The continuous batcher itself lives in [`super::engine`]; this module
+//! owns admission policy: bounded queue, FIFO order, rejection when
+//! full, and the queue-depth / wait-time statistics the serving bench
+//! reports.
+
+use super::request::Request;
+use crate::{Error, Result};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Queue statistics snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct QueueStats {
+    /// Requests currently waiting.
+    pub depth: usize,
+    /// Total admitted since construction.
+    pub admitted: u64,
+    /// Total rejected (queue full).
+    pub rejected: u64,
+    /// Total handed to the engine.
+    pub dispatched: u64,
+}
+
+/// Bounded FIFO admission queue.
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    q: VecDeque<Request>,
+    capacity: usize,
+    stats: QueueStats,
+}
+
+impl AdmissionQueue {
+    /// Queue holding at most `capacity` waiting requests.
+    pub fn new(capacity: usize) -> Self {
+        AdmissionQueue {
+            q: VecDeque::new(),
+            capacity: capacity.max(1),
+            stats: QueueStats::default(),
+        }
+    }
+
+    /// Enqueue a request; errors when the queue is full (backpressure —
+    /// callers see the rejection rather than unbounded latency).
+    pub fn push(&mut self, mut r: Request) -> Result<()> {
+        if self.q.len() >= self.capacity {
+            self.stats.rejected += 1;
+            return Err(Error::Engine(format!(
+                "queue full (capacity {})",
+                self.capacity
+            )));
+        }
+        r.enqueued_at.get_or_insert_with(Instant::now);
+        self.q.push_back(r);
+        self.stats.admitted += 1;
+        Ok(())
+    }
+
+    /// Pop the oldest waiting request.
+    pub fn pop(&mut self) -> Option<Request> {
+        let r = self.q.pop_front();
+        if r.is_some() {
+            self.stats.dispatched += 1;
+        }
+        r
+    }
+
+    /// Number waiting.
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    /// True when nothing waits.
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Statistics snapshot.
+    pub fn stats(&self) -> QueueStats {
+        QueueStats {
+            depth: self.q.len(),
+            ..self.stats.clone()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request::greedy(id, vec![1], 4)
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut q = AdmissionQueue::new(8);
+        for id in 0..5 {
+            q.push(req(id)).unwrap();
+        }
+        for id in 0..5 {
+            assert_eq!(q.pop().unwrap().id, id);
+        }
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn rejects_when_full_and_counts() {
+        let mut q = AdmissionQueue::new(2);
+        q.push(req(0)).unwrap();
+        q.push(req(1)).unwrap();
+        assert!(q.push(req(2)).is_err());
+        let s = q.stats();
+        assert_eq!(s.admitted, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.depth, 2);
+    }
+
+    #[test]
+    fn enqueue_timestamps_set() {
+        let mut q = AdmissionQueue::new(2);
+        q.push(req(0)).unwrap();
+        assert!(q.pop().unwrap().enqueued_at.is_some());
+    }
+
+    #[test]
+    fn dispatch_counter_tracks_pops() {
+        let mut q = AdmissionQueue::new(4);
+        q.push(req(0)).unwrap();
+        q.push(req(1)).unwrap();
+        q.pop();
+        assert_eq!(q.stats().dispatched, 1);
+        assert_eq!(q.stats().depth, 1);
+    }
+}

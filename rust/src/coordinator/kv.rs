@@ -1,0 +1,135 @@
+//! Host-side KV mirror and slot splicing.
+//!
+//! The decode executable works on batched caches `[L, B, MS, H, HD]`.
+//! Each batch index ("slot") belongs to one in-flight sequence. Prefill
+//! produces a single-slot cache `[L, 1, MS, H, HD]`; admitting a request
+//! splices that into the batch at its slot. The mirror tracks a host
+//! copy so splices don't need a device read-modify-write round trip when
+//! several admissions happen between decode steps.
+//!
+//! Correctness note on pad garbage (see python model.prefill docs): the
+//! prefill cache holds garbage at positions ≥ prompt length, but decode
+//! writes position `pos` *before* attending over `[0, pos]`, and `pos`
+//! starts at the prompt length — so garbage is always overwritten before
+//! it becomes visible.
+
+use crate::{Error, Result};
+
+/// Host mirror of the batched KV caches.
+#[derive(Debug, Clone)]
+pub struct KvMirror {
+    /// K cache `[L, B, MS, H, HD]`, row-major.
+    pub k: Vec<f32>,
+    /// V cache, same layout.
+    pub v: Vec<f32>,
+    layers: usize,
+    batch: usize,
+    slot_stride: usize,
+    layer_stride: usize,
+    /// True when the host copy is newer than the device copy.
+    pub dirty: bool,
+}
+
+impl KvMirror {
+    /// Zero-initialized mirror for `[layers, batch, max_seq, heads, head_dim]`.
+    pub fn new(layers: usize, batch: usize, max_seq: usize, heads: usize, head_dim: usize) -> Self {
+        let slot_stride = max_seq * heads * head_dim;
+        let layer_stride = batch * slot_stride;
+        KvMirror {
+            k: vec![0.0; layers * layer_stride],
+            v: vec![0.0; layers * layer_stride],
+            layers,
+            batch,
+            slot_stride,
+            layer_stride,
+            dirty: true,
+        }
+    }
+
+    /// Total element count of one cache.
+    pub fn numel(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Splice a single-slot prefill cache `[L, 1, MS, H, HD]` into
+    /// batch slot `slot`.
+    pub fn splice_slot(&mut self, slot: usize, k1: &[f32], v1: &[f32]) -> Result<()> {
+        if slot >= self.batch {
+            return Err(Error::InvalidArg(format!(
+                "slot {slot} out of range (batch {})",
+                self.batch
+            )));
+        }
+        let expect = self.layers * self.slot_stride;
+        if k1.len() != expect || v1.len() != expect {
+            return Err(Error::InvalidArg(format!(
+                "single-slot kv has {} elements, want {expect}",
+                k1.len()
+            )));
+        }
+        for l in 0..self.layers {
+            let src = l * self.slot_stride..(l + 1) * self.slot_stride;
+            let dst_base = l * self.layer_stride + slot * self.slot_stride;
+            self.k[dst_base..dst_base + self.slot_stride].copy_from_slice(&k1[src.clone()]);
+            self.v[dst_base..dst_base + self.slot_stride].copy_from_slice(&v1[src]);
+        }
+        self.dirty = true;
+        Ok(())
+    }
+
+    /// Replace the whole mirror from device downloads (after decode
+    /// steps, before a splice).
+    pub fn refresh_from(&mut self, k: Vec<f32>, v: Vec<f32>) -> Result<()> {
+        if k.len() != self.k.len() || v.len() != self.v.len() {
+            return Err(Error::InvalidArg("kv refresh size mismatch".into()));
+        }
+        self.k = k;
+        self.v = v;
+        self.dirty = false;
+        Ok(())
+    }
+
+    /// Read back one slot (testing / debugging).
+    pub fn slot_k(&self, slot: usize, layer: usize) -> &[f32] {
+        let base = layer * self.layer_stride + slot * self.slot_stride;
+        &self.k[base..base + self.slot_stride]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splice_writes_only_target_slot() {
+        let mut m = KvMirror::new(2, 3, 4, 2, 2); // L=2,B=3,MS=4,H=2,HD=2
+        let per_slot = 2 * 4 * 2 * 2; // L * MS*H*HD
+        let k1: Vec<f32> = (0..per_slot).map(|i| i as f32 + 1.0).collect();
+        let v1: Vec<f32> = (0..per_slot).map(|i| -(i as f32) - 1.0).collect();
+        m.splice_slot(1, &k1, &v1).unwrap();
+        // Slot 1 layer 0 data matches the first L-stride of k1.
+        assert_eq!(m.slot_k(1, 0), &k1[..16]);
+        assert_eq!(m.slot_k(1, 1), &k1[16..32]);
+        // Slots 0 and 2 untouched.
+        assert!(m.slot_k(0, 0).iter().all(|&x| x == 0.0));
+        assert!(m.slot_k(2, 1).iter().all(|&x| x == 0.0));
+        assert!(m.dirty);
+    }
+
+    #[test]
+    fn splice_rejects_bad_slot_and_size() {
+        let mut m = KvMirror::new(1, 2, 4, 1, 2);
+        assert!(m.splice_slot(5, &[], &[]).is_err());
+        assert!(m.splice_slot(0, &[0.0; 3], &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn refresh_clears_dirty() {
+        let mut m = KvMirror::new(1, 1, 2, 1, 1);
+        let n = m.numel();
+        m.refresh_from(vec![1.0; n], vec![2.0; n]).unwrap();
+        assert!(!m.dirty);
+        assert_eq!(m.k[0], 1.0);
+        assert!(m.refresh_from(vec![], vec![]).is_err());
+    }
+}

@@ -1,0 +1,29 @@
+//! L3 serving coordinator: request queue, continuous batcher, KV slot
+//! management, sampling, and the generation engine (paper §IV's edge
+//! inference loop, built like a miniature vLLM-style router).
+//!
+//! Structure:
+//!
+//! * [`request`] — request/response types + timing accounting;
+//! * [`backend`] — the [`Backend`](backend::Backend) trait the engine
+//!   drives: a PJRT implementation ([`backend::PjrtBackend`]) for
+//!   production and a deterministic mock for hermetic engine tests;
+//! * [`kv`] — host-side KV mirror + slot splicing;
+//! * [`batcher`] — bounded FIFO admission queue with stats;
+//! * [`sampler`] — greedy / temperature / top-k sampling;
+//! * [`engine`] — the step loop: admit → prefill → batched decode →
+//!   sample → retire, with continuous slot refill.
+
+pub mod backend;
+pub mod batcher;
+pub mod engine;
+pub mod kv;
+pub mod request;
+pub mod sampler;
+
+pub use backend::{Backend, BackendCfg, MockBackend, PjrtBackend};
+pub use batcher::{AdmissionQueue, QueueStats};
+pub use engine::{Engine, EngineConfig, EngineStats};
+pub use kv::KvMirror;
+pub use request::{Request, Response, Timing};
+pub use sampler::{SampleCfg, Sampler};

@@ -1,0 +1,88 @@
+//! Request/response types for the serving engine.
+
+use std::time::{Duration, Instant};
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Caller-assigned id (echoed in the response).
+    pub id: u64,
+    /// Prompt token ids (byte-level).
+    pub prompt: Vec<u32>,
+    /// Maximum tokens to generate.
+    pub max_new_tokens: usize,
+    /// Sampling temperature (0 = greedy).
+    pub temperature: f32,
+    /// Top-k truncation (0 = full distribution).
+    pub top_k: usize,
+    /// Optional stop token (generation halts after emitting it).
+    pub stop_token: Option<u32>,
+    /// Enqueue timestamp (set by the engine if `None`-equivalent).
+    pub enqueued_at: Option<Instant>,
+}
+
+impl Request {
+    /// A request with greedy sampling defaults.
+    pub fn greedy(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            temperature: 0.0,
+            top_k: 0,
+            stop_token: None,
+            enqueued_at: None,
+        }
+    }
+}
+
+/// Phase timings for one request (the per-request Table II analogue).
+#[derive(Debug, Clone, Default)]
+pub struct Timing {
+    /// Time spent queued before a slot was free.
+    pub queued: Duration,
+    /// Prefill wallclock.
+    pub prefill: Duration,
+    /// Total decode wallclock attributed to this request.
+    pub decode: Duration,
+    /// Time from admission to first generated token.
+    pub first_token: Duration,
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Request id.
+    pub id: u64,
+    /// Generated token ids (prompt not included).
+    pub tokens: Vec<u32>,
+    /// Why generation stopped.
+    pub finish_reason: FinishReason,
+    /// Phase timings.
+    pub timing: Timing,
+}
+
+/// Why a sequence finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit `max_new_tokens`.
+    Length,
+    /// Emitted the stop token.
+    Stop,
+    /// Ran out of KV-cache capacity.
+    Capacity,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_defaults() {
+        let r = Request::greedy(7, vec![1, 2, 3], 16);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.temperature, 0.0);
+        assert_eq!(r.top_k, 0);
+        assert!(r.stop_token.is_none());
+    }
+}

@@ -1,0 +1,122 @@
+//! Token sampling: greedy argmax, temperature scaling, top-k truncation.
+
+use crate::rng::Rng;
+
+/// Per-request sampling configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SampleCfg {
+    /// 0 ⇒ greedy argmax; otherwise softmax temperature.
+    pub temperature: f32,
+    /// 0 ⇒ no truncation; otherwise keep the k most likely tokens.
+    pub top_k: usize,
+}
+
+/// Seeded sampler (deterministic per engine run).
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    rng: Rng,
+}
+
+impl Sampler {
+    /// Sampler with a fixed seed.
+    pub fn new(seed: u64) -> Self {
+        Sampler { rng: Rng::new(seed) }
+    }
+
+    /// Sample one token id from a logits row.
+    pub fn sample(&mut self, logits: &[f32], cfg: SampleCfg) -> u32 {
+        debug_assert!(!logits.is_empty());
+        if cfg.temperature <= 0.0 {
+            return argmax(logits) as u32;
+        }
+        // Collect candidate (index, logit) pairs, top-k truncated.
+        let mut cand: Vec<(usize, f32)> = logits.iter().copied().enumerate().collect();
+        if cfg.top_k > 0 && cfg.top_k < cand.len() {
+            cand.sort_by(|a, b| b.1.total_cmp(&a.1));
+            cand.truncate(cfg.top_k);
+        }
+        // Stable softmax at the given temperature.
+        let max = cand.iter().map(|&(_, l)| l).fold(f32::NEG_INFINITY, f32::max);
+        let weights: Vec<f32> = cand
+            .iter()
+            .map(|&(_, l)| ((l - max) / cfg.temperature).exp())
+            .collect();
+        let pick = self.rng.categorical(&weights);
+        cand[pick].0 as u32
+    }
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut s = Sampler::new(1);
+        let logits = [0.1, 2.0, -1.0, 1.9];
+        let cfg = SampleCfg {
+            temperature: 0.0,
+            top_k: 0,
+        };
+        for _ in 0..10 {
+            assert_eq!(s.sample(&logits, cfg), 1);
+        }
+    }
+
+    #[test]
+    fn low_temperature_concentrates_on_mode() {
+        let mut s = Sampler::new(2);
+        let logits = [0.0, 5.0, 0.0, 0.0];
+        let cfg = SampleCfg {
+            temperature: 0.3,
+            top_k: 0,
+        };
+        let hits = (0..200).filter(|_| s.sample(&logits, cfg) == 1).count();
+        assert!(hits > 190, "mode hit {hits}/200");
+    }
+
+    #[test]
+    fn top_k_excludes_tail() {
+        let mut s = Sampler::new(3);
+        let logits = [3.0, 2.9, -10.0, -10.0];
+        let cfg = SampleCfg {
+            temperature: 1.0,
+            top_k: 2,
+        };
+        for _ in 0..100 {
+            let t = s.sample(&logits, cfg);
+            assert!(t == 0 || t == 1, "sampled tail token {t}");
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let mut s = Sampler::new(4);
+        let logits = [1.0, 0.9, 0.8, 0.7];
+        let cfg = SampleCfg {
+            temperature: 10.0,
+            top_k: 0,
+        };
+        let mut seen = [false; 4];
+        for _ in 0..500 {
+            seen[s.sample(&logits, cfg) as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "all tokens reachable");
+    }
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 1.0, 0.5]), 0);
+    }
+}

@@ -1,0 +1,191 @@
+//! Synthetic text corpus + byte-level tokenizer.
+//!
+//! The paper evaluates on WikiText2 / HellaSwag / GSM8K, none of which
+//! are available offline; DESIGN.md §Substitutions replaces them with a
+//! seeded synthetic English-like corpus. The python build path
+//! (`python/compile/train.py`) trains the tiny LM on *its own* seeded
+//! corpus; this module provides matching request/prompt generation for
+//! the rust serving engine plus the byte tokenizer both sides share.
+
+use crate::rng::Rng;
+
+/// Vocabulary size of the byte-level tokenizer. The python model uses
+/// the same value (`python/compile/model.py :: VOCAB`).
+pub const VOCAB_SIZE: usize = 128;
+
+/// Byte-level tokenizer: token id = ASCII byte (7-bit); bytes ≥ 128 map
+/// to `?`. Trivially reversible, identical in python and rust, and
+/// sidesteps any BPE-vocabulary interchange problem.
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    /// Encode text to token ids.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.bytes()
+            .map(|b| if b < 128 { b as u32 } else { b'?' as u32 })
+            .collect()
+    }
+
+    /// Decode token ids to text (lossy for non-ASCII ids).
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| {
+                if t < 128 {
+                    t as u8 as char
+                } else {
+                    '?'
+                }
+            })
+            .collect()
+    }
+}
+
+/// Word-level Markov text generator.
+///
+/// A fixed word list with seeded order-1 transitions produces text with
+/// a realistic (Zipf-ish) token distribution — enough structure for a
+/// char-LM to learn, while being fully reproducible.
+#[derive(Debug, Clone)]
+pub struct MarkovCorpus {
+    words: Vec<&'static str>,
+    /// transition[i][j] ∝ P(word j | word i)
+    transition: Vec<Vec<f32>>,
+    rng: Rng,
+    state: usize,
+}
+
+const WORDS: &[&str] = &[
+    "the", "model", "edge", "device", "weight", "memory", "bandwidth", "token", "layer",
+    "quantized", "entropy", "huffman", "decode", "encode", "parallel", "thread", "cache",
+    "inference", "latency", "storage", "compression", "symbol", "stream", "segment", "tensor",
+    "matrix", "vector", "scale", "zero", "point", "bits", "fast", "small", "large", "runs",
+    "loads", "stores", "maps", "reduces", "achieves", "requires", "and", "of", "on", "with",
+    "for", "to", "a", "in", "is",
+];
+
+impl MarkovCorpus {
+    /// Seeded generator. Transitions are themselves sampled from the
+    /// seed so different seeds give different (but stable) languages.
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let n = WORDS.len();
+        let transition: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                // Sparse-ish rows: a few favored successors (Zipf flavor).
+                let mut row: Vec<f32> = (0..n).map(|_| rng.f32() * 0.05).collect();
+                for _ in 0..4 {
+                    let j = rng.below(n);
+                    row[j] += rng.f32() * 2.0;
+                }
+                row
+            })
+            .collect();
+        MarkovCorpus {
+            words: WORDS.to_vec(),
+            transition,
+            rng,
+            state: 0,
+        }
+    }
+
+    /// Generate `n_words` of text.
+    pub fn generate_words(&mut self, n_words: usize) -> String {
+        let mut out = String::new();
+        for i in 0..n_words {
+            if i > 0 {
+                out.push(' ');
+            }
+            out.push_str(self.words[self.state]);
+            let row = &self.transition[self.state];
+            self.state = self.rng.categorical(row);
+            // Sentence breaks.
+            if i > 0 && i % 12 == 0 {
+                out.push('.');
+            }
+        }
+        out
+    }
+
+    /// Generate text of (at least) `n_chars` characters.
+    pub fn generate_chars(&mut self, n_chars: usize) -> String {
+        let mut out = String::new();
+        while out.len() < n_chars {
+            out = self.generate_words(n_chars / 4 + 8);
+        }
+        out.truncate(n_chars);
+        out
+    }
+
+    /// A batch of prompts for the serving benches.
+    pub fn prompts(&mut self, count: usize, words_each: usize) -> Vec<String> {
+        (0..count).map(|_| self.generate_words(words_each)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizer_roundtrips_ascii() {
+        let t = ByteTokenizer;
+        let text = "the model runs on the edge.";
+        assert_eq!(t.decode(&t.encode(text)), text);
+    }
+
+    #[test]
+    fn tokenizer_maps_non_ascii_to_question_mark() {
+        let t = ByteTokenizer;
+        let ids = t.encode("naïve");
+        assert!(ids.iter().all(|&i| i < VOCAB_SIZE as u32));
+        assert!(t.decode(&ids).contains('?'));
+    }
+
+    #[test]
+    fn corpus_is_deterministic_per_seed() {
+        let a = MarkovCorpus::new(7).generate_words(50);
+        let b = MarkovCorpus::new(7).generate_words(50);
+        let c = MarkovCorpus::new(8).generate_words(50);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn corpus_tokens_fit_vocab() {
+        let text = MarkovCorpus::new(1).generate_chars(5000);
+        let ids = ByteTokenizer.encode(&text);
+        assert_eq!(ids.len(), 5000);
+        assert!(ids.iter().all(|&i| i < VOCAB_SIZE as u32));
+    }
+
+    #[test]
+    fn generate_chars_hits_requested_length() {
+        let text = MarkovCorpus::new(2).generate_chars(1234);
+        assert_eq!(text.len(), 1234);
+    }
+
+    #[test]
+    fn prompts_are_distinct() {
+        let ps = MarkovCorpus::new(3).prompts(5, 10);
+        assert_eq!(ps.len(), 5);
+        assert!(ps.iter().any(|p| p != &ps[0]), "state advances");
+    }
+
+    #[test]
+    fn corpus_has_skewed_word_distribution() {
+        // Zipf-ish skew is what makes the LM learnable; sanity check the
+        // most common word is clearly more common than the median.
+        let text = MarkovCorpus::new(4).generate_words(20_000);
+        let mut counts = std::collections::HashMap::new();
+        for w in text.split(|c: char| !c.is_alphanumeric()) {
+            if !w.is_empty() {
+                *counts.entry(w).or_insert(0usize) += 1;
+            }
+        }
+        let mut freqs: Vec<usize> = counts.values().copied().collect();
+        freqs.sort_unstable_by_key(|&c| std::cmp::Reverse(c));
+        assert!(freqs[0] > 2 * freqs[freqs.len() / 2]);
+    }
+}

@@ -1,0 +1,315 @@
+//! Parameter-space segmentation and **parallel Huffman decoding**
+//! (paper §III-C, Algorithm 1 `EDGE DEVICE OPERATIONS`).
+//!
+//! Huffman streams are inherently serial — a symbol's start position is
+//! only known once every previous symbol has been decoded. EntroLLM
+//! sidesteps this by never concatenating tensors into one stream: the
+//! ELM container keeps one byte-aligned segment per weight tensor, so
+//! segment boundaries are known *before* decoding and `T` threads can
+//! decode disjoint segments with zero synchronization.
+//!
+//! Because per-segment decode times are skewed (different sizes, and
+//! skewed symbol mixes make some segments bit-denser than others), the
+//! scheduler **shuffles** segments before dealing them round-robin to
+//! threads, so each thread receives a balanced mixture (§III-C's
+//! "shuffling mechanism"). [`DecodeStats`] exposes per-thread work
+//! accounting so the load-balance claim is testable and benchable
+//! (ablation bench `ablation_decode`).
+
+mod schedule;
+
+pub use schedule::{Assignment, Strategy};
+
+use crate::huffman::Decoder;
+use crate::quant::QuantizedTensor;
+use crate::store::ElmModel;
+use crate::tensor::TensorU8;
+use crate::{Error, Result};
+use std::time::{Duration, Instant};
+
+/// Per-thread work accounting from one parallel decode.
+#[derive(Debug, Clone)]
+pub struct ThreadStats {
+    /// Segments this thread decoded.
+    pub segments: usize,
+    /// Encoded bytes consumed.
+    pub encoded_bytes: usize,
+    /// Symbols produced.
+    pub symbols: usize,
+    /// Busy wallclock.
+    pub busy: Duration,
+}
+
+/// Result accounting for a whole parallel decode.
+#[derive(Debug, Clone)]
+pub struct DecodeStats {
+    /// Wallclock for the whole decode (including thread spawn/join).
+    pub wall: Duration,
+    /// Per-thread accounting.
+    pub threads: Vec<ThreadStats>,
+}
+
+impl DecodeStats {
+    /// Total symbols decoded.
+    pub fn total_symbols(&self) -> usize {
+        self.threads.iter().map(|t| t.symbols).sum()
+    }
+
+    /// Total encoded bytes consumed.
+    pub fn total_encoded_bytes(&self) -> usize {
+        self.threads.iter().map(|t| t.encoded_bytes).sum()
+    }
+
+    /// Load imbalance: max thread busy-time / mean busy-time. 1.0 is
+    /// perfect balance; the §III-C shuffle keeps this near 1.
+    pub fn imbalance(&self) -> f64 {
+        let busys: Vec<f64> = self.threads.iter().map(|t| t.busy.as_secs_f64()).collect();
+        let mean = busys.iter().sum::<f64>() / busys.len().max(1) as f64;
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        busys.iter().cloned().fold(0.0, f64::max) / mean
+    }
+
+    /// Work imbalance by *symbols* (deterministic; used on single-core
+    /// CI hosts where busy-time is not meaningful).
+    pub fn symbol_imbalance(&self) -> f64 {
+        let work: Vec<f64> = self.threads.iter().map(|t| t.symbols as f64).collect();
+        let mean = work.iter().sum::<f64>() / work.len().max(1) as f64;
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        work.iter().cloned().fold(0.0, f64::max) / mean
+    }
+
+    /// Aggregate decode throughput, symbols/second.
+    pub fn symbols_per_sec(&self) -> f64 {
+        self.total_symbols() as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Parallel Huffman decoder over an [`ElmModel`].
+#[derive(Debug, Clone)]
+pub struct ParallelDecoder {
+    /// Worker thread count (`T` in Algorithm 1; the paper uses 4 on the
+    /// Jetson's quad A57).
+    pub threads: usize,
+    /// Segment→thread assignment strategy.
+    pub strategy: Strategy,
+}
+
+impl ParallelDecoder {
+    /// Decoder with the paper's shuffled assignment.
+    pub fn new(threads: usize) -> Self {
+        ParallelDecoder {
+            threads: threads.max(1),
+            strategy: Strategy::Shuffled { seed: 0x5EED },
+        }
+    }
+
+    /// Override the assignment strategy (ablation bench).
+    pub fn with_strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Decode every layer of `model`, returning tensors in layer order
+    /// plus per-thread stats.
+    pub fn decode_model(&self, model: &ElmModel) -> Result<(Vec<QuantizedTensor>, DecodeStats)> {
+        let n = model.layers.len();
+        let decoder = Decoder::new(&model.code)?;
+        let assignment = self.strategy.assign(model, self.threads);
+
+        let start = Instant::now();
+        // Each worker owns a disjoint set of layer indices and fills its
+        // own output list; no locks on the decode path.
+        let results: Vec<Result<(Vec<(usize, Vec<u8>)>, ThreadStats)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = assignment
+                .per_thread
+                .iter()
+                .map(|indices| {
+                    let decoder = &decoder;
+                    let indices = indices.clone();
+                    s.spawn(move || {
+                        let t0 = Instant::now();
+                        let mut out = Vec::with_capacity(indices.len());
+                        let mut encoded_bytes = 0usize;
+                        let mut symbols = 0usize;
+                        for idx in indices {
+                            let meta = &model.layers[idx];
+                            let seg = model.segment(idx);
+                            if crc32fast::hash(seg) != meta.crc32 {
+                                return Err(Error::Format(format!(
+                                    "layer {:?}: segment CRC mismatch",
+                                    meta.name
+                                )));
+                            }
+                            let mut buf = vec![0u8; meta.n_symbols];
+                            decoder.decode_into(seg, &mut buf)?;
+                            encoded_bytes += seg.len();
+                            symbols += meta.n_symbols;
+                            out.push((idx, buf));
+                        }
+                        let segments = out.len();
+                        Ok((
+                            out,
+                            ThreadStats {
+                                segments,
+                                encoded_bytes,
+                                symbols,
+                                busy: t0.elapsed(),
+                            },
+                        ))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("decode worker panicked")).collect()
+        });
+
+        let mut tensors: Vec<Option<QuantizedTensor>> = (0..n).map(|_| None).collect();
+        let mut thread_stats = Vec::with_capacity(results.len());
+        for res in results {
+            let (decoded, stats) = res?;
+            for (idx, symbols) in decoded {
+                let meta = &model.layers[idx];
+                tensors[idx] = Some(QuantizedTensor {
+                    symbols: TensorU8::new(meta.shape.clone(), symbols)?,
+                    params: meta.params,
+                });
+            }
+            thread_stats.push(stats);
+        }
+        let wall = start.elapsed();
+        let tensors: Vec<QuantizedTensor> = tensors
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| t.ok_or_else(|| Error::Format(format!("layer {i} never assigned"))))
+            .collect::<Result<_>>()?;
+        Ok((
+            tensors,
+            DecodeStats {
+                wall,
+                threads: thread_stats,
+            },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_mixed, BitWidth};
+    use crate::rng::Rng;
+    use crate::store::compress;
+    use crate::tensor::TensorF32;
+
+    fn model_with_layers(n_layers: usize, seed: u64, bits: BitWidth) -> (Vec<(String, TensorF32)>, ElmModel) {
+        let mut rng = Rng::new(seed);
+        let layers: Vec<(String, TensorF32)> = (0..n_layers)
+            .map(|i| {
+                // Skewed sizes so scheduling matters.
+                let n = 64 + rng.below(4000) * (1 + i % 3);
+                (
+                    format!("layer.{i}"),
+                    TensorF32::new(vec![n], rng.gaussian_vec(n, 0.0, 0.05)).unwrap(),
+                )
+            })
+            .collect();
+        let (model, _) = compress(&layers, bits).unwrap();
+        (layers, model)
+    }
+
+    #[test]
+    fn parallel_equals_serial_decode() {
+        let (layers, model) = model_with_layers(17, 0xA, BitWidth::U8);
+        for threads in [1, 2, 4, 8] {
+            let (tensors, stats) = ParallelDecoder::new(threads).decode_model(&model).unwrap();
+            assert_eq!(tensors.len(), layers.len());
+            assert_eq!(stats.threads.len(), threads);
+            for (i, (_, w)) in layers.iter().enumerate() {
+                let direct = quantize_mixed(w, BitWidth::U8);
+                assert_eq!(tensors[i].symbols.data(), direct.symbols.data());
+            }
+        }
+    }
+
+    #[test]
+    fn stats_account_for_all_work() {
+        let (_, model) = model_with_layers(23, 0xB, BitWidth::U4);
+        let (_, stats) = ParallelDecoder::new(4).decode_model(&model).unwrap();
+        assert_eq!(stats.total_symbols(), model.n_params());
+        assert_eq!(stats.total_encoded_bytes(), model.payload.len());
+        let segs: usize = stats.threads.iter().map(|t| t.segments).sum();
+        assert_eq!(segs, model.layers.len());
+    }
+
+    #[test]
+    fn shuffled_assignment_balances_skewed_segments() {
+        // One huge layer + many small: contiguous round-robin of *chunks*
+        // would lump the big one with neighbors; shuffling spreads by
+        // dealing. Verify symbol imbalance is bounded.
+        let mut rng = Rng::new(0xC);
+        let mut layers = vec![(
+            "big".to_string(),
+            TensorF32::new(vec![50_000], rng.gaussian_vec(50_000, 0.0, 0.05)).unwrap(),
+        )];
+        for i in 0..40 {
+            let n = 500 + rng.below(1500);
+            layers.push((
+                format!("small.{i}"),
+                TensorF32::new(vec![n], rng.gaussian_vec(n, 0.0, 0.05)).unwrap(),
+            ));
+        }
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let (_, stats) = ParallelDecoder::new(4).decode_model(&model).unwrap();
+        // The single 50k layer dominates: perfect balance is impossible,
+        // but no thread besides the big-layer one should be starved.
+        let min_syms = stats.threads.iter().map(|t| t.symbols).min().unwrap();
+        assert!(min_syms > 0, "no thread may be idle");
+    }
+
+    #[test]
+    fn more_threads_than_segments_is_fine() {
+        let (_, model) = model_with_layers(2, 0xD, BitWidth::U8);
+        let (tensors, stats) = ParallelDecoder::new(8).decode_model(&model).unwrap();
+        assert_eq!(tensors.len(), 2);
+        assert_eq!(stats.threads.len(), 8);
+        assert_eq!(stats.total_symbols(), model.n_params());
+    }
+
+    #[test]
+    fn corrupt_segment_fails_cleanly_in_parallel() {
+        let (_, mut model) = model_with_layers(8, 0xE, BitWidth::U8);
+        let off = model.layers[3].offset;
+        model.payload[off] ^= 0xFF;
+        let res = ParallelDecoder::new(4).decode_model(&model);
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn property_any_thread_count_any_strategy_is_lossless() {
+        let mut rng = Rng::new(0xF00);
+        for _ in 0..10 {
+            let n_layers = 1 + rng.below(12);
+            let (layers, model) =
+                model_with_layers(n_layers, rng.next_u64(), BitWidth::U4);
+            let threads = 1 + rng.below(6);
+            let strategy = match rng.below(4) {
+                0 => Strategy::Shuffled { seed: rng.next_u64() },
+                1 => Strategy::Contiguous,
+                2 => Strategy::Chunked,
+                _ => Strategy::LargestFirst,
+            };
+            let (tensors, _) = ParallelDecoder::new(threads)
+                .with_strategy(strategy)
+                .decode_model(&model)
+                .unwrap();
+            for (i, (_, w)) in layers.iter().enumerate() {
+                assert_eq!(
+                    tensors[i].symbols.data(),
+                    quantize_mixed(w, BitWidth::U4).symbols.data()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Segment→thread assignment strategies.
+//!
+//! The paper's strategy is **shuffled round-robin** (§III-C): shuffle the
+//! segment list, then deal segments to threads like cards, so each thread
+//! gets a statistically balanced mixture of cheap and expensive segments.
+//! [`Strategy::Contiguous`] (no shuffle) and [`Strategy::LargestFirst`]
+//! (greedy bin-packing by encoded size — a natural "smarter" comparator)
+//! exist for the `ablation_decode` bench.
+
+use crate::rng::Rng;
+use crate::store::ElmModel;
+
+/// A computed assignment: layer indices per thread.
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    /// `per_thread[t]` lists the layer indices thread `t` decodes.
+    pub per_thread: Vec<Vec<usize>>,
+}
+
+impl Assignment {
+    /// Encoded bytes each thread is responsible for.
+    pub fn bytes_per_thread(&self, model: &ElmModel) -> Vec<usize> {
+        self.per_thread
+            .iter()
+            .map(|idxs| idxs.iter().map(|&i| model.layers[i].encoded_len).sum())
+            .collect()
+    }
+
+    /// Max/mean imbalance of encoded bytes across threads.
+    pub fn byte_imbalance(&self, model: &ElmModel) -> f64 {
+        let bytes = self.bytes_per_thread(model);
+        let active: Vec<f64> = bytes.iter().map(|&b| b as f64).collect();
+        let mean = active.iter().sum::<f64>() / active.len().max(1) as f64;
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        active.iter().cloned().fold(0.0, f64::max) / mean
+    }
+}
+
+/// Segment scheduling strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Paper §III-C: seeded shuffle, then round-robin deal.
+    Shuffled {
+        /// Shuffle seed (decode is deterministic for a fixed seed).
+        seed: u64,
+    },
+    /// Round-robin in storage order (interleaved, no shuffle).
+    Contiguous,
+    /// Contiguous chunks: thread `t` gets segments `[t·n/T, (t+1)·n/T)` —
+    /// the naive parameter-space split of the paper's Fig. 3, and the
+    /// worst arm when expensive segments cluster (ablation_decode).
+    Chunked,
+    /// Greedy longest-processing-time bin packing by encoded bytes —
+    /// needs sizes up front (the ELM manifest has them), included to
+    /// show how close the paper's cheap shuffle gets to explicit packing.
+    LargestFirst,
+}
+
+impl Strategy {
+    /// Compute the per-thread layer lists for `model`.
+    pub fn assign(&self, model: &ElmModel, threads: usize) -> Assignment {
+        let sizes: Vec<usize> = model.layers.iter().map(|m| m.encoded_len).collect();
+        self.assign_sizes(&sizes, threads)
+    }
+
+    /// Assignment from raw segment sizes (also used by the latency
+    /// benches to evaluate scheduling over *hypothetical* segment
+    /// structures, e.g. a phi3-shaped tensor list, without building the
+    /// full container).
+    pub fn assign_sizes(&self, sizes: &[usize], threads: usize) -> Assignment {
+        let threads = threads.max(1);
+        let n = sizes.len();
+        let mut per_thread = vec![Vec::new(); threads];
+        match *self {
+            Strategy::Shuffled { seed } => {
+                let mut order: Vec<usize> = (0..n).collect();
+                Rng::new(seed).shuffle(&mut order);
+                for (i, idx) in order.into_iter().enumerate() {
+                    per_thread[i % threads].push(idx);
+                }
+            }
+            Strategy::Contiguous => {
+                for idx in 0..n {
+                    per_thread[idx % threads].push(idx);
+                }
+            }
+            Strategy::Chunked => {
+                for idx in 0..n {
+                    let t = (idx * threads) / n.max(1);
+                    per_thread[t.min(threads - 1)].push(idx);
+                }
+            }
+            Strategy::LargestFirst => {
+                let mut order: Vec<usize> = (0..n).collect();
+                order.sort_by_key(|&i| std::cmp::Reverse(sizes[i]));
+                let mut load = vec![0usize; threads];
+                for idx in order {
+                    let t = (0..threads).min_by_key(|&t| load[t]).unwrap();
+                    load[t] += sizes[idx];
+                    per_thread[t].push(idx);
+                }
+            }
+        }
+        Assignment { per_thread }
+    }
+
+    /// Max/mean load imbalance of this strategy over raw segment sizes.
+    pub fn imbalance_for_sizes(&self, sizes: &[usize], threads: usize) -> f64 {
+        let a = self.assign_sizes(sizes, threads);
+        let loads: Vec<f64> = a
+            .per_thread
+            .iter()
+            .map(|idxs| idxs.iter().map(|&i| sizes[i] as f64).sum())
+            .collect();
+        let mean = loads.iter().sum::<f64>() / loads.len().max(1) as f64;
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        loads.iter().cloned().fold(0.0, f64::max) / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::BitWidth;
+    use crate::rng::Rng;
+    use crate::store::compress;
+    use crate::tensor::TensorF32;
+
+    fn model(n_layers: usize, seed: u64) -> ElmModel {
+        let mut rng = Rng::new(seed);
+        let layers: Vec<(String, TensorF32)> = (0..n_layers)
+            .map(|i| {
+                let n = 100 + rng.below(5000);
+                (
+                    format!("l{i}"),
+                    TensorF32::new(vec![n], rng.gaussian_vec(n, 0.0, 0.05)).unwrap(),
+                )
+            })
+            .collect();
+        compress(&layers, BitWidth::U8).unwrap().0
+    }
+
+    fn covers_exactly_once(a: &Assignment, n: usize) {
+        let mut seen = vec![false; n];
+        for list in &a.per_thread {
+            for &i in list {
+                assert!(!seen[i], "layer {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every layer assigned");
+    }
+
+    #[test]
+    fn all_strategies_partition_the_parameter_space() {
+        let m = model(37, 1);
+        for strat in [
+            Strategy::Shuffled { seed: 7 },
+            Strategy::Contiguous,
+            Strategy::Chunked,
+            Strategy::LargestFirst,
+        ] {
+            for threads in [1, 2, 3, 4, 16, 64] {
+                covers_exactly_once(&strat.assign(&m, threads), 37);
+            }
+        }
+    }
+
+    #[test]
+    fn shuffle_is_deterministic_per_seed() {
+        let m = model(20, 2);
+        let a = Strategy::Shuffled { seed: 9 }.assign(&m, 4);
+        let b = Strategy::Shuffled { seed: 9 }.assign(&m, 4);
+        let c = Strategy::Shuffled { seed: 10 }.assign(&m, 4);
+        assert_eq!(a.per_thread, b.per_thread);
+        assert_ne!(a.per_thread, c.per_thread);
+    }
+
+    #[test]
+    fn largest_first_beats_or_matches_contiguous_balance() {
+        let m = model(50, 3);
+        let lf = Strategy::LargestFirst.assign(&m, 4).byte_imbalance(&m);
+        let cont = Strategy::Contiguous.assign(&m, 4).byte_imbalance(&m);
+        assert!(lf <= cont + 1e-9, "LPT {lf} vs contiguous {cont}");
+    }
+
+    #[test]
+    fn shuffled_balance_is_reasonable_on_many_segments() {
+        // §III-C's claim: with many segments per thread, dealing a
+        // shuffled list evens out the workload. Accept ≤ 1.5× mean.
+        let m = model(200, 4);
+        let imb = Strategy::Shuffled { seed: 0x5EED }
+            .assign(&m, 4)
+            .byte_imbalance(&m);
+        assert!(imb < 1.5, "imbalance {imb}");
+    }
+
+    #[test]
+    fn imbalance_for_sizes_matches_assignment() {
+        let sizes: Vec<usize> = (1..=40).map(|i| i * 100).collect();
+        let strat = Strategy::Shuffled { seed: 3 };
+        let via_sizes = strat.imbalance_for_sizes(&sizes, 4);
+        assert!(via_sizes >= 1.0);
+        // LPT on many segments is near-perfect.
+        let lpt = Strategy::LargestFirst.imbalance_for_sizes(&sizes, 4);
+        assert!(lpt <= via_sizes + 1e-9);
+        assert!(lpt < 1.05, "LPT imbalance {lpt}");
+    }
+
+    #[test]
+    fn property_partition_for_random_models() {
+        let mut rng = Rng::new(0xAB);
+        for _ in 0..20 {
+            let n = 1 + rng.below(60);
+            let m = model(n, rng.next_u64());
+            let threads = 1 + rng.below(9);
+            let strat = match rng.below(3) {
+                0 => Strategy::Shuffled { seed: rng.next_u64() },
+                1 => Strategy::Contiguous,
+                _ => Strategy::LargestFirst,
+            };
+            covers_exactly_once(&strat.assign(&m, threads), n);
+        }
+    }
+}

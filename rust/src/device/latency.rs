@@ -1,0 +1,290 @@
+//! Latency model — regenerates the paper's Table II rows from a workload
+//! description plus a [`Profile`](super::Profile).
+//!
+//! Phase models (see module docs in [`super`]):
+//!
+//! * `pre-fill(L tokens)` = `compute(2·P·L flops) + stream(weight_bytes)
+//!   + unpack`, compute-dominated for long prompts;
+//! * `token generation` = `stream(weight_bytes) + unpack + compute(2·P)`,
+//!   bandwidth-dominated — this is where effective-bit reduction pays;
+//! * `parallel decode` = per-core symbol throughput × imbalance, once per
+//!   sequence;
+//! * `first token` = decode (if Huffman) + pre-fill + one generation step.
+
+use super::Profile;
+
+/// What gets executed: a model and a request shape.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// Total parameter count `P`.
+    pub n_params: usize,
+    /// Bytes that must move from DRAM per full weight pass *during
+    /// compute* (after any upfront decode): `P · bits/8` for fixed-width,
+    /// or the Huffman-decoded working width if weights are kept packed.
+    pub weight_bytes_per_pass: usize,
+    /// Bytes of the stored (possibly Huffman-encoded) weights that are
+    /// read once at load/decode time.
+    pub stored_bytes: usize,
+    /// Prompt length in tokens (pre-fill).
+    pub prefill_tokens: usize,
+    /// Whether an upfront Huffman decode is required (w/ Huffman rows).
+    pub huffman: bool,
+    /// Decode threads (`T`).
+    pub threads: usize,
+    /// Load-balance factor from the segment scheduler (≥ 1).
+    pub imbalance: f64,
+    /// Relative ALU cost of this precision's matmul vs int8 (the
+    /// paper's own prefill rows imply int4 ops run ~2.8× faster on the
+    /// Jetson: 9.69 s vs 27.10 s for the same prompt).
+    pub compute_scale: f64,
+}
+
+/// Cost of one phase, seconds, with its dominant components exposed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseCost {
+    /// Total seconds.
+    pub total: f64,
+    /// Seconds attributable to DRAM streaming.
+    pub stream: f64,
+    /// Seconds attributable to ALU compute.
+    pub compute: f64,
+    /// Seconds attributable to unpack/bit-twiddling overhead.
+    pub overhead: f64,
+}
+
+impl PhaseCost {
+    fn new(stream: f64, compute: f64, overhead: f64) -> Self {
+        PhaseCost {
+            total: stream + compute + overhead,
+            stream,
+            compute,
+            overhead,
+        }
+    }
+}
+
+/// The Table II row set for one configuration.
+#[derive(Debug, Clone)]
+pub struct LatencyBreakdown {
+    /// Pre-fill phase (whole prompt).
+    pub prefill: PhaseCost,
+    /// Per-token generation latency.
+    pub token_gen: PhaseCost,
+    /// One-off parallel Huffman decode (zero when `huffman == false`).
+    pub parallel_decode: f64,
+    /// Time to first output token = decode + prefill + one token.
+    pub first_token: f64,
+}
+
+impl LatencyBreakdown {
+    /// Tokens/second in steady-state generation.
+    pub fn tokens_per_sec(&self) -> f64 {
+        1.0 / self.token_gen.total
+    }
+}
+
+/// Evaluates workloads against a hardware profile.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    /// Hardware constants.
+    pub profile: Profile,
+}
+
+impl LatencyModel {
+    /// Model for a profile.
+    pub fn new(profile: Profile) -> Self {
+        LatencyModel { profile }
+    }
+
+    /// Flops for one full forward pass over one token: ~2 FLOP per
+    /// parameter (multiply + add), the standard decoder-LLM estimate.
+    fn flops_per_token(&self, n_params: usize) -> f64 {
+        2.0 * n_params as f64
+    }
+
+    /// Pre-fill: process `prefill_tokens` in one batched pass. Weights
+    /// stream once; compute scales with tokens.
+    pub fn prefill(&self, w: &Workload) -> PhaseCost {
+        let stream = self.profile.stream_time(w.weight_bytes_per_pass);
+        let compute = self.profile.compute_time(
+            self.flops_per_token(w.n_params) * w.prefill_tokens as f64 * w.compute_scale,
+        );
+        let overhead = self.unpack_overhead(w);
+        PhaseCost::new(stream, compute, overhead)
+    }
+
+    /// One generated token: weights stream once (GEMV), tiny compute.
+    pub fn token_gen(&self, w: &Workload) -> PhaseCost {
+        let stream = self.profile.stream_time(w.weight_bytes_per_pass);
+        let compute = self
+            .profile
+            .compute_time(self.flops_per_token(w.n_params) * w.compute_scale);
+        let overhead = self.unpack_overhead(w);
+        PhaseCost::new(stream, compute, overhead)
+    }
+
+    fn unpack_overhead(&self, w: &Workload) -> f64 {
+        // Bit-unpack cost applies to the bytes actually streamed; it is
+        // what separates the paper's measured 1.32× from theoretical
+        // 1.43× (§IV-D).
+        w.weight_bytes_per_pass as f64 * self.profile.unpack_sec_per_byte
+    }
+
+    /// Upfront parallel Huffman decode (§III-C), once per sequence.
+    pub fn parallel_decode(&self, w: &Workload) -> f64 {
+        if !w.huffman {
+            return 0.0;
+        }
+        self.profile
+            .decode_time(w.n_params, w.threads, w.imbalance)
+    }
+
+    /// Full Table II breakdown.
+    pub fn breakdown(&self, w: &Workload) -> LatencyBreakdown {
+        let prefill = self.prefill(w);
+        let token_gen = self.token_gen(w);
+        let parallel_decode = self.parallel_decode(w);
+        LatencyBreakdown {
+            prefill,
+            token_gen,
+            parallel_decode,
+            first_token: parallel_decode + prefill.total + token_gen.total,
+        }
+    }
+}
+
+/// Build the two Table II workloads (w/o vs w/ Huffman) for a model with
+/// `n_params` parameters quantized to `bits_fixed` bits and compressed to
+/// `effective_bits` by Huffman coding.
+///
+/// Without Huffman, each weight pass streams `bits_fixed`-wide weights.
+/// With Huffman the *stored/streamed* form is `effective_bits` wide and
+/// the unpack happens on-chip (the paper keeps compute precision at the
+/// fixed width — only memory traffic shrinks).
+pub fn table2_workloads(
+    n_params: usize,
+    bits_fixed: u32,
+    effective_bits: f64,
+    prefill_tokens: usize,
+    threads: usize,
+    imbalance: f64,
+) -> (Workload, Workload) {
+    let fixed_bytes = (n_params as f64 * bits_fixed as f64 / 8.0) as usize;
+    let huff_bytes = (n_params as f64 * effective_bits / 8.0) as usize;
+    // int4 matmuls run ~2.8× faster than int8 on the paper's testbed
+    // (prefill 9.69 s vs 27.10 s for the same prompt, Table II).
+    let compute_scale = if bits_fixed <= 4 { 0.36 } else { 1.0 };
+    let without = Workload {
+        n_params,
+        weight_bytes_per_pass: fixed_bytes,
+        stored_bytes: fixed_bytes,
+        prefill_tokens,
+        huffman: false,
+        threads,
+        imbalance: 1.0,
+        compute_scale,
+    };
+    let with = Workload {
+        n_params,
+        weight_bytes_per_pass: huff_bytes,
+        stored_bytes: huff_bytes,
+        prefill_tokens,
+        huffman: true,
+        threads,
+        imbalance,
+        compute_scale,
+    };
+    (without, with)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::JETSON_P3450;
+    use super::*;
+
+    /// phi3-mini scale: 3.8 B params, the paper's Table II subject.
+    const PHI3: usize = 3_800_000_000;
+
+    #[test]
+    fn token_gen_is_bandwidth_dominated() {
+        let (w, _) = table2_workloads(PHI3, 8, 5.58, 512, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        let tg = m.token_gen(&w);
+        assert!(tg.stream > 5.0 * tg.compute, "stream {} compute {}", tg.stream, tg.compute);
+    }
+
+    #[test]
+    fn prefill_is_compute_dominated_for_long_prompts() {
+        let (w, _) = table2_workloads(PHI3, 8, 5.58, 2048, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        let pf = m.prefill(&w);
+        assert!(pf.compute > pf.stream, "compute {} stream {}", pf.compute, pf.stream);
+    }
+
+    #[test]
+    fn huffman_speedup_matches_paper_uint8_shape() {
+        // Paper §IV-D: uint8→5.58 bits gives theoretical 1.43×, measured
+        // 1.32×. Our model must land between those (unpack overhead eats
+        // part of the theoretical gain).
+        let (without, with) = table2_workloads(PHI3, 8, 5.58, 512, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        let t_without = m.token_gen(&without).total;
+        let t_with = m.token_gen(&with).total;
+        let speedup = t_without / t_with;
+        assert!(
+            speedup > 1.2 && speedup < 1.43,
+            "uint8 token-gen speedup {speedup}"
+        );
+    }
+
+    #[test]
+    fn uint4_speedup_is_larger_than_uint8() {
+        // Paper: uint4 (4→1.39 bits) speedup 2.47× > uint8's 1.32×.
+        let m = LatencyModel::new(JETSON_P3450);
+        let (w8, h8) = table2_workloads(PHI3, 8, 5.58, 512, 4, 1.0);
+        let (w4, h4) = table2_workloads(PHI3, 4, 1.39, 512, 4, 1.0);
+        let s8 = m.token_gen(&w8).total / m.token_gen(&h8).total;
+        let s4 = m.token_gen(&w4).total / m.token_gen(&h4).total;
+        assert!(s4 > s8, "uint4 {s4} must beat uint8 {s8}");
+        assert!(s4 > 2.0 && s4 < 2.9, "uint4 speedup {s4} near paper's 2.47x");
+    }
+
+    #[test]
+    fn decode_is_once_per_sequence_and_amortizable() {
+        // Paper §IV-C: decode (6.66 s for uint8) is a small fraction of
+        // prefill+generation for realistic outputs.
+        let (_, with) = table2_workloads(PHI3, 8, 5.58, 512, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        let b = m.breakdown(&with);
+        assert!(b.parallel_decode > 0.0);
+        // Amortized over 100 generated tokens it is a minor term.
+        let total_100 = b.prefill.total + 100.0 * b.token_gen.total;
+        assert!(b.parallel_decode < 0.5 * total_100);
+    }
+
+    #[test]
+    fn no_huffman_means_no_decode_phase() {
+        let (without, _) = table2_workloads(PHI3, 8, 5.58, 512, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        assert_eq!(m.parallel_decode(&without), 0.0);
+        let b = m.breakdown(&without);
+        assert_eq!(b.first_token, b.prefill.total + b.token_gen.total);
+    }
+
+    #[test]
+    fn first_token_includes_all_upfront_work() {
+        let (_, with) = table2_workloads(PHI3, 4, 1.39, 512, 4, 1.05);
+        let m = LatencyModel::new(JETSON_P3450);
+        let b = m.breakdown(&with);
+        let expect = b.parallel_decode + b.prefill.total + b.token_gen.total;
+        assert!((b.first_token - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tokens_per_sec_inverts_token_latency() {
+        let (w, _) = table2_workloads(PHI3, 8, 5.58, 128, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        let b = m.breakdown(&w);
+        assert!((b.tokens_per_sec() * b.token_gen.total - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,155 @@
+//! Edge-device cost model (substitution for the paper's NVIDIA Jetson
+//! P3450 testbed — see DESIGN.md §Substitutions).
+//!
+//! The paper's Table II latencies are governed by a simple physics:
+//!
+//! * **pre-fill** is compute-dominated (batch matmuls saturate the ALUs),
+//!   with a secondary weight-streaming term;
+//! * **token generation** is memory-bandwidth-dominated — every generated
+//!   token must stream the *entire* weight set once (GEMV), so latency ≈
+//!   `weight_bytes / DRAM_bandwidth` plus a small unpack overhead;
+//! * **parallel Huffman decode** runs once per sequence on the CPU cores.
+//!
+//! [`Profile`] captures the hardware constants; [`LatencyModel`] turns a
+//! workload description into the Table II rows. Byte counts and decoder
+//! throughput come from *measurements* of the real pipeline; only the
+//! DRAM streaming and ALU terms are modeled.
+
+mod latency;
+
+pub use latency::{table2_workloads, LatencyBreakdown, LatencyModel, PhaseCost, Workload};
+
+/// Hardware constants of an edge target.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Profile {
+    /// Human-readable name.
+    pub name: &'static str,
+    /// DRAM bandwidth, bytes/second.
+    pub dram_bytes_per_sec: f64,
+    /// CPU core count (decode threads).
+    pub cpu_cores: usize,
+    /// CPU clock, Hz.
+    pub cpu_hz: f64,
+    /// Accelerator compute throughput for dense matmul, FLOP/s.
+    /// (Jetson P3450: 128-core Maxwell @ ~921 MHz ≈ 236 GFLOP/s fp32 FMA.)
+    pub accel_flops: f64,
+    /// Shared L2 cache size in bytes (the Huffman LUT must fit here).
+    pub l2_bytes: usize,
+    /// Huffman decode throughput per core, symbols/second. Calibrated:
+    /// the paper decodes 3.8e9 symbols in 6.66 s on 4 cores (uint8) →
+    /// ≈143 M sym/s/core; our LUT decoder on a modern x86 core measures
+    /// in the same order. Overridable via [`Profile::with_decode_rate`].
+    pub decode_syms_per_sec_per_core: f64,
+    /// Fraction of peak DRAM bandwidth achievable by streaming reads
+    /// (LPDDR4 on Jetson sustains ~70–80% of nominal).
+    pub dram_efficiency: f64,
+    /// Per-byte cost (seconds) of unpacking non-byte-aligned weights on
+    /// the accelerator — the paper's "bit-packing overheads" that explain
+    /// measured 1.32× vs theoretical 1.43×.
+    pub unpack_sec_per_byte: f64,
+}
+
+/// NVIDIA Jetson Nano P3450 (the paper's testbed): quad Cortex-A57 @
+/// 1.43 GHz, 4 GB LPDDR4 @ 25.6 GB/s, 2 MB shared L2, 128-core Maxwell.
+pub const JETSON_P3450: Profile = Profile {
+    name: "NVIDIA Jetson P3450",
+    dram_bytes_per_sec: 25.6e9,
+    cpu_cores: 4,
+    cpu_hz: 1.43e9,
+    accel_flops: 236.0e9,
+    l2_bytes: 2 * 1024 * 1024,
+    // Calibrated to Table II: 3.8e9 params / (6.66 s × 4 cores).
+    decode_syms_per_sec_per_core: 143.0e6,
+    dram_efficiency: 0.75,
+    // Calibrated to Table II's uint8 gap: theoretical 1.43× vs measured
+    // 1.32× on a 3.8 GB model at 0.083 s/token.
+    unpack_sec_per_byte: 2.4e-12,
+};
+
+/// A generic laptop/desktop-class host (used when benches report both
+/// modeled-Jetson and modeled-host numbers).
+pub const GENERIC_HOST: Profile = Profile {
+    name: "generic x86 host",
+    dram_bytes_per_sec: 40.0e9,
+    cpu_cores: 8,
+    cpu_hz: 3.0e9,
+    accel_flops: 500.0e9,
+    l2_bytes: 8 * 1024 * 1024,
+    decode_syms_per_sec_per_core: 300.0e6,
+    dram_efficiency: 0.8,
+    unpack_sec_per_byte: 1.0e-12,
+};
+
+impl Profile {
+    /// Override the decode rate with a *measured* value (benches measure
+    /// the real decoder on the build host, then scale by clock ratio).
+    pub fn with_decode_rate(mut self, syms_per_sec_per_core: f64) -> Self {
+        self.decode_syms_per_sec_per_core = syms_per_sec_per_core;
+        self
+    }
+
+    /// Effective (sustained) DRAM bandwidth in bytes/sec.
+    pub fn sustained_dram(&self) -> f64 {
+        self.dram_bytes_per_sec * self.dram_efficiency
+    }
+
+    /// Time to stream `bytes` from DRAM once.
+    pub fn stream_time(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.sustained_dram()
+    }
+
+    /// Time to execute `flops` of dense matmul on the accelerator.
+    pub fn compute_time(&self, flops: f64) -> f64 {
+        flops / self.accel_flops
+    }
+
+    /// Time for `threads` cores to decode `symbols` Huffman symbols,
+    /// given a load-balance factor (`imbalance ≥ 1`, 1 = perfect).
+    pub fn decode_time(&self, symbols: usize, threads: usize, imbalance: f64) -> f64 {
+        let threads = threads.min(self.cpu_cores).max(1);
+        let per_core = symbols as f64 / threads as f64;
+        per_core * imbalance / self.decode_syms_per_sec_per_core
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jetson_constants_match_paper_spec() {
+        assert_eq!(JETSON_P3450.cpu_cores, 4);
+        assert!((JETSON_P3450.dram_bytes_per_sec - 25.6e9).abs() < 1.0);
+        assert_eq!(JETSON_P3450.l2_bytes, 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn stream_time_scales_linearly() {
+        let p = &JETSON_P3450;
+        let t1 = p.stream_time(1_000_000_000);
+        let t2 = p.stream_time(2_000_000_000);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_time_matches_table2_calibration() {
+        // 3.8 B uint8 symbols on 4 threads should land near the paper's
+        // 6.66 s (that's how the rate constant was derived).
+        let t = JETSON_P3450.decode_time(3_800_000_000, 4, 1.0);
+        assert!((t - 6.66).abs() < 0.2, "decode time {t}");
+    }
+
+    #[test]
+    fn decode_threads_capped_at_cores() {
+        let t4 = JETSON_P3450.decode_time(1_000_000, 4, 1.0);
+        let t16 = JETSON_P3450.decode_time(1_000_000, 16, 1.0);
+        assert_eq!(t4, t16);
+    }
+
+    #[test]
+    fn imbalance_inflates_decode_time() {
+        let t1 = JETSON_P3450.decode_time(1_000_000, 4, 1.0);
+        let t2 = JETSON_P3450.decode_time(1_000_000, 4, 1.3);
+        assert!(t2 > t1);
+    }
+}

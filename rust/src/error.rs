@@ -1,0 +1,73 @@
+//! Crate-wide error type.
+//!
+//! Every fallible public API in this crate returns [`Result<T>`]. The
+//! variants are deliberately coarse — callers match on the category
+//! (corrupt container vs. runtime failure vs. bad argument), and the
+//! message carries the detail.
+
+use thiserror::Error;
+
+/// Errors produced by the EntroLLM library.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Malformed or corrupt ELM container / Huffman table / bitstream.
+    #[error("format error: {0}")]
+    Format(String),
+
+    /// An argument violated a documented precondition.
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// PJRT / XLA runtime failure.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// JSON parse error (artifact manifests, configs).
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// Serving-engine error (queue closed, request rejected, ...).
+    #[error("engine error: {0}")]
+    Engine(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Shorthand for `Err(Error::Format(format!(...)))`.
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::Format(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_includes_category_and_detail() {
+        let e = Error::Format("bad magic".into());
+        assert_eq!(e.to_string(), "format error: bad magic");
+        let e = Error::InvalidArg("n must be > 0".into());
+        assert!(e.to_string().contains("n must be > 0"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,579 @@
+//! Code construction: frequency tables, optimal code lengths, canonical
+//! code assignment.
+//!
+//! Two length-derivation algorithms are implemented and cross-checked:
+//!
+//! * `huffman_lengths` — the classic two-queue O(n log n) Huffman tree
+//!   (unbounded depth), used when the optimal tree already fits in
+//!   [`MAX_CODE_LEN`] bits (always true for the Gaussian-ish weight
+//!   histograms the paper targets, but not for adversarial inputs);
+//! * `package_merge_lengths` — the Larmore–Hirschberg package-merge
+//!   algorithm producing *optimal length-limited* codes, used as the
+//!   fallback so the LUT decoder's probe width stays bounded.
+
+use crate::{Error, Result};
+
+/// Alphabet size: quantized weights are uint4/uint8 symbols.
+pub const ALPHABET: usize = 256;
+
+/// Hard cap on code length. 16 bits keeps the decoder LUT at 2^16
+/// entries (128 KiB of u16s) — it fits in an edge CPU's L2, which is the
+/// paper's deployment regime (the Jetson A57 has a 2 MiB shared L2).
+pub const MAX_CODE_LEN: u8 = 16;
+
+/// Symbol frequency table over the 256-symbol alphabet.
+#[derive(Debug, Clone)]
+pub struct FreqTable {
+    counts: [u64; ALPHABET],
+}
+
+impl Default for FreqTable {
+    fn default() -> Self {
+        FreqTable {
+            counts: [0; ALPHABET],
+        }
+    }
+}
+
+impl FreqTable {
+    /// Empty table.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Count the symbols of one stream.
+    pub fn from_symbols(symbols: &[u8]) -> Self {
+        let mut t = Self::new();
+        t.add_symbols(symbols);
+        t
+    }
+
+    /// Accumulate more symbols (Algorithm 1 line 11 pools counts across
+    /// *all* layers into one table).
+    pub fn add_symbols(&mut self, symbols: &[u8]) {
+        for &s in symbols {
+            self.counts[s as usize] += 1;
+        }
+    }
+
+    /// Merge another table into this one.
+    pub fn merge(&mut self, other: &FreqTable) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Count for one symbol.
+    pub fn count(&self, symbol: u8) -> u64 {
+        self.counts[symbol as usize]
+    }
+
+    /// Raw counts.
+    pub fn counts(&self) -> &[u64; ALPHABET] {
+        &self.counts
+    }
+
+    /// Total symbols counted.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Number of symbols with non-zero frequency.
+    pub fn distinct(&self) -> usize {
+        self.counts.iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Empirical probabilities (zero for absent symbols).
+    pub fn probabilities(&self) -> Vec<f64> {
+        let total = self.total() as f64;
+        self.counts
+            .iter()
+            .map(|&c| if total > 0.0 { c as f64 / total } else { 0.0 })
+            .collect()
+    }
+}
+
+/// Classic Huffman code lengths via the sorted two-queue method.
+/// Returns per-symbol lengths (0 for absent symbols); depth unbounded.
+fn huffman_lengths(freq: &FreqTable) -> [u8; ALPHABET] {
+    let mut lengths = [0u8; ALPHABET];
+    let present: Vec<usize> = (0..ALPHABET).filter(|&s| freq.counts[s] > 0).collect();
+    match present.len() {
+        0 => return lengths,
+        1 => {
+            // Degenerate: a single symbol still needs 1 bit so the
+            // bitstream length is well-defined.
+            lengths[present[0]] = 1;
+            return lengths;
+        }
+        _ => {}
+    }
+
+    // Leaves sorted ascending by count; two-queue merge is O(n).
+    let mut leaves: Vec<(u64, usize)> = present.iter().map(|&s| (freq.counts[s], s)).collect();
+    leaves.sort_unstable();
+
+    // Node arena: (weight, left, right); leaves have usize::MAX children.
+    #[derive(Clone, Copy)]
+    struct Node {
+        weight: u64,
+        kids: Option<(usize, usize)>,
+        symbol: usize,
+    }
+    let mut arena: Vec<Node> = leaves
+        .iter()
+        .map(|&(w, s)| Node {
+            weight: w,
+            kids: None,
+            symbol: s,
+        })
+        .collect();
+
+    let mut q1: std::collections::VecDeque<usize> = (0..arena.len()).collect();
+    let mut q2: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
+
+    let pop_min = |q1: &mut std::collections::VecDeque<usize>,
+                       q2: &mut std::collections::VecDeque<usize>,
+                       arena: &Vec<Node>|
+     -> usize {
+        match (q1.front(), q2.front()) {
+            (Some(&a), Some(&b)) => {
+                if arena[a].weight <= arena[b].weight {
+                    q1.pop_front().unwrap()
+                } else {
+                    q2.pop_front().unwrap()
+                }
+            }
+            (Some(_), None) => q1.pop_front().unwrap(),
+            (None, Some(_)) => q2.pop_front().unwrap(),
+            (None, None) => unreachable!("empty queues"),
+        }
+    };
+
+    while q1.len() + q2.len() > 1 {
+        let a = pop_min(&mut q1, &mut q2, &arena);
+        let b = pop_min(&mut q1, &mut q2, &arena);
+        let merged = Node {
+            weight: arena[a].weight + arena[b].weight,
+            kids: Some((a, b)),
+            symbol: usize::MAX,
+        };
+        arena.push(merged);
+        q2.push_back(arena.len() - 1);
+    }
+    let root = pop_min(&mut q1, &mut q2, &arena);
+
+    // Depth-first traversal assigns depths = code lengths.
+    let mut stack = vec![(root, 0u8)];
+    while let Some((idx, depth)) = stack.pop() {
+        match arena[idx].kids {
+            Some((l, r)) => {
+                stack.push((l, depth + 1));
+                stack.push((r, depth + 1));
+            }
+            None => lengths[arena[idx].symbol] = depth.max(1),
+        }
+    }
+    lengths
+}
+
+/// Optimal length-limited code lengths via package-merge.
+///
+/// `limit` must satisfy `2^limit >= distinct symbols`. O(limit · n log n).
+fn package_merge_lengths(freq: &FreqTable, limit: u8) -> Result<[u8; ALPHABET]> {
+    let present: Vec<usize> = (0..ALPHABET).filter(|&s| freq.counts[s] > 0).collect();
+    let n = present.len();
+    let mut lengths = [0u8; ALPHABET];
+    if n == 0 {
+        return Ok(lengths);
+    }
+    if n == 1 {
+        lengths[present[0]] = 1;
+        return Ok(lengths);
+    }
+    if (1usize << limit.min(31)) < n {
+        return Err(Error::InvalidArg(format!(
+            "cannot code {n} symbols within {limit} bits"
+        )));
+    }
+
+    // A package is a set of original symbols with a combined weight.
+    #[derive(Clone)]
+    struct Pkg {
+        weight: u64,
+        // Count per present-symbol index; packages are small so a Vec of
+        // (idx, count) pairs keeps memory proportional to content.
+        syms: Vec<(u16, u16)>,
+    }
+    fn merge_syms(a: &[(u16, u16)], b: &[(u16, u16)]) -> Vec<(u16, u16)> {
+        let mut out: Vec<(u16, u16)> = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() && j < b.len() {
+            match a[i].0.cmp(&b[j].0) {
+                std::cmp::Ordering::Less => {
+                    out.push(a[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.push(b[j]);
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    out.push((a[i].0, a[i].1 + b[j].1));
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        out.extend_from_slice(&a[i..]);
+        out.extend_from_slice(&b[j..]);
+        out
+    }
+
+    let mut leaves: Vec<Pkg> = present
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| Pkg {
+            weight: freq.counts[s],
+            syms: vec![(i as u16, 1)],
+        })
+        .collect();
+    leaves.sort_by_key(|p| p.weight);
+
+    // Level 1 (deepest) starts as the leaves; each subsequent level is
+    // leaves ∪ pairwise-packages(previous level), sorted by weight.
+    let mut level = leaves.clone();
+    for _ in 1..limit {
+        let mut packaged: Vec<Pkg> = level
+            .chunks(2)
+            .filter(|c| c.len() == 2)
+            .map(|c| Pkg {
+                weight: c[0].weight + c[1].weight,
+                syms: merge_syms(&c[0].syms, &c[1].syms),
+            })
+            .collect();
+        packaged.extend(leaves.iter().cloned());
+        packaged.sort_by_key(|p| p.weight);
+        level = packaged;
+    }
+
+    // Take the 2n-2 cheapest packages at the top level; each occurrence
+    // of a symbol adds one to its code length.
+    let take = 2 * n - 2;
+    if level.len() < take {
+        return Err(Error::InvalidArg(
+            "package-merge: not enough packages (limit too small)".into(),
+        ));
+    }
+    let mut len_per_present = vec![0u32; n];
+    for pkg in level.iter().take(take) {
+        for &(idx, cnt) in &pkg.syms {
+            len_per_present[idx as usize] += cnt as u32;
+        }
+    }
+    for (i, &s) in present.iter().enumerate() {
+        debug_assert!(len_per_present[i] >= 1 && len_per_present[i] <= limit as u32);
+        lengths[s] = len_per_present[i] as u8;
+    }
+    Ok(lengths)
+}
+
+/// A complete canonical code: per-symbol lengths and codewords.
+///
+/// Canonical form means codes are fully determined by the length array:
+/// symbols are sorted by `(length, symbol)` and assigned consecutive
+/// codewords. The ELM container therefore persists only the lengths
+/// (256 bytes) — [`CodeSpec::from_lengths`] rebuilds everything.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodeSpec {
+    lengths: [u8; ALPHABET],
+    codes: [u32; ALPHABET],
+    max_len: u8,
+}
+
+impl CodeSpec {
+    /// Build an optimal (length-limited) canonical code for `freq`.
+    pub fn build(freq: &FreqTable) -> Result<Self> {
+        if freq.distinct() == 0 {
+            return Err(Error::InvalidArg("CodeSpec::build: empty frequency table".into()));
+        }
+        let lengths = huffman_lengths(freq);
+        let max = lengths.iter().copied().max().unwrap();
+        let lengths = if max > MAX_CODE_LEN {
+            package_merge_lengths(freq, MAX_CODE_LEN)?
+        } else {
+            lengths
+        };
+        Self::from_lengths(&lengths)
+    }
+
+    /// Reconstruct a canonical code from a length array (e.g. loaded from
+    /// an ELM container). Validates the Kraft inequality.
+    pub fn from_lengths(lengths: &[u8]) -> Result<Self> {
+        if lengths.len() != ALPHABET {
+            return Err(Error::Format(format!(
+                "code length array has {} entries, want {ALPHABET}",
+                lengths.len()
+            )));
+        }
+        let mut arr = [0u8; ALPHABET];
+        arr.copy_from_slice(lengths);
+        let max_len = arr.iter().copied().max().unwrap_or(0);
+        if max_len > MAX_CODE_LEN {
+            return Err(Error::Format(format!(
+                "code length {max_len} exceeds max {MAX_CODE_LEN}"
+            )));
+        }
+        if max_len == 0 {
+            return Err(Error::Format("no symbols in code".into()));
+        }
+        // Kraft: sum 2^-len <= 1 (we allow < 1 for the degenerate
+        // 1-symbol code, which uses half the code space).
+        let kraft: u64 = arr
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 1u64 << (MAX_CODE_LEN - l))
+            .sum();
+        if kraft > 1u64 << MAX_CODE_LEN {
+            return Err(Error::Format("code lengths violate Kraft inequality".into()));
+        }
+
+        // Canonical assignment: first code of length L is
+        // (first_code[L-1] + count[L-1]) << 1.
+        let mut count = [0u32; (MAX_CODE_LEN + 1) as usize];
+        for &l in arr.iter() {
+            if l > 0 {
+                count[l as usize] += 1;
+            }
+        }
+        let mut next = [0u32; (MAX_CODE_LEN + 1) as usize];
+        let mut code = 0u32;
+        for l in 1..=MAX_CODE_LEN as usize {
+            code = (code + count[l - 1]) << 1;
+            next[l] = code;
+        }
+        let mut codes = [0u32; ALPHABET];
+        for s in 0..ALPHABET {
+            let l = arr[s] as usize;
+            if l > 0 {
+                codes[s] = next[l];
+                next[l] += 1;
+            }
+        }
+        Ok(CodeSpec {
+            lengths: arr,
+            codes,
+            max_len,
+        })
+    }
+
+    /// Per-symbol code lengths (0 = absent).
+    pub fn lengths(&self) -> &[u8; ALPHABET] {
+        &self.lengths
+    }
+
+    /// Per-symbol canonical codewords (valid where length > 0).
+    pub fn codes(&self) -> &[u32; ALPHABET] {
+        &self.codes
+    }
+
+    /// Longest codeword.
+    pub fn max_len(&self) -> u8 {
+        self.max_len
+    }
+
+    /// Expected bits/symbol of this code under `freq` — the paper's
+    /// "effective bits" when `freq` is the model's own histogram.
+    pub fn expected_bits(&self, freq: &FreqTable) -> f64 {
+        let total = freq.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let bits: u64 = (0..ALPHABET)
+            .map(|s| freq.counts[s] * self.lengths[s] as u64)
+            .sum();
+        bits as f64 / total as f64
+    }
+
+    /// Exact encoded size in bits for a symbol stream described by `freq`.
+    pub fn encoded_bits(&self, freq: &FreqTable) -> u64 {
+        (0..ALPHABET)
+            .map(|s| freq.counts[s] * self.lengths[s] as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::entropy::shannon_entropy;
+    use crate::rng::Rng;
+
+    fn table(counts: &[(u8, u64)]) -> FreqTable {
+        let mut t = FreqTable::new();
+        for &(s, c) in counts {
+            t.counts[s as usize] = c;
+        }
+        t
+    }
+
+    #[test]
+    fn freq_table_counts_and_merges() {
+        let mut a = FreqTable::from_symbols(&[1, 1, 2]);
+        let b = FreqTable::from_symbols(&[2, 3]);
+        a.merge(&b);
+        assert_eq!(a.count(1), 2);
+        assert_eq!(a.count(2), 2);
+        assert_eq!(a.count(3), 1);
+        assert_eq!(a.total(), 5);
+        assert_eq!(a.distinct(), 3);
+    }
+
+    #[test]
+    fn textbook_example_lengths() {
+        // Freqs 5,9,12,13,16,45 — the classic example; optimal lengths
+        // are 4,4,3,3,3,1.
+        let t = table(&[(0, 5), (1, 9), (2, 12), (3, 13), (4, 16), (5, 45)]);
+        let spec = CodeSpec::build(&t).unwrap();
+        let l = spec.lengths();
+        assert_eq!(&l[0..6], &[4, 4, 3, 3, 3, 1]);
+    }
+
+    #[test]
+    fn kraft_equality_for_full_codes() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let n = 2 + rng.below(200);
+            let mut t = FreqTable::new();
+            for s in 0..n {
+                t.counts[s] = 1 + rng.below(10_000) as u64;
+            }
+            let spec = CodeSpec::build(&t).unwrap();
+            let kraft: f64 = spec
+                .lengths()
+                .iter()
+                .filter(|&&l| l > 0)
+                .map(|&l| 2f64.powi(-(l as i32)))
+                .sum();
+            assert!((kraft - 1.0).abs() < 1e-9, "kraft {kraft}");
+        }
+    }
+
+    #[test]
+    fn canonical_codes_are_prefix_free() {
+        let mut rng = Rng::new(17);
+        let mut t = FreqTable::new();
+        for s in 0..256 {
+            t.counts[s] = 1 + rng.below(100_000) as u64;
+        }
+        let spec = CodeSpec::build(&t).unwrap();
+        let pairs: Vec<(u32, u8)> = (0..ALPHABET)
+            .filter(|&s| spec.lengths()[s] > 0)
+            .map(|s| (spec.codes()[s], spec.lengths()[s]))
+            .collect();
+        for (i, &(ca, la)) in pairs.iter().enumerate() {
+            for &(cb, lb) in &pairs[i + 1..] {
+                let (short, ls, long, ll) = if la <= lb {
+                    (ca, la, cb, lb)
+                } else {
+                    (cb, lb, ca, la)
+                };
+                assert_ne!(
+                    short,
+                    long >> (ll - ls),
+                    "code {short:0ls$b} prefixes {long:0ll$b}",
+                    ls = ls as usize,
+                    ll = ll as usize
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn average_length_within_entropy_plus_one() {
+        // Shannon: H <= avg_len < H + 1 for optimal codes.
+        let mut rng = Rng::new(99);
+        for _ in 0..10 {
+            let mut t = FreqTable::new();
+            for s in 0..256 {
+                // Zipf-ish skew.
+                t.counts[s] = (100_000 / (s as u64 + 1)) + rng.below(10) as u64;
+            }
+            let spec = CodeSpec::build(&t).unwrap();
+            let h = shannon_entropy(t.counts());
+            let avg = spec.expected_bits(&t);
+            assert!(avg >= h - 1e-9, "avg {avg} < H {h}");
+            assert!(avg < h + 1.0, "avg {avg} >= H+1 {}", h + 1.0);
+        }
+    }
+
+    #[test]
+    fn length_limit_is_enforced() {
+        // Fibonacci-like weights force deep Huffman trees; the limiter
+        // must cap at MAX_CODE_LEN while staying a valid code.
+        let mut t = FreqTable::new();
+        let (mut a, mut b) = (1u64, 1u64);
+        for s in 0..40 {
+            t.counts[s] = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let spec = CodeSpec::build(&t).unwrap();
+        assert!(spec.max_len() <= MAX_CODE_LEN);
+        let kraft: f64 = spec
+            .lengths()
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 2f64.powi(-(l as i32)))
+            .sum();
+        assert!(kraft <= 1.0 + 1e-9);
+        // Still near-optimal: within 1% of unlimited average length.
+        let h = shannon_entropy(t.counts());
+        assert!(spec.expected_bits(&t) < h + 1.0);
+    }
+
+    #[test]
+    fn package_merge_matches_huffman_when_unconstrained() {
+        // With a generous limit, package-merge total cost must equal
+        // Huffman's (both optimal).
+        let mut rng = Rng::new(123);
+        for _ in 0..20 {
+            let n = 2 + rng.below(50);
+            let mut t = FreqTable::new();
+            for s in 0..n {
+                t.counts[s] = 1 + rng.below(1000) as u64;
+            }
+            let h_len = huffman_lengths(&t);
+            let p_len = package_merge_lengths(&t, MAX_CODE_LEN).unwrap();
+            let cost = |lens: &[u8; ALPHABET]| -> u64 {
+                (0..ALPHABET).map(|s| t.counts[s] * lens[s] as u64).sum()
+            };
+            if h_len.iter().copied().max().unwrap() <= MAX_CODE_LEN {
+                assert_eq!(cost(&h_len), cost(&p_len));
+            }
+        }
+    }
+
+    #[test]
+    fn from_lengths_rejects_bad_input() {
+        assert!(CodeSpec::from_lengths(&[1u8; 10]).is_err()); // wrong size
+        let zeros = [0u8; ALPHABET];
+        assert!(CodeSpec::from_lengths(&zeros).is_err()); // empty
+        let mut too_long = [0u8; ALPHABET];
+        too_long[0] = MAX_CODE_LEN + 1;
+        too_long[1] = 1;
+        assert!(CodeSpec::from_lengths(&too_long).is_err());
+        // Kraft violation: three 1-bit codes.
+        let mut kraft = [0u8; ALPHABET];
+        kraft[0] = 1;
+        kraft[1] = 1;
+        kraft[2] = 1;
+        assert!(CodeSpec::from_lengths(&kraft).is_err());
+    }
+
+    #[test]
+    fn empty_table_is_an_error() {
+        assert!(CodeSpec::build(&FreqTable::new()).is_err());
+    }
+}

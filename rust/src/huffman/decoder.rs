@@ -1,0 +1,358 @@
+//! Table-driven Huffman decoder — the edge-side hot path.
+//!
+//! The decoder materializes a flat lookup table indexed by the next
+//! `max_len` bits of the stream: entry `i` holds the symbol whose
+//! codeword prefixes `i` and that codeword's length. Decoding one symbol
+//! is then a single `peek` + table load + `consume` — no per-bit tree
+//! walking. This is the standard construction used by production
+//! inflate/zstd decoders and is what makes the paper's "parallel decode
+//! in 1.66 s for 3.8 B parameters" plausible on four A57 cores.
+//!
+//! A bit-serial canonical decoder is kept alongside as a correctness
+//! oracle ([`Decoder::decode_bit_serial`]).
+
+use super::code::{CodeSpec, ALPHABET};
+use crate::bitio::BitReader;
+use crate::{Error, Result};
+
+/// One LUT entry: the decoded symbol and its code length in bits.
+/// Packed into 2 bytes so a 16-bit table stays L2-resident (128 KiB).
+#[derive(Debug, Clone, Copy, Default)]
+struct Entry {
+    symbol: u8,
+    len: u8, // 0 marks an invalid (unreachable) prefix
+}
+
+/// Fast table-driven decoder for one [`CodeSpec`].
+pub struct Decoder {
+    table: Vec<Entry>,
+    probe_bits: u8,
+    /// True when the code exactly fills the probe space (Kraft sum
+    /// equals 1): every probe value maps to a symbol, so the hot loop
+    /// needs no validity branch. Canonical codes built from real
+    /// frequency tables are always complete except the degenerate
+    /// single-symbol code.
+    complete: bool,
+    /// Canonical-decode metadata for the bit-serial oracle:
+    /// `first_code[l]`, `first_index[l]` per length, plus symbols sorted
+    /// by (length, symbol).
+    first_code: [u32; 17],
+    first_index: [u32; 17],
+    sorted_symbols: Vec<u8>,
+    max_len: u8,
+}
+
+impl Decoder {
+    /// Build the LUT (`2^max_len` entries) for `spec`.
+    pub fn new(spec: &CodeSpec) -> Result<Self> {
+        let max_len = spec.max_len();
+        debug_assert!(max_len >= 1 && max_len <= 16);
+        let probe_bits = max_len;
+        let size = 1usize << probe_bits;
+        let mut table = vec![Entry::default(); size];
+        let mut filled = 0usize;
+        for s in 0..ALPHABET {
+            let len = spec.lengths()[s];
+            if len == 0 {
+                continue;
+            }
+            let code = spec.codes()[s];
+            // Every probe window that starts with this codeword maps to s.
+            let shift = probe_bits - len;
+            let lo = (code as usize) << shift;
+            let hi = lo + (1usize << shift);
+            filled += hi - lo;
+            for e in &mut table[lo..hi] {
+                *e = Entry {
+                    symbol: s as u8,
+                    len,
+                };
+            }
+        }
+        let complete = filled == size;
+
+        // Canonical metadata for the oracle decoder.
+        let mut count = [0u32; 17];
+        for &l in spec.lengths().iter() {
+            if l > 0 {
+                count[l as usize] += 1;
+            }
+        }
+        let mut first_code = [0u32; 17];
+        let mut first_index = [0u32; 17];
+        let mut index = 0u32;
+        for l in 1..=16usize {
+            first_code[l] = if l == 1 {
+                0
+            } else {
+                (first_code[l - 1] + count[l - 1]) << 1
+            };
+            first_index[l] = index;
+            index += count[l];
+        }
+        let mut sorted: Vec<(u8, u8)> = (0..ALPHABET)
+            .filter(|&s| spec.lengths()[s] > 0)
+            .map(|s| (spec.lengths()[s], s as u8))
+            .collect();
+        sorted.sort_unstable();
+        let sorted_symbols = sorted.into_iter().map(|(_, s)| s).collect();
+
+        Ok(Decoder {
+            table,
+            probe_bits,
+            complete,
+            first_code,
+            first_index,
+            sorted_symbols,
+            max_len,
+        })
+    }
+
+    /// Width of the LUT probe in bits.
+    pub fn probe_bits(&self) -> u8 {
+        self.probe_bits
+    }
+
+    /// LUT memory footprint in bytes (reported by the device model —
+    /// it must stay L2-resident on the edge target).
+    pub fn table_bytes(&self) -> usize {
+        self.table.len() * std::mem::size_of::<Entry>()
+    }
+
+    /// Decode exactly `n` symbols from `bytes` into a new vector.
+    pub fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<u8>> {
+        let mut out = vec![0u8; n];
+        self.decode_into(bytes, &mut out)?;
+        Ok(out)
+    }
+
+    /// Decode exactly `out.len()` symbols from `bytes` into `out`.
+    ///
+    /// This is the per-segment hot loop of §III-C parallel decoding:
+    /// each worker thread calls `decode_into` on its own (segment,
+    /// output-slice) pairs with zero shared state.
+    ///
+    /// §Perf: hand-rolled bit feed instead of [`BitReader`] — a 64-bit
+    /// accumulator refilled with whole-byte big-endian bulk loads, one
+    /// table probe + shift per symbol, no per-symbol `Result` plumbing
+    /// (validity is checked once at the end; a corrupt stream can only
+    /// mis-decode, run the accumulator dry, or leave bits over — all
+    /// detected). ~2× over the BitReader-based loop (EXPERIMENTS §Perf).
+    pub fn decode_into(&self, bytes: &[u8], out: &mut [u8]) -> Result<()> {
+        let total_bits = bytes.len() * 8;
+        let probe_shift = 64 - self.probe_bits as u32;
+        let table = &self.table[..];
+
+        // Accumulator: upcoming bits left-aligned; `acc_bits` counts the
+        // *loaded* bits (shifted-out low bits read as zero, which is
+        // exactly the byte-alignment padding semantics).
+        let mut acc: u64 = 0;
+        let mut acc_bits: u32 = 0;
+        let mut pos: usize = 0; // next byte to load
+        let mut consumed: usize = 0; // bits consumed across the stream
+
+        let mut refill = |acc: &mut u64, acc_bits: &mut u32, pos: &mut usize| {
+            if *pos + 8 <= bytes.len() {
+                // Bulk load: whole bytes only, masked so no partial
+                // byte is double-loaded on the next refill.
+                let chunk = u64::from_be_bytes(bytes[*pos..*pos + 8].try_into().unwrap());
+                let nbytes = ((64 - *acc_bits) >> 3) as usize;
+                let keep_bits = (nbytes * 8) as u32;
+                let masked = if keep_bits == 64 {
+                    chunk
+                } else {
+                    chunk & (!0u64 << (64 - keep_bits))
+                };
+                *acc |= masked >> *acc_bits;
+                *pos += nbytes;
+                *acc_bits += keep_bits;
+            } else {
+                while *acc_bits <= 56 && *pos < bytes.len() {
+                    *acc |= (bytes[*pos] as u64) << (56 - *acc_bits);
+                    *pos += 1;
+                    *acc_bits += 8;
+                }
+            }
+        };
+
+        if self.complete {
+            // Branch-free fast path: every probe is a valid entry, and
+            // one refill (≥48 bits) covers 3 probes of ≤16 bits.
+            let mut i = 0usize;
+            let n = out.len();
+            while i + 3 <= n {
+                if acc_bits < 48 {
+                    refill(&mut acc, &mut acc_bits, &mut pos);
+                }
+                for _ in 0..3 {
+                    let e = table[(acc >> probe_shift) as usize];
+                    let len = e.len as u32;
+                    unsafe { *out.get_unchecked_mut(i) = e.symbol };
+                    acc <<= len;
+                    acc_bits = acc_bits.saturating_sub(len);
+                    consumed += len as usize;
+                    i += 1;
+                }
+            }
+            while i < n {
+                if acc_bits < 48 {
+                    refill(&mut acc, &mut acc_bits, &mut pos);
+                }
+                let e = table[(acc >> probe_shift) as usize];
+                let len = e.len as u32;
+                out[i] = e.symbol;
+                acc <<= len;
+                acc_bits = acc_bits.saturating_sub(len);
+                consumed += len as usize;
+                i += 1;
+            }
+        } else {
+            for (i, slot) in out.iter_mut().enumerate() {
+                if acc_bits < 48 {
+                    refill(&mut acc, &mut acc_bits, &mut pos);
+                }
+                let e = table[(acc >> probe_shift) as usize];
+                let len = e.len as u32;
+                if len == 0 {
+                    return Err(Error::Format(format!(
+                        "corrupt huffman stream at symbol {i}"
+                    )));
+                }
+                *slot = e.symbol;
+                acc <<= len;
+                acc_bits = acc_bits.saturating_sub(len);
+                consumed += len as usize;
+            }
+        }
+        if consumed > total_bits {
+            return Err(Error::Format(format!(
+                "huffman stream overrun: consumed {consumed} of {total_bits} bits"
+            )));
+        }
+        // Trailing padding must be < 8 zero bits (byte alignment only).
+        if total_bits - consumed >= 8 {
+            return Err(Error::Format(format!(
+                "{} unconsumed bits after decoding {} symbols",
+                total_bits - consumed,
+                out.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Bit-serial canonical decoder — the slow correctness oracle.
+    pub fn decode_bit_serial(&self, bytes: &[u8], n: usize) -> Result<Vec<u8>> {
+        let mut r = BitReader::new(bytes);
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut code = 0u32;
+            let mut len = 0u8;
+            loop {
+                if r.remaining_bits() == 0 {
+                    return Err(Error::Format(format!(
+                        "stream exhausted at symbol {i} (bit-serial)"
+                    )));
+                }
+                code = (code << 1) | r.read_bits(1)?;
+                len += 1;
+                if len > self.max_len {
+                    return Err(Error::Format("no codeword matches (bit-serial)".into()));
+                }
+                // Canonical property: at length l, valid codes are
+                // [first_code[l], first_code[l] + count[l]).
+                let l = len as usize;
+                let idx_base = self.first_index[l];
+                let next_base = if l < 16 {
+                    self.first_index[l + 1]
+                } else {
+                    self.sorted_symbols.len() as u32
+                };
+                let count = next_base - idx_base;
+                if count > 0 && code >= self.first_code[l] && code < self.first_code[l] + count {
+                    let idx = idx_base + (code - self.first_code[l]);
+                    out.push(self.sorted_symbols[idx as usize]);
+                    break;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl std::fmt::Debug for Decoder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Decoder")
+            .field("probe_bits", &self.probe_bits)
+            .field("table_entries", &self.table.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::code::FreqTable;
+    use super::super::encoder::Encoder;
+    use super::*;
+    use crate::rng::Rng;
+
+    fn spec_for(symbols: &[u8]) -> CodeSpec {
+        CodeSpec::build(&FreqTable::from_symbols(symbols)).unwrap()
+    }
+
+    #[test]
+    fn decode_into_reuses_buffer() {
+        let syms: Vec<u8> = (0..200u8).collect();
+        let spec = spec_for(&syms);
+        let bytes = Encoder::new(&spec).encode_to_vec(&syms).unwrap();
+        let dec = Decoder::new(&spec).unwrap();
+        let mut out = vec![0u8; syms.len()];
+        dec.decode_into(&bytes, &mut out).unwrap();
+        assert_eq!(out, syms);
+    }
+
+    #[test]
+    fn corrupt_stream_is_detected_not_panicking() {
+        let syms: Vec<u8> = (0..=50u8).cycle().take(5000).collect();
+        let spec = spec_for(&syms);
+        let mut bytes = Encoder::new(&spec).encode_to_vec(&syms).unwrap();
+        // Flip bits throughout; decoder must either error or produce
+        // *some* output, never panic / read OOB.
+        let mut rng = Rng::new(77);
+        for _ in 0..50 {
+            let i = rng.below(bytes.len());
+            bytes[i] ^= 1 << rng.below(8);
+        }
+        let dec = Decoder::new(&spec).unwrap();
+        let _ = dec.decode(&bytes, syms.len()); // must not panic
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let syms: Vec<u8> = (0..100u8).cycle().take(10_000).collect();
+        let spec = spec_for(&syms);
+        let bytes = Encoder::new(&spec).encode_to_vec(&syms).unwrap();
+        let dec = Decoder::new(&spec).unwrap();
+        let res = dec.decode(&bytes[..bytes.len() / 2], syms.len());
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn excess_trailing_bytes_error() {
+        let syms = vec![1u8, 2, 3, 1, 2, 3];
+        let spec = spec_for(&syms);
+        let mut bytes = Encoder::new(&spec).encode_to_vec(&syms).unwrap();
+        bytes.extend_from_slice(&[0, 0, 0, 0]);
+        let dec = Decoder::new(&spec).unwrap();
+        assert!(dec.decode(&bytes, syms.len()).is_err());
+    }
+
+    #[test]
+    fn table_bytes_bounded_by_l2() {
+        // The LUT must fit the Jetson's 2 MiB shared L2 with room to spare.
+        let mut rng = Rng::new(1);
+        let syms: Vec<u8> = (0..100_000).map(|_| rng.below(256) as u8).collect();
+        let spec = spec_for(&syms);
+        let dec = Decoder::new(&spec).unwrap();
+        assert!(dec.table_bytes() <= 128 * 1024);
+    }
+}

@@ -1,0 +1,91 @@
+//! Bit-serial Huffman encoder.
+//!
+//! Encoding happens once, "in the cloud" (Algorithm 1, `CLOUD
+//! PROCESSING`), so it favors clarity over speed; the *decoder* is the
+//! edge-side hot path.
+
+use super::code::{CodeSpec, ALPHABET};
+use crate::bitio::BitWriter;
+use crate::{Error, Result};
+
+/// Symbol-stream encoder for a fixed [`CodeSpec`].
+#[derive(Debug, Clone)]
+pub struct Encoder {
+    codes: [u32; ALPHABET],
+    lengths: [u8; ALPHABET],
+}
+
+impl Encoder {
+    /// Encoder for the given code.
+    pub fn new(spec: &CodeSpec) -> Self {
+        Encoder {
+            codes: *spec.codes(),
+            lengths: *spec.lengths(),
+        }
+    }
+
+    /// Append the encoding of `symbols` to `w`.
+    ///
+    /// Fails on a symbol that has no codeword (i.e. one that never
+    /// appeared in the frequency table the code was built from).
+    pub fn encode(&self, symbols: &[u8], w: &mut BitWriter) -> Result<()> {
+        for &s in symbols {
+            let len = self.lengths[s as usize];
+            if len == 0 {
+                return Err(Error::InvalidArg(format!(
+                    "symbol {s} has no codeword in this CodeSpec"
+                )));
+            }
+            w.write_bits(self.codes[s as usize] as u64, len);
+        }
+        Ok(())
+    }
+
+    /// Encode into a fresh byte vector (zero-padded to a whole byte —
+    /// segments in the ELM container are byte-aligned, §III-C).
+    pub fn encode_to_vec(&self, symbols: &[u8]) -> Result<Vec<u8>> {
+        let mut w = BitWriter::with_capacity(symbols.len() / 2 + 8);
+        self.encode(symbols, &mut w)?;
+        Ok(w.into_bytes())
+    }
+
+    /// Exact encoded bit count for `symbols` (without encoding).
+    pub fn bit_len(&self, symbols: &[u8]) -> Result<usize> {
+        let mut bits = 0usize;
+        for &s in symbols {
+            let len = self.lengths[s as usize];
+            if len == 0 {
+                return Err(Error::InvalidArg(format!(
+                    "symbol {s} has no codeword in this CodeSpec"
+                )));
+            }
+            bits += len as usize;
+        }
+        Ok(bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::code::FreqTable;
+    use super::*;
+
+    #[test]
+    fn bit_len_matches_actual_encoding() {
+        let syms: Vec<u8> = (0..255u8).chain(0..100).collect();
+        let spec = CodeSpec::build(&FreqTable::from_symbols(&syms)).unwrap();
+        let enc = Encoder::new(&spec);
+        let bits = enc.bit_len(&syms).unwrap();
+        let bytes = enc.encode_to_vec(&syms).unwrap();
+        assert_eq!(bytes.len(), bits.div_ceil(8));
+    }
+
+    #[test]
+    fn frequent_symbols_get_short_codes() {
+        let mut syms = vec![0u8; 1000];
+        syms.extend_from_slice(&[1, 2, 3, 4, 5]);
+        let spec = CodeSpec::build(&FreqTable::from_symbols(&syms)).unwrap();
+        let l = spec.lengths();
+        assert!(l[0] < l[1], "dominant symbol must be shortest");
+    }
+}

@@ -1,0 +1,186 @@
+//! Canonical, length-limited Huffman codec (paper §III-B).
+//!
+//! EntroLLM builds **one model-global code** from the pooled frequency
+//! table of every quantized weight in the model (Algorithm 1, lines
+//! 11–12), then encodes each layer's tensor as an independent,
+//! byte-aligned segment so decoding can be parallelized (§III-C).
+//!
+//! Pipeline:
+//!
+//! 1. [`FreqTable`] — count symbol occurrences (symbols are the uint4 /
+//!    uint8 quantization levels, so the alphabet is ≤ 256).
+//! 2. [`CodeSpec`] — derive optimal code *lengths* (heap-based Huffman;
+//!    package-merge fallback caps lengths at [`MAX_CODE_LEN`] so the
+//!    decoder can use a single-probe lookup table).
+//! 3. Canonical code assignment — codes are reconstructable from the
+//!    256-byte length array alone, which is all the ELM container stores.
+//! 4. [`Encoder`] / [`Decoder`] — bit-serial encode, table-driven decode
+//!    (one `peek`/`consume` pair per symbol, no branching on tree nodes).
+//!
+//! The slow reference decoder ([`Decoder::decode_bit_serial`]) walks the
+//! canonical code space bit by bit; tests cross-check it against the LUT
+//! path on random inputs.
+
+mod code;
+mod decoder;
+mod encoder;
+
+pub use code::{CodeSpec, FreqTable, MAX_CODE_LEN};
+pub use decoder::Decoder;
+pub use encoder::Encoder;
+
+use crate::Result;
+
+/// Encode `symbols` with a code built from their own frequencies.
+/// Convenience for tests/benches; real flows build one global
+/// [`CodeSpec`] per model.
+pub fn encode_with_own_code(symbols: &[u8]) -> Result<(CodeSpec, Vec<u8>)> {
+    let freq = FreqTable::from_symbols(symbols);
+    let spec = CodeSpec::build(&freq)?;
+    let enc = Encoder::new(&spec);
+    let bytes = enc.encode_to_vec(symbols)?;
+    Ok((spec, bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn gaussian_symbols(n: usize, levels: usize, seed: u64) -> Vec<u8> {
+        // Discretized Gaussian — the shape quantized LLM weights take
+        // (paper Fig. 4), so these tests exercise the real distribution.
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let g = rng.gaussian_f32(levels as f32 / 2.0, levels as f32 / 8.0);
+                (g.round().max(0.0) as usize).min(levels - 1) as u8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_gaussian_u8_alphabet() {
+        let syms = gaussian_symbols(50_000, 256, 0xAA);
+        let (spec, bytes) = encode_with_own_code(&syms).unwrap();
+        let dec = Decoder::new(&spec).unwrap();
+        let out = dec.decode(&bytes, syms.len()).unwrap();
+        assert_eq!(out, syms);
+    }
+
+    #[test]
+    fn roundtrip_gaussian_u4_alphabet() {
+        let syms = gaussian_symbols(50_000, 16, 0xBB);
+        let (spec, bytes) = encode_with_own_code(&syms).unwrap();
+        let dec = Decoder::new(&spec).unwrap();
+        assert_eq!(dec.decode(&bytes, syms.len()).unwrap(), syms);
+    }
+
+    #[test]
+    fn compresses_skewed_data_below_fixed_width() {
+        // A Gaussian occupying ~1/16 of the 256-level grid (σ = 16
+        // levels, the shape Fig. 4's 8-bit panels show) has entropy
+        // ≈ log2(σ·√(2πe)) ≈ 6.1 bits — well below the fixed 8.
+        let mut rng = Rng::new(0xCC);
+        let syms: Vec<u8> = (0..100_000)
+            .map(|_| {
+                let g = rng.gaussian_f32(128.0, 16.0);
+                g.round().clamp(0.0, 255.0) as u8
+            })
+            .collect();
+        let (spec, bytes) = encode_with_own_code(&syms).unwrap();
+        let fixed = syms.len(); // 1 byte/symbol
+        assert!(
+            bytes.len() < fixed * 85 / 100,
+            "huffman {} vs fixed {fixed}",
+            bytes.len()
+        );
+        // Effective bits matches the paper's definition: encoded bits / n.
+        let eff = spec.expected_bits(&FreqTable::from_symbols(&syms));
+        assert!(eff < 6.5, "effective bits {eff}");
+    }
+
+    #[test]
+    fn single_symbol_stream() {
+        let syms = vec![7u8; 1000];
+        let (spec, bytes) = encode_with_own_code(&syms).unwrap();
+        let dec = Decoder::new(&spec).unwrap();
+        assert_eq!(dec.decode(&bytes, syms.len()).unwrap(), syms);
+        // One symbol ⇒ 1-bit codes ⇒ 1000 bits ⇒ 125 bytes.
+        assert_eq!(bytes.len(), 125);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let freq = FreqTable::from_symbols(&[1, 2, 3]);
+        let spec = CodeSpec::build(&freq).unwrap();
+        let enc = Encoder::new(&spec);
+        let bytes = enc.encode_to_vec(&[]).unwrap();
+        assert!(bytes.is_empty());
+        let dec = Decoder::new(&spec).unwrap();
+        assert_eq!(dec.decode(&bytes, 0).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn encoding_unknown_symbol_fails() {
+        let freq = FreqTable::from_symbols(&[1, 1, 2]);
+        let spec = CodeSpec::build(&freq).unwrap();
+        let enc = Encoder::new(&spec);
+        assert!(enc.encode_to_vec(&[3]).is_err());
+    }
+
+    #[test]
+    fn lut_and_bit_serial_decoders_agree() {
+        let mut rng = Rng::new(0xD0D0);
+        for case in 0..30 {
+            let levels = [2, 3, 16, 100, 256][case % 5];
+            let n = 200 + rng.below(2000);
+            let syms: Vec<u8> = (0..n).map(|_| rng.below(levels) as u8).collect();
+            let (spec, bytes) = encode_with_own_code(&syms).unwrap();
+            let dec = Decoder::new(&spec).unwrap();
+            let fast = dec.decode(&bytes, syms.len()).unwrap();
+            let slow = dec.decode_bit_serial(&bytes, syms.len()).unwrap();
+            assert_eq!(fast, slow);
+            assert_eq!(fast, syms);
+        }
+    }
+
+    #[test]
+    fn property_roundtrip_arbitrary_streams() {
+        // Property-test: ANY byte stream roundtrips exactly.
+        let mut rng = Rng::new(0x5EED);
+        for _ in 0..100 {
+            let n = 1 + rng.below(4096);
+            // Mix distributions: uniform, heavily skewed, tiny alphabets.
+            let mode = rng.below(3);
+            let syms: Vec<u8> = (0..n)
+                .map(|_| match mode {
+                    0 => rng.below(256) as u8,
+                    1 => {
+                        if rng.f32() < 0.9 {
+                            128
+                        } else {
+                            rng.below(256) as u8
+                        }
+                    }
+                    _ => rng.below(2) as u8,
+                })
+                .collect();
+            let (spec, bytes) = encode_with_own_code(&syms).unwrap();
+            let dec = Decoder::new(&spec).unwrap();
+            assert_eq!(dec.decode(&bytes, syms.len()).unwrap(), syms);
+        }
+    }
+
+    #[test]
+    fn spec_survives_length_serialization() {
+        // The ELM container persists only the 256-byte length array.
+        let syms = gaussian_symbols(10_000, 256, 0xE1);
+        let (spec, bytes) = encode_with_own_code(&syms).unwrap();
+        let lengths = spec.lengths().to_vec();
+        let spec2 = CodeSpec::from_lengths(&lengths).unwrap();
+        assert_eq!(spec.codes(), spec2.codes());
+        let dec = Decoder::new(&spec2).unwrap();
+        assert_eq!(dec.decode(&bytes, syms.len()).unwrap(), syms);
+    }
+}

@@ -1,0 +1,62 @@
+//! # EntroLLM
+//!
+//! A reproduction of *EntroLLM: Entropy Encoded Weight Compression for
+//! Efficient Large Language Model Inference on Edge Devices* (CS.LG 2025)
+//! as a three-layer rust + JAX + Pallas system:
+//!
+//! * **L1 (Pallas, build-time python)** — fused dequantize-matmul and
+//!   attention kernels (`python/compile/kernels/`), lowered with the rest
+//!   of the model into HLO text.
+//! * **L2 (JAX, build-time python)** — a decoder-only transformer whose
+//!   matmuls consume *quantized* integer weights plus `(scale, zero_point)`
+//!   metadata (`python/compile/model.py`), AOT-lowered by
+//!   `python/compile/aot.py` into `artifacts/*.hlo.txt`.
+//! * **L3 (this crate)** — the edge coordinator: mixed quantization,
+//!   model-global Huffman coding, the ELM compressed container, segmented
+//!   **parallel Huffman decoding**, an edge-device cost model, and a
+//!   serving engine that executes the AOT artifacts through PJRT.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `entrollm` binary is self-contained.
+//!
+//! ## Crate map
+//!
+//! | module | paper section | role |
+//! |---|---|---|
+//! | [`quant`] | §III-A | mixed symmetric-unsigned / asymmetric quantization |
+//! | [`huffman`] | §III-B | canonical, length-limited Huffman codec |
+//! | [`decode`] | §III-C | parameter-space segmentation + parallel decoding |
+//! | [`store`] | §III-B | ELM compressed-model container |
+//! | [`entropy`] | §IV-A | Shannon entropy / effective-bits / histograms |
+//! | [`device`] | §IV-C/D | Jetson-class bandwidth/compute cost model |
+//! | [`runtime`] | — | PJRT executor for the AOT artifacts |
+//! | [`coordinator`] | §IV | batching, KV-cache, generation engine |
+//! | [`baselines`] | §II-C | codebook coder, gzip, raw bit-packing |
+//!
+//! Support modules ([`bitio`], [`tensor`], [`json`], [`rng`], [`corpus`],
+//! [`metrics`], [`bench`], [`prop`], [`cli`]) are implemented in-tree
+//! because this build is fully offline.
+
+pub mod baselines;
+pub mod bench;
+pub mod bitio;
+pub mod cli;
+pub mod coordinator;
+pub mod corpus;
+pub mod decode;
+pub mod device;
+pub mod entropy;
+pub mod error;
+pub mod huffman;
+pub mod json;
+pub mod metrics;
+pub mod pipeline;
+pub mod prop;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod server;
+pub mod store;
+pub mod tensor;
+
+pub use error::{Error, Result};

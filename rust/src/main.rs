@@ -1,0 +1,263 @@
+//! `entrollm` — the L3 coordinator CLI.
+//!
+//! ```text
+//! entrollm compress   --artifacts DIR --bits u8|u4 --out model.elm
+//! entrollm inspect    --model model.elm [--histogram]
+//! entrollm decode-bench --model model.elm --threads N [--repeat R]
+//! entrollm eval-ppl   --artifacts DIR --flavor f32|u8|u4 [--windows N]
+//! entrollm generate   --artifacts DIR --flavor u8 --prompt "..." [--max-tokens N]
+//! entrollm serve      --artifacts DIR --flavor u8 --port 7433 [--threads T]
+//! entrollm latency    [--params 3.8e9] [--prefill-tokens 512]
+//! ```
+
+use entrollm::bench::{fmt_bytes, fmt_secs};
+use entrollm::cli::Args;
+use entrollm::coordinator::{Engine, EngineConfig, Request};
+use entrollm::corpus::ByteTokenizer;
+use entrollm::decode::ParallelDecoder;
+use entrollm::device::{table2_workloads, LatencyModel, JETSON_P3450};
+use entrollm::entropy::{distribution_stats, Histogram};
+use entrollm::huffman::FreqTable;
+use entrollm::pipeline::{build_elm, load_backend, Flavor};
+use entrollm::quant::BitWidth;
+use entrollm::store::ElmModel;
+use entrollm::{Error, Result};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "compress" => cmd_compress(args),
+        "inspect" => cmd_inspect(args),
+        "decode-bench" => cmd_decode_bench(args),
+        "eval-ppl" => cmd_eval_ppl(args),
+        "generate" => cmd_generate(args),
+        "serve" => cmd_serve(args),
+        "latency" => cmd_latency(args),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(Error::InvalidArg(format!(
+            "unknown command {other:?} (try `entrollm help`)"
+        ))),
+    }
+}
+
+const HELP: &str = r#"entrollm — entropy-encoded weight compression for edge LLM inference
+
+commands:
+  compress      quantize (mixed scheme) + Huffman-encode -> .elm container
+  inspect       print an .elm container's manifest and symbol statistics
+  decode-bench  measure parallel Huffman decode throughput
+  eval-ppl      held-out perplexity via the AOT score executable
+  generate      one-shot generation through the serving engine
+  serve         TCP serving (line-protocol JSON)
+  latency       Table II-style latency model for an edge profile
+"#;
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let artifacts = args.opt("artifacts", "artifacts");
+    let bits = BitWidth::parse(args.opt("bits", "u8"))?;
+    let default_out = format!("model_{bits}.elm");
+    let out = args.opt("out", &default_out);
+    let (model, report) = build_elm(artifacts, bits)?;
+    model.save(out)?;
+    println!("wrote {out}");
+    println!("  parameters      : {}", report.n_params);
+    println!("  fp16 baseline   : {}", fmt_bytes(report.fp16_bytes));
+    println!("  fixed {}    : {}", bits, fmt_bytes(report.fixed_bytes));
+    println!("  huffman payload : {}", fmt_bytes(report.encoded_bytes));
+    println!("  entropy         : {:.3} bits/param", report.entropy_bits);
+    println!("  effective bits  : {:.3} bits/param", report.effective_bits);
+    let sym = report
+        .schemes
+        .iter()
+        .filter(|(_, s)| *s == entrollm::quant::Scheme::SymmetricUnsigned)
+        .count();
+    println!(
+        "  schemes         : {sym} symmetric-unsigned / {} asymmetric",
+        report.schemes.len() - sym
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let model = ElmModel::load(args.req("model")?)?;
+    println!("ELM container: {} layers, {}", model.layers.len(), model.bits);
+    println!("  payload        : {}", fmt_bytes(model.payload.len()));
+    println!("  parameters     : {}", model.n_params());
+    println!("  effective bits : {:.3}", model.effective_bits());
+    let mut freq = FreqTable::new();
+    for i in 0..model.layers.len() {
+        let q = entrollm::store::decode_layer(&model, i)?;
+        freq.add_symbols(q.symbols.data());
+    }
+    let stats = distribution_stats(&freq)?;
+    println!(
+        "  symbol stats   : H={:.3}b eff={:.3}b mean={:.2} std={:.2} skew={:.3} kurt={:.3}",
+        stats.entropy, stats.effective_bits, stats.mean, stats.std, stats.skewness, stats.kurtosis
+    );
+    if args.has("histogram") {
+        let levels = model.bits.levels();
+        println!("{}", Histogram::from_freq(&freq, levels).to_ascii(60, 16));
+    }
+    for m in model.layers.iter().take(8) {
+        println!(
+            "  layer {:<24} {} {:?} s={:+.5} z={:+.5} {} -> {}",
+            m.name,
+            m.shape,
+            m.params.scheme,
+            m.params.scale,
+            m.params.zero_point,
+            fmt_bytes(m.n_symbols * if model.bits == BitWidth::U8 { 1 } else { 1 } / 1),
+            fmt_bytes(m.encoded_len),
+        );
+    }
+    if model.layers.len() > 8 {
+        println!("  ... {} more layers", model.layers.len() - 8);
+    }
+    Ok(())
+}
+
+fn cmd_decode_bench(args: &Args) -> Result<()> {
+    let model = ElmModel::load(args.req("model")?)?;
+    let threads: usize = args.opt_parse("threads", 4)?;
+    let repeat: usize = args.opt_parse("repeat", 3)?;
+    println!(
+        "parallel decode: {} params, {} encoded, {threads} threads",
+        model.n_params(),
+        fmt_bytes(model.payload.len())
+    );
+    for r in 0..repeat {
+        let (_, stats) = ParallelDecoder::new(threads).decode_model(&model)?;
+        println!(
+            "  run {r}: wall {} | {:.1} Msym/s | imbalance {:.3} (symbols {:.3})",
+            fmt_secs(stats.wall.as_secs_f64()),
+            stats.symbols_per_sec() / 1e6,
+            stats.imbalance(),
+            stats.symbol_imbalance(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval_ppl(args: &Args) -> Result<()> {
+    let artifacts = args.opt("artifacts", "artifacts");
+    let flavor = Flavor::parse(args.opt("flavor", "u8"))?;
+    let windows: usize = args.opt_parse("windows", 16)?;
+    let threads: usize = args.opt_parse("threads", 4)?;
+    let (nll, ppl) = entrollm::pipeline::eval_ppl(artifacts, flavor, threads, windows)?;
+    println!(
+        "{}: nll {nll:.4} nats/char | char-ppl {ppl:.4} ({windows} windows)",
+        flavor.tag()
+    );
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let artifacts = args.opt("artifacts", "artifacts");
+    let flavor = Flavor::parse(args.opt("flavor", "u8"))?;
+    let prompt = args.req("prompt")?.to_string();
+    let max_tokens: usize = args.opt_parse("max-tokens", 48)?;
+    let temperature: f32 = args.opt_parse("temperature", 0.0f32)?;
+    let threads: usize = args.opt_parse("threads", 4)?;
+
+    let (backend, decode_stats) = load_backend(artifacts, flavor, threads)?;
+    if let Some(s) = &decode_stats {
+        println!(
+            "huffman parallel decode: {} in {} ({:.1} Msym/s)",
+            s.total_symbols(),
+            fmt_secs(s.wall.as_secs_f64()),
+            s.symbols_per_sec() / 1e6
+        );
+    }
+    let mut engine = Engine::new(backend, EngineConfig::default());
+    let tok = ByteTokenizer;
+    let mut req = Request::greedy(1, tok.encode(&prompt), max_tokens);
+    req.temperature = temperature;
+    engine.submit(req)?;
+    let responses = engine.run_to_completion(10_000)?;
+    for r in &responses {
+        println!("--- response {} ({:?}) ---", r.id, r.finish_reason);
+        println!("{}{}", prompt, tok.decode(&r.tokens));
+        println!(
+            "first token {} | {} tokens | decode {}",
+            fmt_secs(r.timing.first_token.as_secs_f64()),
+            r.tokens.len(),
+            fmt_secs(r.timing.decode.as_secs_f64()),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = args.opt("artifacts", "artifacts");
+    let flavor = Flavor::parse(args.opt("flavor", "u8"))?;
+    let port: u16 = args.opt_parse("port", 7433)?;
+    let threads: usize = args.opt_parse("threads", 4)?;
+    let (backend, _) = load_backend(artifacts, flavor, threads)?;
+    let mut engine = Engine::new(backend, EngineConfig::default());
+    let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
+    println!("serving {} on 127.0.0.1:{port} (ctrl-c to stop)", flavor.tag());
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let served = entrollm::server::serve(&mut engine, listener, stop)?;
+    println!("served {served} requests");
+    Ok(())
+}
+
+fn cmd_latency(args: &Args) -> Result<()> {
+    let n_params: f64 = args.opt_parse("params", 3.8e9)?;
+    let prefill_tokens: usize = args.opt_parse("prefill-tokens", 512)?;
+    let threads: usize = args.opt_parse("threads", 4)?;
+    let model = LatencyModel::new(JETSON_P3450);
+    println!("latency model: {} | {} params", model.profile.name, n_params);
+    for (bits, eff) in [(8u32, 5.58f64), (4, 1.39)] {
+        let (without, with) = table2_workloads(
+            n_params as usize,
+            bits,
+            eff,
+            prefill_tokens,
+            threads,
+            1.0,
+        );
+        let bw = model.breakdown(&without);
+        let bh = model.breakdown(&with);
+        println!("uint{bits} (effective {eff} bits):");
+        println!(
+            "  prefill       : {} -> {}  ({:+.1}%)",
+            fmt_secs(bw.prefill.total),
+            fmt_secs(bh.prefill.total),
+            100.0 * (bw.prefill.total / bh.prefill.total - 1.0)
+        );
+        println!(
+            "  token gen     : {} -> {}  ({:.2}x)",
+            fmt_secs(bw.token_gen.total),
+            fmt_secs(bh.token_gen.total),
+            bw.token_gen.total / bh.token_gen.total
+        );
+        println!("  decode (once) : {}", fmt_secs(bh.parallel_decode));
+        println!(
+            "  first token   : {} -> {}",
+            fmt_secs(bw.first_token),
+            fmt_secs(bh.first_token)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,277 @@
+//! Serving metrics: latency histograms, throughput counters, and the
+//! markdown/CSV table reporters every bench uses to emit its paper
+//! table/figure.
+
+use std::time::{Duration, Instant};
+
+/// Log-bucketed latency histogram (microsecond resolution, buckets grow
+/// ×2 from 1 µs to ~17 min).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u128,
+    max_us: u64,
+    min_us: u64,
+}
+
+const N_BUCKETS: usize = 30;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: vec![0; N_BUCKETS],
+            count: 0,
+            sum_us: 0,
+            max_us: 0,
+            min_us: u64::MAX,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        (64 - us.max(1).leading_zeros() as usize - 1).min(N_BUCKETS - 1)
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.buckets[Self::bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us += us as u128;
+        self.max_us = self.max_us.max(us);
+        self.min_us = self.min_us.min(us);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean latency.
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros((self.sum_us / self.count as u128) as u64)
+    }
+
+    /// Approximate quantile (bucket upper bound), q in [0,1].
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Duration::from_micros(1 << (i + 1));
+            }
+        }
+        Duration::from_micros(self.max_us)
+    }
+
+    /// Max sample.
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(if self.count == 0 { 0 } else { self.max_us })
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:?} p50={:?} p95={:?} max={:?}",
+            self.count,
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.95),
+            self.max()
+        )
+    }
+}
+
+/// Monotonic throughput counter.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    events: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    /// Counter starting now.
+    pub fn new() -> Self {
+        Throughput {
+            start: Instant::now(),
+            events: 0,
+        }
+    }
+
+    /// Record `n` events.
+    pub fn add(&mut self, n: u64) {
+        self.events += n;
+    }
+
+    /// Total events.
+    pub fn total(&self) -> u64 {
+        self.events
+    }
+
+    /// Events per second since construction.
+    pub fn per_sec(&self) -> f64 {
+        self.events as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
+    }
+}
+
+/// A markdown table builder — every bench prints its paper table through
+/// this so EXPERIMENTS.md entries are copy-pasteable.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with headers.
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Render as github markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("### {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}-|", "-".repeat(w + 2 - 1)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self
+            .headers
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print markdown to stdout and also save CSV next to the bench
+    /// results (best-effort; directory created on demand).
+    pub fn emit(&self, slug: &str) {
+        println!("{}", self.to_markdown());
+        let dir = std::path::Path::new("bench_results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let _ = std::fs::write(dir.join(format!("{slug}.csv")), self.to_csv());
+            let _ = std::fs::write(dir.join(format!("{slug}.md")), self.to_markdown());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basic_stats() {
+        let mut h = LatencyHistogram::new();
+        for ms in [1u64, 2, 4, 8, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean() >= Duration::from_millis(20));
+        assert!(h.max() >= Duration::from_millis(100));
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.summary().contains("n=5"));
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroes() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.9), Duration::ZERO);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.add(10);
+        t.add(5);
+        assert_eq!(t.total(), 15);
+        assert!(t.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn table_renders_markdown_and_csv() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(&["1".into(), "x,y".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.lines().count() >= 4);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,188 @@
+//! High-level flows gluing the subsystems together — what the CLI,
+//! examples, and benches call.
+//!
+//! * [`build_elm`] — Algorithm 1 cloud side: trained fp32 weights →
+//!   mixed quantization → model-global Huffman → ELM container.
+//! * [`load_backend`] — Algorithm 1 edge side: ELM → parallel decode →
+//!   PJRT upload → serving backend.
+//! * [`eval_ppl`] — teacher-forced perplexity over the held-out corpus
+//!   through the AOT `score_*` executables (Table I quality rows).
+
+use crate::coordinator::PjrtBackend;
+use crate::quant::BitWidth;
+use crate::runtime::{load_weights_bin, Manifest, ModelRuntime, Variant, WeightSet};
+use crate::store::{compress, CompressionReport, ElmModel};
+use crate::tensor::TensorF32;
+use crate::{Error, Result};
+use std::path::Path;
+
+/// Which weight flavor to serve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flavor {
+    /// fp32 baseline.
+    F32,
+    /// uint8 mixed-quant + Huffman.
+    U8,
+    /// uint4 mixed-quant + Huffman.
+    U4,
+}
+
+impl Flavor {
+    /// Parse `"f32" | "u8" | "u4"`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" | "fp32" => Ok(Flavor::F32),
+            "u8" | "uint8" => Ok(Flavor::U8),
+            "u4" | "uint4" => Ok(Flavor::U4),
+            other => Err(Error::InvalidArg(format!("unknown flavor {other:?}"))),
+        }
+    }
+
+    /// Bit width for quantized flavors.
+    pub fn bits(self) -> Option<BitWidth> {
+        match self {
+            Flavor::F32 => None,
+            Flavor::U8 => Some(BitWidth::U8),
+            Flavor::U4 => Some(BitWidth::U4),
+        }
+    }
+
+    /// Tag used in file names / reports.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Flavor::F32 => "f32",
+            Flavor::U8 => "u8",
+            Flavor::U4 => "u4",
+        }
+    }
+}
+
+/// Split the trained weights into (quantizable, fp32-rest) per manifest.
+pub fn split_weights(
+    manifest: &Manifest,
+    weights: Vec<(String, TensorF32)>,
+) -> (Vec<(String, TensorF32)>, Vec<(String, TensorF32)>) {
+    let qset: std::collections::HashSet<&str> =
+        manifest.quantized_names.iter().map(|s| s.as_str()).collect();
+    weights
+        .into_iter()
+        .partition(|(name, _)| qset.contains(name.as_str()))
+}
+
+/// Build an ELM container from the artifacts' trained weights
+/// (Algorithm 1 `CLOUD PROCESSING`).
+pub fn build_elm(
+    artifacts: impl AsRef<Path>,
+    bits: BitWidth,
+) -> Result<(ElmModel, CompressionReport)> {
+    let dir = artifacts.as_ref();
+    let manifest = Manifest::load(dir.join("manifest.json"))?;
+    let weights = load_weights_bin(dir.join("weights.bin"))?;
+    let (quantizable, _) = split_weights(&manifest, weights);
+    compress(&quantizable, bits)
+}
+
+/// Load a serving backend for a flavor (Algorithm 1 `EDGE DEVICE
+/// OPERATIONS` for the quant flavors: ELM → parallel decode → upload).
+///
+/// Returns the backend plus the decode stats when Huffman decoding
+/// happened (None for f32).
+pub fn load_backend(
+    artifacts: impl AsRef<Path>,
+    flavor: Flavor,
+    threads: usize,
+) -> Result<(PjrtBackend, Option<crate::decode::DecodeStats>)> {
+    let dir = artifacts.as_ref();
+    let manifest = Manifest::load(dir.join("manifest.json"))?;
+    let weights = load_weights_bin(dir.join("weights.bin"))?;
+    match flavor.bits() {
+        None => {
+            let ws = WeightSet::from_f32(weights);
+            let rt = ModelRuntime::load(dir, Variant::F32, &ws)?;
+            Ok((PjrtBackend::new(rt), None))
+        }
+        Some(bits) => {
+            let (quantizable, rest) = split_weights(&manifest, weights);
+            let (elm, _) = compress(&quantizable, bits)?;
+            let (tensors, stats) =
+                crate::decode::ParallelDecoder::new(threads).decode_model(&elm)?;
+            let named: Vec<_> = elm
+                .layers
+                .iter()
+                .map(|m| m.name.clone())
+                .zip(tensors)
+                .collect();
+            let ws = WeightSet::from_quantized(named, rest);
+            let rt = ModelRuntime::load(dir, Variant::Quant, &ws)?;
+            Ok((PjrtBackend::new(rt), Some(stats)))
+        }
+    }
+}
+
+/// Load a backend straight from an ELM file on disk (the deploy path:
+/// the edge device has only the `.elm` + norm weights + artifacts).
+pub fn load_backend_from_elm(
+    artifacts: impl AsRef<Path>,
+    elm_path: impl AsRef<Path>,
+    threads: usize,
+) -> Result<(PjrtBackend, crate::decode::DecodeStats)> {
+    let dir = artifacts.as_ref();
+    let manifest = Manifest::load(dir.join("manifest.json"))?;
+    let weights = load_weights_bin(dir.join("weights.bin"))?;
+    let (_, rest) = split_weights(&manifest, weights);
+    let elm = ElmModel::load(elm_path)?;
+    let (tensors, stats) = crate::decode::ParallelDecoder::new(threads).decode_model(&elm)?;
+    let named: Vec<_> = elm
+        .layers
+        .iter()
+        .map(|m| m.name.clone())
+        .zip(tensors)
+        .collect();
+    let ws = WeightSet::from_quantized(named, rest);
+    let rt = ModelRuntime::load(dir, Variant::Quant, &ws)?;
+    Ok((PjrtBackend::new(rt), stats))
+}
+
+/// Teacher-forced perplexity over `windows` held-out windows using the
+/// `score_*` executable. Returns (nll nats/char, char perplexity).
+pub fn eval_ppl(
+    artifacts: impl AsRef<Path>,
+    flavor: Flavor,
+    threads: usize,
+    windows: usize,
+) -> Result<(f64, f64)> {
+    let dir = artifacts.as_ref();
+    let manifest = Manifest::load(dir.join("manifest.json"))?;
+    let weights = load_weights_bin(dir.join("weights.bin"))?;
+    let ws = match flavor.bits() {
+        None => WeightSet::from_f32(weights),
+        Some(bits) => {
+            let (quantizable, rest) = split_weights(&manifest, weights);
+            let (elm, _) = compress(&quantizable, bits)?;
+            WeightSet::from_elm(&elm, threads, rest)?
+        }
+    };
+    let variant = if flavor == Flavor::F32 {
+        Variant::F32
+    } else {
+        Variant::Quant
+    };
+    let rt = ModelRuntime::load(dir, variant, &ws)?;
+    let text = std::fs::read_to_string(dir.join("eval.txt"))?;
+    rt.score_ppl(&text, windows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flavor_parsing() {
+        assert_eq!(Flavor::parse("u8").unwrap(), Flavor::U8);
+        assert_eq!(Flavor::parse("fp32").unwrap(), Flavor::F32);
+        assert_eq!(Flavor::parse("uint4").unwrap(), Flavor::U4);
+        assert!(Flavor::parse("u2").is_err());
+        assert_eq!(Flavor::U4.bits(), Some(BitWidth::U4));
+        assert!(Flavor::F32.bits().is_none());
+    }
+}

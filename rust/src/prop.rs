@@ -1,0 +1,136 @@
+//! Tiny property-testing harness (offline build: no proptest).
+//!
+//! `forall` runs a seeded generator/check loop and reports the failing
+//! seed + case index on the first counterexample, so failures are
+//! reproducible (`forall_seeded` replays a single case). Shrinking is
+//! intentionally out of scope — generators here produce small cases by
+//! construction.
+
+use crate::rng::Rng;
+
+/// Default case count for property tests.
+pub const DEFAULT_CASES: usize = 100;
+
+/// Run `check(gen(rng))` for `cases` seeded cases. Panics with the
+/// case's replay seed on failure.
+pub fn forall<T, G, C>(seed: u64, cases: usize, mut gen: G, mut check: C)
+where
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed at case {case} (replay seed {case_seed:#x}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed (for debugging a `forall` failure).
+pub fn forall_seeded<T, G, C>(case_seed: u64, mut gen: G, mut check: C)
+where
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let mut rng = Rng::new(case_seed);
+    let input = gen(&mut rng);
+    if let Err(msg) = check(&input) {
+        panic!("property failed (seed {case_seed:#x}): {msg}\ninput: {input:?}");
+    }
+}
+
+/// Generator helpers shared by property tests across the crate.
+pub mod gen {
+    use crate::rng::Rng;
+
+    /// Random symbol vector with a random distribution shape.
+    pub fn symbols(rng: &mut Rng, max_len: usize) -> Vec<u8> {
+        let n = 1 + rng.below(max_len);
+        match rng.below(4) {
+            0 => (0..n).map(|_| rng.below(256) as u8).collect(),
+            1 => (0..n).map(|_| rng.below(16) as u8).collect(),
+            2 => {
+                // Heavy mode + tail.
+                (0..n)
+                    .map(|_| {
+                        if rng.f32() < 0.85 {
+                            7
+                        } else {
+                            rng.below(256) as u8
+                        }
+                    })
+                    .collect()
+            }
+            _ => {
+                // Discretized Gaussian.
+                (0..n)
+                    .map(|_| {
+                        let g = rng.gaussian_f32(128.0, 24.0);
+                        g.round().clamp(0.0, 255.0) as u8
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Random weight vector (various spans/signs) for quantizer tests.
+    pub fn weights(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+        let n = 1 + rng.below(max_len);
+        match rng.below(4) {
+            0 => rng.gaussian_vec(n, 0.0, 0.08),
+            1 => (0..n).map(|_| rng.range_f32(0.0, 1.0)).collect(),
+            2 => (0..n).map(|_| rng.range_f32(-3.0, -0.5)).collect(),
+            _ => rng.gaussian_vec(n, 0.4, 1.5),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            1,
+            50,
+            |rng| rng.below(100),
+            |&n| {
+                if n < 100 {
+                    Ok(())
+                } else {
+                    Err(format!("{n} >= 100"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_counterexample() {
+        forall(
+            2,
+            50,
+            |rng| rng.below(10),
+            |&n| if n < 5 { Ok(()) } else { Err("too big".into()) },
+        );
+    }
+
+    #[test]
+    fn generators_produce_valid_ranges() {
+        let mut rng = crate::rng::Rng::new(3);
+        for _ in 0..50 {
+            let s = gen::symbols(&mut rng, 100);
+            assert!(!s.is_empty() && s.len() <= 100);
+            let w = gen::weights(&mut rng, 100);
+            assert!(!w.is_empty() && w.len() <= 100);
+            assert!(w.iter().all(|x| x.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,376 @@
+//! Mixed quantization scheme (paper §III-A, Algorithm 1 lines 4–10).
+//!
+//! Per layer, EntroLLM picks between two uniform-grid quantizers based on
+//! the layer's weight distribution:
+//!
+//! * **Symmetric unsigned** (eq. 1), when the weights are single-signed
+//!   (`max(W) · min(W) ≥ 0`): `W_int = round(W / s)` with the scale
+//!   chosen so the occupied range maps onto `[0, L-1]`.
+//! * **Asymmetric** (eq. 2) otherwise: `W_int = round((W - z) / s)` with
+//!   zero-point `z = min(W)`.
+//!
+//! The point of the mix is *compressibility*: both branches land every
+//! layer's integer histogram on a common `[0, L-1]` grid whose shape
+//! remains the (near-Gaussian) shape of the float weights, so pooling
+//! all layers yields one low-entropy histogram for the model-global
+//! Huffman code (§III-B).
+
+use crate::tensor::{TensorF32, TensorU8};
+use crate::{Error, Result};
+
+/// Quantization bit-width. The paper evaluates uint8 and uint4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BitWidth {
+    /// 16 levels.
+    U4,
+    /// 256 levels.
+    U8,
+}
+
+impl BitWidth {
+    /// Number of representable levels.
+    pub fn levels(self) -> usize {
+        match self {
+            BitWidth::U4 => 16,
+            BitWidth::U8 => 256,
+        }
+    }
+
+    /// Nominal bits per weight before entropy coding.
+    pub fn bits(self) -> u32 {
+        match self {
+            BitWidth::U4 => 4,
+            BitWidth::U8 => 8,
+        }
+    }
+
+    /// Parse `"u4"`/`"uint4"`/`"u8"`/`"uint8"`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "u4" | "uint4" | "4" => Ok(BitWidth::U4),
+            "u8" | "uint8" | "8" => Ok(BitWidth::U8),
+            other => Err(Error::InvalidArg(format!("unknown bit width {other:?}"))),
+        }
+    }
+}
+
+impl std::fmt::Display for BitWidth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BitWidth::U4 => write!(f, "uint4"),
+            BitWidth::U8 => write!(f, "uint8"),
+        }
+    }
+}
+
+/// Which uniform grid a layer was quantized on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// Eq. 1 — single-signed layers. The scale may be negative (for
+    /// all-negative layers) so symbols are always non-negative.
+    SymmetricUnsigned,
+    /// Eq. 2 — layers whose weights straddle zero.
+    Asymmetric,
+}
+
+impl Scheme {
+    /// Stable on-disk tag for the ELM container.
+    pub fn tag(self) -> u8 {
+        match self {
+            Scheme::SymmetricUnsigned => 0,
+            Scheme::Asymmetric => 1,
+        }
+    }
+
+    /// Inverse of [`Scheme::tag`].
+    pub fn from_tag(t: u8) -> Result<Self> {
+        match t {
+            0 => Ok(Scheme::SymmetricUnsigned),
+            1 => Ok(Scheme::Asymmetric),
+            other => Err(Error::Format(format!("unknown scheme tag {other}"))),
+        }
+    }
+}
+
+/// Per-layer quantization parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    /// Grid selection for this layer.
+    pub scheme: Scheme,
+    /// Bit width of the integer grid.
+    pub bits: BitWidth,
+    /// Scale factor `s` (float units per level). Negative for
+    /// all-negative symmetric-unsigned layers.
+    pub scale: f32,
+    /// Zero-point `z` in *float* units (paper eq. 2); 0 for symmetric.
+    pub zero_point: f32,
+}
+
+impl QuantParams {
+    /// Dequantize a single symbol.
+    #[inline]
+    pub fn dequant_one(&self, symbol: u8) -> f32 {
+        match self.scheme {
+            Scheme::SymmetricUnsigned => symbol as f32 * self.scale,
+            Scheme::Asymmetric => symbol as f32 * self.scale + self.zero_point,
+        }
+    }
+}
+
+/// A quantized layer: integer symbols plus the grid parameters.
+#[derive(Debug, Clone)]
+pub struct QuantizedTensor {
+    /// Integer symbols in `[0, levels)` (one per byte, pre-packing).
+    pub symbols: TensorU8,
+    /// Grid parameters.
+    pub params: QuantParams,
+}
+
+/// The paper's per-layer scheme selection rule (Algorithm 1, line 5):
+/// single-signed layers take the symmetric-unsigned grid.
+pub fn choose_scheme(weights: &[f32]) -> Scheme {
+    let mut mn = f32::INFINITY;
+    let mut mx = f32::NEG_INFINITY;
+    for &w in weights {
+        mn = mn.min(w);
+        mx = mx.max(w);
+    }
+    if weights.is_empty() || mx * mn >= 0.0 {
+        Scheme::SymmetricUnsigned
+    } else {
+        Scheme::Asymmetric
+    }
+}
+
+fn quantize_with(weights: &[f32], bits: BitWidth, scheme: Scheme) -> (Vec<u8>, QuantParams) {
+    let levels = bits.levels() as f32;
+    let mut mn = f32::INFINITY;
+    let mut mx = f32::NEG_INFINITY;
+    for &w in weights {
+        mn = mn.min(w);
+        mx = mx.max(w);
+    }
+    if weights.is_empty() {
+        mn = 0.0;
+        mx = 0.0;
+    }
+    match scheme {
+        Scheme::SymmetricUnsigned => {
+            // Map the occupied single-signed range onto [0, L-1]. For an
+            // all-negative layer the extreme is `mn`, giving a negative
+            // scale — W/s is then non-negative, exactly eq. 1.
+            let extreme = if mx.abs() >= mn.abs() { mx } else { mn };
+            let scale = if extreme == 0.0 {
+                1.0
+            } else {
+                extreme / (levels - 1.0)
+            };
+            let params = QuantParams {
+                scheme,
+                bits,
+                scale,
+                zero_point: 0.0,
+            };
+            let syms = weights
+                .iter()
+                .map(|&w| {
+                    let q = (w / scale).round();
+                    q.clamp(0.0, levels - 1.0) as u8
+                })
+                .collect();
+            (syms, params)
+        }
+        Scheme::Asymmetric => {
+            let z = mn;
+            let range = mx - mn;
+            let scale = if range == 0.0 { 1.0 } else { range / (levels - 1.0) };
+            let params = QuantParams {
+                scheme,
+                bits,
+                scale,
+                zero_point: z,
+            };
+            let syms = weights
+                .iter()
+                .map(|&w| {
+                    let q = ((w - z) / scale).round();
+                    q.clamp(0.0, levels - 1.0) as u8
+                })
+                .collect();
+            (syms, params)
+        }
+    }
+}
+
+/// Quantize one layer with the mixed scheme (Algorithm 1 lines 4–10).
+pub fn quantize_mixed(weights: &TensorF32, bits: BitWidth) -> QuantizedTensor {
+    let scheme = choose_scheme(weights.data());
+    let (syms, params) = quantize_with(weights.data(), bits, scheme);
+    QuantizedTensor {
+        symbols: TensorU8::new(weights.shape().clone(), syms)
+            .expect("symbol count equals weight count"),
+        params,
+    }
+}
+
+/// Quantize forcing a specific scheme (used by the ablation bench that
+/// compares mixed vs. all-symmetric vs. all-asymmetric).
+pub fn quantize_forced(weights: &TensorF32, bits: BitWidth, scheme: Scheme) -> QuantizedTensor {
+    let (syms, params) = quantize_with(weights.data(), bits, scheme);
+    QuantizedTensor {
+        symbols: TensorU8::new(weights.shape().clone(), syms)
+            .expect("symbol count equals weight count"),
+        params,
+    }
+}
+
+/// Dequantize a full layer back to f32 (the lossless-after-quantization
+/// inference path: Huffman decode → symbols → this).
+pub fn dequantize(q: &QuantizedTensor) -> TensorF32 {
+    let data = q
+        .symbols
+        .data()
+        .iter()
+        .map(|&s| q.params.dequant_one(s))
+        .collect();
+    TensorF32::new(q.symbols.shape().clone(), data).expect("shape preserved")
+}
+
+/// Max absolute reconstruction error permitted for a correct uniform
+/// quantizer: half a quantization step (plus float slack).
+pub fn max_error_bound(params: &QuantParams) -> f32 {
+    params.scale.abs() * 0.5 + 1e-6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tensor(data: Vec<f32>) -> TensorF32 {
+        let n = data.len();
+        TensorF32::new(vec![n], data).unwrap()
+    }
+
+    #[test]
+    fn scheme_selection_follows_paper_rule() {
+        assert_eq!(choose_scheme(&[0.1, 0.5, 0.9]), Scheme::SymmetricUnsigned);
+        assert_eq!(choose_scheme(&[-0.1, -0.5]), Scheme::SymmetricUnsigned);
+        assert_eq!(choose_scheme(&[-0.1, 0.5]), Scheme::Asymmetric);
+        assert_eq!(choose_scheme(&[0.0, 0.5]), Scheme::SymmetricUnsigned);
+        assert_eq!(choose_scheme(&[]), Scheme::SymmetricUnsigned);
+    }
+
+    #[test]
+    fn symbols_stay_on_grid() {
+        let mut rng = Rng::new(21);
+        for bits in [BitWidth::U4, BitWidth::U8] {
+            let w = tensor(rng.gaussian_vec(10_000, 0.0, 0.05));
+            let q = quantize_mixed(&w, bits);
+            assert!(q.symbols.data().iter().all(|&s| (s as usize) < bits.levels()));
+        }
+    }
+
+    #[test]
+    fn reconstruction_error_bounded_by_half_step() {
+        let mut rng = Rng::new(22);
+        for bits in [BitWidth::U4, BitWidth::U8] {
+            for (mean, std) in [(0.0, 0.02), (0.1, 0.01), (-0.3, 0.05)] {
+                let w = tensor(rng.gaussian_vec(5_000, mean, std));
+                let q = quantize_mixed(&w, bits);
+                let dq = dequantize(&q);
+                let bound = max_error_bound(&q.params);
+                for (a, b) in w.data().iter().zip(dq.data()) {
+                    assert!(
+                        (a - b).abs() <= bound,
+                        "|{a} - {b}| > {bound} ({bits}, scheme {:?})",
+                        q.params.scheme
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_negative_layer_uses_negative_scale() {
+        let w = tensor(vec![-0.5, -0.25, -0.1, -0.9]);
+        let q = quantize_mixed(&w, BitWidth::U8);
+        assert_eq!(q.params.scheme, Scheme::SymmetricUnsigned);
+        assert!(q.params.scale < 0.0);
+        let dq = dequantize(&q);
+        for (a, b) in w.data().iter().zip(dq.data()) {
+            assert!((a - b).abs() <= max_error_bound(&q.params));
+        }
+    }
+
+    #[test]
+    fn zero_tensor_quantizes_to_zero() {
+        let w = tensor(vec![0.0; 64]);
+        let q = quantize_mixed(&w, BitWidth::U4);
+        assert!(q.symbols.data().iter().all(|&s| s == 0));
+        assert_eq!(dequantize(&q).data(), w.data());
+    }
+
+    #[test]
+    fn constant_tensor_roundtrips_exactly() {
+        let w = tensor(vec![0.37; 100]);
+        let q = quantize_mixed(&w, BitWidth::U8);
+        let dq = dequantize(&q);
+        for (a, b) in w.data().iter().zip(dq.data()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn asymmetric_grid_covers_extremes_exactly() {
+        let w = tensor(vec![-1.0, 0.0, 2.0]);
+        let q = quantize_mixed(&w, BitWidth::U8);
+        assert_eq!(q.params.scheme, Scheme::Asymmetric);
+        let dq = dequantize(&q);
+        // min and max land exactly on grid endpoints.
+        assert!((dq.data()[0] - -1.0).abs() < 1e-6);
+        assert!((dq.data()[2] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn forced_scheme_is_respected() {
+        let w = tensor(vec![0.1, 0.2, 0.3]);
+        let q = quantize_forced(&w, BitWidth::U8, Scheme::Asymmetric);
+        assert_eq!(q.params.scheme, Scheme::Asymmetric);
+    }
+
+    #[test]
+    fn scheme_tags_roundtrip() {
+        for s in [Scheme::SymmetricUnsigned, Scheme::Asymmetric] {
+            assert_eq!(Scheme::from_tag(s.tag()).unwrap(), s);
+        }
+        assert!(Scheme::from_tag(9).is_err());
+    }
+
+    #[test]
+    fn property_random_layers_error_bound() {
+        // Property test: arbitrary layer contents, both widths, the
+        // half-step bound always holds and symbols stay on-grid.
+        let mut rng = Rng::new(0x5172);
+        for _ in 0..100 {
+            let n = 1 + rng.below(2000);
+            let mode = rng.below(4);
+            let data: Vec<f32> = (0..n)
+                .map(|_| match mode {
+                    0 => rng.gaussian_f32(0.0, 0.1),
+                    1 => rng.range_f32(0.0, 1.0),
+                    2 => rng.range_f32(-2.0, -1.0),
+                    _ => rng.gaussian_f32(0.5, 2.0),
+                })
+                .collect();
+            let w = tensor(data);
+            let bits = if rng.below(2) == 0 { BitWidth::U4 } else { BitWidth::U8 };
+            let q = quantize_mixed(&w, bits);
+            let dq = dequantize(&q);
+            let bound = max_error_bound(&q.params);
+            for (a, b) in w.data().iter().zip(dq.data()) {
+                assert!((a - b).abs() <= bound);
+            }
+        }
+    }
+}

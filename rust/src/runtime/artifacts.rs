@@ -1,0 +1,268 @@
+//! `artifacts/manifest.json` parsing — the cross-language calling
+//! convention between `python/compile/aot.py` and the rust runtime.
+
+use crate::json::Value;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Model hyper-parameters (mirror of python `model.Config`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    /// Vocabulary size (byte-level tokenizer).
+    pub vocab: usize,
+    /// Hidden dimension.
+    pub dim: usize,
+    /// Transformer blocks.
+    pub n_layers: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// Per-head dimension.
+    pub head_dim: usize,
+    /// MLP hidden dimension.
+    pub ffn: usize,
+    /// KV-cache capacity in tokens.
+    pub max_seq: usize,
+    /// Prompt buffer length (prefill executable's fixed S).
+    pub prefill_len: usize,
+    /// Decode executable's fixed batch.
+    pub decode_batch: usize,
+    /// Total parameter count.
+    pub n_params: usize,
+}
+
+/// One PJRT argument: name, shape, dtype tag ("f32" | "u8" | "i32").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgSpec {
+    /// Argument name (quant triples use `<layer>.sym/.scale/.zp`).
+    pub name: String,
+    /// Dimensions (empty = scalar).
+    pub shape: Vec<usize>,
+    /// Element type tag.
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    /// Element count.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One executable: HLO file + argument order.
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    /// HLO text file name (relative to the artifacts dir).
+    pub file: String,
+    /// Arguments in calling order.
+    pub args: Vec<ArgSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Model configuration.
+    pub config: ModelConfig,
+    /// Names of the weight tensors that are quantized.
+    pub quantized_names: Vec<String>,
+    /// Executable name → spec (e.g. `"prefill_quant"`).
+    pub executables: HashMap<String, ExecSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `manifest.json`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+
+    /// Parse from JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        if v.get("format")?.as_usize()? != 1 {
+            return Err(Error::Format("unsupported manifest format".into()));
+        }
+        let c = v.get("config")?;
+        let config = ModelConfig {
+            vocab: c.get("vocab")?.as_usize()?,
+            dim: c.get("dim")?.as_usize()?,
+            n_layers: c.get("n_layers")?.as_usize()?,
+            n_heads: c.get("n_heads")?.as_usize()?,
+            head_dim: c.get("head_dim")?.as_usize()?,
+            ffn: c.get("ffn")?.as_usize()?,
+            max_seq: c.get("max_seq")?.as_usize()?,
+            prefill_len: c.get("prefill_len")?.as_usize()?,
+            decode_batch: c.get("decode_batch")?.as_usize()?,
+            n_params: c.get("n_params")?.as_usize()?,
+        };
+        let quantized_names = v
+            .get("quantized_names")?
+            .as_array()?
+            .iter()
+            .map(|s| s.as_str().map(|s| s.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        let mut executables = HashMap::new();
+        for (name, spec) in v.get("executables")?.as_object()? {
+            let args = spec
+                .get("args")?
+                .as_array()?
+                .iter()
+                .map(|a| {
+                    Ok(ArgSpec {
+                        name: a.get("name")?.as_str()?.to_string(),
+                        shape: a
+                            .get("shape")?
+                            .as_array()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<Vec<_>>>()?,
+                        dtype: a.get("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            executables.insert(
+                name.clone(),
+                ExecSpec {
+                    file: spec.get("file")?.as_str()?.to_string(),
+                    args,
+                },
+            );
+        }
+        let m = Manifest {
+            config,
+            quantized_names,
+            executables,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let c = &self.config;
+        if c.dim != c.n_heads * c.head_dim {
+            return Err(Error::Format("dim != heads*head_dim".into()));
+        }
+        if c.prefill_len > c.max_seq {
+            return Err(Error::Format("prefill_len > max_seq".into()));
+        }
+        for name in [
+            "prefill_f32",
+            "prefill_quant",
+            "decode_f32",
+            "decode_quant",
+            "score_f32",
+            "score_quant",
+        ] {
+            let e = self
+                .executables
+                .get(name)
+                .ok_or_else(|| Error::Format(format!("manifest lacks {name}")))?;
+            let n_fixed = if name.starts_with("prefill") {
+                2
+            } else if name.starts_with("score") {
+                1
+            } else {
+                4
+            };
+            if e.args.len() <= n_fixed {
+                return Err(Error::Format(format!("{name}: no weight args")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Golden-output file content, parsed (integration tests).
+    pub fn load_golden(dir: impl AsRef<Path>) -> Result<Value> {
+        let text = std::fs::read_to_string(dir.as_ref().join("golden.json"))?;
+        Ok(Value::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> String {
+        r#"{
+          "format": 1,
+          "config": {"vocab":128,"dim":128,"n_layers":4,"n_heads":4,
+                     "head_dim":32,"ffn":512,"max_seq":160,"prefill_len":64,
+                     "decode_batch":4,"n_params":803968},
+          "quantized_names": ["embed"],
+          "executables": {
+            "prefill_f32": {"file":"p.hlo.txt","args":[
+               {"name":"tokens","shape":[1,64],"dtype":"i32"},
+               {"name":"length","shape":[],"dtype":"i32"},
+               {"name":"embed","shape":[128,128],"dtype":"f32"}]},
+            "prefill_quant": {"file":"pq.hlo.txt","args":[
+               {"name":"tokens","shape":[1,64],"dtype":"i32"},
+               {"name":"length","shape":[],"dtype":"i32"},
+               {"name":"embed.sym","shape":[128,128],"dtype":"u8"},
+               {"name":"embed.scale","shape":[],"dtype":"f32"},
+               {"name":"embed.zp","shape":[],"dtype":"f32"}]},
+            "decode_f32": {"file":"d.hlo.txt","args":[
+               {"name":"tokens","shape":[4],"dtype":"i32"},
+               {"name":"pos","shape":[4],"dtype":"i32"},
+               {"name":"k_cache","shape":[4,4,160,4,32],"dtype":"f32"},
+               {"name":"v_cache","shape":[4,4,160,4,32],"dtype":"f32"},
+               {"name":"embed","shape":[128,128],"dtype":"f32"}]},
+            "decode_quant": {"file":"dq.hlo.txt","args":[
+               {"name":"tokens","shape":[4],"dtype":"i32"},
+               {"name":"pos","shape":[4],"dtype":"i32"},
+               {"name":"k_cache","shape":[4,4,160,4,32],"dtype":"f32"},
+               {"name":"v_cache","shape":[4,4,160,4,32],"dtype":"f32"},
+               {"name":"embed.sym","shape":[128,128],"dtype":"u8"},
+               {"name":"embed.scale","shape":[],"dtype":"f32"},
+               {"name":"embed.zp","shape":[],"dtype":"f32"}]},
+            "score_f32": {"file":"s.hlo.txt","args":[
+               {"name":"tokens","shape":[1,64],"dtype":"i32"},
+               {"name":"embed","shape":[128,128],"dtype":"f32"}]},
+            "score_quant": {"file":"sq.hlo.txt","args":[
+               {"name":"tokens","shape":[1,64],"dtype":"i32"},
+               {"name":"embed.sym","shape":[128,128],"dtype":"u8"},
+               {"name":"embed.scale","shape":[],"dtype":"f32"},
+               {"name":"embed.zp","shape":[],"dtype":"f32"}]}
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let m = Manifest::parse(&sample_manifest()).unwrap();
+        assert_eq!(m.config.dim, 128);
+        assert_eq!(m.config.head_dim, 32);
+        assert_eq!(m.executables["prefill_quant"].args.len(), 5);
+        assert_eq!(m.executables["prefill_quant"].args[2].numel(), 128 * 128);
+        assert_eq!(m.quantized_names, vec!["embed"]);
+    }
+
+    #[test]
+    fn rejects_bad_format_version() {
+        let bad = sample_manifest().replace("\"format\": 1", "\"format\": 9");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_dims() {
+        let bad = sample_manifest().replace("\"n_heads\":4", "\"n_heads\":3");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_executable() {
+        let bad = sample_manifest().replace("decode_quant", "decode_other");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_artifacts_exist() {
+        // Integration-ish: run only when `make artifacts` has run.
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(m.config.n_params > 0);
+            assert!(m.executables.len() >= 4);
+        }
+    }
+}

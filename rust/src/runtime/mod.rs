@@ -1,0 +1,450 @@
+//! PJRT runtime: loads the AOT HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path.
+//!
+//! Python never runs here — the contract between the layers is
+//! `artifacts/manifest.json` (argument names/shapes/dtypes per
+//! executable, in PJRT calling-convention order) plus the HLO text
+//! files. [`ModelRuntime`] owns:
+//!
+//! * the PJRT CPU client and the compiled prefill/decode executables,
+//! * the **device-resident weight buffers** (uploaded once — the weight
+//!   tensors come from parallel-decoding the ELM container, exactly the
+//!   paper's edge flow: load compressed → decode once → serve),
+//! * KV-cache upload/download helpers for the coordinator's slot
+//!   management.
+
+mod artifacts;
+mod weights;
+
+pub use artifacts::{ArgSpec, ExecSpec, Manifest, ModelConfig};
+pub use weights::load_weights_bin;
+
+use crate::quant::QuantizedTensor;
+use crate::store::ElmModel;
+use crate::tensor::TensorF32;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Which weight flavor an executable consumes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// fp32 baseline (`*_f32.hlo.txt`).
+    F32,
+    /// Quantized symbols + (scale, zero_point) (`*_quant.hlo.txt`).
+    /// Serves both uint8 and uint4 ELM models (uint4 symbols are u8
+    /// values < 16 with their own scales).
+    Quant,
+}
+
+impl Variant {
+    fn tag(self) -> &'static str {
+        match self {
+            Variant::F32 => "f32",
+            Variant::Quant => "quant",
+        }
+    }
+}
+
+/// A device buffer pinned to the host memory backing it.
+///
+/// `BufferFromHostLiteral` on the TFRT CPU client is **asynchronous**:
+/// the transfer may read the host literal after the call returns. The
+/// `xla` crate's own `execute()` awaits buffer readiness for exactly
+/// this reason, but `execute_b` / `buffer_from_host_literal` offer no
+/// such hook — dropping the literal early causes the intermittent
+/// SIGSEGV / "Unhandled primitive type" crashes we bisected. Pinning
+/// the literal to the buffer's lifetime makes the pair sound.
+pub struct DeviceBuffer {
+    buf: xla::PjRtBuffer,
+    _backing: Option<xla::Literal>,
+}
+
+impl DeviceBuffer {
+    /// Wrap a buffer whose backing memory the client copied
+    /// synchronously (e.g. `buffer_from_host_buffer`, which uses
+    /// `kImmutableOnlyDuringCall` semantics).
+    pub fn owned(buf: xla::PjRtBuffer) -> Self {
+        DeviceBuffer {
+            buf,
+            _backing: None,
+        }
+    }
+
+    /// Wrap a buffer created from a literal, keeping the literal alive.
+    pub fn pinned(buf: xla::PjRtBuffer, backing: xla::Literal) -> Self {
+        DeviceBuffer {
+            buf,
+            _backing: Some(backing),
+        }
+    }
+
+    /// Borrow the underlying PJRT buffer.
+    pub fn as_buf(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+}
+
+/// One step's decode output: logits plus the updated KV caches
+/// (device-resident; feed them to the next step).
+pub struct DecodeOut {
+    /// Logits `[B, vocab]`, row-major on host.
+    pub logits: Vec<f32>,
+    /// Updated K cache.
+    pub k_cache: DeviceBuffer,
+    /// Updated V cache.
+    pub v_cache: DeviceBuffer,
+}
+
+/// Prefill output: logits plus the single-slot KV caches on host
+/// (the coordinator splices them into a batch slot).
+pub struct PrefillOut {
+    /// Logits `[1, vocab]`.
+    pub logits: Vec<f32>,
+    /// K cache `[L, 1, MS, H, HD]` flattened.
+    pub k_cache: Vec<f32>,
+    /// V cache `[L, 1, MS, H, HD]` flattened.
+    pub v_cache: Vec<f32>,
+}
+
+/// The compiled model: client + executables + uploaded weights.
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    decode_exe: xla::PjRtLoadedExecutable,
+    score_exe: xla::PjRtLoadedExecutable,
+    /// Weight argument buffers, in manifest order, device-resident.
+    weight_bufs: Vec<DeviceBuffer>,
+    /// Parsed manifest (shapes for KV allocation etc.).
+    pub manifest: Manifest,
+    /// Which variant was loaded.
+    pub variant: Variant,
+}
+
+impl ModelRuntime {
+    /// Load + compile a variant from the artifacts directory, uploading
+    /// the given weight tensors (must match the manifest's weight spec).
+    pub fn load(
+        artifacts_dir: impl AsRef<Path>,
+        variant: Variant,
+        weights: &WeightSet,
+    ) -> Result<Self> {
+        let dir = artifacts_dir.as_ref();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let spec = manifest
+                .executables
+                .get(name)
+                .ok_or_else(|| Error::Format(format!("manifest lacks executable {name:?}")))?;
+            let proto = xla::HloModuleProto::from_text_file(dir.join(&spec.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let prefill_exe = compile(&format!("prefill_{}", variant.tag()))?;
+        let decode_exe = compile(&format!("decode_{}", variant.tag()))?;
+        let score_exe = compile(&format!("score_{}", variant.tag()))?;
+
+        // Upload weights once, in manifest argument order (weights follow
+        // the 2 fixed prefill args; decode shares the same weight tail).
+        let spec = &manifest.executables[&format!("prefill_{}", variant.tag())];
+        let mut weight_bufs = Vec::new();
+        for arg in &spec.args[2..] {
+            weight_bufs.push(weights.upload(&client, arg)?);
+        }
+        Ok(ModelRuntime {
+            client,
+            prefill_exe,
+            decode_exe,
+            score_exe,
+            weight_bufs,
+            manifest,
+            variant,
+        })
+    }
+
+    /// Model configuration from the manifest.
+    pub fn config(&self) -> &ModelConfig {
+        &self.manifest.config
+    }
+
+    /// Flattened element count of one full KV cache `[L,B,MS,H,HD]`.
+    pub fn kv_numel(&self) -> usize {
+        let c = &self.manifest.config;
+        c.n_layers * c.decode_batch * c.max_seq * c.n_heads * c.head_dim
+    }
+
+    /// Run a prompt through prefill. `prompt` is truncated/padded to
+    /// `prefill_len`; must be non-empty.
+    pub fn prefill(&self, prompt: &[u32]) -> Result<PrefillOut> {
+        let cfg = &self.manifest.config;
+        let s = cfg.prefill_len;
+        if prompt.is_empty() {
+            return Err(Error::InvalidArg("empty prompt".into()));
+        }
+        let length = prompt.len().min(s);
+        let mut toks = vec![0i32; s];
+        for (i, &t) in prompt.iter().take(length).enumerate() {
+            toks[i] = t as i32;
+        }
+        let tok_buf = self.client.buffer_from_host_buffer(&toks, &[1, s], None)?;
+        let len_buf = self
+            .client
+            .buffer_from_host_buffer(&[length as i32], &[], None)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf, &len_buf];
+        args.extend(self.weight_bufs.iter().map(|b| b.as_buf()));
+        let outs = self.prefill_exe.execute_b(&args)?;
+        let tuple = outs[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != 3 {
+            return Err(Error::Xla(format!("prefill returned {} outputs", parts.len())));
+        }
+        Ok(PrefillOut {
+            logits: parts[0].to_vec::<f32>()?,
+            k_cache: parts[1].to_vec::<f32>()?,
+            v_cache: parts[2].to_vec::<f32>()?,
+        })
+    }
+
+    /// Upload host KV caches `[L, B, MS, H, HD]` to device buffers.
+    pub fn upload_kv(&self, k: &[f32], v: &[f32]) -> Result<(DeviceBuffer, DeviceBuffer)> {
+        let c = &self.manifest.config;
+        let dims = [c.n_layers, c.decode_batch, c.max_seq, c.n_heads, c.head_dim];
+        let expect: usize = dims.iter().product();
+        if k.len() != expect || v.len() != expect {
+            return Err(Error::InvalidArg(format!(
+                "kv size {} vs expected {expect}",
+                k.len()
+            )));
+        }
+        let kb = self.client.buffer_from_host_buffer(k, &dims, None)?;
+        let vb = self.client.buffer_from_host_buffer(v, &dims, None)?;
+        Ok((DeviceBuffer::owned(kb), DeviceBuffer::owned(vb)))
+    }
+
+    /// Download device KV caches to host vectors.
+    pub fn download_kv(
+        &self,
+        k: &DeviceBuffer,
+        v: &DeviceBuffer,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        Ok((
+            k.as_buf().to_literal_sync()?.to_vec::<f32>()?,
+            v.as_buf().to_literal_sync()?.to_vec::<f32>()?,
+        ))
+    }
+
+    /// Teacher-forced scoring: full logits `[1, S, vocab]` for a window
+    /// of `prefill_len` tokens (flattened row-major).
+    pub fn score(&self, tokens: &[u32]) -> Result<Vec<f32>> {
+        let cfg = &self.manifest.config;
+        let s = cfg.prefill_len;
+        if tokens.len() != s {
+            return Err(Error::InvalidArg(format!(
+                "score wants exactly {s} tokens, got {}",
+                tokens.len()
+            )));
+        }
+        let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let tok_buf = self.client.buffer_from_host_buffer(&toks, &[1, s], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf];
+        args.extend(self.weight_bufs.iter().map(|b| b.as_buf()));
+        let outs = self.score_exe.execute_b(&args)?;
+        let tuple = outs[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        Ok(parts[0].to_vec::<f32>()?)
+    }
+
+    /// Perplexity over up to `max_windows` consecutive windows of a
+    /// text (byte-level tokens). Returns (nll nats/char, char ppl) —
+    /// the Table I quality metric.
+    pub fn score_ppl(&self, text: &str, max_windows: usize) -> Result<(f64, f64)> {
+        let cfg = &self.manifest.config;
+        let s = cfg.prefill_len;
+        let toks: Vec<u32> = text
+            .bytes()
+            .map(|b| if b < 128 { b as u32 } else { b'?' as u32 })
+            .collect();
+        let n_windows = ((toks.len().saturating_sub(1)) / s).min(max_windows);
+        if n_windows == 0 {
+            return Err(Error::InvalidArg("text too short for one window".into()));
+        }
+        let vocab = cfg.vocab;
+        let mut nll_sum = 0.0f64;
+        let mut count = 0usize;
+        for w in 0..n_windows {
+            let start = w * s;
+            let window = &toks[start..start + s];
+            let targets = &toks[start + 1..start + s + 1];
+            let logits = self.score(window)?; // [1, S, V]
+            for (i, &t) in targets.iter().enumerate() {
+                let row = &logits[i * vocab..(i + 1) * vocab];
+                // log-softmax at the target index.
+                let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let lse: f32 = row.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+                nll_sum += (lse - row[t as usize]) as f64;
+                count += 1;
+            }
+        }
+        let nll = nll_sum / count as f64;
+        Ok((nll, nll.exp()))
+    }
+
+    /// One decode step for the whole batch.
+    pub fn decode_step(
+        &self,
+        tokens: &[u32],
+        pos: &[u32],
+        k_cache: &DeviceBuffer,
+        v_cache: &DeviceBuffer,
+    ) -> Result<DecodeOut> {
+        let c = &self.manifest.config;
+        let b = c.decode_batch;
+        if tokens.len() != b || pos.len() != b {
+            return Err(Error::InvalidArg(format!(
+                "decode_step wants batch {b}, got {}/{}",
+                tokens.len(),
+                pos.len()
+            )));
+        }
+        let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let poss: Vec<i32> = pos.iter().map(|&p| p as i32).collect();
+        let tok_buf = self.client.buffer_from_host_buffer(&toks, &[b], None)?;
+        let pos_buf = self.client.buffer_from_host_buffer(&poss, &[b], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            vec![&tok_buf, &pos_buf, k_cache.as_buf(), v_cache.as_buf()];
+        args.extend(self.weight_bufs.iter().map(|b| b.as_buf()));
+        let outs = self.decode_exe.execute_b(&args)?;
+        // xla 0.1.6 exposes tuple outputs as one buffer; destructure via
+        // a host literal. KV round-trips through host per step — measured
+        // acceptable at this model scale (see EXPERIMENTS.md §Perf).
+        let tuple = outs[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != 3 {
+            return Err(Error::Xla(format!("decode returned {} outputs", parts.len())));
+        }
+        let logits = parts[0].to_vec::<f32>()?;
+        let mut it = parts.into_iter();
+        let _logits_lit = it.next().unwrap();
+        let k_lit = it.next().unwrap();
+        let v_lit = it.next().unwrap();
+        // Pin each literal to its buffer: the CPU-client transfer is
+        // async (see DeviceBuffer docs).
+        let k_buf = self.client.buffer_from_host_literal(None, &k_lit)?;
+        let v_buf = self.client.buffer_from_host_literal(None, &v_lit)?;
+        Ok(DecodeOut {
+            logits,
+            k_cache: DeviceBuffer::pinned(k_buf, k_lit),
+            v_cache: DeviceBuffer::pinned(v_buf, v_lit),
+        })
+    }
+}
+
+/// The weight tensors an executable variant needs, keyed by name.
+#[derive(Default)]
+pub struct WeightSet {
+    /// fp32 tensors (norms always; everything for the F32 variant).
+    pub f32s: HashMap<String, TensorF32>,
+    /// Quantized tensors (Quant variant only).
+    pub quants: HashMap<String, QuantizedTensor>,
+}
+
+impl WeightSet {
+    /// Build the fp32 weight set from a raw weights.bin load.
+    pub fn from_f32(tensors: Vec<(String, TensorF32)>) -> Self {
+        WeightSet {
+            f32s: tensors.into_iter().collect(),
+            quants: HashMap::new(),
+        }
+    }
+
+    /// Build the quantized weight set: decoded ELM tensors for the
+    /// quantized names + fp32 tensors for the rest (norms).
+    pub fn from_quantized(
+        decoded: Vec<(String, QuantizedTensor)>,
+        f32_rest: Vec<(String, TensorF32)>,
+    ) -> Self {
+        WeightSet {
+            f32s: f32_rest.into_iter().collect(),
+            quants: decoded.into_iter().collect(),
+        }
+    }
+
+    /// The paper's edge flow in one call: **parallel-decode** a whole
+    /// ELM container (§III-C) and pair it with the fp32 norm tensors.
+    pub fn from_elm(
+        model: &ElmModel,
+        threads: usize,
+        f32_rest: Vec<(String, TensorF32)>,
+    ) -> Result<Self> {
+        let (tensors, _) = crate::decode::ParallelDecoder::new(threads).decode_model(model)?;
+        let named = model
+            .layers
+            .iter()
+            .map(|m| m.name.clone())
+            .zip(tensors)
+            .collect();
+        Ok(Self::from_quantized(named, f32_rest))
+    }
+
+    /// Upload the tensor for one manifest argument.
+    fn upload(&self, client: &xla::PjRtClient, arg: &ArgSpec) -> Result<DeviceBuffer> {
+        if let Some(base) = arg.name.strip_suffix(".sym") {
+            let q = self.quant(base)?;
+            if q.symbols.numel() != arg.numel() {
+                return Err(Error::InvalidArg(format!(
+                    "weight {:?}: {} symbols, manifest wants {:?}",
+                    arg.name,
+                    q.symbols.numel(),
+                    arg.shape
+                )));
+            }
+            // NB: buffer_from_host_raw_bytes mis-sizes U8 buffers in the
+            // published xla crate (elements counted as 8 bytes); the
+            // literal path sizes correctly.
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::U8,
+                &arg.shape,
+                q.symbols.data(),
+            )?;
+            let buf = client.buffer_from_host_literal(None, &lit)?;
+            // Pin: the host->device copy is async (see DeviceBuffer).
+            return Ok(DeviceBuffer::pinned(buf, lit));
+        }
+        if let Some(base) = arg.name.strip_suffix(".scale") {
+            let q = self.quant(base)?;
+            let buf = client.buffer_from_host_buffer(&[q.params.scale], &[], None)?;
+            return Ok(DeviceBuffer::owned(buf));
+        }
+        if let Some(base) = arg.name.strip_suffix(".zp") {
+            let q = self.quant(base)?;
+            let buf = client.buffer_from_host_buffer(&[q.params.zero_point], &[], None)?;
+            return Ok(DeviceBuffer::owned(buf));
+        }
+        let t = self
+            .f32s
+            .get(&arg.name)
+            .ok_or_else(|| Error::InvalidArg(format!("missing f32 weight {:?}", arg.name)))?;
+        if t.numel() != arg.numel() {
+            return Err(Error::InvalidArg(format!(
+                "weight {:?} has {} elements, manifest wants {:?}",
+                arg.name,
+                t.numel(),
+                arg.shape
+            )));
+        }
+        Ok(DeviceBuffer::owned(client.buffer_from_host_buffer(
+            t.data(),
+            &arg.shape,
+            None,
+        )?))
+    }
+
+    fn quant(&self, name: &str) -> Result<&QuantizedTensor> {
+        self.quants
+            .get(name)
+            .ok_or_else(|| Error::InvalidArg(format!("missing quantized weight {name:?}")))
+    }
+}

@@ -1,0 +1,135 @@
+//! ETW1 weight container loader (written by `python/compile/train.py`).
+//!
+//! Layout (little-endian): `"ETW1" | u32 count | per tensor: u16
+//! name_len, name, u8 rank, rank × u64 dims, f32 row-major data`.
+
+use crate::tensor::TensorF32;
+use crate::{Error, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// Load all tensors from a `weights.bin` file, in storage order.
+pub fn load_weights_bin(path: impl AsRef<Path>) -> Result<Vec<(String, TensorF32)>> {
+    let file = std::fs::File::open(path.as_ref())?;
+    let mut r = std::io::BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != b"ETW1" {
+        return Err(Error::Format(format!("weights.bin: bad magic {magic:02x?}")));
+    }
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let count = u32::from_le_bytes(b4) as usize;
+    if count > 1_000_000 {
+        return Err(Error::Format(format!("implausible tensor count {count}")));
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let mut b2 = [0u8; 2];
+        r.read_exact(&mut b2)?;
+        let name_len = u16::from_le_bytes(b2) as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)
+            .map_err(|_| Error::Format("tensor name not utf-8".into()))?;
+        let mut b1 = [0u8; 1];
+        r.read_exact(&mut b1)?;
+        let rank = b1[0] as usize;
+        if rank > 8 {
+            return Err(Error::Format(format!("tensor {name:?}: implausible rank {rank}")));
+        }
+        let mut dims = Vec::with_capacity(rank);
+        let mut b8 = [0u8; 8];
+        for _ in 0..rank {
+            r.read_exact(&mut b8)?;
+            dims.push(u64::from_le_bytes(b8) as usize);
+        }
+        let n: usize = dims.iter().product();
+        let mut bytes = vec![0u8; n * 4];
+        r.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push((name, TensorF32::new(dims, data)?));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_sample(path: &std::path::Path) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"ETW1").unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        // tensor "a": shape [2,2]
+        f.write_all(&1u16.to_le_bytes()).unwrap();
+        f.write_all(b"a").unwrap();
+        f.write_all(&[2u8]).unwrap();
+        f.write_all(&2u64.to_le_bytes()).unwrap();
+        f.write_all(&2u64.to_le_bytes()).unwrap();
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        // tensor "b": scalar-ish shape [3]
+        f.write_all(&1u16.to_le_bytes()).unwrap();
+        f.write_all(b"b").unwrap();
+        f.write_all(&[1u8]).unwrap();
+        f.write_all(&3u64.to_le_bytes()).unwrap();
+        for v in [5.0f32, 6.0, 7.0] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn loads_etw1_tensors() {
+        let dir = std::env::temp_dir().join(format!("etw1_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        write_sample(&p);
+        let ws = load_weights_bin(&p).unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].0, "a");
+        assert_eq!(ws[0].1.shape().dims(), &[2, 2]);
+        assert_eq!(ws[0].1.data(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(ws[1].0, "b");
+        assert_eq!(ws[1].1.data(), &[5.0, 6.0, 7.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("etw1bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOPE\x00\x00\x00\x00").unwrap();
+        assert!(load_weights_bin(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let dir = std::env::temp_dir().join(format!("etw1tr_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        write_sample(&p);
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() - 5]).unwrap();
+        assert!(load_weights_bin(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_weights_load_if_artifacts_exist() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/weights.bin");
+        if p.exists() {
+            let ws = load_weights_bin(&p).unwrap();
+            assert!(ws.iter().any(|(n, _)| n == "embed"));
+            let total: usize = ws.iter().map(|(_, t)| t.numel()).sum();
+            assert!(total > 500_000, "trained model should have ~0.8M params");
+        }
+    }
+}

@@ -1,0 +1,334 @@
+//! Line-protocol TCP server + client for the serving example.
+//!
+//! Offline build: no tokio, so the server is a plain `std::net` design —
+//! one acceptor thread, per-connection reader threads feeding an mpsc
+//! channel, and the engine thread draining it. This mirrors the paper's
+//! single-device edge deployment (one model, one engine loop, multiple
+//! lightweight clients).
+//!
+//! Protocol: one JSON object per line.
+//!
+//! ```text
+//! → {"id": 1, "prompt": "the model", "max_tokens": 32, "temperature": 0.8}
+//! ← {"id": 1, "text": "...", "tokens": 32, "finish": "length",
+//!    "first_token_ms": 12.3, "decode_ms": 45.6}
+//! ```
+
+use crate::coordinator::{Backend, Engine, Request, Response};
+use crate::corpus::ByteTokenizer;
+use crate::json::{self, Value};
+use crate::{Error, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Parse one request line. Public for tests and the client.
+pub fn parse_request(line: &str, next_id: u64) -> Result<Request> {
+    let v = Value::parse(line)?;
+    let prompt_text = v.get("prompt")?.as_str()?.to_string();
+    let prompt = ByteTokenizer.encode(&prompt_text);
+    if prompt.is_empty() {
+        return Err(Error::InvalidArg("empty prompt".into()));
+    }
+    let id = v
+        .get_opt("id")
+        .map(|x| x.as_f64().map(|n| n as u64))
+        .transpose()?
+        .unwrap_or(next_id);
+    Ok(Request {
+        id,
+        prompt,
+        max_new_tokens: v
+            .get_opt("max_tokens")
+            .map(|x| x.as_usize())
+            .transpose()?
+            .unwrap_or(32),
+        temperature: v
+            .get_opt("temperature")
+            .map(|x| x.as_f64())
+            .transpose()?
+            .unwrap_or(0.0) as f32,
+        top_k: v
+            .get_opt("top_k")
+            .map(|x| x.as_usize())
+            .transpose()?
+            .unwrap_or(0),
+        stop_token: Some(u32::from(b'.')),
+        enqueued_at: None,
+    })
+}
+
+/// Serialize a response line.
+pub fn format_response(r: &Response) -> String {
+    let text = ByteTokenizer.decode(&r.tokens);
+    json::obj(vec![
+        ("id", json::num(r.id as f64)),
+        ("text", json::s(&text)),
+        ("tokens", json::num(r.tokens.len() as f64)),
+        (
+            "finish",
+            json::s(match r.finish_reason {
+                crate::coordinator::request::FinishReason::Length => "length",
+                crate::coordinator::request::FinishReason::Stop => "stop",
+                crate::coordinator::request::FinishReason::Capacity => "capacity",
+            }),
+        ),
+        (
+            "first_token_ms",
+            json::num(r.timing.first_token.as_secs_f64() * 1e3),
+        ),
+        ("decode_ms", json::num(r.timing.decode.as_secs_f64() * 1e3)),
+    ])
+    .to_json()
+}
+
+enum Incoming {
+    Req(Request, mpsc::Sender<String>),
+    Bad(String, mpsc::Sender<String>),
+}
+
+/// Serve an engine over TCP until `stop` flips. Returns total requests
+/// served. Spawns one thread per connection (edge workloads: few
+/// clients) plus the engine loop on the calling thread.
+pub fn serve<B: Backend>(
+    engine: &mut Engine<B>,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+) -> Result<u64> {
+    listener.set_nonblocking(true)?;
+    let (tx, rx) = mpsc::channel::<Incoming>();
+
+    // Acceptor thread: owns the listener, spawns per-connection readers.
+    let acc_stop = stop.clone();
+    let acceptor = std::thread::spawn(move || {
+        let mut conns = Vec::new();
+        while !acc_stop.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let tx = tx.clone();
+                    let stop = acc_stop.clone();
+                    conns.push(std::thread::spawn(move || read_conn(stream, tx, stop)));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(_) => break,
+            }
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+    });
+
+    // Engine loop: drain incoming, step, route responses.
+    let mut next_id: u64 = 1;
+    let mut waiters: Vec<(u64, mpsc::Sender<String>)> = Vec::new();
+    let mut served = 0u64;
+    while !stop.load(Ordering::Relaxed) {
+        let mut idle = true;
+        while let Ok(msg) = rx.try_recv() {
+            idle = false;
+            match msg {
+                Incoming::Req(req, reply) => {
+                    let id = req.id.max(next_id);
+                    next_id = id + 1;
+                    let mut req = req;
+                    req.id = id;
+                    match engine.submit(req) {
+                        Ok(()) => waiters.push((id, reply)),
+                        Err(e) => {
+                            let _ = reply.send(format!(
+                                r#"{{"error":"{}"}}"#,
+                                e.to_string().replace('"', "'")
+                            ));
+                        }
+                    }
+                }
+                Incoming::Bad(err, reply) => {
+                    let _ = reply.send(format!(r#"{{"error":"{err}"}}"#));
+                }
+            }
+        }
+        if engine.has_work() {
+            idle = false;
+            for resp in engine.step()? {
+                served += 1;
+                if let Some(i) = waiters.iter().position(|(id, _)| *id == resp.id) {
+                    let (_, reply) = waiters.swap_remove(i);
+                    let _ = reply.send(format_response(&resp));
+                }
+            }
+        }
+        if idle {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    drop(rx);
+    let _ = acceptor.join();
+    Ok(served)
+}
+
+fn read_conn(stream: TcpStream, tx: mpsc::Sender<Incoming>, stop: Arc<AtomicBool>) {
+    let peer_write = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    // Read with a timeout so a long-lived idle client can't pin this
+    // thread past server shutdown.
+    stream
+        .set_read_timeout(Some(Duration::from_millis(200)))
+        .ok();
+    let (reply_tx, reply_rx) = mpsc::channel::<String>();
+    // Writer thread serializes replies back to this connection.
+    let writer = std::thread::spawn(move || {
+        let mut w = peer_write;
+        while let Ok(line) = reply_rx.recv() {
+            if w.write_all(line.as_bytes()).is_err() || w.write_all(b"\n").is_err() {
+                break;
+            }
+            let _ = w.flush();
+        }
+    });
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // client closed
+            Ok(_) => {
+                let trimmed = line.trim();
+                if !trimmed.is_empty() {
+                    match parse_request(trimmed, 0) {
+                        Ok(req) => {
+                            if tx.send(Incoming::Req(req, reply_tx.clone())).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            let _ = tx.send(Incoming::Bad(
+                                e.to_string().replace('"', "'"),
+                                reply_tx.clone(),
+                            ));
+                        }
+                    }
+                }
+                line.clear();
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Timeout tick: keep any partial line and re-check stop.
+                continue;
+            }
+            Err(_) => break,
+        }
+    }
+    drop(reply_tx);
+    let _ = writer.join();
+}
+
+/// Blocking client for the line protocol (used by examples/benches).
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    /// Connect to a server.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    /// Send one request line and wait for the reply line.
+    pub fn request(&mut self, prompt: &str, max_tokens: usize, temperature: f32) -> Result<Value> {
+        let line = json::obj(vec![
+            ("prompt", json::s(prompt)),
+            ("max_tokens", json::num(max_tokens as f64)),
+            ("temperature", json::num(temperature as f64)),
+        ])
+        .to_json();
+        self.stream.write_all(line.as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply)?;
+        if reply.is_empty() {
+            return Err(Error::Engine("server closed connection".into()));
+        }
+        Value::parse(reply.trim())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{EngineConfig, MockBackend};
+
+    #[test]
+    fn parse_request_accepts_minimal_and_full() {
+        let r = parse_request(r#"{"prompt":"hi"}"#, 42).unwrap();
+        assert_eq!(r.id, 42);
+        assert_eq!(r.prompt, vec![104, 105]);
+        assert_eq!(r.max_new_tokens, 32);
+        let r = parse_request(
+            r#"{"id":7,"prompt":"x","max_tokens":5,"temperature":0.5,"top_k":3}"#,
+            0,
+        )
+        .unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.max_new_tokens, 5);
+        assert!((r.temperature - 0.5).abs() < 1e-6);
+        assert_eq!(r.top_k, 3);
+    }
+
+    #[test]
+    fn parse_request_rejects_garbage() {
+        assert!(parse_request("not json", 1).is_err());
+        assert!(parse_request(r#"{"prompt":""}"#, 1).is_err());
+        assert!(parse_request(r#"{"no_prompt":1}"#, 1).is_err());
+    }
+
+    #[test]
+    fn format_response_roundtrips_as_json() {
+        let r = Response {
+            id: 3,
+            tokens: vec![104, 105],
+            finish_reason: crate::coordinator::request::FinishReason::Length,
+            timing: Default::default(),
+        };
+        let v = Value::parse(&format_response(&r)).unwrap();
+        assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(v.get("text").unwrap().as_str().unwrap(), "hi");
+        assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "length");
+    }
+
+    #[test]
+    fn end_to_end_over_loopback_with_mock_backend() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let server = std::thread::spawn(move || {
+            let mut engine = Engine::new(MockBackend::new(2, 32, 128), EngineConfig::default());
+            serve(&mut engine, listener, stop2).unwrap()
+        });
+
+        let mut c = Client::connect(&addr).unwrap();
+        let reply = c.request("ab", 4, 0.0).unwrap();
+        assert_eq!(reply.get("tokens").unwrap().as_usize().unwrap(), 4);
+        let reply2 = c.request("cd", 2, 0.0).unwrap();
+        assert_eq!(reply2.get("tokens").unwrap().as_usize().unwrap(), 2);
+
+        stop.store(true, Ordering::Relaxed);
+        let served = server.join().unwrap();
+        assert_eq!(served, 2);
+    }
+}

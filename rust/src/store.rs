@@ -1,0 +1,541 @@
+//! The **ELM container** — EntroLLM's on-device compressed model format
+//! (Algorithm 1 line 16: "Store model metadata: H, P, {W_c}^k, preserving
+//! the weight tensor packing structure").
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic "ELM1" | version u32 | bitwidth u8 | n_layers u32
+//! global canonical code lengths: 256 × u8      (this is "H" — canonical
+//!                                               codes rebuild from lengths)
+//! per layer:
+//!   name_len u16 | name utf-8
+//!   rank u8 | dims: rank × u64
+//!   scheme u8 | scale f32 | zero_point f32
+//!   n_symbols u64 | encoded_len u64 | crc32 u32
+//! payload: concatenated byte-aligned encoded segments (one per layer)
+//! ```
+//!
+//! Crucially the payload keeps **one independently decodable, byte-aligned
+//! segment per weight tensor** — the "parameter space segmentation" that
+//! makes §III-C parallel decoding possible: segment starts/ends are known
+//! from the manifest before any bit is decoded.
+
+use crate::entropy::shannon_entropy;
+use crate::huffman::{CodeSpec, Decoder, Encoder, FreqTable};
+use crate::quant::{quantize_mixed, BitWidth, QuantParams, QuantizedTensor, Scheme};
+use crate::tensor::{Shape, TensorF32, TensorU8};
+use crate::{Error, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"ELM1";
+const VERSION: u32 = 1;
+
+/// Per-layer manifest entry.
+#[derive(Debug, Clone)]
+pub struct LayerMeta {
+    /// Layer name (e.g. `"blocks.3.mlp.w_in"`).
+    pub name: String,
+    /// Tensor shape.
+    pub shape: Shape,
+    /// Quantization grid parameters.
+    pub params: QuantParams,
+    /// Number of weight symbols in this tensor.
+    pub n_symbols: usize,
+    /// Byte offset of this layer's segment within the payload.
+    pub offset: usize,
+    /// Encoded segment length in bytes.
+    pub encoded_len: usize,
+    /// CRC32 of the encoded segment.
+    pub crc32: u32,
+}
+
+/// A compressed model: manifest + global code + payload.
+#[derive(Debug, Clone)]
+pub struct ElmModel {
+    /// Quantization bit width all layers share.
+    pub bits: BitWidth,
+    /// The model-global canonical Huffman code.
+    pub code: CodeSpec,
+    /// Layer manifest, in storage order.
+    pub layers: Vec<LayerMeta>,
+    /// Concatenated encoded segments.
+    pub payload: Vec<u8>,
+}
+
+/// Storage accounting produced by [`compress`] — the Table I numbers.
+#[derive(Debug, Clone)]
+pub struct CompressionReport {
+    /// Total parameters.
+    pub n_params: usize,
+    /// fp16 baseline size (2 bytes/param) — the paper's reference point.
+    pub fp16_bytes: usize,
+    /// Fixed-width quantized size (bit-packed, no entropy coding).
+    pub fixed_bytes: usize,
+    /// Huffman payload size.
+    pub encoded_bytes: usize,
+    /// Shannon entropy of the pooled symbol histogram (bits/param).
+    pub entropy_bits: f64,
+    /// Achieved effective bits/param (encoded bits / params).
+    pub effective_bits: f64,
+    /// Per-layer scheme chosen by the mixed rule.
+    pub schemes: Vec<(String, Scheme)>,
+}
+
+impl ElmModel {
+    /// Segment bytes for layer `i`.
+    pub fn segment(&self, i: usize) -> &[u8] {
+        let m = &self.layers[i];
+        &self.payload[m.offset..m.offset + m.encoded_len]
+    }
+
+    /// Total parameters across layers.
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.n_symbols).sum()
+    }
+
+    /// Effective bits/param of the stored payload.
+    pub fn effective_bits(&self) -> f64 {
+        8.0 * self.payload.len() as f64 / self.n_params() as f64
+    }
+
+    /// Serialized container size in bytes (manifest + payload).
+    pub fn container_bytes(&self) -> usize {
+        let manifest: usize = self
+            .layers
+            .iter()
+            .map(|l| 2 + l.name.len() + 1 + 8 * l.shape.rank() + 1 + 4 + 4 + 8 + 8 + 4)
+            .sum();
+        4 + 4 + 1 + 4 + 256 + manifest + self.payload.len()
+    }
+}
+
+/// Compress a set of named fp32 layers: mixed quantization (§III-A) →
+/// pooled frequency table → model-global Huffman code (§III-B) →
+/// per-layer byte-aligned segments (§III-C). This is Algorithm 1's
+/// `CLOUD PROCESSING` procedure end-to-end.
+pub fn compress(layers: &[(String, TensorF32)], bits: BitWidth) -> Result<(ElmModel, CompressionReport)> {
+    if layers.is_empty() {
+        return Err(Error::InvalidArg("compress: no layers".into()));
+    }
+    // 1. Quantize each layer with the mixed rule.
+    let quantized: Vec<QuantizedTensor> =
+        layers.iter().map(|(_, w)| quantize_mixed(w, bits)).collect();
+
+    // 2. Pool symbol frequencies across the whole model (line 11).
+    let mut freq = FreqTable::new();
+    for q in &quantized {
+        freq.add_symbols(q.symbols.data());
+    }
+
+    // 3. One global canonical code (line 12).
+    let code = CodeSpec::build(&freq)?;
+    let encoder = Encoder::new(&code);
+
+    // 4. Encode each tensor as its own byte-aligned segment (lines 13–15).
+    let mut payload = Vec::new();
+    let mut metas = Vec::with_capacity(layers.len());
+    for ((name, _), q) in layers.iter().zip(&quantized) {
+        let seg = encoder.encode_to_vec(q.symbols.data())?;
+        let crc = crc32fast::hash(&seg);
+        metas.push(LayerMeta {
+            name: name.clone(),
+            shape: q.symbols.shape().clone(),
+            params: q.params,
+            n_symbols: q.symbols.numel(),
+            offset: payload.len(),
+            encoded_len: seg.len(),
+            crc32: crc,
+        });
+        payload.extend_from_slice(&seg);
+    }
+
+    let n_params: usize = metas.iter().map(|m| m.n_symbols).sum();
+    let report = CompressionReport {
+        n_params,
+        fp16_bytes: n_params * 2,
+        fixed_bytes: (n_params * bits.bits() as usize).div_ceil(8),
+        encoded_bytes: payload.len(),
+        entropy_bits: shannon_entropy(freq.counts()),
+        effective_bits: 8.0 * payload.len() as f64 / n_params as f64,
+        schemes: layers
+            .iter()
+            .zip(&quantized)
+            .map(|((n, _), q)| (n.clone(), q.params.scheme))
+            .collect(),
+    };
+    let model = ElmModel {
+        bits,
+        code,
+        layers: metas,
+        payload,
+    };
+    Ok((model, report))
+}
+
+/// Decode a single layer of a model (serial path; the parallel path
+/// lives in [`crate::decode`]).
+pub fn decode_layer(model: &ElmModel, i: usize) -> Result<QuantizedTensor> {
+    let meta = &model.layers[i];
+    let seg = model.segment(i);
+    if crc32fast::hash(seg) != meta.crc32 {
+        return Err(Error::Format(format!("layer {:?}: segment CRC mismatch", meta.name)));
+    }
+    let dec = Decoder::new(&model.code)?;
+    let symbols = dec.decode(seg, meta.n_symbols)?;
+    Ok(QuantizedTensor {
+        symbols: TensorU8::new(meta.shape.clone(), symbols)?,
+        params: meta.params,
+    })
+}
+
+// ---------------------------------------------------------------- binary io
+
+struct Writer<W: Write> {
+    inner: W,
+}
+
+impl<W: Write> Writer<W> {
+    fn u8(&mut self, v: u8) -> Result<()> {
+        self.inner.write_all(&[v])?;
+        Ok(())
+    }
+    fn u16(&mut self, v: u16) -> Result<()> {
+        self.inner.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+    fn u32(&mut self, v: u32) -> Result<()> {
+        self.inner.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+    fn u64(&mut self, v: u64) -> Result<()> {
+        self.inner.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+    fn f32(&mut self, v: f32) -> Result<()> {
+        self.inner.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+    fn bytes(&mut self, v: &[u8]) -> Result<()> {
+        self.inner.write_all(v)?;
+        Ok(())
+    }
+}
+
+struct Reader<R: Read> {
+    inner: R,
+}
+
+impl<R: Read> Reader<R> {
+    fn u8(&mut self) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.inner.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        let mut b = [0u8; 2];
+        self.inner.read_exact(&mut b)?;
+        Ok(u16::from_le_bytes(b))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.inner.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.inner.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        let mut b = [0u8; 4];
+        self.inner.read_exact(&mut b)?;
+        Ok(f32::from_le_bytes(b))
+    }
+    fn bytes(&mut self, n: usize) -> Result<Vec<u8>> {
+        let mut v = vec![0u8; n];
+        self.inner.read_exact(&mut v)?;
+        Ok(v)
+    }
+}
+
+impl ElmModel {
+    /// Serialize to a writer.
+    pub fn write_to<W: Write>(&self, w: W) -> Result<()> {
+        let mut w = Writer { inner: w };
+        w.bytes(MAGIC)?;
+        w.u32(VERSION)?;
+        w.u8(self.bits.bits() as u8)?;
+        w.u32(self.layers.len() as u32)?;
+        w.bytes(self.code.lengths())?;
+        for m in &self.layers {
+            if m.name.len() > u16::MAX as usize {
+                return Err(Error::InvalidArg(format!("layer name too long: {}", m.name.len())));
+            }
+            w.u16(m.name.len() as u16)?;
+            w.bytes(m.name.as_bytes())?;
+            w.u8(m.shape.rank() as u8)?;
+            for &d in m.shape.dims() {
+                w.u64(d as u64)?;
+            }
+            w.u8(m.params.scheme.tag())?;
+            w.f32(m.params.scale)?;
+            w.f32(m.params.zero_point)?;
+            w.u64(m.n_symbols as u64)?;
+            w.u64(m.encoded_len as u64)?;
+            w.u32(m.crc32)?;
+        }
+        w.bytes(&self.payload)?;
+        Ok(())
+    }
+
+    /// Save to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = std::fs::File::create(path)?;
+        let mut buf = std::io::BufWriter::new(f);
+        self.write_to(&mut buf)?;
+        buf.flush()?;
+        Ok(())
+    }
+
+    /// Deserialize from a reader, validating magic/version/lengths.
+    pub fn read_from<R: Read>(r: R) -> Result<Self> {
+        let mut r = Reader { inner: r };
+        let magic = r.bytes(4)?;
+        if magic != MAGIC {
+            return Err(Error::Format(format!("bad magic {magic:02x?}")));
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(Error::Format(format!("unsupported ELM version {version}")));
+        }
+        let bits = match r.u8()? {
+            4 => BitWidth::U4,
+            8 => BitWidth::U8,
+            other => return Err(Error::Format(format!("bad bit width {other}"))),
+        };
+        let n_layers = r.u32()? as usize;
+        if n_layers == 0 || n_layers > 1_000_000 {
+            return Err(Error::Format(format!("implausible layer count {n_layers}")));
+        }
+        let lengths = r.bytes(256)?;
+        let code = CodeSpec::from_lengths(&lengths)?;
+        let mut layers = Vec::with_capacity(n_layers);
+        let mut offset = 0usize;
+        for _ in 0..n_layers {
+            let name_len = r.u16()? as usize;
+            let name = String::from_utf8(r.bytes(name_len)?)
+                .map_err(|_| Error::Format("layer name not utf-8".into()))?;
+            let rank = r.u8()? as usize;
+            if rank > 8 {
+                return Err(Error::Format(format!("implausible rank {rank}")));
+            }
+            let mut dims = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                dims.push(r.u64()? as usize);
+            }
+            let shape = Shape(dims);
+            let scheme = Scheme::from_tag(r.u8()?)?;
+            let scale = r.f32()?;
+            let zero_point = r.f32()?;
+            let n_symbols = r.u64()? as usize;
+            if shape.numel() != n_symbols {
+                return Err(Error::Format(format!(
+                    "layer {name:?}: shape {shape} != {n_symbols} symbols"
+                )));
+            }
+            let encoded_len = r.u64()? as usize;
+            let crc32 = r.u32()?;
+            layers.push(LayerMeta {
+                name,
+                shape,
+                params: QuantParams {
+                    scheme,
+                    bits,
+                    scale,
+                    zero_point,
+                },
+                n_symbols,
+                offset,
+                encoded_len,
+                crc32,
+            });
+            offset = offset
+                .checked_add(encoded_len)
+                .ok_or_else(|| Error::Format("payload offset overflow".into()))?;
+        }
+        let mut payload = Vec::new();
+        r.inner.read_to_end(&mut payload)?;
+        if payload.len() != offset {
+            return Err(Error::Format(format!(
+                "payload is {} bytes, manifest claims {offset}",
+                payload.len()
+            )));
+        }
+        Ok(ElmModel {
+            bits,
+            code,
+            layers,
+            payload,
+        })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let f = std::fs::File::open(path)?;
+        Self::read_from(std::io::BufReader::new(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::dequantize;
+    use crate::rng::Rng;
+
+    fn make_layers(seed: u64) -> Vec<(String, TensorF32)> {
+        let mut rng = Rng::new(seed);
+        vec![
+            (
+                "attn.wq".into(),
+                TensorF32::new(vec![32, 64], rng.gaussian_vec(2048, 0.0, 0.04)).unwrap(),
+            ),
+            (
+                "attn.wk".into(),
+                TensorF32::new(vec![32, 64], rng.gaussian_vec(2048, 0.01, 0.03)).unwrap(),
+            ),
+            (
+                // Single-signed layer → symmetric-unsigned branch.
+                "mlp.gate_bias".into(),
+                TensorF32::new(
+                    vec![128],
+                    (0..128).map(|_| rng.range_f32(0.0, 0.2)).collect(),
+                )
+                .unwrap(),
+            ),
+        ]
+    }
+
+    #[test]
+    fn compress_then_decode_layers_is_lossless() {
+        for bits in [BitWidth::U4, BitWidth::U8] {
+            let layers = make_layers(1);
+            let (model, report) = compress(&layers, bits).unwrap();
+            assert_eq!(report.n_params, 2048 + 2048 + 128);
+            for i in 0..layers.len() {
+                let q = decode_layer(&model, i).unwrap();
+                // Decoded symbols must equal a fresh quantization of the
+                // source layer (lossless beyond quantization).
+                let direct = quantize_mixed(&layers[i].1, bits);
+                assert_eq!(q.symbols.data(), direct.symbols.data());
+                assert_eq!(q.params, direct.params);
+                // And dequantization stays within half a step.
+                let dq = dequantize(&q);
+                let bound = crate::quant::max_error_bound(&q.params);
+                for (a, b) in layers[i].1.data().iter().zip(dq.data()) {
+                    assert!((a - b).abs() <= bound);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn report_accounts_for_compression() {
+        let layers = make_layers(2);
+        let (model, report) = compress(&layers, BitWidth::U8).unwrap();
+        assert_eq!(report.encoded_bytes, model.payload.len());
+        assert!(report.effective_bits < 8.0, "huffman beats fixed width");
+        assert!(report.effective_bits >= report.entropy_bits - 1e-9);
+        assert!(report.fixed_bytes < report.fp16_bytes);
+        assert_eq!(report.schemes.len(), 3);
+        assert_eq!(report.schemes[2].1, Scheme::SymmetricUnsigned);
+    }
+
+    #[test]
+    fn save_load_roundtrip_bitexact() {
+        let layers = make_layers(3);
+        let (model, _) = compress(&layers, BitWidth::U4).unwrap();
+        let dir = std::env::temp_dir().join(format!("elm_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.elm");
+        model.save(&path).unwrap();
+        let loaded = ElmModel::load(&path).unwrap();
+        assert_eq!(loaded.payload, model.payload);
+        assert_eq!(loaded.layers.len(), model.layers.len());
+        for (a, b) in loaded.layers.iter().zip(&model.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.params, b.params);
+            assert_eq!(a.crc32, b.crc32);
+        }
+        assert_eq!(loaded.code.lengths(), model.code.lengths());
+        for i in 0..layers.len() {
+            assert_eq!(
+                decode_layer(&loaded, i).unwrap().symbols.data(),
+                decode_layer(&model, i).unwrap().symbols.data()
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_payload_is_detected_by_crc() {
+        let layers = make_layers(4);
+        let (mut model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let mid = model.layers[1].offset + model.layers[1].encoded_len / 2;
+        model.payload[mid] ^= 0xFF;
+        assert!(decode_layer(&model, 1).is_err());
+        // Other segments unaffected.
+        assert!(decode_layer(&model, 0).is_ok());
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let layers = make_layers(5);
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let mut buf = Vec::new();
+        model.write_to(&mut buf).unwrap();
+        for cut in [3usize, 8, 12, 260, buf.len() - 1] {
+            assert!(
+                ElmModel::read_from(&buf[..cut]).is_err(),
+                "cut at {cut} must fail"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = b"NOPE".to_vec();
+        buf.extend_from_slice(&[0u8; 64]);
+        assert!(ElmModel::read_from(buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn property_save_load_many_shapes() {
+        let mut rng = Rng::new(0x57E);
+        for case in 0..20 {
+            let n_layers = 1 + rng.below(6);
+            let layers: Vec<(String, TensorF32)> = (0..n_layers)
+                .map(|i| {
+                    let n = 1 + rng.below(500);
+                    (
+                        format!("l{case}.{i}"),
+                        TensorF32::new(vec![n], rng.gaussian_vec(n, 0.0, 0.1)).unwrap(),
+                    )
+                })
+                .collect();
+            let bits = if rng.below(2) == 0 { BitWidth::U4 } else { BitWidth::U8 };
+            let (model, _) = compress(&layers, bits).unwrap();
+            let mut buf = Vec::new();
+            model.write_to(&mut buf).unwrap();
+            let loaded = ElmModel::read_from(buf.as_slice()).unwrap();
+            for i in 0..n_layers {
+                assert_eq!(
+                    decode_layer(&loaded, i).unwrap().symbols.data(),
+                    quantize_mixed(&layers[i].1, bits).symbols.data()
+                );
+            }
+        }
+    }
+}

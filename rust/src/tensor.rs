@@ -1,0 +1,194 @@
+//! Minimal dense tensors shared by the compression pipeline.
+//!
+//! The coordinator only ever needs two element types: `f32` master
+//! weights (cloud side) and `u8` quantization symbols (both uint8 levels
+//! and uint4 levels stored one-per-byte before packing/encoding). A
+//! full ndarray library would be overkill; shape bookkeeping plus a few
+//! constructors is all the pipeline touches.
+
+use crate::{Error, Result};
+
+/// Tensor shape (row-major).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// Rank.
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Dimensions.
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+}
+
+impl From<Vec<usize>> for Shape {
+    fn from(v: Vec<usize>) -> Self {
+        Shape(v)
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(v: &[usize]) -> Self {
+        Shape(v.to_vec())
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, "x")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Dense row-major `f32` tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF32 {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+impl TensorF32 {
+    /// Construct from shape + data; the lengths must agree.
+    pub fn new(shape: impl Into<Shape>, data: Vec<f32>) -> Result<Self> {
+        let shape = shape.into();
+        if shape.numel() != data.len() {
+            return Err(Error::InvalidArg(format!(
+                "shape {shape} wants {} elements, got {}",
+                shape.numel(),
+                data.len()
+            )));
+        }
+        Ok(TensorF32 { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: impl Into<Shape>) -> Self {
+        let shape = shape.into();
+        let n = shape.numel();
+        TensorF32 {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Shape accessor.
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    /// Flat data.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat data.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the flat buffer.
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Element count.
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// (min, max) over the data; `None` for empty tensors.
+    pub fn min_max(&self) -> Option<(f32, f32)> {
+        if self.data.is_empty() {
+            return None;
+        }
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        for &v in &self.data {
+            mn = mn.min(v);
+            mx = mx.max(v);
+        }
+        Some((mn, mx))
+    }
+}
+
+/// Dense row-major `u8` tensor of quantization symbols.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorU8 {
+    shape: Shape,
+    data: Vec<u8>,
+}
+
+impl TensorU8 {
+    /// Construct from shape + data; the lengths must agree.
+    pub fn new(shape: impl Into<Shape>, data: Vec<u8>) -> Result<Self> {
+        let shape = shape.into();
+        if shape.numel() != data.len() {
+            return Err(Error::InvalidArg(format!(
+                "shape {shape} wants {} elements, got {}",
+                shape.numel(),
+                data.len()
+            )));
+        }
+        Ok(TensorU8 { shape, data })
+    }
+
+    /// Shape accessor.
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    /// Flat data.
+    pub fn data(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// Consume into the flat buffer.
+    pub fn into_data(self) -> Vec<u8> {
+        self.data
+    }
+
+    /// Element count.
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_numel_and_display() {
+        let s: Shape = vec![2, 3, 4].into();
+        assert_eq!(s.numel(), 24);
+        assert_eq!(s.rank(), 3);
+        assert_eq!(s.to_string(), "[2x3x4]");
+    }
+
+    #[test]
+    fn tensor_rejects_mismatched_data() {
+        assert!(TensorF32::new(vec![2, 2], vec![1.0; 3]).is_err());
+        assert!(TensorU8::new(vec![5], vec![0u8; 4]).is_err());
+    }
+
+    #[test]
+    fn min_max() {
+        let t = TensorF32::new(vec![4], vec![-1.5, 0.0, 3.25, 2.0]).unwrap();
+        assert_eq!(t.min_max(), Some((-1.5, 3.25)));
+        assert_eq!(TensorF32::zeros(vec![0]).min_max(), None);
+    }
+}

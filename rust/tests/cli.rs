@@ -1,0 +1,127 @@
+//! End-to-end tests of the `entrollm` CLI binary (subprocess level):
+//! the exact commands a user runs, against the real artifacts.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn bin() -> PathBuf {
+    // target/release|debug/entrollm next to this test binary.
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // release|debug/
+    p.push("entrollm");
+    p
+}
+
+fn have_artifacts() -> bool {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(bin())
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn entrollm");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_lists_commands() {
+    let (ok, text) = run(&["help"]);
+    assert!(ok);
+    for cmd in ["compress", "inspect", "serve", "latency", "eval-ppl"] {
+        assert!(text.contains(cmd), "help must mention {cmd}");
+    }
+}
+
+#[test]
+fn unknown_command_fails_with_message() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"));
+}
+
+#[test]
+fn latency_runs_without_artifacts() {
+    let (ok, text) = run(&["latency", "--params", "1e9"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("token gen"));
+    assert!(text.contains("uint4"));
+}
+
+#[test]
+fn compress_inspect_decode_bench_pipeline() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let tmp = std::env::temp_dir().join(format!("cli_elm_{}.elm", std::process::id()));
+    let tmp_s = tmp.to_str().unwrap();
+
+    let (ok, text) = run(&["compress", "--bits", "u4", "--out", tmp_s]);
+    assert!(ok, "{text}");
+    assert!(text.contains("effective bits"), "{text}");
+
+    let (ok, text) = run(&["inspect", "--model", tmp_s, "--histogram"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("ELM container"), "{text}");
+    assert!(text.contains("symbol stats"), "{text}");
+
+    let (ok, text) = run(&["decode-bench", "--model", tmp_s, "--threads", "2", "--repeat", "1"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("Msym/s"), "{text}");
+
+    std::fs::remove_file(&tmp).ok();
+}
+
+#[test]
+fn eval_ppl_quality_ordering_via_cli() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let ppl = |flavor: &str| -> f64 {
+        let (ok, text) = run(&["eval-ppl", "--flavor", flavor, "--windows", "4"]);
+        assert!(ok, "{text}");
+        // "...| char-ppl 4.4399 (4 windows)"
+        let marker = "char-ppl ";
+        let i = text.find(marker).expect("ppl line") + marker.len();
+        text[i..]
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .expect("ppl number")
+    };
+    let p8 = ppl("u8");
+    let p4 = ppl("u4");
+    assert!(p8 < p4, "u8 ppl {p8} must beat u4 {p4}");
+}
+
+#[test]
+fn generate_produces_text() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (ok, text) = run(&[
+        "generate",
+        "--flavor",
+        "u8",
+        "--prompt",
+        "the model",
+        "--max-tokens",
+        "8",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("response 1"), "{text}");
+    assert!(text.contains("8 tokens"), "{text}");
+}
