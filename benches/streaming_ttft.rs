@@ -1,0 +1,145 @@
+//! Eager vs **streaming** time-to-first-token (TTFT) for the ELM decode
+//! path — the number the `decode::stream` subsystem exists to shrink.
+//!
+//! Eager ([`entrollm::decode::ParallelDecoder`]) is a barrier: the first
+//! weight is usable only after the *whole* container decodes. Streaming
+//! ([`entrollm::decode::StreamingDecoder`]) hands the first layer over
+//! after roughly `prefetch/L` of the decode, and hides the rest behind
+//! per-layer staging/compute. This bench measures both on a synthetic
+//! model, then prints the modeled Jetson/Table-II numbers where the gap
+//! is at edge scale.
+
+use entrollm::bench::{fmt_secs, Bench};
+use entrollm::coordinator::{fnv1a64, FNV1A64_INIT};
+use entrollm::decode::{ParallelDecoder, StreamingDecoder};
+use entrollm::device::{table2_workloads, LatencyModel, JETSON_P3450};
+use entrollm::metrics::Table;
+use entrollm::pipeline::synthetic_layers;
+use entrollm::quant::BitWidth;
+use entrollm::store::compress;
+use std::sync::Arc;
+
+/// Cheap per-layer "staging" stand-in (what the runtime does with each
+/// tensor as it arrives): a full pass over the symbol bytes.
+fn stage(symbols: &[u8]) -> u64 {
+    fnv1a64(FNV1A64_INIT, symbols)
+}
+
+fn main() {
+    let n_layers = 32usize;
+    let threads = 4usize;
+    let layers = synthetic_layers(n_layers, 0x7751);
+    let (model, report) = compress(&layers, BitWidth::U8).unwrap();
+    let model = Arc::new(model);
+    println!(
+        "synthetic model: {n_layers} layers, {} params, {:.3} effective bits\n",
+        report.n_params, report.effective_bits
+    );
+
+    let bench = Bench::new();
+    let mut table = Table::new(
+        "Streaming vs eager TTFT (measured on this host + modeled Jetson)",
+        &["config", "first weight / TTFT", "note"],
+    );
+
+    // Eager: time until ANY weight is usable = the whole decode.
+    let eager_stats = bench.run("eager: full parallel decode", || {
+        std::hint::black_box(ParallelDecoder::new(threads).decode_model(&model).unwrap());
+    });
+    let eager_first = eager_stats.median.as_secs_f64();
+    table.row(&[
+        "measured eager (first weight)".into(),
+        fmt_secs(eager_first),
+        "barrier: first weight after full decode".into(),
+    ]);
+
+    // Streaming: time until the FIRST layer is delivered.
+    let mut streaming_first = f64::MAX;
+    for prefetch in [1usize, 4, 8] {
+        let stats = bench.run(&format!("streaming: first layer (prefetch {prefetch})"), || {
+            let mut stream = StreamingDecoder::new(threads, prefetch)
+                .stream(Arc::clone(&model))
+                .unwrap();
+            std::hint::black_box(stream.next_layer().unwrap().unwrap());
+            // Dropping the stream cancels the remaining decode.
+        });
+        let t = stats.median.as_secs_f64();
+        streaming_first = streaming_first.min(t);
+        table.row(&[
+            format!("measured streaming prefetch={prefetch} (first weight)"),
+            fmt_secs(t),
+            format!("{:.2}x earlier than eager", eager_first / t.max(1e-12)),
+        ]);
+    }
+
+    // End-to-end: decode + per-layer staging, serial barrier vs overlap.
+    let (sum_eager, eager_e2e) = bench.once("eager decode + stage all", || {
+        let (tensors, _) = ParallelDecoder::new(threads).decode_model(&model).unwrap();
+        tensors
+            .iter()
+            .map(|t| stage(t.symbols.data()))
+            .fold(0u64, u64::wrapping_add)
+    });
+    let (sum_stream, stream_e2e) = bench.once("streaming decode + stage overlapped", || {
+        let mut stream = StreamingDecoder::new(threads, 4)
+            .stream(Arc::clone(&model))
+            .unwrap();
+        let mut acc = 0u64;
+        while let Some(layer) = stream.next_layer() {
+            acc = acc.wrapping_add(stage(layer.unwrap().tensor.symbols.data()));
+        }
+        acc
+    });
+    assert_eq!(sum_eager, sum_stream, "staged identical weights");
+    table.row(&[
+        "measured e2e eager (decode then stage)".into(),
+        fmt_secs(eager_e2e.as_secs_f64()),
+        "staging starts after the barrier".into(),
+    ]);
+    table.row(&[
+        "measured e2e streaming (stage overlaps)".into(),
+        fmt_secs(stream_e2e.as_secs_f64()),
+        format!(
+            "{:.2}x vs eager e2e",
+            eager_e2e.as_secs_f64() / stream_e2e.as_secs_f64().max(1e-12)
+        ),
+    ]);
+
+    // Modeled at edge scale: phi3-class model on the Jetson profile.
+    let m = LatencyModel::new(JETSON_P3450);
+    let (_, with) = table2_workloads(3_800_000_000, 8, 5.58, 512, threads, 1.0);
+    let eager_ttft = m.breakdown(&with).first_token;
+    table.row(&[
+        "modeled Jetson eager TTFT".into(),
+        fmt_secs(eager_ttft),
+        "decode barrier + prefill + 1 token".into(),
+    ]);
+    let mut streaming_wins = true;
+    for prefetch in [1usize, 2, 4, 8, 16, n_layers] {
+        let t = m.streaming_first_token(&with, n_layers, prefetch);
+        let wins = t < eager_ttft - 1e-12;
+        if prefetch < n_layers && !wins {
+            streaming_wins = false;
+        }
+        table.row(&[
+            format!("modeled Jetson streaming prefetch={prefetch}/{n_layers}"),
+            fmt_secs(t),
+            if prefetch < n_layers {
+                format!("{} ({:.2}x)", if wins { "WIN" } else { "LOSS" }, eager_ttft / t)
+            } else {
+                "degenerates to eager (full window)".into()
+            },
+        ]);
+    }
+
+    table.emit("streaming_ttft");
+    assert!(
+        streaming_wins,
+        "streaming TTFT must beat eager whenever prefetch < total layers"
+    );
+    assert!(
+        streaming_first < eager_first,
+        "first streamed weight ({streaming_first}s) must arrive before eager \
+         finishes its full decode ({eager_first}s)"
+    );
+}

@@ -9,14 +9,19 @@
 //!   is **not Shannon-rate optimal**, which is exactly the paper's
 //!   argument for Huffman. The `baseline_codebook` bench regenerates
 //!   that comparison;
-//! * [`gzip_bytes`] — DEFLATE over the packed weights, a strong generic
-//!   entropy+dictionary baseline.
+//! * [`gzip_bytes`] — a generic self-contained entropy-coded baseline
+//!   over the packed weights. **Not DEFLATE**: the offline build has no
+//!   DEFLATE library, so this is the crate's own order-0 Huffman codec
+//!   with an embedded code table (name kept for API continuity). Real
+//!   gzip adds LZ77 matching and would compress *harder*, so treat this
+//!   row as a lower bound on what a general-purpose compressor achieves
+//!   — never as evidence of ELM's advantage over real gzip.
 
 use crate::bitio::{pack_u4, unpack_u4, BitReader, BitWriter};
+use crate::huffman::{CodeSpec, Decoder, Encoder, FreqTable};
 use crate::quant::BitWidth;
 use crate::{Error, Result};
 use std::collections::HashMap;
-use std::io::{Read, Write};
 
 /// Pack quantization symbols at their fixed width (no entropy coding).
 pub fn fixed_pack(symbols: &[u8], bits: BitWidth) -> Result<Vec<u8>> {
@@ -42,19 +47,52 @@ pub fn fixed_unpack(packed: &[u8], bits: BitWidth, n: usize) -> Result<Vec<u8>> 
     }
 }
 
-/// DEFLATE-compress a byte buffer (generic baseline).
+/// Generic entropy-coded compression of a byte buffer — an **order-0
+/// Huffman stand-in for gzip**, not DEFLATE (see module docs: it
+/// under-compresses vs real gzip, so it bounds the generic baseline
+/// from below). Layout: `"EGZ1" | u64 n | 256 code lengths | huffman
+/// payload` (header omitted entirely for empty input beyond the count).
 pub fn gzip_bytes(data: &[u8]) -> Result<Vec<u8>> {
-    let mut enc = flate2::write::GzEncoder::new(Vec::new(), flate2::Compression::default());
-    enc.write_all(data)?;
-    Ok(enc.finish()?)
+    let mut out = Vec::with_capacity(data.len() / 2 + 270);
+    out.extend_from_slice(b"EGZ1");
+    out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+    if data.is_empty() {
+        return Ok(out);
+    }
+    let freq = FreqTable::from_symbols(data);
+    let spec = CodeSpec::build(&freq)?;
+    out.extend_from_slice(spec.lengths());
+    let payload = Encoder::new(&spec).encode_to_vec(data)?;
+    out.extend_from_slice(&payload);
+    Ok(out)
 }
 
 /// Decompress [`gzip_bytes`] output.
 pub fn gunzip_bytes(data: &[u8]) -> Result<Vec<u8>> {
-    let mut dec = flate2::read::GzDecoder::new(data);
-    let mut out = Vec::new();
-    dec.read_to_end(&mut out)?;
-    Ok(out)
+    if data.len() < 12 || &data[..4] != b"EGZ1" {
+        return Err(Error::Format("bad EGZ1 header".into()));
+    }
+    let n = u64::from_le_bytes(data[4..12].try_into().expect("8 bytes"));
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    if data.len() < 12 + 256 {
+        return Err(Error::Format("EGZ1 truncated before code table".into()));
+    }
+    // Every symbol costs at least one bit, so a header claiming more
+    // symbols than the payload has bits is corrupt — reject while the
+    // count is still u64 (casting first would silently truncate on
+    // 32-bit targets and bypass this guard), and before allocating the
+    // output buffer.
+    let payload_bits = (data.len() as u64 - 268) * 8;
+    if n > payload_bits {
+        return Err(Error::Format(format!(
+            "EGZ1 claims {n} symbols but payload holds only {payload_bits} bits"
+        )));
+    }
+    let spec = CodeSpec::from_lengths(&data[12..268])?;
+    let dec = Decoder::new(&spec)?;
+    dec.decode(&data[268..], n as usize)
 }
 
 /// Number of dictionary slots for symbol pairs.
@@ -205,6 +243,23 @@ mod tests {
         let z = gzip_bytes(&data).unwrap();
         assert_eq!(gunzip_bytes(&z).unwrap(), data);
         assert!(z.len() < data.len());
+    }
+
+    #[test]
+    fn gzip_handles_empty_and_rejects_garbage() {
+        let z = gzip_bytes(&[]).unwrap();
+        assert_eq!(gunzip_bytes(&z).unwrap(), Vec::<u8>::new());
+        assert!(gunzip_bytes(b"NOPE").is_err());
+        assert!(gunzip_bytes(&z[..3]).is_err());
+        // Truncated code table is rejected.
+        let full = gzip_bytes(&[1, 2, 3, 1, 2, 3]).unwrap();
+        assert!(gunzip_bytes(&full[..20]).is_err());
+        // A header claiming an absurd symbol count must error cleanly
+        // instead of attempting the allocation.
+        let mut bomb = b"EGZ1".to_vec();
+        bomb.extend_from_slice(&u64::MAX.to_le_bytes());
+        bomb.extend_from_slice(&full[12..]);
+        assert!(gunzip_bytes(&bomb).is_err());
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! executables ([`PjrtBackend`]).
 
 use super::kv::KvMirror;
-use crate::runtime::{ModelRuntime, PrefillOut};
+use crate::runtime::{ModelRuntime, PrefillOut, WeightSet};
 use crate::Result;
 
 /// Shape constants the engine needs from a backend.
@@ -190,6 +190,158 @@ impl Backend for MockBackend {
     }
 }
 
+// ----------------------------------------------------------------- digest
+
+/// FNV-1a 64-bit offset basis (pair with [`fnv1a64`]).
+pub const FNV1A64_INIT: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// One FNV-1a 64-bit fold step: feed `bytes` into state `h`. The single
+/// FNV implementation in the crate — [`digest_weights`] and the benches
+/// both build on it so the constants can never drift apart.
+pub fn fnv1a64(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// FNV-1a digest over every tensor of a [`WeightSet`] — names sorted,
+/// so the digest is independent of *arrival order* but sensitive to
+/// every symbol, shape, and quantization parameter. Two weight sets
+/// digest equal iff they hold bit-identical weights, which is exactly
+/// the property the streaming-vs-eager losslessness tests assert.
+pub fn digest_weights(ws: &WeightSet) -> u64 {
+    let mix = fnv1a64;
+    // Every variable-length field is length-prefixed so the byte
+    // stream is an injective encoding of the weight set — without the
+    // prefixes, name bytes could masquerade as dim/data bytes and two
+    // different sets could digest equal by construction.
+    let mut h: u64 = FNV1A64_INIT;
+    let mut qnames: Vec<&String> = ws.quants.keys().collect();
+    qnames.sort();
+    h = mix(h, &(qnames.len() as u64).to_le_bytes());
+    for name in qnames {
+        let q = &ws.quants[name];
+        h = mix(h, &(name.len() as u64).to_le_bytes());
+        h = mix(h, name.as_bytes());
+        let dims = q.symbols.shape().dims();
+        h = mix(h, &(dims.len() as u64).to_le_bytes());
+        for &d in dims {
+            h = mix(h, &(d as u64).to_le_bytes());
+        }
+        h = mix(h, &(q.symbols.data().len() as u64).to_le_bytes());
+        h = mix(h, q.symbols.data());
+        h = mix(h, &[q.params.scheme.tag(), q.params.bits.bits() as u8]);
+        h = mix(h, &q.params.scale.to_le_bytes());
+        h = mix(h, &q.params.zero_point.to_le_bytes());
+    }
+    let mut fnames: Vec<&String> = ws.f32s.keys().collect();
+    fnames.sort();
+    h = mix(h, &(fnames.len() as u64).to_le_bytes());
+    for name in fnames {
+        let t = &ws.f32s[name];
+        h = mix(h, &(name.len() as u64).to_le_bytes());
+        h = mix(h, name.as_bytes());
+        let dims = t.shape().dims();
+        h = mix(h, &(dims.len() as u64).to_le_bytes());
+        for &d in dims {
+            h = mix(h, &(d as u64).to_le_bytes());
+        }
+        h = mix(h, &(t.data().len() as u64).to_le_bytes());
+        for &x in t.data() {
+            h = mix(h, &x.to_le_bytes());
+        }
+    }
+    h
+}
+
+/// Deterministic backend whose generation is a pure function of a
+/// weight digest: two `DigestBackend`s generate identical tokens iff
+/// their weight sets are bit-identical. Stands in for the PJRT backend
+/// in token-level losslessness tests (eager vs. streaming load) and in
+/// benches on hosts without the real runtime.
+pub struct DigestBackend {
+    /// Shape constants.
+    pub cfg: BackendCfg,
+    digest: u64,
+    /// Decode steps executed.
+    pub steps: usize,
+    /// Prefills executed.
+    pub prefills: usize,
+}
+
+impl DigestBackend {
+    /// Backend over a weight set (digest computed here).
+    pub fn from_weights(ws: &WeightSet, batch: usize, max_seq: usize, vocab: usize) -> Self {
+        Self::with_digest(digest_weights(ws), batch, max_seq, vocab)
+    }
+
+    /// Backend over a precomputed digest.
+    pub fn with_digest(digest: u64, batch: usize, max_seq: usize, vocab: usize) -> Self {
+        DigestBackend {
+            cfg: BackendCfg {
+                batch,
+                max_seq,
+                prefill_len: (max_seq / 2).max(1),
+                vocab,
+            },
+            digest,
+            steps: 0,
+            prefills: 0,
+        }
+    }
+
+    /// The weight digest driving generation.
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    fn onehot(&self, tok: u64) -> Vec<f32> {
+        let mut l = vec![0.0f32; self.cfg.vocab];
+        l[(tok % self.cfg.vocab as u64) as usize] = 10.0;
+        l
+    }
+}
+
+impl Backend for DigestBackend {
+    fn cfg(&self) -> BackendCfg {
+        self.cfg
+    }
+
+    fn prefill(&mut self, prompt: &[u32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.prefills += 1;
+        let mut h = self.digest;
+        for &t in prompt {
+            h = h.rotate_left(7) ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        }
+        let next = h % self.cfg.vocab as u64;
+        let kv = vec![next as f32; 8];
+        Ok((self.onehot(next), kv.clone(), kv))
+    }
+
+    fn set_slot(&mut self, _slot: usize, _k1: &[f32], _v1: &[f32]) -> Result<()> {
+        // Generation is digest-driven; there is no KV state to splice.
+        Ok(())
+    }
+
+    fn decode(&mut self, tokens: &[u32], pos: &[u32]) -> Result<Vec<f32>> {
+        assert_eq!(tokens.len(), self.cfg.batch);
+        assert_eq!(pos.len(), self.cfg.batch);
+        self.steps += 1;
+        let mut out = Vec::with_capacity(self.cfg.batch * self.cfg.vocab);
+        for (slot, (&t, &p)) in tokens.iter().zip(pos).enumerate() {
+            let mixed = self
+                .digest
+                .rotate_left((slot as u32 % 63) + 1)
+                ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ ((p as u64) << 20);
+            out.extend_from_slice(&self.onehot(mixed % self.cfg.vocab as u64));
+        }
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,5 +363,67 @@ mod tests {
         let row = |s: usize| &logits[s * 32..(s + 1) * 32];
         assert_eq!(crate::coordinator::sampler::argmax(row(0)), 6);
         assert_eq!(crate::coordinator::sampler::argmax(row(1)), 7);
+    }
+
+    fn sample_weightset() -> WeightSet {
+        use crate::quant::{quantize_mixed, BitWidth};
+        use crate::tensor::TensorF32;
+        let mut ws = WeightSet::begin_streaming(vec![(
+            "ln.w".into(),
+            TensorF32::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+        )]);
+        for i in 0..3 {
+            let t = TensorF32::new(
+                vec![8],
+                (0..8).map(|j| (i * 8 + j) as f32 * 0.01 - 0.1).collect(),
+            )
+            .unwrap();
+            ws.insert_quantized(format!("l{i}"), quantize_mixed(&t, BitWidth::U8));
+        }
+        ws
+    }
+
+    #[test]
+    fn digest_is_order_independent_but_content_sensitive() {
+        let a = sample_weightset();
+        let b = sample_weightset();
+        assert_eq!(digest_weights(&a), digest_weights(&b));
+
+        // Same layers inserted in reverse order digest identically.
+        let mut rev = WeightSet::begin_streaming(vec![(
+            "ln.w".into(),
+            crate::tensor::TensorF32::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+        )]);
+        let mut names: Vec<String> = a.quants.keys().cloned().collect();
+        names.sort();
+        for name in names.iter().rev() {
+            rev.insert_quantized(name.clone(), a.quants[name].clone());
+        }
+        assert_eq!(digest_weights(&a), digest_weights(&rev));
+
+        // Flipping one symbol changes the digest.
+        let mut c = sample_weightset();
+        let q = c.quants.get_mut("l1").unwrap();
+        let mut data = q.symbols.data().to_vec();
+        data[0] ^= 1;
+        q.symbols = crate::tensor::TensorU8::new(q.symbols.shape().clone(), data).unwrap();
+        assert_ne!(digest_weights(&a), digest_weights(&c));
+    }
+
+    #[test]
+    fn digest_backend_tokens_depend_only_on_digest() {
+        let ws = sample_weightset();
+        let mut b1 = DigestBackend::from_weights(&ws, 2, 16, 64);
+        let mut b2 = DigestBackend::from_weights(&ws, 2, 16, 64);
+        let (l1, _, _) = b1.prefill(&[3, 4, 5]).unwrap();
+        let (l2, _, _) = b2.prefill(&[3, 4, 5]).unwrap();
+        assert_eq!(l1, l2);
+        let d1 = b1.decode(&[5, 9], &[1, 2]).unwrap();
+        let d2 = b2.decode(&[5, 9], &[1, 2]).unwrap();
+        assert_eq!(d1, d2);
+
+        let mut other = DigestBackend::with_digest(b1.digest() ^ 1, 2, 16, 64);
+        let (l3, _, _) = other.prefill(&[3, 4, 5]).unwrap();
+        assert_ne!(l1, l3, "digest must steer generation");
     }
 }

@@ -21,7 +21,10 @@ pub mod kv;
 pub mod request;
 pub mod sampler;
 
-pub use backend::{Backend, BackendCfg, MockBackend, PjrtBackend};
+pub use backend::{
+    digest_weights, fnv1a64, Backend, BackendCfg, DigestBackend, MockBackend, PjrtBackend,
+    FNV1A64_INIT,
+};
 pub use batcher::{AdmissionQueue, QueueStats};
 pub use engine::{Engine, EngineConfig, EngineStats};
 pub use kv::KvMirror;

@@ -17,8 +17,10 @@
 //! (ablation bench `ablation_decode`).
 
 mod schedule;
+pub mod stream;
 
 pub use schedule::{Assignment, Strategy};
+pub use stream::{DecodedLayer, LayerStream, StreamConfig, StreamStats, StreamingDecoder};
 
 use crate::huffman::Decoder;
 use crate::quant::QuantizedTensor;
@@ -137,13 +139,8 @@ impl ParallelDecoder {
                         let mut symbols = 0usize;
                         for idx in indices {
                             let meta = &model.layers[idx];
+                            model.verify_segment(idx)?;
                             let seg = model.segment(idx);
-                            if crc32fast::hash(seg) != meta.crc32 {
-                                return Err(Error::Format(format!(
-                                    "layer {:?}: segment CRC mismatch",
-                                    meta.name
-                                )));
-                            }
                             let mut buf = vec![0u8; meta.n_symbols];
                             decoder.decode_into(seg, &mut buf)?;
                             encoded_bytes += seg.len();

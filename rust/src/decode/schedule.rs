@@ -56,6 +56,19 @@ pub enum Strategy {
     /// needs sizes up front (the ELM manifest has them), included to
     /// show how close the paper's cheap shuffle gets to explicit packing.
     LargestFirst,
+    /// Streaming assignment ([`crate::decode::StreamingDecoder`]): deal
+    /// segments within consecutive execution-order windows of `window`
+    /// segments, each window largest-first to the least-loaded thread
+    /// (fewest segments, then fewest bytes). Globally this keeps every
+    /// thread's list close to execution order — which a bounded
+    /// prefetch window requires so the front of the window is always
+    /// being decoded — while still balancing skewed segment sizes
+    /// inside each window. Per-thread lists come out sorted ascending.
+    Windowed {
+        /// Window length in segments (the streaming decoder passes its
+        /// prefetch depth).
+        window: usize,
+    },
 }
 
 impl Strategy {
@@ -100,6 +113,32 @@ impl Strategy {
                     let t = (0..threads).min_by_key(|&t| load[t]).unwrap();
                     load[t] += sizes[idx];
                     per_thread[t].push(idx);
+                }
+            }
+            Strategy::Windowed { window } => {
+                let w = window.max(1);
+                let mut counts = vec![0usize; threads];
+                let mut load = vec![0usize; threads];
+                let mut start = 0usize;
+                while start < n {
+                    let end = (start + w).min(n);
+                    let mut win: Vec<usize> = (start..end).collect();
+                    win.sort_by_key(|&i| std::cmp::Reverse(sizes[i]));
+                    for idx in win {
+                        // Fewest segments first keeps counts within one
+                        // of each other; byte load breaks ties.
+                        let t = (0..threads)
+                            .min_by_key(|&t| (counts[t], load[t], t))
+                            .unwrap();
+                        counts[t] += 1;
+                        load[t] += sizes[idx];
+                        per_thread[t].push(idx);
+                    }
+                    start = end;
+                }
+                // Each worker must decode its list in execution order.
+                for list in per_thread.iter_mut() {
+                    list.sort_unstable();
                 }
             }
         }
@@ -209,6 +248,93 @@ mod tests {
         let lpt = Strategy::LargestFirst.imbalance_for_sizes(&sizes, 4);
         assert!(lpt <= via_sizes + 1e-9);
         assert!(lpt < 1.05, "LPT imbalance {lpt}");
+    }
+
+    fn all_strategies() -> Vec<Strategy> {
+        vec![
+            Strategy::Shuffled { seed: 7 },
+            Strategy::Contiguous,
+            Strategy::Chunked,
+            Strategy::LargestFirst,
+            Strategy::Windowed { window: 4 },
+            Strategy::Windowed { window: 1 },
+        ]
+    }
+
+    #[test]
+    fn every_segment_assigned_exactly_once_for_1_2_4_8_threads() {
+        for n in [1usize, 2, 3, 7, 8, 37, 100] {
+            let sizes: Vec<usize> = (0..n).map(|i| 50 + (i * 997) % 4000).collect();
+            for strat in all_strategies() {
+                for threads in [1usize, 2, 4, 8] {
+                    let a = strat.assign_sizes(&sizes, threads);
+                    assert_eq!(a.per_thread.len(), threads);
+                    let mut seen = vec![false; n];
+                    for list in &a.per_thread {
+                        for &i in list {
+                            assert!(!seen[i], "{strat:?} t{threads}: segment {i} twice");
+                            seen[i] = true;
+                        }
+                    }
+                    assert!(
+                        seen.iter().all(|&s| s),
+                        "{strat:?} t{threads}: some segment unassigned"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_thread_idle_while_another_holds_two_or_more() {
+        // The fairness invariant behind every strategy: work only piles
+        // two-deep on a thread once every thread has something to do.
+        let mut rng = Rng::new(0x1D1E);
+        for _ in 0..40 {
+            let n = 1 + rng.below(50);
+            // Heavily skewed sizes to stress the size-aware strategies.
+            let sizes: Vec<usize> = (0..n)
+                .map(|_| if rng.below(5) == 0 { 100_000 } else { 10 + rng.below(500) })
+                .collect();
+            for strat in all_strategies() {
+                for threads in [1usize, 2, 4, 8] {
+                    let a = strat.assign_sizes(&sizes, threads);
+                    let counts: Vec<usize> = a.per_thread.iter().map(|l| l.len()).collect();
+                    let min = *counts.iter().min().unwrap();
+                    let max = *counts.iter().max().unwrap();
+                    assert!(
+                        !(min == 0 && max >= 2),
+                        "{strat:?} t{threads} n{n}: idle thread while another holds {max}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn windowed_streaming_lists_are_execution_ordered_and_count_balanced() {
+        let mut rng = Rng::new(0x3AF);
+        for _ in 0..25 {
+            let n = 1 + rng.below(80);
+            let sizes: Vec<usize> = (0..n).map(|_| 10 + rng.below(9000)).collect();
+            let window = 1 + rng.below(8);
+            for threads in [1usize, 2, 4, 8] {
+                let a = Strategy::Windowed { window }.assign_sizes(&sizes, threads);
+                let mut counts = Vec::new();
+                for list in &a.per_thread {
+                    // Ascending order is what the bounded prefetch window
+                    // relies on for deadlock freedom.
+                    assert!(
+                        list.windows(2).all(|w| w[0] < w[1]),
+                        "list not execution-ordered: {list:?}"
+                    );
+                    counts.push(list.len());
+                }
+                let min = *counts.iter().min().unwrap();
+                let max = *counts.iter().max().unwrap();
+                assert!(max - min <= 1, "counts {counts:?} spread > 1");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,576 @@
+//! Streaming layer-ahead ELM decode with a **bounded prefetch window**.
+//!
+//! [`super::ParallelDecoder`] realizes the paper's §III-C decode — but
+//! as a barrier: the engine sees no weights until *every* segment has
+//! been decoded, so time-to-first-token pays the whole decode up front
+//! (the serial bottleneck Huff-LLM, arXiv:2502.00922, pipelines away).
+//! [`StreamingDecoder`] removes the barrier: worker threads walk the
+//! container's segments in execution order and the consumer receives
+//! each [`QuantizedTensor`] the moment it is ready, in order, while
+//! later layers are still being decoded.
+//!
+//! The window is bounded: workers never run more than
+//! `prefetch_layers` layers ahead of the consumer's cursor, so peak
+//! resident decoded-but-unconsumed memory is `O(window)` layers instead
+//! of the whole model — the property that lets a memory-limited edge
+//! device start serving before the model fits decoded in RAM.
+//!
+//! Concurrency shape: one [`Strategy::Windowed`] static assignment
+//! (each worker's list ascending in execution order), one mutex-guarded
+//! exchange holding at most `window` decoded layers, two condvars
+//! (consumer waits for the next layer; workers wait for window space).
+//! Deadlock freedom: the consumer always waits for layer `delivered`,
+//! and the worker owning `delivered` is never window-blocked because
+//! its cursor is `<= delivered < delivered + window`.
+
+use super::schedule::Strategy;
+use super::ThreadStats;
+use crate::huffman::Decoder;
+use crate::quant::QuantizedTensor;
+use crate::store::ElmModel;
+use crate::tensor::TensorU8;
+use crate::{Error, Result};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Streaming decode configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamConfig {
+    /// Worker thread count (`T` in Algorithm 1).
+    pub threads: usize,
+    /// Prefetch window: decoded-but-undelivered layers never exceed
+    /// this bound (>= 1).
+    pub prefetch_layers: usize,
+    /// Segment→worker assignment. Defaults to
+    /// [`Strategy::Windowed`] with `window = prefetch_layers`.
+    pub strategy: Strategy,
+}
+
+impl StreamConfig {
+    /// Config with the default (windowed) assignment.
+    pub fn new(threads: usize, prefetch_layers: usize) -> Self {
+        let prefetch = prefetch_layers.max(1);
+        StreamConfig {
+            threads: threads.max(1),
+            prefetch_layers: prefetch,
+            strategy: Strategy::Windowed { window: prefetch },
+        }
+    }
+}
+
+/// One decoded layer, delivered in execution order.
+#[derive(Debug, Clone)]
+pub struct DecodedLayer {
+    /// Layer index in execution (storage) order.
+    pub index: usize,
+    /// Layer name from the container manifest.
+    pub name: String,
+    /// The decoded quantized tensor.
+    pub tensor: QuantizedTensor,
+}
+
+/// Accounting for one streaming decode.
+#[derive(Debug, Clone)]
+pub struct StreamStats {
+    /// Wallclock from stream start to the stats snapshot.
+    pub wall: Duration,
+    /// Stream start → first layer delivered (the streaming win: for a
+    /// prefetch window `w` of `L` layers this is ~`w/L` of the full
+    /// decode instead of all of it).
+    pub time_to_first_layer: Duration,
+    /// Configured prefetch bound.
+    pub prefetch_layers: usize,
+    /// Largest number of decoded-but-undelivered layers resident at
+    /// once — the true memory high-water mark of the window; always
+    /// `<= prefetch_layers`.
+    pub max_layers_ahead: usize,
+    /// Per-worker accounting (busy excludes window waits).
+    pub threads: Vec<ThreadStats>,
+}
+
+impl StreamStats {
+    /// Total symbols decoded.
+    pub fn total_symbols(&self) -> usize {
+        self.threads.iter().map(|t| t.symbols).sum()
+    }
+
+    /// Total encoded bytes consumed.
+    pub fn total_encoded_bytes(&self) -> usize {
+        self.threads.iter().map(|t| t.encoded_bytes).sum()
+    }
+
+    /// Aggregate decode throughput, symbols/second.
+    pub fn symbols_per_sec(&self) -> f64 {
+        self.total_symbols() as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// View as the eager-path stats type (shared reporting helpers).
+    pub fn decode_stats(&self) -> super::DecodeStats {
+        super::DecodeStats {
+            wall: self.wall,
+            threads: self.threads.clone(),
+        }
+    }
+}
+
+struct State {
+    /// Consumer cursor: layers `< delivered` have been handed out.
+    delivered: usize,
+    /// Decoded-but-undelivered layers (at most `window` are `Some`).
+    ready: Vec<Option<QuantizedTensor>>,
+    /// First decode failure; poisons the stream.
+    error: Option<Error>,
+    /// Set when the consumer goes away; workers drain out.
+    cancelled: bool,
+    /// Decoded-but-undelivered layers currently resident (`Some`
+    /// entries in `ready`).
+    resident: usize,
+    /// High-water mark of `resident`.
+    max_resident: usize,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for window space.
+    space: Condvar,
+    /// The consumer waits here for the next layer.
+    avail: Condvar,
+    window: usize,
+}
+
+/// Streaming decoder over an [`ElmModel`].
+#[derive(Debug, Clone)]
+pub struct StreamingDecoder {
+    /// Configuration.
+    pub cfg: StreamConfig,
+}
+
+impl StreamingDecoder {
+    /// Decoder with `threads` workers and a `prefetch_layers` window.
+    pub fn new(threads: usize, prefetch_layers: usize) -> Self {
+        StreamingDecoder {
+            cfg: StreamConfig::new(threads, prefetch_layers),
+        }
+    }
+
+    /// Override the assignment strategy. The strategy decides only
+    /// *which worker owns which segments*; each worker always decodes
+    /// its list in ascending execution order (the stream re-sorts every
+    /// list), because a worker holding an out-of-order list could
+    /// window-block on a late layer while the consumer waits on its
+    /// early one — the sort is what makes any strategy deadlock-free
+    /// here.
+    pub fn with_strategy(mut self, strategy: Strategy) -> Self {
+        self.cfg.strategy = strategy;
+        self
+    }
+
+    /// Start decoding: spawns the worker pool and returns the consumer
+    /// handle. Layers are delivered strictly in execution order.
+    pub fn stream(&self, model: Arc<ElmModel>) -> Result<LayerStream> {
+        let decoder = Arc::new(Decoder::new(&model.code)?);
+        let n = model.layers.len();
+        let assignment = self.cfg.strategy.assign(&model, self.cfg.threads);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                delivered: 0,
+                ready: (0..n).map(|_| None).collect(),
+                error: None,
+                cancelled: false,
+                resident: 0,
+                max_resident: 0,
+            }),
+            space: Condvar::new(),
+            avail: Condvar::new(),
+            window: self.cfg.prefetch_layers,
+        });
+        let started = Instant::now();
+        let mut handles = Vec::with_capacity(assignment.per_thread.len());
+        for indices in &assignment.per_thread {
+            let mut indices = indices.clone();
+            // Ascending execution order within each worker is what makes
+            // the bounded window deadlock-free (see `with_strategy`);
+            // a no-op for the default Windowed assignment, which is
+            // already sorted.
+            indices.sort_unstable();
+            let model = Arc::clone(&model);
+            let decoder = Arc::clone(&decoder);
+            let shared = Arc::clone(&shared);
+            handles.push(std::thread::spawn(move || {
+                worker(&model, &decoder, &shared, indices)
+            }));
+        }
+        Ok(LayerStream {
+            model,
+            shared,
+            handles,
+            next: 0,
+            n,
+            started,
+            first_layer: None,
+            poisoned: false,
+        })
+    }
+
+    /// Decode a whole model through the streaming path, collecting the
+    /// tensors in layer order (equivalence harness for tests/benches;
+    /// real consumers drain the [`LayerStream`] incrementally). Takes
+    /// the container by `Arc` so the (potentially GB-scale) payload is
+    /// shared with the workers, never copied.
+    pub fn decode_model(
+        &self,
+        model: Arc<ElmModel>,
+    ) -> Result<(Vec<QuantizedTensor>, StreamStats)> {
+        let mut stream = self.stream(model)?;
+        let mut out = Vec::with_capacity(stream.total_layers());
+        while let Some(layer) = stream.next_layer() {
+            out.push(layer?.tensor);
+        }
+        Ok((out, stream.into_stats()))
+    }
+}
+
+fn worker(
+    model: &ElmModel,
+    decoder: &Decoder,
+    shared: &Shared,
+    indices: Vec<usize>,
+) -> ThreadStats {
+    let mut stats = ThreadStats {
+        segments: 0,
+        encoded_bytes: 0,
+        symbols: 0,
+        busy: Duration::ZERO,
+    };
+    for idx in indices {
+        // Bounded prefetch: block until `idx` is inside the window.
+        {
+            let mut st = shared.state.lock().unwrap();
+            while idx >= st.delivered + shared.window
+                && st.error.is_none()
+                && !st.cancelled
+            {
+                st = shared.space.wait(st).unwrap();
+            }
+            if st.error.is_some() || st.cancelled {
+                return stats;
+            }
+        }
+
+        let t0 = Instant::now();
+        let meta = &model.layers[idx];
+        let result = model.verify_segment(idx).and_then(|()| {
+            let mut buf = vec![0u8; meta.n_symbols];
+            decoder.decode_into(model.segment(idx), &mut buf)?;
+            Ok(QuantizedTensor {
+                symbols: TensorU8::new(meta.shape.clone(), buf)?,
+                params: meta.params,
+            })
+        });
+        stats.busy += t0.elapsed();
+
+        let mut st = shared.state.lock().unwrap();
+        match result {
+            Ok(tensor) => {
+                stats.segments += 1;
+                stats.encoded_bytes += meta.encoded_len;
+                stats.symbols += meta.n_symbols;
+                // All resident layers lie in `[delivered, delivered +
+                // window)`, so the high-water mark is bounded by the
+                // prefetch window.
+                st.resident += 1;
+                st.max_resident = st.max_resident.max(st.resident);
+                st.ready[idx] = Some(tensor);
+                shared.avail.notify_all();
+            }
+            Err(e) => {
+                if st.error.is_none() {
+                    st.error = Some(e);
+                }
+                shared.avail.notify_all();
+                shared.space.notify_all();
+                return stats;
+            }
+        }
+    }
+    stats
+}
+
+/// Consumer handle of a streaming decode: yields layers in execution
+/// order as they become available, then exposes the run's stats.
+pub struct LayerStream {
+    model: Arc<ElmModel>,
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<ThreadStats>>,
+    next: usize,
+    n: usize,
+    started: Instant,
+    first_layer: Option<Duration>,
+    poisoned: bool,
+}
+
+impl LayerStream {
+    /// Total layers this stream will deliver.
+    pub fn total_layers(&self) -> usize {
+        self.n
+    }
+
+    /// Layers delivered so far.
+    pub fn delivered(&self) -> usize {
+        self.next
+    }
+
+    /// Blocking pull of the next layer (in execution order). Returns
+    /// `None` when every layer has been delivered, or after an error
+    /// has been yielded once.
+    pub fn next_layer(&mut self) -> Option<Result<DecodedLayer>> {
+        if self.poisoned || self.next >= self.n {
+            return None;
+        }
+        let idx = self.next;
+        let mut st = self.shared.state.lock().unwrap();
+        let tensor = loop {
+            if let Some(e) = st.error.take() {
+                st.cancelled = true;
+                self.shared.space.notify_all();
+                self.shared.avail.notify_all();
+                drop(st);
+                self.poisoned = true;
+                return Some(Err(e));
+            }
+            if let Some(tensor) = st.ready[idx].take() {
+                st.delivered = idx + 1;
+                st.resident -= 1;
+                break tensor;
+            }
+            st = self.shared.avail.wait(st).unwrap();
+        };
+        drop(st);
+        // Window space opened up.
+        self.shared.space.notify_all();
+        if self.first_layer.is_none() {
+            self.first_layer = Some(self.started.elapsed());
+        }
+        self.next += 1;
+        Some(Ok(DecodedLayer {
+            index: idx,
+            name: self.model.layers[idx].name.clone(),
+            tensor,
+        }))
+    }
+
+    /// Finish the stream: cancel any remaining work, join the workers,
+    /// and return the accounting.
+    pub fn into_stats(mut self) -> StreamStats {
+        self.take_stats()
+    }
+
+    fn cancel(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.cancelled = true;
+        drop(st);
+        self.shared.space.notify_all();
+        self.shared.avail.notify_all();
+    }
+
+    fn take_stats(&mut self) -> StreamStats {
+        self.cancel();
+        let threads: Vec<ThreadStats> = self
+            .handles
+            .drain(..)
+            .map(|h| h.join().expect("stream worker panicked"))
+            .collect();
+        let st = self.shared.state.lock().unwrap();
+        StreamStats {
+            wall: self.started.elapsed(),
+            time_to_first_layer: self.first_layer.unwrap_or_default(),
+            prefetch_layers: self.shared.window,
+            max_layers_ahead: st.max_resident,
+            threads,
+        }
+    }
+}
+
+impl Iterator for LayerStream {
+    type Item = Result<DecodedLayer>;
+
+    fn next(&mut self) -> Option<Result<DecodedLayer>> {
+        self.next_layer()
+    }
+}
+
+impl Drop for LayerStream {
+    fn drop(&mut self) {
+        self.cancel();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::ParallelDecoder;
+    use crate::quant::{quantize_mixed, BitWidth};
+    use crate::rng::Rng;
+    use crate::store::compress;
+    use crate::tensor::TensorF32;
+
+    fn model_with_layers(
+        n_layers: usize,
+        seed: u64,
+        bits: BitWidth,
+    ) -> (Vec<(String, TensorF32)>, ElmModel) {
+        let mut rng = Rng::new(seed);
+        let layers: Vec<(String, TensorF32)> = (0..n_layers)
+            .map(|i| {
+                let n = 64 + rng.below(3000) * (1 + i % 3);
+                (
+                    format!("blocks.{i}.w"),
+                    TensorF32::new(vec![n], rng.gaussian_vec(n, 0.0, 0.05)).unwrap(),
+                )
+            })
+            .collect();
+        let (model, _) = compress(&layers, bits).unwrap();
+        (layers, model)
+    }
+
+    #[test]
+    fn streaming_equals_eager_decode_bitexact() {
+        let (layers, model) = model_with_layers(19, 0x51, BitWidth::U8);
+        let (eager, _) = ParallelDecoder::new(4).decode_model(&model).unwrap();
+        let model = Arc::new(model);
+        for threads in [1usize, 2, 4] {
+            for prefetch in [1usize, 2, 5, 100] {
+                let (streamed, stats) = StreamingDecoder::new(threads, prefetch)
+                    .decode_model(Arc::clone(&model))
+                    .unwrap();
+                assert_eq!(streamed.len(), layers.len());
+                for (a, b) in eager.iter().zip(&streamed) {
+                    assert_eq!(a.symbols.data(), b.symbols.data());
+                    assert_eq!(a.params, b.params);
+                }
+                assert_eq!(stats.total_symbols(), model.n_params());
+                assert_eq!(stats.total_encoded_bytes(), model.payload.len());
+            }
+        }
+    }
+
+    #[test]
+    fn layers_arrive_in_execution_order_with_names() {
+        let (_, model) = model_with_layers(11, 0x52, BitWidth::U4);
+        let model = Arc::new(model);
+        let mut stream = StreamingDecoder::new(3, 2)
+            .stream(Arc::clone(&model))
+            .unwrap();
+        let mut expected = 0usize;
+        while let Some(layer) = stream.next_layer() {
+            let layer = layer.unwrap();
+            assert_eq!(layer.index, expected);
+            assert_eq!(layer.name, model.layers[expected].name);
+            let direct = crate::store::decode_layer(&model, expected).unwrap();
+            assert_eq!(layer.tensor.symbols.data(), direct.symbols.data());
+            expected += 1;
+        }
+        assert_eq!(expected, model.layers.len());
+    }
+
+    #[test]
+    fn prefetch_window_bound_is_respected() {
+        let (_, model) = model_with_layers(24, 0x53, BitWidth::U8);
+        let model = Arc::new(model);
+        for prefetch in [1usize, 2, 4] {
+            let (_, stats) = StreamingDecoder::new(4, prefetch)
+                .decode_model(Arc::clone(&model))
+                .unwrap();
+            assert!(stats.max_layers_ahead >= 1);
+            assert!(
+                stats.max_layers_ahead <= prefetch,
+                "window {prefetch} exceeded: ahead {}",
+                stats.max_layers_ahead
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_segment_poisons_the_stream() {
+        let (_, mut model) = model_with_layers(9, 0x54, BitWidth::U8);
+        let off = model.layers[4].offset;
+        model.payload[off] ^= 0xFF;
+        let mut stream = StreamingDecoder::new(2, 2)
+            .stream(Arc::new(model))
+            .unwrap();
+        let mut saw_error = false;
+        let mut delivered = 0usize;
+        while let Some(layer) = stream.next_layer() {
+            match layer {
+                Ok(_) => delivered += 1,
+                Err(e) => {
+                    saw_error = true;
+                    assert!(e.to_string().contains("CRC"), "{e}");
+                }
+            }
+        }
+        assert!(saw_error, "corruption must surface");
+        assert!(delivered < 9, "stream must stop early");
+        // Workers must all unwind (into_stats would hang otherwise).
+        let _ = stream.into_stats();
+    }
+
+    #[test]
+    fn dropping_a_stream_midway_does_not_hang() {
+        let (_, model) = model_with_layers(16, 0x55, BitWidth::U8);
+        let mut stream = StreamingDecoder::new(4, 2)
+            .stream(Arc::new(model))
+            .unwrap();
+        // Take two layers, then walk away; Drop must cancel + join.
+        assert!(stream.next_layer().unwrap().is_ok());
+        assert!(stream.next_layer().unwrap().is_ok());
+        drop(stream);
+    }
+
+    #[test]
+    fn single_layer_single_thread_minimal_window() {
+        let (_, model) = model_with_layers(1, 0x56, BitWidth::U4);
+        let (tensors, stats) = StreamingDecoder::new(1, 1)
+            .decode_model(Arc::new(model))
+            .unwrap();
+        assert_eq!(tensors.len(), 1);
+        assert_eq!(stats.max_layers_ahead, 1);
+        assert!(stats.time_to_first_layer <= stats.wall);
+    }
+
+    #[test]
+    fn stats_account_for_all_work_across_workers() {
+        let (_, model) = model_with_layers(23, 0x57, BitWidth::U4);
+        let model = Arc::new(model);
+        let (_, stats) = StreamingDecoder::new(4, 3)
+            .decode_model(Arc::clone(&model))
+            .unwrap();
+        let segs: usize = stats.threads.iter().map(|t| t.segments).sum();
+        assert_eq!(segs, model.layers.len());
+        assert_eq!(stats.total_symbols(), model.n_params());
+        assert_eq!(stats.prefetch_layers, 3);
+    }
+
+    #[test]
+    fn property_streaming_lossless_for_random_shapes() {
+        let mut rng = Rng::new(0xF1F);
+        for _ in 0..8 {
+            let n_layers = 1 + rng.below(14);
+            let (layers, model) = model_with_layers(n_layers, rng.next_u64(), BitWidth::U4);
+            let threads = 1 + rng.below(5);
+            let prefetch = 1 + rng.below(6);
+            let (tensors, _) = StreamingDecoder::new(threads, prefetch)
+                .decode_model(Arc::new(model))
+                .unwrap();
+            for (i, (_, w)) in layers.iter().enumerate() {
+                assert_eq!(
+                    tensors[i].symbols.data(),
+                    quantize_mixed(w, BitWidth::U4).symbols.data()
+                );
+            }
+        }
+    }
+}

@@ -151,6 +151,54 @@ impl LatencyModel {
             first_token: parallel_decode + prefill.total + token_gen.total,
         }
     }
+
+    /// First-token latency when entropy decode **streams layer-ahead**
+    /// of compute with a bounded prefetch window (`decode::stream`)
+    /// instead of running as an up-front barrier.
+    ///
+    /// With `prefetch_layers` of `n_layers` (equal-cost) layers
+    /// prefetched, compute can start once the window fills — a
+    /// `prefetch/n_layers` fraction of the full decode — and the
+    /// remaining decode hides behind compute. The pipeline finishes
+    /// when its slower side does:
+    ///
+    /// ```text
+    /// ttft_streaming = max(decode_total, window_fill + prefill + one_token)
+    /// ```
+    ///
+    /// This is strictly below the eager
+    /// `decode_total + prefill + one_token` whenever
+    /// `prefetch_layers < n_layers` (the window fill is a proper
+    /// fraction of the decode), and degrades exactly to the eager
+    /// number at `prefetch_layers >= n_layers` — prefetching the whole
+    /// model *is* the eager barrier.
+    pub fn streaming_first_token(
+        &self,
+        w: &Workload,
+        n_layers: usize,
+        prefetch_layers: usize,
+    ) -> f64 {
+        let decode_total = self.parallel_decode(w);
+        let compute = self.prefill(w).total + self.token_gen(w).total;
+        if decode_total == 0.0 {
+            return compute;
+        }
+        if n_layers == 0 {
+            // Unknown layer structure: no overlap can be claimed, so
+            // report the eager barrier rather than a fabricated win.
+            return decode_total + compute;
+        }
+        let window = prefetch_layers.clamp(1, n_layers);
+        let window_fill = decode_total * window as f64 / n_layers as f64;
+        decode_total.max(window_fill + compute)
+    }
+
+    /// Eager-TTFT / streaming-TTFT for a prefetch configuration (> 1
+    /// means streaming wins).
+    pub fn streaming_speedup(&self, w: &Workload, n_layers: usize, prefetch_layers: usize) -> f64 {
+        let eager = self.breakdown(w).first_token;
+        eager / self.streaming_first_token(w, n_layers, prefetch_layers).max(1e-18)
+    }
 }
 
 /// Build the two Table II workloads (w/o vs w/ Huffman) for a model with
@@ -278,6 +326,73 @@ mod tests {
         let b = m.breakdown(&with);
         let expect = b.parallel_decode + b.prefill.total + b.token_gen.total;
         assert!((b.first_token - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streaming_ttft_beats_eager_whenever_window_is_partial() {
+        let (_, with) = table2_workloads(PHI3, 8, 5.58, 512, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        let eager = m.breakdown(&with).first_token;
+        let n_layers = 32;
+        for prefetch in [1usize, 2, 4, 8, 16, 31] {
+            let streaming = m.streaming_first_token(&with, n_layers, prefetch);
+            assert!(
+                streaming < eager,
+                "prefetch {prefetch}: streaming {streaming} !< eager {eager}"
+            );
+            assert!(m.streaming_speedup(&with, n_layers, prefetch) > 1.0);
+        }
+    }
+
+    #[test]
+    fn streaming_ttft_degrades_to_eager_at_full_window() {
+        let (_, with) = table2_workloads(PHI3, 4, 1.39, 512, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        let eager = m.breakdown(&with).first_token;
+        let full = m.streaming_first_token(&with, 32, 32);
+        assert!((full - eager).abs() < 1e-12, "full window {full} vs eager {eager}");
+        // Oversized windows clamp to the layer count.
+        let over = m.streaming_first_token(&with, 32, 1000);
+        assert!((over - eager).abs() < 1e-12);
+        // Zero layers = unknown structure: no overlap may be claimed.
+        let unknown = m.streaming_first_token(&with, 0, 4);
+        assert!((unknown - eager).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streaming_ttft_is_monotone_in_prefetch_depth() {
+        let (_, with) = table2_workloads(PHI3, 8, 5.58, 512, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        let mut prev = 0.0f64;
+        for prefetch in 1..=32usize {
+            let t = m.streaming_first_token(&with, 32, prefetch);
+            assert!(t >= prev - 1e-15, "prefetch {prefetch}: {t} < {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn no_huffman_means_streaming_equals_plain_compute() {
+        let (without, _) = table2_workloads(PHI3, 8, 5.58, 512, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        let b = m.breakdown(&without);
+        let s = m.streaming_first_token(&without, 32, 4);
+        assert!((s - b.first_token).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streaming_ttft_never_undercuts_either_pipeline_side() {
+        // Sanity: the overlapped TTFT is bounded below by both the full
+        // decode and the compute-only path.
+        let (_, with) = table2_workloads(PHI3, 8, 5.58, 512, 4, 1.1);
+        let m = LatencyModel::new(JETSON_P3450);
+        let decode = m.parallel_decode(&with);
+        let compute = m.prefill(&with).total + m.token_gen(&with).total;
+        for prefetch in [1usize, 8, 32] {
+            let s = m.streaming_first_token(&with, 32, prefetch);
+            assert!(s >= decode - 1e-15);
+            assert!(s >= compute - 1e-15);
+        }
     }
 
     #[test]

@@ -3,36 +3,59 @@
 //! Every fallible public API in this crate returns [`Result<T>`]. The
 //! variants are deliberately coarse — callers match on the category
 //! (corrupt container vs. runtime failure vs. bad argument), and the
-//! message carries the detail.
+//! message carries the detail. Offline build: no `thiserror`, so the
+//! `Display`/`From` impls are written out by hand.
 
-use thiserror::Error;
+use crate::xla;
 
 /// Errors produced by the EntroLLM library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Malformed or corrupt ELM container / Huffman table / bitstream.
-    #[error("format error: {0}")]
     Format(String),
 
     /// An argument violated a documented precondition.
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// PJRT / XLA runtime failure.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// JSON parse error (artifact manifests, configs).
-    #[error("json error: {0}")]
     Json(String),
 
     /// Serving-engine error (queue closed, request rejected, ...).
-    #[error("engine error: {0}")]
     Engine(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Format(m) => write!(f, "format error: {m}"),
+            Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Engine(m) => write!(f, "engine error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -69,5 +92,14 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+        use std::error::Error as _;
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn xla_error_converts_to_xla_variant() {
+        let e: Error = crate::xla::PjRtClient::cpu().unwrap_err().into();
+        assert!(matches!(e, Error::Xla(_)));
+        assert!(e.to_string().starts_with("xla error:"));
     }
 }

@@ -173,6 +173,111 @@ mod tests {
     }
 
     #[test]
+    fn prop_roundtrip_random_freq_tables_u4_and_u8_widths() {
+        // prop-harness: arbitrary frequency tables over 4-bit and 8-bit
+        // alphabets; a payload drawn from the table's support must
+        // roundtrip exactly through the canonical code.
+        crate::prop::forall(
+            0xF00D,
+            60,
+            |rng| {
+                let levels = if rng.below(2) == 0 { 16usize } else { 256 };
+                let distinct = 1 + rng.below(levels);
+                let mut pool: Vec<u8> = (0..levels).map(|x| x as u8).collect();
+                rng.shuffle(&mut pool);
+                let support: Vec<u8> = pool.into_iter().take(distinct).collect();
+                let weights: Vec<f32> =
+                    support.iter().map(|_| 1.0 + rng.below(1000) as f32).collect();
+                let n = 1 + rng.below(3000);
+                let payload: Vec<u8> =
+                    (0..n).map(|_| support[rng.categorical(&weights)]).collect();
+                (support, payload)
+            },
+            |(support, payload)| {
+                let mut freq = FreqTable::from_symbols(payload);
+                // Support symbols absent from the payload still get codes.
+                freq.add_symbols(support);
+                let spec = CodeSpec::build(&freq).map_err(|e| e.to_string())?;
+                let bytes = Encoder::new(&spec)
+                    .encode_to_vec(payload)
+                    .map_err(|e| e.to_string())?;
+                let dec = Decoder::new(&spec).map_err(|e| e.to_string())?;
+                let out = dec
+                    .decode(&bytes, payload.len())
+                    .map_err(|e| e.to_string())?;
+                if &out == payload {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_degenerate_single_symbol_table() {
+        // A table with one distinct symbol must produce the 1-bit code
+        // and roundtrip any repetition count, including zero.
+        crate::prop::forall(
+            0x0D0,
+            40,
+            |rng| (rng.below(256) as u8, rng.below(2000)),
+            |&(sym, n)| {
+                let freq = FreqTable::from_symbols(&[sym]);
+                let spec = CodeSpec::build(&freq).map_err(|e| e.to_string())?;
+                if spec.lengths()[sym as usize] != 1 {
+                    return Err(format!(
+                        "degenerate code length {} != 1",
+                        spec.lengths()[sym as usize]
+                    ));
+                }
+                let payload = vec![sym; n];
+                let bytes = Encoder::new(&spec)
+                    .encode_to_vec(&payload)
+                    .map_err(|e| e.to_string())?;
+                if bytes.len() != n.div_ceil(8) {
+                    return Err(format!("{} bytes for {n} one-bit symbols", bytes.len()));
+                }
+                let dec = Decoder::new(&spec).map_err(|e| e.to_string())?;
+                let fast = dec.decode(&bytes, n).map_err(|e| e.to_string())?;
+                let slow = dec.decode_bit_serial(&bytes, n).map_err(|e| e.to_string())?;
+                if fast == payload && slow == payload {
+                    Ok(())
+                } else {
+                    Err("degenerate roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_decode_into_equals_bit_serial_on_random_payloads() {
+        // The LUT hot path and the bit-serial oracle must agree on any
+        // distribution shape the shared generator produces.
+        crate::prop::forall(
+            0x5EAD,
+            60,
+            |rng| crate::prop::gen::symbols(rng, 2000),
+            |syms| {
+                let (spec, bytes) = encode_with_own_code(syms).map_err(|e| e.to_string())?;
+                let dec = Decoder::new(&spec).map_err(|e| e.to_string())?;
+                let mut fast = vec![0u8; syms.len()];
+                dec.decode_into(&bytes, &mut fast).map_err(|e| e.to_string())?;
+                let slow = dec
+                    .decode_bit_serial(&bytes, syms.len())
+                    .map_err(|e| e.to_string())?;
+                if fast != slow {
+                    return Err("LUT and bit-serial decoders disagree".into());
+                }
+                if &fast != syms {
+                    return Err("decode does not invert encode".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn spec_survives_length_serialization() {
         // The ELM container persists only the 256-byte length array.
         let syms = gaussian_symbols(10_000, 256, 0xE1);

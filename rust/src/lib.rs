@@ -26,6 +26,7 @@
 //! | [`quant`] | §III-A | mixed symmetric-unsigned / asymmetric quantization |
 //! | [`huffman`] | §III-B | canonical, length-limited Huffman codec |
 //! | [`decode`] | §III-C | parameter-space segmentation + parallel decoding |
+//! | [`decode::stream`] | §III-C | streaming layer-ahead decode with a bounded prefetch window |
 //! | [`store`] | §III-B | ELM compressed-model container |
 //! | [`entropy`] | §IV-A | Shannon entropy / effective-bits / histograms |
 //! | [`device`] | §IV-C/D | Jetson-class bandwidth/compute cost model |
@@ -34,8 +35,9 @@
 //! | [`baselines`] | §II-C | codebook coder, gzip, raw bit-packing |
 //!
 //! Support modules ([`bitio`], [`tensor`], [`json`], [`rng`], [`corpus`],
-//! [`metrics`], [`bench`], [`prop`], [`cli`]) are implemented in-tree
-//! because this build is fully offline.
+//! [`metrics`], [`bench`], [`prop`], [`cli`], [`crc32`], and the [`xla`]
+//! PJRT stub) are implemented in-tree because this build is fully
+//! offline.
 
 pub mod baselines;
 pub mod bench;
@@ -43,6 +45,7 @@ pub mod bitio;
 pub mod cli;
 pub mod coordinator;
 pub mod corpus;
+pub mod crc32;
 pub mod decode;
 pub mod device;
 pub mod entropy;
@@ -58,5 +61,6 @@ pub mod runtime;
 pub mod server;
 pub mod store;
 pub mod tensor;
+pub mod xla;
 
 pub use error::{Error, Result};

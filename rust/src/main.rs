@@ -2,19 +2,25 @@
 //!
 //! ```text
 //! entrollm compress   --artifacts DIR --bits u8|u4 --out model.elm
+//!                     [--synthetic N --seed S]   (no artifacts needed)
 //! entrollm inspect    --model model.elm [--histogram]
+//! entrollm decompress --model model.elm --out weights.eqw [--threads N]
+//!                     [--stream --prefetch-layers K]
 //! entrollm decode-bench --model model.elm --threads N [--repeat R]
 //! entrollm eval-ppl   --artifacts DIR --flavor f32|u8|u4 [--windows N]
 //! entrollm generate   --artifacts DIR --flavor u8 --prompt "..." [--max-tokens N]
+//!                     [--stream --prefetch-layers K [--elm model.elm]]
 //! entrollm serve      --artifacts DIR --flavor u8 --port 7433 [--threads T]
+//!                     [--stream --prefetch-layers K [--elm model.elm]]
 //! entrollm latency    [--params 3.8e9] [--prefill-tokens 512]
+//!                     [--layers L --prefetch-layers K]
 //! ```
 
 use entrollm::bench::{fmt_bytes, fmt_secs};
 use entrollm::cli::Args;
-use entrollm::coordinator::{Engine, EngineConfig, Request};
+use entrollm::coordinator::{Engine, EngineConfig, PjrtBackend, Request};
 use entrollm::corpus::ByteTokenizer;
-use entrollm::decode::ParallelDecoder;
+use entrollm::decode::{ParallelDecoder, StreamingDecoder};
 use entrollm::device::{table2_workloads, LatencyModel, JETSON_P3450};
 use entrollm::entropy::{distribution_stats, Histogram};
 use entrollm::huffman::FreqTable;
@@ -45,6 +51,7 @@ fn run(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "compress" => cmd_compress(args),
         "inspect" => cmd_inspect(args),
+        "decompress" => cmd_decompress(args),
         "decode-bench" => cmd_decode_bench(args),
         "eval-ppl" => cmd_eval_ppl(args),
         "generate" => cmd_generate(args),
@@ -64,20 +71,32 @@ const HELP: &str = r#"entrollm — entropy-encoded weight compression for edge L
 
 commands:
   compress      quantize (mixed scheme) + Huffman-encode -> .elm container
+                (--synthetic N builds a seeded synthetic model, no artifacts)
   inspect       print an .elm container's manifest and symbol statistics
+  decompress    decode an .elm container back to raw quantized weights
+                (--stream decodes layer-ahead with a bounded prefetch window)
   decode-bench  measure parallel Huffman decode throughput
   eval-ppl      held-out perplexity via the AOT score executable
   generate      one-shot generation through the serving engine
-  serve         TCP serving (line-protocol JSON)
-  latency       Table II-style latency model for an edge profile
+                (--stream loads weights via the streaming decoder)
+  serve         TCP serving (line-protocol JSON); --stream as above
+  latency       Table II-style latency model for an edge profile,
+                including streaming (layer-ahead) first-token estimates
 "#;
 
 fn cmd_compress(args: &Args) -> Result<()> {
-    let artifacts = args.opt("artifacts", "artifacts");
     let bits = BitWidth::parse(args.opt("bits", "u8"))?;
     let default_out = format!("model_{bits}.elm");
     let out = args.opt("out", &default_out);
-    let (model, report) = build_elm(artifacts, bits)?;
+    let synthetic: usize = args.opt_parse("synthetic", 0usize)?;
+    let (model, report) = if synthetic > 0 {
+        let seed: u64 = args.opt_parse("seed", 0x5EED_u64)?;
+        let layers = entrollm::pipeline::synthetic_layers(synthetic, seed);
+        println!("synthetic model: {synthetic} layers (seed {seed:#x})");
+        entrollm::store::compress(&layers, bits)?
+    } else {
+        build_elm(args.opt("artifacts", "artifacts"), bits)?
+    };
     model.save(out)?;
     println!("wrote {out}");
     println!("  parameters      : {}", report.n_params);
@@ -136,6 +155,85 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Decode a container back to its raw quantized weights and write them
+/// as an `EQW1` file: `magic | u8 bitwidth | u32 n_layers | per layer:
+/// u16 name_len, name, u8 rank, rank × u64 dims, u8 scheme, f32 scale,
+/// f32 zp, u64 n_symbols, symbol bytes`. The output is a deterministic
+/// function of the container, so any two decode paths (serial,
+/// parallel, streaming) must produce byte-identical files.
+fn cmd_decompress(args: &Args) -> Result<()> {
+    // Arc so the streaming workers share the payload instead of
+    // copying a potentially GB-scale container.
+    let model = std::sync::Arc::new(ElmModel::load(args.req("model")?)?);
+    let out = args.req("out")?;
+    let threads: usize = args.opt_parse("threads", 4)?;
+
+    use std::io::Write as _;
+    fn write_layer<W: std::io::Write>(
+        w: &mut W,
+        meta: &entrollm::store::LayerMeta,
+        q: &entrollm::quant::QuantizedTensor,
+    ) -> Result<()> {
+        w.write_all(&(meta.name.len() as u16).to_le_bytes())?;
+        w.write_all(meta.name.as_bytes())?;
+        w.write_all(&[meta.shape.rank() as u8])?;
+        for &d in meta.shape.dims() {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        w.write_all(&[q.params.scheme.tag()])?;
+        w.write_all(&q.params.scale.to_le_bytes())?;
+        w.write_all(&q.params.zero_point.to_le_bytes())?;
+        w.write_all(&(q.symbols.numel() as u64).to_le_bytes())?;
+        w.write_all(q.symbols.data())?;
+        Ok(())
+    }
+
+    let file = std::fs::File::create(out)?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(b"EQW1")?;
+    // Bit width first: without it a reader cannot tell u4 symbols
+    // (values 0..16, one per byte) from narrow-range u8 symbols.
+    w.write_all(&[model.bits.bits() as u8])?;
+    w.write_all(&(model.layers.len() as u32).to_le_bytes())?;
+
+    if args.has("stream") {
+        // Each layer is written the moment it decodes, so resident
+        // decoded memory stays bounded by the prefetch window.
+        let prefetch: usize = args.opt_parse("prefetch-layers", 4)?;
+        let mut stream =
+            StreamingDecoder::new(threads, prefetch).stream(std::sync::Arc::clone(&model))?;
+        while let Some(layer) = stream.next_layer() {
+            let layer = layer?;
+            write_layer(&mut w, &model.layers[layer.index], &layer.tensor)?;
+        }
+        let stats = stream.into_stats();
+        println!(
+            "streaming decode: first layer after {} | total {} | window <= {} layers",
+            fmt_secs(stats.time_to_first_layer.as_secs_f64()),
+            fmt_secs(stats.wall.as_secs_f64()),
+            stats.max_layers_ahead,
+        );
+    } else {
+        let (tensors, stats) = ParallelDecoder::new(threads).decode_model(&model)?;
+        println!(
+            "parallel decode: {} in {} ({:.1} Msym/s)",
+            stats.total_symbols(),
+            fmt_secs(stats.wall.as_secs_f64()),
+            stats.symbols_per_sec() / 1e6,
+        );
+        for (meta, q) in model.layers.iter().zip(&tensors) {
+            write_layer(&mut w, meta, q)?;
+        }
+    }
+    w.flush()?;
+    println!(
+        "decoded {} layers / {} symbols (all segments CRC-clean) -> {out}",
+        model.layers.len(),
+        model.n_params(),
+    );
+    Ok(())
+}
+
 fn cmd_decode_bench(args: &Args) -> Result<()> {
     let model = ElmModel::load(args.req("model")?)?;
     let threads: usize = args.opt_parse("threads", 4)?;
@@ -171,6 +269,49 @@ fn cmd_eval_ppl(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the serving backend for `generate`/`serve`: eager by
+/// default; `--stream` (with optional `--elm PATH` and
+/// `--prefetch-layers N`) loads through the streaming decoder.
+/// Prints how the weights arrived either way.
+fn load_serving_backend(
+    args: &Args,
+    artifacts: &str,
+    flavor: Flavor,
+    threads: usize,
+) -> Result<PjrtBackend> {
+    if args.has("stream") {
+        let prefetch: usize = args.opt_parse("prefetch-layers", 4)?;
+        let (backend, stats) = match args.flags.get("elm") {
+            Some(elm) => {
+                entrollm::pipeline::load_backend_streaming(artifacts, elm, threads, prefetch)?
+            }
+            None => entrollm::pipeline::load_backend_streaming_from_artifacts(
+                artifacts, flavor, threads, prefetch,
+            )?,
+        };
+        println!(
+            "huffman streaming decode: {} symbols | first layer {} | total {} | prefetch {} \
+             (runtime upload follows the full set)",
+            stats.total_symbols(),
+            fmt_secs(stats.time_to_first_layer.as_secs_f64()),
+            fmt_secs(stats.wall.as_secs_f64()),
+            stats.prefetch_layers,
+        );
+        Ok(backend)
+    } else {
+        let (backend, decode_stats) = load_backend(artifacts, flavor, threads)?;
+        if let Some(s) = &decode_stats {
+            println!(
+                "huffman parallel decode: {} in {} ({:.1} Msym/s)",
+                s.total_symbols(),
+                fmt_secs(s.wall.as_secs_f64()),
+                s.symbols_per_sec() / 1e6
+            );
+        }
+        Ok(backend)
+    }
+}
+
 fn cmd_generate(args: &Args) -> Result<()> {
     let artifacts = args.opt("artifacts", "artifacts");
     let flavor = Flavor::parse(args.opt("flavor", "u8"))?;
@@ -179,15 +320,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let temperature: f32 = args.opt_parse("temperature", 0.0f32)?;
     let threads: usize = args.opt_parse("threads", 4)?;
 
-    let (backend, decode_stats) = load_backend(artifacts, flavor, threads)?;
-    if let Some(s) = &decode_stats {
-        println!(
-            "huffman parallel decode: {} in {} ({:.1} Msym/s)",
-            s.total_symbols(),
-            fmt_secs(s.wall.as_secs_f64()),
-            s.symbols_per_sec() / 1e6
-        );
-    }
+    let backend = load_serving_backend(args, artifacts, flavor, threads)?;
     let mut engine = Engine::new(backend, EngineConfig::default());
     let tok = ByteTokenizer;
     let mut req = Request::greedy(1, tok.encode(&prompt), max_tokens);
@@ -212,7 +345,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let flavor = Flavor::parse(args.opt("flavor", "u8"))?;
     let port: u16 = args.opt_parse("port", 7433)?;
     let threads: usize = args.opt_parse("threads", 4)?;
-    let (backend, _) = load_backend(artifacts, flavor, threads)?;
+    let backend = load_serving_backend(args, artifacts, flavor, threads)?;
     let mut engine = Engine::new(backend, EngineConfig::default());
     let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
     println!("serving {} on 127.0.0.1:{port} (ctrl-c to stop)", flavor.tag());
@@ -226,6 +359,8 @@ fn cmd_latency(args: &Args) -> Result<()> {
     let n_params: f64 = args.opt_parse("params", 3.8e9)?;
     let prefill_tokens: usize = args.opt_parse("prefill-tokens", 512)?;
     let threads: usize = args.opt_parse("threads", 4)?;
+    let n_layers: usize = args.opt_parse("layers", 32)?;
+    let prefetch: usize = args.opt_parse("prefetch-layers", 4)?;
     let model = LatencyModel::new(JETSON_P3450);
     println!("latency model: {} | {} params", model.profile.name, n_params);
     for (bits, eff) in [(8u32, 5.58f64), (4, 1.39)] {
@@ -257,6 +392,11 @@ fn cmd_latency(args: &Args) -> Result<()> {
             "  first token   : {} -> {}",
             fmt_secs(bw.first_token),
             fmt_secs(bh.first_token)
+        );
+        println!(
+            "  streamed TTFT : {} (prefetch {prefetch}/{n_layers} layers, {:.2}x vs eager decode)",
+            fmt_secs(model.streaming_first_token(&with, n_layers, prefetch)),
+            model.streaming_speedup(&with, n_layers, prefetch),
         );
     }
     Ok(())

@@ -22,6 +22,7 @@ pub use weights::load_weights_bin;
 use crate::quant::QuantizedTensor;
 use crate::store::ElmModel;
 use crate::tensor::TensorF32;
+use crate::xla;
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::path::Path;
@@ -387,6 +388,43 @@ impl WeightSet {
             .zip(tensors)
             .collect();
         Ok(Self::from_quantized(named, f32_rest))
+    }
+
+    /// Start a weight set holding only the fp32 rest (norms); quantized
+    /// layers are then installed one at a time via
+    /// [`WeightSet::insert_quantized`] as a streaming decoder hands them
+    /// over — the incremental-arrival half of the streaming deploy path.
+    pub fn begin_streaming(f32_rest: Vec<(String, TensorF32)>) -> Self {
+        WeightSet {
+            f32s: f32_rest.into_iter().collect(),
+            quants: HashMap::new(),
+        }
+    }
+
+    /// Install one decoded layer the moment it becomes available.
+    pub fn insert_quantized(&mut self, name: String, tensor: QuantizedTensor) {
+        self.quants.insert(name, tensor);
+    }
+
+    /// Quantized layers currently resident.
+    pub fn quant_layers(&self) -> usize {
+        self.quants.len()
+    }
+
+    /// Drain a [`crate::decode::LayerStream`] into a weight set,
+    /// installing each layer as it arrives so ELM decode overlaps weight
+    /// staging instead of strictly preceding it (§III-C pipelined onto
+    /// the load path).
+    pub fn from_layer_stream(
+        stream: &mut crate::decode::LayerStream,
+        f32_rest: Vec<(String, TensorF32)>,
+    ) -> Result<Self> {
+        let mut ws = Self::begin_streaming(f32_rest);
+        while let Some(layer) = stream.next_layer() {
+            let layer = layer?;
+            ws.insert_quantized(layer.name, layer.tensor);
+        }
+        Ok(ws)
     }
 
     /// Upload the tensor for one manifest argument.

@@ -28,6 +28,12 @@ use std::time::Duration;
 /// Parse one request line. Public for tests and the client.
 pub fn parse_request(line: &str, next_id: u64) -> Result<Request> {
     let v = Value::parse(line)?;
+    parse_request_value(&v, next_id)
+}
+
+/// Build a [`Request`] from an already-parsed line (the connection
+/// reader parses each line exactly once and branches on the result).
+pub fn parse_request_value(v: &Value, next_id: u64) -> Result<Request> {
     let prompt_text = v.get("prompt")?.as_str()?.to_string();
     let prompt = ByteTokenizer.encode(&prompt_text);
     if prompt.is_empty() {
@@ -87,7 +93,27 @@ pub fn format_response(r: &Response) -> String {
 
 enum Incoming {
     Req(Request, mpsc::Sender<String>),
+    Stats(mpsc::Sender<String>),
     Bad(String, mpsc::Sender<String>),
+}
+
+/// Serialize an engine-stats snapshot (the `{"stats": true}` admin
+/// line's reply): serving counters plus live occupancy, so an operator
+/// can watch a streaming-loaded server warm up without a side channel.
+pub fn format_stats<B: Backend>(engine: &Engine<B>) -> String {
+    let s = engine.stats();
+    let q = engine.queue_stats();
+    json::obj(vec![
+        ("completed", json::num(s.completed as f64)),
+        ("tokens", json::num(s.tokens as f64)),
+        ("decode_steps", json::num(s.decode_steps as f64)),
+        ("mean_occupancy", json::num(s.mean_occupancy())),
+        ("active_slots", json::num(engine.active() as f64)),
+        ("queue_depth", json::num(q.depth as f64)),
+        ("admitted", json::num(q.admitted as f64)),
+        ("rejected", json::num(q.rejected as f64)),
+    ])
+    .to_json()
 }
 
 /// Serve an engine over TCP until `stop` flips. Returns total requests
@@ -147,6 +173,9 @@ pub fn serve<B: Backend>(
                         }
                     }
                 }
+                Incoming::Stats(reply) => {
+                    let _ = reply.send(format_stats(engine));
+                }
                 Incoming::Bad(err, reply) => {
                     let _ = reply.send(format!(r#"{{"error":"{err}"}}"#));
                 }
@@ -203,18 +232,28 @@ fn read_conn(stream: TcpStream, tx: mpsc::Sender<Incoming>, stop: Arc<AtomicBool
             Ok(_) => {
                 let trimmed = line.trim();
                 if !trimmed.is_empty() {
-                    match parse_request(trimmed, 0) {
-                        Ok(req) => {
-                            if tx.send(Incoming::Req(req, reply_tx.clone())).is_err() {
-                                break;
-                            }
+                    // Parse once; `{"stats": true}` is the admin line,
+                    // anything else is a generation request.
+                    let msg = match Value::parse(trimmed) {
+                        Ok(ref v)
+                            if matches!(v.get_opt("stats"), Some(Value::Bool(true))) =>
+                        {
+                            Incoming::Stats(reply_tx.clone())
                         }
-                        Err(e) => {
-                            let _ = tx.send(Incoming::Bad(
+                        Ok(ref v) => match parse_request_value(v, 0) {
+                            Ok(req) => Incoming::Req(req, reply_tx.clone()),
+                            Err(e) => Incoming::Bad(
                                 e.to_string().replace('"', "'"),
                                 reply_tx.clone(),
-                            ));
-                        }
+                            ),
+                        },
+                        Err(e) => Incoming::Bad(
+                            e.to_string().replace('"', "'"),
+                            reply_tx.clone(),
+                        ),
+                    };
+                    if tx.send(msg).is_err() {
+                        break;
                     }
                 }
                 line.clear();
@@ -255,6 +294,15 @@ impl Client {
             ("temperature", json::num(temperature as f64)),
         ])
         .to_json();
+        self.roundtrip(&line)
+    }
+
+    /// Request the server's engine-stats snapshot.
+    pub fn stats(&mut self) -> Result<Value> {
+        self.roundtrip(r#"{"stats":true}"#)
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Result<Value> {
         self.stream.write_all(line.as_bytes())?;
         self.stream.write_all(b"\n")?;
         self.stream.flush()?;
@@ -327,8 +375,29 @@ mod tests {
         let reply2 = c.request("cd", 2, 0.0).unwrap();
         assert_eq!(reply2.get("tokens").unwrap().as_usize().unwrap(), 2);
 
+        // Admin stats line reports the two completed requests.
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.get("completed").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(stats.get("tokens").unwrap().as_usize().unwrap(), 6);
+        assert_eq!(stats.get("active_slots").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(stats.get("rejected").unwrap().as_usize().unwrap(), 0);
+
+        // `"stats": false` is NOT the admin line: it falls through to
+        // request parsing and earns an error (no prompt), not a snapshot.
+        let not_stats = c.roundtrip(r#"{"stats":false}"#).unwrap();
+        assert!(not_stats.get_opt("error").is_some(), "{not_stats:?}");
+
         stop.store(true, Ordering::Relaxed);
         let served = server.join().unwrap();
         assert_eq!(served, 2);
+    }
+
+    #[test]
+    fn format_stats_is_valid_json_with_counters() {
+        let engine = Engine::new(MockBackend::new(2, 32, 128), EngineConfig::default());
+        let v = Value::parse(&format_stats(&engine)).unwrap();
+        assert_eq!(v.get("completed").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(v.get("queue_depth").unwrap().as_usize().unwrap(), 0);
+        assert!(v.get("mean_occupancy").unwrap().as_f64().unwrap() >= 0.0);
     }
 }

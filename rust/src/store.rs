@@ -90,6 +90,28 @@ impl ElmModel {
         &self.payload[m.offset..m.offset + m.encoded_len]
     }
 
+    /// Check layer `i`'s segment against its stored CRC32.
+    pub fn verify_segment(&self, i: usize) -> Result<()> {
+        let m = &self.layers[i];
+        if crate::crc32::hash(self.segment(i)) != m.crc32 {
+            return Err(Error::Format(format!(
+                "layer {:?}: segment CRC mismatch",
+                m.name
+            )));
+        }
+        Ok(())
+    }
+
+    /// Cursor over the container's segments in execution (storage)
+    /// order — the walk order of the streaming decoder
+    /// ([`crate::decode::StreamingDecoder`]).
+    pub fn segments(&self) -> SegmentCursor<'_> {
+        SegmentCursor {
+            model: self,
+            next: 0,
+        }
+    }
+
     /// Total parameters across layers.
     pub fn n_params(&self) -> usize {
         self.layers.iter().map(|l| l.n_symbols).sum()
@@ -110,6 +132,69 @@ impl ElmModel {
         4 + 4 + 1 + 4 + 256 + manifest + self.payload.len()
     }
 }
+
+/// One independently decodable, byte-aligned segment of an
+/// [`ElmModel`]: the §III-C unit of parallel and streaming decode.
+#[derive(Debug, Clone, Copy)]
+pub struct SegmentRef<'a> {
+    /// Layer index in execution (storage) order.
+    pub index: usize,
+    /// The layer's manifest entry.
+    pub meta: &'a LayerMeta,
+    /// The encoded segment bytes.
+    pub bytes: &'a [u8],
+}
+
+/// Iterator/cursor over a container's segments in execution order.
+///
+/// Unlike a plain iterator it can be repositioned ([`SegmentCursor::seek`]),
+/// which is what a resuming or window-refilling consumer needs.
+#[derive(Debug, Clone)]
+pub struct SegmentCursor<'a> {
+    model: &'a ElmModel,
+    next: usize,
+}
+
+impl<'a> SegmentCursor<'a> {
+    /// Reposition the cursor to layer `index`.
+    pub fn seek(&mut self, index: usize) {
+        self.next = index;
+    }
+
+    /// Index of the next segment the cursor will yield.
+    pub fn position(&self) -> usize {
+        self.next
+    }
+
+    /// Segments left to yield.
+    pub fn remaining(&self) -> usize {
+        self.model.layers.len().saturating_sub(self.next)
+    }
+}
+
+impl<'a> Iterator for SegmentCursor<'a> {
+    type Item = SegmentRef<'a>;
+
+    fn next(&mut self) -> Option<SegmentRef<'a>> {
+        if self.next >= self.model.layers.len() {
+            return None;
+        }
+        let index = self.next;
+        self.next += 1;
+        Some(SegmentRef {
+            index,
+            meta: &self.model.layers[index],
+            bytes: self.model.segment(index),
+        })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = self.remaining();
+        (n, Some(n))
+    }
+}
+
+impl<'a> ExactSizeIterator for SegmentCursor<'a> {}
 
 /// Compress a set of named fp32 layers: mixed quantization (§III-A) →
 /// pooled frequency table → model-global Huffman code (§III-B) →
@@ -138,7 +223,7 @@ pub fn compress(layers: &[(String, TensorF32)], bits: BitWidth) -> Result<(ElmMo
     let mut metas = Vec::with_capacity(layers.len());
     for ((name, _), q) in layers.iter().zip(&quantized) {
         let seg = encoder.encode_to_vec(q.symbols.data())?;
-        let crc = crc32fast::hash(&seg);
+        let crc = crate::crc32::hash(&seg);
         metas.push(LayerMeta {
             name: name.clone(),
             shape: q.symbols.shape().clone(),
@@ -178,10 +263,8 @@ pub fn compress(layers: &[(String, TensorF32)], bits: BitWidth) -> Result<(ElmMo
 /// lives in [`crate::decode`]).
 pub fn decode_layer(model: &ElmModel, i: usize) -> Result<QuantizedTensor> {
     let meta = &model.layers[i];
+    model.verify_segment(i)?;
     let seg = model.segment(i);
-    if crc32fast::hash(seg) != meta.crc32 {
-        return Err(Error::Format(format!("layer {:?}: segment CRC mismatch", meta.name)));
-    }
     let dec = Decoder::new(&model.code)?;
     let symbols = dec.decode(seg, meta.n_symbols)?;
     Ok(QuantizedTensor {
@@ -509,6 +592,42 @@ mod tests {
         let mut buf = b"NOPE".to_vec();
         buf.extend_from_slice(&[0u8; 64]);
         assert!(ElmModel::read_from(buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn segment_cursor_walks_execution_order_and_seeks() {
+        let layers = make_layers(6);
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let mut cursor = model.segments();
+        assert_eq!(cursor.len(), 3);
+        assert_eq!(cursor.position(), 0);
+        let mut total = 0usize;
+        for (i, seg) in model.segments().enumerate() {
+            assert_eq!(seg.index, i);
+            assert_eq!(seg.meta.name, model.layers[i].name);
+            assert_eq!(seg.bytes, model.segment(i));
+            assert_eq!(crate::crc32::hash(seg.bytes), seg.meta.crc32);
+            total += seg.bytes.len();
+        }
+        assert_eq!(total, model.payload.len());
+        // Seek back to the middle and re-walk the tail.
+        cursor.seek(2);
+        assert_eq!(cursor.remaining(), 1);
+        assert_eq!(cursor.next().unwrap().index, 2);
+        assert!(cursor.next().is_none());
+    }
+
+    #[test]
+    fn verify_segment_catches_corruption() {
+        let layers = make_layers(7);
+        let (mut model, _) = compress(&layers, BitWidth::U8).unwrap();
+        for i in 0..model.layers.len() {
+            model.verify_segment(i).unwrap();
+        }
+        let off = model.layers[1].offset;
+        model.payload[off] ^= 0x01;
+        assert!(model.verify_segment(1).is_err());
+        assert!(model.verify_segment(0).is_ok());
     }
 
     #[test]

@@ -1,0 +1,276 @@
+//! Compile-time stand-in for the `xla` PJRT bindings.
+//!
+//! The offline build has no PJRT shared library and no crates.io access,
+//! yet [`crate::runtime`] is written against the `xla` crate's API so
+//! the real bindings can be swapped back in with a one-line change (drop
+//! this module, add the dependency). This module reproduces exactly the
+//! API surface the runtime compiles against:
+//!
+//! * host-side types ([`Literal`], [`HloModuleProto`],
+//!   [`XlaComputation`]) are functional — they hold real bytes / HLO
+//!   text, so manifests and artifacts can be loaded and inspected;
+//! * device-side entry points fail at **client creation**
+//!   ([`PjRtClient::cpu`]) with a clear diagnostic, so every load path
+//!   errors once, early, and with an actionable message instead of
+//!   segfaulting into a missing `libpjrt`.
+//!
+//! Everything that does not need PJRT — compression, streaming decode,
+//! the serving engine over [`crate::coordinator::MockBackend`] /
+//! [`crate::coordinator::DigestBackend`], the cost model, the CLI tools
+//! — runs fully under this stub.
+
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` (the runtime converts it into
+/// [`crate::Error::Xla`] via `to_string`).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!(
+        "{what}: PJRT is unavailable in this offline build (in-tree xla stub); \
+         link the real xla bindings to execute AOT artifacts"
+    )))
+}
+
+/// Element types the runtime uploads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    /// Unsigned 8-bit (quantization symbols).
+    U8,
+    /// 32-bit float.
+    F32,
+    /// Signed 32-bit int (token ids).
+    S32,
+}
+
+impl ElementType {
+    fn size_bytes(self) -> usize {
+        match self {
+            ElementType::U8 => 1,
+            ElementType::F32 | ElementType::S32 => 4,
+        }
+    }
+}
+
+/// Host element types accepted by [`PjRtClient::buffer_from_host_buffer`].
+pub trait NativeType: Copy {
+    /// The PJRT element type tag.
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+impl NativeType for u8 {
+    const TY: ElementType = ElementType::U8;
+}
+
+/// A host literal: element type, dims, raw bytes.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    /// Build a literal from raw bytes (must match `ty`/`dims`).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal, Error> {
+        let numel: usize = dims.iter().product();
+        if numel * ty.size_bytes() != data.len() {
+            return Err(Error(format!(
+                "literal shape {dims:?} ({ty:?}) wants {} bytes, got {}",
+                numel * ty.size_bytes(),
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.to_vec(),
+            bytes: data.to_vec(),
+        })
+    }
+
+    /// Element count.
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Host-side size in bytes.
+    pub fn size_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Element type.
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    /// Destructure a tuple literal. Only ever produced by executing a
+    /// compiled program, which the stub cannot do.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        unavailable("Literal::to_tuple")
+    }
+
+    /// Download typed host data. Only ever meaningful for buffers
+    /// produced by execution, which the stub cannot do.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module (text form is kept verbatim).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text file from disk.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("read {}: {e}", path.display())))?;
+        Ok(HloModuleProto { text })
+    }
+
+    /// The HLO text.
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// A computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    hlo: HloModuleProto,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { hlo: proto.clone() }
+    }
+
+    /// The wrapped module's HLO text.
+    pub fn hlo_text(&self) -> &str {
+        self.hlo.text()
+    }
+}
+
+/// Device buffer handle. Never constructible under the stub (requires a
+/// client, and client creation fails).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Synchronously download the buffer to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle. Never constructible under the stub.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with borrowed argument buffers.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create the CPU client. This is the single failure point of the
+    /// stub: it errors immediately so callers never get half a runtime.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("PjRtClient::compile")
+    }
+
+    /// Upload a typed host slice to a device buffer.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+
+    /// Upload a host literal to a device buffer.
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer, Error> {
+        unavailable("PjRtClient::buffer_from_host_literal")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_fails_with_actionable_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("PJRT"), "{msg}");
+        assert!(msg.contains("stub"), "{msg}");
+    }
+
+    #[test]
+    fn literal_checks_shape_against_bytes() {
+        let ok = Literal::create_from_shape_and_untyped_data(ElementType::U8, &[2, 3], &[0u8; 6]);
+        assert!(ok.is_ok());
+        assert_eq!(ok.as_ref().unwrap().element_count(), 6);
+        assert_eq!(ok.unwrap().size_bytes(), 6);
+        let f32_short =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4]);
+        assert!(f32_short.is_err());
+    }
+
+    #[test]
+    fn hlo_text_roundtrips_through_computation() {
+        let dir = std::env::temp_dir().join(format!("xla_stub_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.hlo.txt");
+        std::fs::write(&p, "HloModule test").unwrap();
+        let proto = HloModuleProto::from_text_file(&p).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        assert_eq!(comp.hlo_text(), "HloModule test");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -253,3 +253,95 @@ fn weightset_missing_tensor_fails_cleanly() {
     let err = ModelRuntime::load(&dir, Variant::F32, &ws);
     assert!(err.is_err());
 }
+
+/// With real artifacts: `load_backend_streaming` must serve logits
+/// identical to the eager `load_backend_from_elm` on the same container.
+#[test]
+fn streaming_backend_matches_eager_backend_on_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let tmp = std::env::temp_dir().join(format!("elm_stream_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let elm_path = tmp.join("model_u8.elm");
+    let (model, _) = build_elm(&dir, BitWidth::U8).unwrap();
+    model.save(&elm_path).unwrap();
+
+    let (eager, _) = entrollm::pipeline::load_backend_from_elm(&dir, &elm_path, 4).unwrap();
+    let (streaming, stats) =
+        entrollm::pipeline::load_backend_streaming(&dir, &elm_path, 4, 2).unwrap();
+    assert!(stats.max_layers_ahead <= 2);
+    assert_eq!(stats.total_symbols(), model.n_params());
+
+    let prompt = ByteTokenizer.encode("the model streams weights layer by layer");
+    let a = eager.runtime().prefill(&prompt).unwrap();
+    let b = streaming.runtime().prefill(&prompt).unwrap();
+    for (x, y) in a.logits.iter().zip(&b.logits) {
+        assert!((x - y).abs() < 1e-6, "streaming logits must be identical");
+    }
+
+    // Same greedy tokens end to end.
+    let run = |backend: entrollm::coordinator::PjrtBackend| -> Vec<u32> {
+        let mut engine = Engine::new(backend, EngineConfig::default());
+        engine
+            .submit(Request::greedy(1, ByteTokenizer.encode("the edge"), 8))
+            .unwrap();
+        engine.run_to_completion(10_000).unwrap().remove(0).tokens
+    };
+    assert_eq!(run(eager), run(streaming));
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+/// The streaming load path is lossless at the **token** level, with no
+/// artifacts needed: `DigestBackend`'s generation is a pure function of
+/// the weight bits, so eager-loaded and streaming-loaded weight sets
+/// generate identical tokens iff the decoded weights are bit-identical.
+#[test]
+fn streaming_load_serves_identical_tokens_to_eager_load() {
+    use entrollm::coordinator::DigestBackend;
+    use entrollm::decode::StreamingDecoder;
+    use entrollm::pipeline::synthetic_layers;
+    use entrollm::store::compress;
+    use std::sync::Arc;
+
+    let layers = synthetic_layers(12, 0xA11CE);
+    let (elm, _) = compress(&layers, BitWidth::U8).unwrap();
+    let elm = Arc::new(elm);
+
+    // Eager: barrier decode, then build the weight set at once.
+    let (tensors, _) = ParallelDecoder::new(4).decode_model(&elm).unwrap();
+    let named: Vec<_> = elm
+        .layers
+        .iter()
+        .map(|m| m.name.clone())
+        .zip(tensors)
+        .collect();
+    let eager_ws = WeightSet::from_quantized(named, vec![]);
+
+    // Streaming: bounded-prefetch decode, layers installed as they arrive.
+    let mut stream = StreamingDecoder::new(3, 2)
+        .stream(Arc::clone(&elm))
+        .unwrap();
+    let stream_ws = WeightSet::from_layer_stream(&mut stream, vec![]).unwrap();
+    let stats = stream.into_stats();
+    assert!(stats.max_layers_ahead <= 2, "prefetch bound violated");
+
+    let run = |ws: &WeightSet| -> Vec<Vec<u32>> {
+        let backend = DigestBackend::from_weights(ws, 2, 64, 128);
+        let mut engine = Engine::new(backend, EngineConfig::default());
+        let prompts = ["the edge model", "streams weights", "layer by layer"];
+        for (i, p) in prompts.iter().enumerate() {
+            engine
+                .submit(Request::greedy(i as u64, ByteTokenizer.encode(p), 12))
+                .unwrap();
+        }
+        let mut rs = engine.run_to_completion(10_000).unwrap();
+        rs.sort_by_key(|r| r.id);
+        rs.into_iter().map(|r| r.tokens).collect()
+    };
+    let eager_tokens = run(&eager_ws);
+    let stream_tokens = run(&stream_ws);
+    assert_eq!(
+        eager_tokens, stream_tokens,
+        "streaming load must be lossless at the token level"
+    );
+    assert!(eager_tokens.iter().all(|t| t.len() == 12));
+}
