@@ -1,0 +1,128 @@
+//! Tokens/sec vs **weight budget** through the LRU residency cache
+//! (`entrollm::residency`) — the cost curve of serving a model whose
+//! decoded weights do not fit in RAM.
+//!
+//! A synthetic model is compressed, written to disk, and opened
+//! **lazily** ([`entrollm::store::SegmentSource::open`]), so the
+//! measured path is the real deploy shape: payload on disk, decoded
+//! layers under the budget, cold layers re-decoded on fault. Each
+//! budget rung serves the same request batch through a digest-driven
+//! engine whose every weight pass walks the cache; the table reports
+//! measured tokens/sec plus the hit/miss/evict counters, then the
+//! modeled Jetson-scale fault-in cost for the same residency fractions.
+
+use entrollm::bench::{fmt_bytes, fmt_secs};
+use entrollm::coordinator::{Engine, EngineConfig, Request};
+use entrollm::device::{table2_workloads, LatencyModel, JETSON_P3450};
+use entrollm::metrics::Table;
+use entrollm::pipeline::synthetic_layers;
+use entrollm::quant::BitWidth;
+use entrollm::residency::{ResidentDigestBackend, ResidentWeightSet};
+use entrollm::store::{compress, SegmentSource};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let n_layers = 24usize;
+    let layers = synthetic_layers(n_layers, 0xFA17);
+    let (elm, report) = compress(&layers, BitWidth::U8).unwrap();
+    let total_decoded: usize = elm.layers.iter().map(|m| m.n_symbols).sum();
+    let largest: usize = elm.layers.iter().map(|m| m.n_symbols).max().unwrap();
+
+    let dir = std::env::temp_dir().join(format!("residency_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.elm");
+    elm.save(&path).unwrap();
+    println!(
+        "synthetic model: {n_layers} layers | decoded {} | encoded {} | {:.3} effective bits\n",
+        fmt_bytes(total_decoded),
+        fmt_bytes(report.encoded_bytes),
+        report.effective_bits
+    );
+
+    let mut table = Table::new(
+        "Tokens/sec vs weight budget (measured, file-backed faults)",
+        &["budget", "tok/s", "hits", "misses", "evictions", "peak resident", "fault time"],
+    );
+
+    // Budget rungs: whole model down to a single layer.
+    let rungs: Vec<(String, usize)> = vec![
+        ("model (100%)".into(), total_decoded),
+        ("1/2 model".into(), largest.max(total_decoded / 2)),
+        ("1/4 model".into(), largest.max(total_decoded / 4)),
+        ("one layer".into(), largest),
+    ];
+
+    let mut full_budget_tps = 0.0f64;
+    for (label, budget) in rungs {
+        let source = Arc::new(SegmentSource::open(&path).unwrap());
+        let ws = ResidentWeightSet::new(source, budget, Vec::new()).unwrap();
+        let mut engine = Engine::new(
+            ResidentDigestBackend::new(ws, 2, 64, 256),
+            EngineConfig::default(),
+        );
+        for id in 0..8u64 {
+            engine
+                .submit(Request::greedy(id, vec![1 + id as u32, 2, 3], 16))
+                .unwrap();
+        }
+        let t0 = Instant::now();
+        let responses = engine.run_to_completion(10_000).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+        let tps = tokens as f64 / wall.max(1e-12);
+        if full_budget_tps == 0.0 {
+            full_budget_tps = tps;
+        }
+        let c = engine.residency().unwrap();
+        assert!(
+            c.peak_resident_bytes <= budget,
+            "budget violated: {} > {budget}",
+            c.peak_resident_bytes
+        );
+        table.row(&[
+            format!("{label} ({})", fmt_bytes(budget)),
+            format!("{tps:.1}"),
+            c.hits.to_string(),
+            c.misses.to_string(),
+            c.evictions.to_string(),
+            fmt_bytes(c.peak_resident_bytes),
+            fmt_secs(
+                engine
+                    .backend()
+                    .weights()
+                    .cache()
+                    .fault_time()
+                    .as_secs_f64(),
+            ),
+        ]);
+    }
+    table.emit("residency_fault");
+
+    // Modeled at edge scale: phi3-class model on the Jetson profile.
+    let m = LatencyModel::new(JETSON_P3450);
+    let (_, with) = table2_workloads(3_800_000_000, 8, 5.58, 512, 4, 1.0);
+    let mut modeled = Table::new(
+        "Modeled Jetson tokens/sec vs pinned residency (phi3-class, uint8)",
+        &["pinned layers", "tok/s", "fault s/token"],
+    );
+    for pinned in [32usize, 16, 8, 1, 0] {
+        modeled.row(&[
+            format!("{pinned}/32"),
+            format!("{:.3}", m.faulted_tokens_per_sec(&with, 32, pinned)),
+            fmt_secs(m.fault_in_per_token(&with, 32, pinned)),
+        ]);
+    }
+    modeled.emit("residency_fault_modeled");
+    println!(
+        "note: 'pinned' is the policy-optimal residency for a cyclic dense pass; the \
+         shipped pure-LRU cache corresponds to the 0-pinned row whenever the budget \
+         is below the model (see the residency module docs on scan behavior)."
+    );
+
+    println!(
+        "note: full-budget serving ran at {full_budget_tps:.1} tok/s on this host; \
+         budgets below the model trade tokens/sec for bounded RSS."
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

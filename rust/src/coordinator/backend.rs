@@ -6,7 +6,10 @@
 //! executables ([`PjrtBackend`]).
 
 use super::kv::KvMirror;
+use crate::quant::QuantizedTensor;
+use crate::residency::CacheCounters;
 use crate::runtime::{ModelRuntime, PrefillOut, WeightSet};
+use crate::tensor::TensorF32;
 use crate::Result;
 
 /// Shape constants the engine needs from a backend.
@@ -36,6 +39,14 @@ pub trait Backend {
     /// One decode step over all slots; returns logits `[batch, vocab]`
     /// flattened row-major. KV state advances internally.
     fn decode(&mut self, tokens: &[u32], pos: &[u32]) -> Result<Vec<f32>>;
+
+    /// Weight-residency cache counters, when this backend serves
+    /// weights through an [`crate::residency::LruWeightCache`]
+    /// (`None` for fully-resident backends). The engine surfaces these
+    /// in the server's `{"stats":true}` admin line.
+    fn residency(&self) -> Option<CacheCounters> {
+        None
+    }
 }
 
 // ------------------------------------------------------------------- PJRT
@@ -206,54 +217,88 @@ pub fn fnv1a64(mut h: u64, bytes: &[u8]) -> u64 {
     h
 }
 
+/// Fold one named quantized tensor into a weight digest. Every
+/// variable-length field is length-prefixed so the byte stream is an
+/// injective encoding — without the prefixes, name bytes could
+/// masquerade as dim/data bytes and two different sets could digest
+/// equal by construction. Exposed so bounded-memory walkers
+/// ([`crate::residency::ResidentWeightSet::digest`]) reproduce
+/// [`digest_weights`] exactly without materializing the whole set.
+pub fn digest_quant_entry(mut h: u64, name: &str, q: &QuantizedTensor) -> u64 {
+    h = fnv1a64(h, &(name.len() as u64).to_le_bytes());
+    h = fnv1a64(h, name.as_bytes());
+    let dims = q.symbols.shape().dims();
+    h = fnv1a64(h, &(dims.len() as u64).to_le_bytes());
+    for &d in dims {
+        h = fnv1a64(h, &(d as u64).to_le_bytes());
+    }
+    h = fnv1a64(h, &(q.symbols.data().len() as u64).to_le_bytes());
+    h = fnv1a64(h, q.symbols.data());
+    h = fnv1a64(h, &[q.params.scheme.tag(), q.params.bits.bits() as u8]);
+    h = fnv1a64(h, &q.params.scale.to_le_bytes());
+    h = fnv1a64(h, &q.params.zero_point.to_le_bytes());
+    h
+}
+
+/// Fold one named fp32 tensor into a weight digest (see
+/// [`digest_quant_entry`] for the injectivity argument).
+pub fn digest_f32_entry(mut h: u64, name: &str, t: &TensorF32) -> u64 {
+    h = fnv1a64(h, &(name.len() as u64).to_le_bytes());
+    h = fnv1a64(h, name.as_bytes());
+    let dims = t.shape().dims();
+    h = fnv1a64(h, &(dims.len() as u64).to_le_bytes());
+    for &d in dims {
+        h = fnv1a64(h, &(d as u64).to_le_bytes());
+    }
+    h = fnv1a64(h, &(t.data().len() as u64).to_le_bytes());
+    for &x in t.data() {
+        h = fnv1a64(h, &x.to_le_bytes());
+    }
+    h
+}
+
 /// FNV-1a digest over every tensor of a [`WeightSet`] — names sorted,
 /// so the digest is independent of *arrival order* but sensitive to
 /// every symbol, shape, and quantization parameter. Two weight sets
 /// digest equal iff they hold bit-identical weights, which is exactly
 /// the property the streaming-vs-eager losslessness tests assert.
 pub fn digest_weights(ws: &WeightSet) -> u64 {
-    let mix = fnv1a64;
-    // Every variable-length field is length-prefixed so the byte
-    // stream is an injective encoding of the weight set — without the
-    // prefixes, name bytes could masquerade as dim/data bytes and two
-    // different sets could digest equal by construction.
     let mut h: u64 = FNV1A64_INIT;
     let mut qnames: Vec<&String> = ws.quants.keys().collect();
     qnames.sort();
-    h = mix(h, &(qnames.len() as u64).to_le_bytes());
+    h = fnv1a64(h, &(qnames.len() as u64).to_le_bytes());
     for name in qnames {
-        let q = &ws.quants[name];
-        h = mix(h, &(name.len() as u64).to_le_bytes());
-        h = mix(h, name.as_bytes());
-        let dims = q.symbols.shape().dims();
-        h = mix(h, &(dims.len() as u64).to_le_bytes());
-        for &d in dims {
-            h = mix(h, &(d as u64).to_le_bytes());
-        }
-        h = mix(h, &(q.symbols.data().len() as u64).to_le_bytes());
-        h = mix(h, q.symbols.data());
-        h = mix(h, &[q.params.scheme.tag(), q.params.bits.bits() as u8]);
-        h = mix(h, &q.params.scale.to_le_bytes());
-        h = mix(h, &q.params.zero_point.to_le_bytes());
+        h = digest_quant_entry(h, name, &ws.quants[name]);
     }
     let mut fnames: Vec<&String> = ws.f32s.keys().collect();
     fnames.sort();
-    h = mix(h, &(fnames.len() as u64).to_le_bytes());
+    h = fnv1a64(h, &(fnames.len() as u64).to_le_bytes());
     for name in fnames {
-        let t = &ws.f32s[name];
-        h = mix(h, &(name.len() as u64).to_le_bytes());
-        h = mix(h, name.as_bytes());
-        let dims = t.shape().dims();
-        h = mix(h, &(dims.len() as u64).to_le_bytes());
-        for &d in dims {
-            h = mix(h, &(d as u64).to_le_bytes());
-        }
-        h = mix(h, &(t.data().len() as u64).to_le_bytes());
-        for &x in t.data() {
-            h = mix(h, &x.to_le_bytes());
-        }
+        h = digest_f32_entry(h, name, &ws.f32s[name]);
     }
     h
+}
+
+/// Next-token index a digest-driven backend emits for a whole prompt
+/// (prefill). Pure: the single source of truth shared by
+/// [`DigestBackend`] and the residency-serving
+/// [`crate::residency::ResidentDigestBackend`], so their generations
+/// agree token-for-token whenever their weight digests agree.
+pub fn digest_prefill_next(digest: u64, prompt: &[u32], vocab: usize) -> u64 {
+    let mut h = digest;
+    for &t in prompt {
+        h = h.rotate_left(7) ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    }
+    h % vocab as u64
+}
+
+/// Next-token index for one decode lane of a digest-driven backend
+/// (see [`digest_prefill_next`]).
+pub fn digest_decode_next(digest: u64, slot: usize, token: u32, pos: u32, vocab: usize) -> u64 {
+    let mixed = digest.rotate_left((slot as u32 % 63) + 1)
+        ^ (token as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ ((pos as u64) << 20);
+    mixed % vocab as u64
 }
 
 /// Deterministic backend whose generation is a pure function of a
@@ -311,11 +356,7 @@ impl Backend for DigestBackend {
 
     fn prefill(&mut self, prompt: &[u32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
         self.prefills += 1;
-        let mut h = self.digest;
-        for &t in prompt {
-            h = h.rotate_left(7) ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        }
-        let next = h % self.cfg.vocab as u64;
+        let next = digest_prefill_next(self.digest, prompt, self.cfg.vocab);
         let kv = vec![next as f32; 8];
         Ok((self.onehot(next), kv.clone(), kv))
     }
@@ -331,12 +372,9 @@ impl Backend for DigestBackend {
         self.steps += 1;
         let mut out = Vec::with_capacity(self.cfg.batch * self.cfg.vocab);
         for (slot, (&t, &p)) in tokens.iter().zip(pos).enumerate() {
-            let mixed = self
-                .digest
-                .rotate_left((slot as u32 % 63) + 1)
-                ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
-                ^ ((p as u64) << 20);
-            out.extend_from_slice(&self.onehot(mixed % self.cfg.vocab as u64));
+            out.extend_from_slice(
+                &self.onehot(digest_decode_next(self.digest, slot, t, p, self.cfg.vocab)),
+            );
         }
         Ok(out)
     }

@@ -132,6 +132,13 @@ impl<B: Backend> Engine<B> {
         &self.backend
     }
 
+    /// Weight-residency cache counters, when the backend faults weights
+    /// through one (`None` for fully-resident backends) — the
+    /// observability hook the `{"stats":true}` admin line surfaces.
+    pub fn residency(&self) -> Option<crate::residency::CacheCounters> {
+        self.backend.residency()
+    }
+
     fn sample_cfg(req: &Request) -> SampleCfg {
         SampleCfg {
             temperature: req.temperature,

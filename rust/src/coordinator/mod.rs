@@ -22,6 +22,7 @@ pub mod request;
 pub mod sampler;
 
 pub use backend::{
+    digest_decode_next, digest_f32_entry, digest_prefill_next, digest_quant_entry,
     digest_weights, fnv1a64, Backend, BackendCfg, DigestBackend, MockBackend, PjrtBackend,
     FNV1A64_INIT,
 };

@@ -20,7 +20,9 @@ mod schedule;
 pub mod stream;
 
 pub use schedule::{Assignment, Strategy};
-pub use stream::{DecodedLayer, LayerStream, StreamConfig, StreamStats, StreamingDecoder};
+pub use stream::{
+    DecodedLayer, LayerStream, SegmentDecoder, StreamConfig, StreamStats, StreamingDecoder,
+};
 
 use crate::huffman::Decoder;
 use crate::quant::QuantizedTensor;

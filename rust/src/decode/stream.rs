@@ -22,12 +22,20 @@
 //! Deadlock freedom: the consumer always waits for layer `delivered`,
 //! and the worker owning `delivered` is never window-blocked because
 //! its cursor is `<= delivered < delivered + window`.
+//!
+//! The stream runs over any [`SegmentSource`]: with a file-backed
+//! source ([`SegmentSource::open`]) segments are read from disk only as
+//! the window admits them, so a streaming load never holds the whole
+//! encoded payload either. [`SegmentDecoder`] is the **re-entrant**
+//! sibling — random-access, repeatable per-layer decode — which is what
+//! the weight-residency cache ([`crate::residency`]) faults evicted
+//! layers back in with.
 
 use super::schedule::Strategy;
 use super::ThreadStats;
 use crate::huffman::Decoder;
 use crate::quant::QuantizedTensor;
-use crate::store::ElmModel;
+use crate::store::{ElmModel, SegmentSource};
 use crate::tensor::TensorU8;
 use crate::{Error, Result};
 use std::sync::{Arc, Condvar, Mutex};
@@ -165,12 +173,24 @@ impl StreamingDecoder {
         self
     }
 
-    /// Start decoding: spawns the worker pool and returns the consumer
-    /// handle. Layers are delivered strictly in execution order.
+    /// Start decoding an in-memory container: spawns the worker pool and
+    /// returns the consumer handle. Layers are delivered strictly in
+    /// execution order. (Convenience wrapper over
+    /// [`StreamingDecoder::stream_source`] with a memory backing.)
     pub fn stream(&self, model: Arc<ElmModel>) -> Result<LayerStream> {
-        let decoder = Arc::new(Decoder::new(&model.code)?);
-        let n = model.layers.len();
-        let assignment = self.cfg.strategy.assign(&model, self.cfg.threads);
+        self.stream_source(Arc::new(SegmentSource::from_model(model)))
+    }
+
+    /// Start decoding over any [`SegmentSource`]. With a file-backed
+    /// source ([`SegmentSource::open`]) each worker reads its segment
+    /// from disk only when the window admits it, so peak RSS during a
+    /// streaming load is `O(prefetch window)` decoded layers plus
+    /// `O(window)` encoded segments — never the whole payload.
+    pub fn stream_source(&self, source: Arc<SegmentSource>) -> Result<LayerStream> {
+        let decoder = Arc::new(Decoder::new(source.code())?);
+        let n = source.n_layers();
+        let sizes: Vec<usize> = source.layers().iter().map(|m| m.encoded_len).collect();
+        let assignment = self.cfg.strategy.assign_sizes(&sizes, self.cfg.threads);
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 delivered: 0,
@@ -193,15 +213,15 @@ impl StreamingDecoder {
             // a no-op for the default Windowed assignment, which is
             // already sorted.
             indices.sort_unstable();
-            let model = Arc::clone(&model);
+            let source = Arc::clone(&source);
             let decoder = Arc::clone(&decoder);
             let shared = Arc::clone(&shared);
             handles.push(std::thread::spawn(move || {
-                worker(&model, &decoder, &shared, indices)
+                worker(&source, &decoder, &shared, indices)
             }));
         }
         Ok(LayerStream {
-            model,
+            source,
             shared,
             handles,
             next: 0,
@@ -230,8 +250,61 @@ impl StreamingDecoder {
     }
 }
 
+/// **Re-entrant per-layer decode** over a [`SegmentSource`]: decode any
+/// layer, any number of times, in any order.
+///
+/// [`LayerStream`] is the in-order pipeline for *loading*; this is its
+/// random-access counterpart for *serving* — the fault-in path of the
+/// weight-residency cache ([`crate::residency::LruWeightCache`]), which
+/// must re-decode an evicted layer mid-generation. Per-segment CRC-32
+/// verification runs on every call, so random re-entry is as guarded as
+/// the sequential walk.
+pub struct SegmentDecoder {
+    source: Arc<SegmentSource>,
+    decoder: Decoder,
+}
+
+impl SegmentDecoder {
+    /// Build the decode table once for the source's model-global code.
+    pub fn new(source: Arc<SegmentSource>) -> Result<Self> {
+        let decoder = Decoder::new(source.code())?;
+        Ok(SegmentDecoder { source, decoder })
+    }
+
+    /// The source this decoder reads from.
+    pub fn source(&self) -> &Arc<SegmentSource> {
+        &self.source
+    }
+
+    /// Decode layer `index` behind CRC verification. Bit-identical to
+    /// what the eager and streaming paths produce for the same layer.
+    pub fn decode_layer(&self, index: usize) -> Result<QuantizedTensor> {
+        if index >= self.source.n_layers() {
+            return Err(Error::InvalidArg(format!(
+                "layer index {index} out of range ({} layers)",
+                self.source.n_layers()
+            )));
+        }
+        decode_one(&self.source, &self.decoder, index)
+    }
+}
+
+/// The one per-layer decode body: CRC-verified segment read → table
+/// decode → tensor. Shared by the streaming workers and the re-entrant
+/// [`SegmentDecoder`] so the two paths cannot drift.
+fn decode_one(source: &SegmentSource, decoder: &Decoder, index: usize) -> Result<QuantizedTensor> {
+    let meta = source.meta(index);
+    let seg = source.verified_segment(index)?;
+    let mut buf = vec![0u8; meta.n_symbols];
+    decoder.decode_into(&seg, &mut buf)?;
+    Ok(QuantizedTensor {
+        symbols: TensorU8::new(meta.shape.clone(), buf)?,
+        params: meta.params,
+    })
+}
+
 fn worker(
-    model: &ElmModel,
+    source: &SegmentSource,
     decoder: &Decoder,
     shared: &Shared,
     indices: Vec<usize>,
@@ -244,6 +317,8 @@ fn worker(
     };
     for idx in indices {
         // Bounded prefetch: block until `idx` is inside the window.
+        // With a file-backed source this also bounds *disk reads*: a
+        // segment's bytes are only pulled once the window admits it.
         {
             let mut st = shared.state.lock().unwrap();
             while idx >= st.delivered + shared.window
@@ -258,15 +333,8 @@ fn worker(
         }
 
         let t0 = Instant::now();
-        let meta = &model.layers[idx];
-        let result = model.verify_segment(idx).and_then(|()| {
-            let mut buf = vec![0u8; meta.n_symbols];
-            decoder.decode_into(model.segment(idx), &mut buf)?;
-            Ok(QuantizedTensor {
-                symbols: TensorU8::new(meta.shape.clone(), buf)?,
-                params: meta.params,
-            })
-        });
+        let meta = source.meta(idx);
+        let result = decode_one(source, decoder, idx);
         stats.busy += t0.elapsed();
 
         let mut st = shared.state.lock().unwrap();
@@ -299,7 +367,7 @@ fn worker(
 /// Consumer handle of a streaming decode: yields layers in execution
 /// order as they become available, then exposes the run's stats.
 pub struct LayerStream {
-    model: Arc<ElmModel>,
+    source: Arc<SegmentSource>,
     shared: Arc<Shared>,
     handles: Vec<std::thread::JoinHandle<ThreadStats>>,
     next: usize,
@@ -354,7 +422,7 @@ impl LayerStream {
         self.next += 1;
         Some(Ok(DecodedLayer {
             index: idx,
-            name: self.model.layers[idx].name.clone(),
+            name: self.source.meta(idx).name.clone(),
             tensor,
         }))
     }
@@ -552,6 +620,62 @@ mod tests {
         assert_eq!(segs, model.layers.len());
         assert_eq!(stats.total_symbols(), model.n_params());
         assert_eq!(stats.prefetch_layers, 3);
+    }
+
+    #[test]
+    fn file_backed_stream_source_equals_in_memory_stream() {
+        use crate::store::SegmentSource;
+        let (_, model) = model_with_layers(14, 0x58, BitWidth::U8);
+        let dir = std::env::temp_dir().join(format!("elm_stream_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.elm");
+        model.save(&path).unwrap();
+
+        let (eager, _) = ParallelDecoder::new(4).decode_model(&model).unwrap();
+        let lazy = Arc::new(SegmentSource::open(&path).unwrap());
+        let mut stream = StreamingDecoder::new(3, 2).stream_source(lazy).unwrap();
+        let mut streamed = Vec::new();
+        while let Some(layer) = stream.next_layer() {
+            streamed.push(layer.unwrap().tensor);
+        }
+        let stats = stream.into_stats();
+        assert_eq!(streamed.len(), eager.len());
+        for (a, b) in eager.iter().zip(&streamed) {
+            assert_eq!(a.symbols.data(), b.symbols.data());
+            assert_eq!(a.params, b.params);
+        }
+        assert_eq!(stats.total_symbols(), model.n_params());
+        assert!(stats.max_layers_ahead <= 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn segment_decoder_random_reentry_is_bitexact() {
+        use crate::store::SegmentSource;
+        let (_, model) = model_with_layers(10, 0x59, BitWidth::U4);
+        let dir = std::env::temp_dir().join(format!("elm_reent_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.elm");
+        model.save(&path).unwrap();
+
+        let mem = SegmentDecoder::new(Arc::new(SegmentSource::from_model(Arc::new(
+            model.clone(),
+        ))))
+        .unwrap();
+        let lazy = SegmentDecoder::new(Arc::new(SegmentSource::open(&path).unwrap())).unwrap();
+
+        // Arbitrary revisit-heavy order: every decode must match the
+        // serial reference, on both backings.
+        for &i in &[7usize, 0, 9, 7, 3, 0, 9, 9, 1] {
+            let want = crate::store::decode_layer(&model, i).unwrap();
+            for dec in [&mem, &lazy] {
+                let got = dec.decode_layer(i).unwrap();
+                assert_eq!(got.symbols.data(), want.symbols.data());
+                assert_eq!(got.params, want.params);
+            }
+        }
+        assert!(mem.decode_layer(10).is_err(), "out of range must error");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

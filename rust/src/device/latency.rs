@@ -9,7 +9,11 @@
 //!   bandwidth-dominated — this is where effective-bit reduction pays;
 //! * `parallel decode` = per-core symbol throughput × imbalance, once per
 //!   sequence;
-//! * `first token` = decode (if Huffman) + pre-fill + one generation step.
+//! * `first token` = decode (if Huffman) + pre-fill + one generation step;
+//! * `fault-in` = the residency-cache tax: with `R` of `L` decoded
+//!   layers *pinned* resident, each token step re-decodes the missing
+//!   `(L-R)/L` fraction ([`LatencyModel::fault_in_per_token`]; pass
+//!   `R = 0` for the shipped pure-LRU cache on a cyclic scan).
 
 use super::Profile;
 
@@ -198,6 +202,56 @@ impl LatencyModel {
     pub fn streaming_speedup(&self, w: &Workload, n_layers: usize, prefetch_layers: usize) -> f64 {
         let eager = self.breakdown(w).first_token;
         eager / self.streaming_first_token(w, n_layers, prefetch_layers).max(1e-18)
+    }
+
+    /// Extra seconds per generated token spent **re-decoding faulted
+    /// layers** when `resident_layers` of `n_layers` (equal-cost)
+    /// decoded layers are **pinned** resident across passes: the
+    /// per-token fault bill is `miss_fraction × full parallel decode`.
+    ///
+    /// `resident_layers` models a pinned (policy-optimal for cyclic
+    /// scans) residency, i.e. the headroom a decode-ahead / pin-next
+    /// policy can recover. The *shipped* pure-LRU cache
+    /// (`crate::residency::LruWeightCache`) under a strictly cyclic
+    /// dense forward pass degenerates to **zero** effective residency
+    /// whenever the budget is below the model (every access misses —
+    /// see the `residency` module docs on scan behavior), so model it
+    /// by passing `resident_layers = 0`. Zero cost when the workload
+    /// has no Huffman stage, when the layer structure is unknown
+    /// (`n_layers == 0`), or when everything is pinned.
+    pub fn fault_in_per_token(
+        &self,
+        w: &Workload,
+        n_layers: usize,
+        resident_layers: usize,
+    ) -> f64 {
+        if !w.huffman || n_layers == 0 {
+            return 0.0;
+        }
+        let resident = resident_layers.min(n_layers);
+        let miss_fraction = (n_layers - resident) as f64 / n_layers as f64;
+        self.parallel_decode(w) * miss_fraction
+    }
+
+    /// Steady-state per-token generation latency under a pinned
+    /// residency: the bandwidth-bound [`LatencyModel::token_gen`] cost
+    /// plus [`LatencyModel::fault_in_per_token`]. Degrades exactly to
+    /// `token_gen` at full residency, and to `token_gen + full decode`
+    /// per token when nothing stays resident (= the shipped LRU cache
+    /// on a cyclic scan with a below-model budget).
+    pub fn faulted_token_gen(&self, w: &Workload, n_layers: usize, resident_layers: usize) -> f64 {
+        self.token_gen(w).total + self.fault_in_per_token(w, n_layers, resident_layers)
+    }
+
+    /// Tokens/second under a pinned residency (the
+    /// `benches/residency_fault.rs` headline, modeled).
+    pub fn faulted_tokens_per_sec(
+        &self,
+        w: &Workload,
+        n_layers: usize,
+        resident_layers: usize,
+    ) -> f64 {
+        1.0 / self.faulted_token_gen(w, n_layers, resident_layers).max(1e-18)
     }
 }
 
@@ -393,6 +447,49 @@ mod tests {
             assert!(s >= decode - 1e-15);
             assert!(s >= compute - 1e-15);
         }
+    }
+
+    #[test]
+    fn full_residency_faults_nothing() {
+        let (_, with) = table2_workloads(PHI3, 8, 5.58, 512, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        assert_eq!(m.fault_in_per_token(&with, 32, 32), 0.0);
+        assert_eq!(m.fault_in_per_token(&with, 32, 1000), 0.0, "clamped");
+        let full = m.faulted_token_gen(&with, 32, 32);
+        assert!((full - m.token_gen(&with).total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_residency_pays_the_whole_decode_every_token() {
+        let (_, with) = table2_workloads(PHI3, 8, 5.58, 512, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        let t = m.faulted_token_gen(&with, 32, 0);
+        let want = m.token_gen(&with).total + m.parallel_decode(&with);
+        assert!((t - want).abs() < 1e-9, "{t} vs {want}");
+    }
+
+    #[test]
+    fn fault_cost_is_monotone_in_resident_layers() {
+        let (_, with) = table2_workloads(PHI3, 4, 1.39, 512, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        let mut prev = f64::INFINITY;
+        for resident in 0..=32usize {
+            let t = m.faulted_token_gen(&with, 32, resident);
+            assert!(t <= prev + 1e-15, "resident {resident}: {t} > {prev}");
+            prev = t;
+        }
+        // Tokens/sec inverts and is monotone the other way.
+        assert!(
+            m.faulted_tokens_per_sec(&with, 32, 32) > m.faulted_tokens_per_sec(&with, 32, 8)
+        );
+    }
+
+    #[test]
+    fn no_huffman_or_unknown_layers_means_no_fault_cost() {
+        let (without, with) = table2_workloads(PHI3, 8, 5.58, 512, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        assert_eq!(m.fault_in_per_token(&without, 32, 4), 0.0);
+        assert_eq!(m.fault_in_per_token(&with, 0, 4), 0.0, "unknown structure");
     }
 
     #[test]

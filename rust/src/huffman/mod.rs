@@ -20,6 +20,20 @@
 //! The slow reference decoder ([`Decoder::decode_bit_serial`]) walks the
 //! canonical code space bit by bit; tests cross-check it against the LUT
 //! path on random inputs.
+//!
+//! ## Example: lossless encode/decode roundtrip
+//!
+//! ```
+//! use entrollm::huffman::{CodeSpec, Decoder, Encoder, FreqTable};
+//!
+//! let symbols = vec![3u8, 1, 3, 3, 0, 2, 3, 1, 3, 3];
+//! let spec = CodeSpec::build(&FreqTable::from_symbols(&symbols))?;
+//! let encoded = Encoder::new(&spec).encode_to_vec(&symbols)?;
+//! assert!(encoded.len() < symbols.len(), "skewed input must compress");
+//! let decoded = Decoder::new(&spec)?.decode(&encoded, symbols.len())?;
+//! assert_eq!(decoded, symbols);
+//! # Ok::<(), entrollm::Error>(())
+//! ```
 
 mod code;
 mod decoder;

@@ -27,7 +27,8 @@
 //! | [`huffman`] | §III-B | canonical, length-limited Huffman codec |
 //! | [`decode`] | §III-C | parameter-space segmentation + parallel decoding |
 //! | [`decode::stream`] | §III-C | streaming layer-ahead decode with a bounded prefetch window |
-//! | [`store`] | §III-B | ELM compressed-model container |
+//! | [`store`] | §III-B | ELM compressed-model container (eager + lazy segment access) |
+//! | [`residency`] | — | LRU weight-residency cache: serve models larger than device RAM |
 //! | [`entropy`] | §IV-A | Shannon entropy / effective-bits / histograms |
 //! | [`device`] | §IV-C/D | Jetson-class bandwidth/compute cost model |
 //! | [`runtime`] | — | PJRT executor for the AOT artifacts |
@@ -56,6 +57,7 @@ pub mod metrics;
 pub mod pipeline;
 pub mod prop;
 pub mod quant;
+pub mod residency;
 pub mod rng;
 pub mod runtime;
 pub mod server;

@@ -10,11 +10,19 @@
 //! entrollm eval-ppl   --artifacts DIR --flavor f32|u8|u4 [--windows N]
 //! entrollm generate   --artifacts DIR --flavor u8 --prompt "..." [--max-tokens N]
 //!                     [--stream --prefetch-layers K [--elm model.elm]]
+//!                     [--weight-budget-mb M [--elm model.elm | --synthetic N]]
 //! entrollm serve      --artifacts DIR --flavor u8 --port 7433 [--threads T]
 //!                     [--stream --prefetch-layers K [--elm model.elm]]
+//!                     [--weight-budget-mb M [--elm model.elm | --synthetic N]]
 //! entrollm latency    [--params 3.8e9] [--prefill-tokens 512]
 //!                     [--layers L --prefetch-layers K]
 //! ```
+//!
+//! `--weight-budget-mb` (fractional MiB allowed) serves through the
+//! weight-residency cache: decoded layers stay under the budget and
+//! cold layers are re-decoded on demand — no PJRT artifacts required
+//! (generation is digest-driven). `{"stats":true}` on the serve port
+//! reports the cache's hit/miss/evict counters.
 
 use entrollm::bench::{fmt_bytes, fmt_secs};
 use entrollm::cli::Args;
@@ -74,14 +82,20 @@ commands:
                 (--synthetic N builds a seeded synthetic model, no artifacts)
   inspect       print an .elm container's manifest and symbol statistics
   decompress    decode an .elm container back to raw quantized weights
-                (--stream decodes layer-ahead with a bounded prefetch window)
+                (--stream decodes layer-ahead with a bounded prefetch
+                window, reading the payload lazily from disk)
   decode-bench  measure parallel Huffman decode throughput
   eval-ppl      held-out perplexity via the AOT score executable
   generate      one-shot generation through the serving engine
-                (--stream loads weights via the streaming decoder)
-  serve         TCP serving (line-protocol JSON); --stream as above
+                (--stream loads weights via the streaming decoder;
+                --weight-budget-mb serves through the residency cache)
+  serve         TCP serving (line-protocol JSON); --stream as above;
+                --weight-budget-mb M [--elm F | --synthetic N] serves a
+                model larger than the budget via the LRU residency
+                cache, no artifacts needed
   latency       Table II-style latency model for an edge profile,
                 including streaming (layer-ahead) first-token estimates
+                and residency fault-in costs
 "#;
 
 fn cmd_compress(args: &Args) -> Result<()> {
@@ -162,9 +176,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 /// function of the container, so any two decode paths (serial,
 /// parallel, streaming) must produce byte-identical files.
 fn cmd_decompress(args: &Args) -> Result<()> {
-    // Arc so the streaming workers share the payload instead of
-    // copying a potentially GB-scale container.
-    let model = std::sync::Arc::new(ElmModel::load(args.req("model")?)?);
+    let path = args.req("model")?;
     let out = args.req("out")?;
     let threads: usize = args.opt_parse("threads", 4)?;
 
@@ -188,49 +200,69 @@ fn cmd_decompress(args: &Args) -> Result<()> {
         Ok(())
     }
 
+    // Open/validate the container BEFORE touching the output path, so a
+    // bad --model never truncates an existing --out file.
+    enum Opened {
+        /// Lazy: only header + manifest resident; workers read each
+        /// segment from disk when the prefetch window admits it, and
+        /// each layer is written the moment it decodes — peak RSS is
+        /// O(prefetch window), not O(model).
+        Lazy(std::sync::Arc<entrollm::store::SegmentSource>),
+        Eager(ElmModel),
+    }
+    let opened = if args.has("stream") {
+        Opened::Lazy(std::sync::Arc::new(entrollm::store::SegmentSource::open(
+            path,
+        )?))
+    } else {
+        Opened::Eager(ElmModel::load(path)?)
+    };
+
     let file = std::fs::File::create(out)?;
     let mut w = std::io::BufWriter::new(file);
     w.write_all(b"EQW1")?;
-    // Bit width first: without it a reader cannot tell u4 symbols
-    // (values 0..16, one per byte) from narrow-range u8 symbols.
-    w.write_all(&[model.bits.bits() as u8])?;
-    w.write_all(&(model.layers.len() as u32).to_le_bytes())?;
+    // Bit width first (after magic): without it a reader cannot tell u4
+    // symbols (values 0..16, one per byte) from narrow-range u8 symbols.
 
-    if args.has("stream") {
-        // Each layer is written the moment it decodes, so resident
-        // decoded memory stays bounded by the prefetch window.
-        let prefetch: usize = args.opt_parse("prefetch-layers", 4)?;
-        let mut stream =
-            StreamingDecoder::new(threads, prefetch).stream(std::sync::Arc::clone(&model))?;
-        while let Some(layer) = stream.next_layer() {
-            let layer = layer?;
-            write_layer(&mut w, &model.layers[layer.index], &layer.tensor)?;
+    let (n_layers, n_params) = match opened {
+        Opened::Lazy(source) => {
+            w.write_all(&[source.bits().bits() as u8])?;
+            w.write_all(&(source.n_layers() as u32).to_le_bytes())?;
+            let prefetch: usize = args.opt_parse("prefetch-layers", 4)?;
+            let mut stream = StreamingDecoder::new(threads, prefetch)
+                .stream_source(std::sync::Arc::clone(&source))?;
+            while let Some(layer) = stream.next_layer() {
+                let layer = layer?;
+                write_layer(&mut w, source.meta(layer.index), &layer.tensor)?;
+            }
+            let stats = stream.into_stats();
+            println!(
+                "streaming decode: first layer after {} | total {} | window <= {} layers \
+                 (payload read lazily from disk)",
+                fmt_secs(stats.time_to_first_layer.as_secs_f64()),
+                fmt_secs(stats.wall.as_secs_f64()),
+                stats.max_layers_ahead,
+            );
+            (source.n_layers(), source.n_params())
         }
-        let stats = stream.into_stats();
-        println!(
-            "streaming decode: first layer after {} | total {} | window <= {} layers",
-            fmt_secs(stats.time_to_first_layer.as_secs_f64()),
-            fmt_secs(stats.wall.as_secs_f64()),
-            stats.max_layers_ahead,
-        );
-    } else {
-        let (tensors, stats) = ParallelDecoder::new(threads).decode_model(&model)?;
-        println!(
-            "parallel decode: {} in {} ({:.1} Msym/s)",
-            stats.total_symbols(),
-            fmt_secs(stats.wall.as_secs_f64()),
-            stats.symbols_per_sec() / 1e6,
-        );
-        for (meta, q) in model.layers.iter().zip(&tensors) {
-            write_layer(&mut w, meta, q)?;
+        Opened::Eager(model) => {
+            w.write_all(&[model.bits.bits() as u8])?;
+            w.write_all(&(model.layers.len() as u32).to_le_bytes())?;
+            let (tensors, stats) = ParallelDecoder::new(threads).decode_model(&model)?;
+            println!(
+                "parallel decode: {} in {} ({:.1} Msym/s)",
+                stats.total_symbols(),
+                fmt_secs(stats.wall.as_secs_f64()),
+                stats.symbols_per_sec() / 1e6,
+            );
+            for (meta, q) in model.layers.iter().zip(&tensors) {
+                write_layer(&mut w, meta, q)?;
+            }
+            (model.layers.len(), model.n_params())
         }
-    }
+    };
     w.flush()?;
-    println!(
-        "decoded {} layers / {} symbols (all segments CRC-clean) -> {out}",
-        model.layers.len(),
-        model.n_params(),
-    );
+    println!("decoded {n_layers} layers / {n_params} symbols (all segments CRC-clean) -> {out}");
     Ok(())
 }
 
@@ -312,18 +344,78 @@ fn load_serving_backend(
     }
 }
 
-fn cmd_generate(args: &Args) -> Result<()> {
-    let artifacts = args.opt("artifacts", "artifacts");
-    let flavor = Flavor::parse(args.opt("flavor", "u8"))?;
-    let prompt = args.req("prompt")?.to_string();
-    let max_tokens: usize = args.opt_parse("max-tokens", 48)?;
-    let temperature: f32 = args.opt_parse("temperature", 0.0f32)?;
-    let threads: usize = args.opt_parse("threads", 4)?;
+/// Does this invocation ask for the weight-residency serving path?
+/// Either flag implies it: a budget means "cache-serve this model", and
+/// `--synthetic` (for generate/serve) has no artifacts to run PJRT on.
+fn wants_residency(args: &Args) -> bool {
+    args.flags.contains_key("weight-budget-mb") || args.flags.contains_key("synthetic")
+}
 
-    let backend = load_serving_backend(args, artifacts, flavor, threads)?;
+/// Build the residency-cache serving backend from CLI flags: an `.elm`
+/// file opened lazily, or a freshly compressed synthetic model.
+fn resident_backend(args: &Args) -> Result<entrollm::residency::ResidentDigestBackend> {
+    // The residency path is digest-driven and never touches PJRT
+    // artifacts; refuse combinations that would silently pretend
+    // otherwise instead of serving pseudo-tokens behind the user's back.
+    for conflicting in ["artifacts", "flavor"] {
+        if args.flags.contains_key(conflicting) {
+            return Err(Error::InvalidArg(format!(
+                "--{conflicting} cannot be combined with --weight-budget-mb/--synthetic \
+                 serving: the weight-residency path uses a digest-driven backend and \
+                 ignores PJRT artifacts; drop --{conflicting} or the residency flags"
+            )));
+        }
+    }
+    if args.has("stream") {
+        return Err(Error::InvalidArg(
+            "--stream is the PJRT streaming-load path; the residency path \
+             (--weight-budget-mb/--synthetic) already reads segments lazily — drop one"
+                .into(),
+        ));
+    }
+    if args.flags.contains_key("elm") && args.flags.contains_key("synthetic") {
+        return Err(Error::InvalidArg(
+            "--elm and --synthetic both name a model to serve — pass exactly one".into(),
+        ));
+    }
+    let mb: f64 = args.opt_parse("weight-budget-mb", 64.0f64)?;
+    let budget = entrollm::pipeline::weight_budget_bytes(mb)?;
+    // Digest serving shape: byte-level vocab so prompts/replies are text.
+    let (batch, max_seq, vocab) = (2usize, 64usize, 256usize);
+    let backend = match args.flags.get("elm") {
+        Some(elm) => entrollm::pipeline::load_resident_digest_backend(
+            elm, budget, batch, max_seq, vocab,
+        )?,
+        None => {
+            let n: usize = args.opt_parse("synthetic", 12usize)?;
+            let seed: u64 = args.opt_parse("seed", 0x5EED_u64)?;
+            let bits = BitWidth::parse(args.opt("bits", "u8"))?;
+            println!("synthetic model: {n} layers (seed {seed:#x})");
+            entrollm::pipeline::synthetic_resident_digest_backend(
+                n, seed, bits, budget, batch, max_seq, vocab,
+            )?
+        }
+    };
+    let ws = backend.weights();
+    println!(
+        "weight-residency cache: budget {} | {} layers / {} decoded bytes total \
+         (digest-driven serving; PJRT artifacts not used)",
+        fmt_bytes(ws.counters().budget_bytes),
+        ws.n_layers(),
+        fmt_bytes(ws.cache().source().n_params()),
+    );
+    Ok(backend)
+}
+
+fn generate_with<B: entrollm::coordinator::Backend>(
+    backend: B,
+    prompt: &str,
+    max_tokens: usize,
+    temperature: f32,
+) -> Result<()> {
     let mut engine = Engine::new(backend, EngineConfig::default());
     let tok = ByteTokenizer;
-    let mut req = Request::greedy(1, tok.encode(&prompt), max_tokens);
+    let mut req = Request::greedy(1, tok.encode(prompt), max_tokens);
     req.temperature = temperature;
     engine.submit(req)?;
     let responses = engine.run_to_completion(10_000)?;
@@ -337,22 +429,53 @@ fn cmd_generate(args: &Args) -> Result<()> {
             fmt_secs(r.timing.decode.as_secs_f64()),
         );
     }
+    if let Some(c) = engine.residency() {
+        println!(
+            "cache: {} hits / {} misses / {} evictions | peak {} of {} budget",
+            c.hits,
+            c.misses,
+            c.evictions,
+            fmt_bytes(c.peak_resident_bytes),
+            fmt_bytes(c.budget_bytes),
+        );
+    }
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
+fn cmd_generate(args: &Args) -> Result<()> {
+    let prompt = args.req("prompt")?.to_string();
+    let max_tokens: usize = args.opt_parse("max-tokens", 48)?;
+    let temperature: f32 = args.opt_parse("temperature", 0.0f32)?;
+    if wants_residency(args) {
+        return generate_with(resident_backend(args)?, &prompt, max_tokens, temperature);
+    }
     let artifacts = args.opt("artifacts", "artifacts");
     let flavor = Flavor::parse(args.opt("flavor", "u8"))?;
-    let port: u16 = args.opt_parse("port", 7433)?;
     let threads: usize = args.opt_parse("threads", 4)?;
     let backend = load_serving_backend(args, artifacts, flavor, threads)?;
+    generate_with(backend, &prompt, max_tokens, temperature)
+}
+
+fn serve_with<B: entrollm::coordinator::Backend>(backend: B, port: u16, tag: &str) -> Result<()> {
     let mut engine = Engine::new(backend, EngineConfig::default());
     let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
-    println!("serving {} on 127.0.0.1:{port} (ctrl-c to stop)", flavor.tag());
+    println!("serving {tag} on 127.0.0.1:{port} (ctrl-c to stop)");
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let served = entrollm::server::serve(&mut engine, listener, stop)?;
     println!("served {served} requests");
     Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let port: u16 = args.opt_parse("port", 7433)?;
+    if wants_residency(args) {
+        return serve_with(resident_backend(args)?, port, "resident (digest backend)");
+    }
+    let artifacts = args.opt("artifacts", "artifacts");
+    let flavor = Flavor::parse(args.opt("flavor", "u8"))?;
+    let threads: usize = args.opt_parse("threads", 4)?;
+    let backend = load_serving_backend(args, artifacts, flavor, threads)?;
+    serve_with(backend, port, flavor.tag())
 }
 
 fn cmd_latency(args: &Args) -> Result<()> {
@@ -397,6 +520,16 @@ fn cmd_latency(args: &Args) -> Result<()> {
             "  streamed TTFT : {} (prefetch {prefetch}/{n_layers} layers, {:.2}x vs eager decode)",
             fmt_secs(model.streaming_first_token(&with, n_layers, prefetch)),
             model.streaming_speedup(&with, n_layers, prefetch),
+        );
+        // Residency fault-in: steady-state tokens/sec with part of the
+        // decoded model pinned resident. 0 pinned = the shipped LRU
+        // cache on a cyclic dense pass (every access misses).
+        let full = model.faulted_tokens_per_sec(&with, n_layers, n_layers);
+        let half = model.faulted_tokens_per_sec(&with, n_layers, n_layers / 2);
+        let none = model.faulted_tokens_per_sec(&with, n_layers, 0);
+        println!(
+            "  resident tok/s: {full:.3} (all pinned) | {half:.3} (1/2 pinned) | \
+             {none:.3} (LRU, cyclic scan)"
         );
     }
     Ok(())

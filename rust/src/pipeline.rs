@@ -11,9 +11,10 @@
 use crate::coordinator::PjrtBackend;
 use crate::decode::{StreamStats, StreamingDecoder};
 use crate::quant::BitWidth;
+use crate::residency::{ResidentDigestBackend, ResidentWeightSet};
 use crate::rng::Rng;
 use crate::runtime::{load_weights_bin, Manifest, ModelRuntime, Variant, WeightSet};
-use crate::store::{compress, CompressionReport, ElmModel};
+use crate::store::{compress, CompressionReport, ElmModel, SegmentSource};
 use crate::tensor::TensorF32;
 use crate::{Error, Result};
 use std::path::Path;
@@ -171,8 +172,11 @@ pub fn load_backend_streaming(
     let manifest = Manifest::load(dir.join("manifest.json"))?;
     let weights = load_weights_bin(dir.join("weights.bin"))?;
     let (_, rest) = split_weights(&manifest, weights);
-    let elm = ElmModel::load(elm_path)?;
-    load_backend_streaming_elm(dir, elm, rest, threads, prefetch_layers)
+    // Lazy open: the payload stays on disk and each segment is read
+    // only when the prefetch window admits it, so peak RSS during the
+    // load is O(prefetch window), not O(model).
+    let source = Arc::new(SegmentSource::open(elm_path)?);
+    load_backend_streaming_source(dir, source, rest, threads, prefetch_layers)
 }
 
 /// [`load_backend_streaming`] from an in-memory container plus the fp32
@@ -185,7 +189,21 @@ pub fn load_backend_streaming_elm(
     threads: usize,
     prefetch_layers: usize,
 ) -> Result<(PjrtBackend, StreamStats)> {
-    let mut stream = StreamingDecoder::new(threads, prefetch_layers).stream(Arc::new(elm))?;
+    let source = Arc::new(SegmentSource::from_model(Arc::new(elm)));
+    load_backend_streaming_source(artifacts, source, f32_rest, threads, prefetch_layers)
+}
+
+/// Shared core of the streaming deploy paths: drain a windowed
+/// [`StreamingDecoder`] over any [`SegmentSource`] into a weight set,
+/// then hand it to the runtime.
+pub fn load_backend_streaming_source(
+    artifacts: impl AsRef<Path>,
+    source: Arc<SegmentSource>,
+    f32_rest: Vec<(String, TensorF32)>,
+    threads: usize,
+    prefetch_layers: usize,
+) -> Result<(PjrtBackend, StreamStats)> {
+    let mut stream = StreamingDecoder::new(threads, prefetch_layers).stream_source(source)?;
     let ws = WeightSet::from_layer_stream(&mut stream, f32_rest)?;
     let stats = stream.into_stats();
     let rt = ModelRuntime::load(artifacts, Variant::Quant, &ws)?;
@@ -210,6 +228,66 @@ pub fn load_backend_streaming_from_artifacts(
     let (quantizable, rest) = split_weights(&manifest, weights);
     let (elm, _) = compress(&quantizable, bits)?;
     load_backend_streaming_elm(dir, elm, rest, threads, prefetch_layers)
+}
+
+/// Convert the CLI's `--weight-budget-mb` (fractional MiB allowed, so
+/// sub-MiB test models can exercise eviction) into a byte budget.
+pub fn weight_budget_bytes(mb: f64) -> Result<usize> {
+    if !mb.is_finite() || mb <= 0.0 {
+        return Err(Error::InvalidArg(format!(
+            "--weight-budget-mb must be a positive number, got {mb}"
+        )));
+    }
+    Ok((mb * 1024.0 * 1024.0) as usize)
+}
+
+/// Open an ELM container **lazily** and build a weight-residency
+/// serving set over it: payload stays on disk, decoded layers stay
+/// under `budget_bytes` (the `--weight-budget-mb` deploy path for
+/// models whose decoded weights exceed device RAM).
+pub fn open_resident_weights(
+    elm_path: impl AsRef<Path>,
+    budget_bytes: usize,
+    f32_rest: Vec<(String, TensorF32)>,
+) -> Result<ResidentWeightSet> {
+    let source = Arc::new(SegmentSource::open(elm_path)?);
+    ResidentWeightSet::new(source, budget_bytes, f32_rest)
+}
+
+/// Residency-serving backend straight from an `.elm` file: no PJRT
+/// artifacts needed — generation is digest-driven
+/// ([`crate::residency::ResidentDigestBackend`]), faulting layers
+/// through the LRU cache on every weight pass. This is what
+/// `entrollm serve --elm … --weight-budget-mb …` runs.
+pub fn load_resident_digest_backend(
+    elm_path: impl AsRef<Path>,
+    budget_bytes: usize,
+    batch: usize,
+    max_seq: usize,
+    vocab: usize,
+) -> Result<ResidentDigestBackend> {
+    let ws = open_resident_weights(elm_path, budget_bytes, Vec::new())?;
+    Ok(ResidentDigestBackend::new(ws, batch, max_seq, vocab))
+}
+
+/// In-memory variant of [`load_resident_digest_backend`] over a
+/// freshly compressed synthetic model (`serve --synthetic N`): the
+/// encoded payload lives in memory, but decoded residency is still
+/// bounded by the budget.
+pub fn synthetic_resident_digest_backend(
+    n_layers: usize,
+    seed: u64,
+    bits: BitWidth,
+    budget_bytes: usize,
+    batch: usize,
+    max_seq: usize,
+    vocab: usize,
+) -> Result<ResidentDigestBackend> {
+    let layers = synthetic_layers(n_layers, seed);
+    let (elm, _) = compress(&layers, bits)?;
+    let source = Arc::new(SegmentSource::from_model(Arc::new(elm)));
+    let ws = ResidentWeightSet::new(source, budget_bytes, Vec::new())?;
+    Ok(ResidentDigestBackend::new(ws, batch, max_seq, vocab))
 }
 
 /// Deterministic synthetic "trained" layers (Gaussian-ish, like Fig. 4
@@ -292,6 +370,42 @@ mod tests {
         // At least one single-signed layer (i % 4 == 3) exercises the
         // symmetric-unsigned branch.
         assert!(a[3].1.data().iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn weight_budget_parses_fractional_mb() {
+        assert_eq!(weight_budget_bytes(1.0).unwrap(), 1024 * 1024);
+        assert_eq!(weight_budget_bytes(0.5).unwrap(), 512 * 1024);
+        assert!(weight_budget_bytes(0.0).is_err());
+        assert!(weight_budget_bytes(-3.0).is_err());
+        assert!(weight_budget_bytes(f64::NAN).is_err());
+    }
+
+    #[test]
+    fn open_resident_weights_serves_from_disk_lazily() {
+        let layers = synthetic_layers(7, 0xD15C);
+        let (elm, _) = compress(&layers, BitWidth::U4).unwrap();
+        let dir = std::env::temp_dir().join(format!("pipe_res_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.elm");
+        elm.save(&path).unwrap();
+
+        let largest = elm.layers.iter().map(|m| m.n_symbols).max().unwrap();
+        let mut ws = open_resident_weights(&path, largest, Vec::new()).unwrap();
+        // Lazy open: no payload bytes resident before any access.
+        assert_eq!(ws.cache().source().resident_payload_bytes(), 0);
+        for i in 0..elm.layers.len() {
+            let want = crate::store::decode_layer(&elm, i).unwrap();
+            let got = ws.layer(i).unwrap();
+            assert_eq!(got.symbols.data(), want.symbols.data());
+        }
+        let c = ws.counters();
+        assert!(c.evictions > 0, "one-layer budget must evict on a walk");
+        assert!(c.peak_resident_bytes <= largest);
+
+        // A budget below one layer is rejected up front.
+        assert!(open_resident_weights(&path, largest - 1, Vec::new()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -14,6 +14,21 @@
 //! remains the (near-Gaussian) shape of the float weights, so pooling
 //! all layers yields one low-entropy histogram for the model-global
 //! Huffman code (§III-B).
+//!
+//! ## Example: quantize → dequantize stays within half a step
+//!
+//! ```
+//! use entrollm::quant::{dequantize, max_error_bound, quantize_mixed, BitWidth};
+//! use entrollm::tensor::TensorF32;
+//!
+//! let w = TensorF32::new(vec![4], vec![-0.20, -0.05, 0.05, 0.20])?;
+//! let q = quantize_mixed(&w, BitWidth::U8);
+//! let bound = max_error_bound(&q.params);
+//! for (a, b) in w.data().iter().zip(dequantize(&q).data()) {
+//!     assert!((a - b).abs() <= bound);
+//! }
+//! # Ok::<(), entrollm::Error>(())
+//! ```
 
 use crate::tensor::{TensorF32, TensorU8};
 use crate::{Error, Result};

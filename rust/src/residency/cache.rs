@@ -1,0 +1,327 @@
+//! The LRU layer cache: a byte budget, resident [`QuantizedTensor`]s,
+//! and the fault-in path through [`SegmentDecoder`].
+
+use crate::decode::SegmentDecoder;
+use crate::quant::QuantizedTensor;
+use crate::store::SegmentSource;
+use crate::{Error, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Observability counters for one [`LruWeightCache`] — what the
+/// server's `{"stats":true}` admin line surfaces as `cache_*` fields.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheCounters {
+    /// Accesses served from a resident layer.
+    pub hits: u64,
+    /// Accesses that had to re-decode the layer's segment.
+    pub misses: u64,
+    /// Layers dropped to make room.
+    pub evictions: u64,
+    /// Decoded bytes currently resident.
+    pub resident_bytes: usize,
+    /// High-water mark of `resident_bytes` — the acceptance bound:
+    /// never exceeds `budget_bytes` by construction.
+    pub peak_resident_bytes: usize,
+    /// Configured byte budget.
+    pub budget_bytes: usize,
+    /// Layers currently resident.
+    pub resident_layers: usize,
+}
+
+impl CacheCounters {
+    /// Hit fraction over all accesses so far (0 when untouched).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Entry {
+    tensor: QuantizedTensor,
+    /// Decoded size this entry charges against the budget (one byte per
+    /// symbol — the u8 symbol buffer dominates a decoded layer).
+    bytes: usize,
+    /// Logical timestamp of the last access (LRU order).
+    last_used: u64,
+}
+
+/// LRU **weight-residency cache** over a [`SegmentSource`].
+///
+/// Holds decoded layers up to a configurable byte budget; a miss
+/// re-decodes the layer's segment via the re-entrant
+/// [`SegmentDecoder`] (CRC-checked random re-entry), evicting
+/// least-recently-used layers first until the faulted layer fits. This
+/// is what lets a model whose *decoded* weights exceed device RAM keep
+/// serving: resident decoded bytes never exceed the budget, and cold
+/// layers pay a re-decode instead of permanent residency.
+///
+/// Construction fails up front if the budget cannot hold the largest
+/// single layer — such a cache could never hit and every access would
+/// thrash, so it is an error, not a degraded mode.
+pub struct LruWeightCache {
+    decoder: SegmentDecoder,
+    entries: Vec<Option<Entry>>,
+    /// Logical clock; bumped on every access.
+    clock: u64,
+    counters: CacheCounters,
+    /// Wallclock spent re-decoding faulted segments.
+    fault_time: Duration,
+}
+
+impl LruWeightCache {
+    /// Cache over `source` with a decoded-byte `budget_bytes`.
+    pub fn new(source: Arc<SegmentSource>, budget_bytes: usize) -> Result<Self> {
+        let largest = source
+            .layers()
+            .iter()
+            .map(|m| m.n_symbols)
+            .max()
+            .unwrap_or(0);
+        if budget_bytes < largest {
+            return Err(Error::InvalidArg(format!(
+                "weight budget {budget_bytes} B is smaller than the largest decoded \
+                 layer ({largest} B); the cache would thrash on every access — raise \
+                 the budget to at least one layer"
+            )));
+        }
+        let n = source.n_layers();
+        Ok(LruWeightCache {
+            decoder: SegmentDecoder::new(source)?,
+            entries: (0..n).map(|_| None).collect(),
+            clock: 0,
+            counters: CacheCounters {
+                budget_bytes,
+                ..CacheCounters::default()
+            },
+            fault_time: Duration::ZERO,
+        })
+    }
+
+    /// The source the cache faults from.
+    pub fn source(&self) -> &Arc<SegmentSource> {
+        self.decoder.source()
+    }
+
+    /// Counter snapshot.
+    pub fn counters(&self) -> CacheCounters {
+        self.counters
+    }
+
+    /// Wallclock spent re-decoding faulted segments so far.
+    pub fn fault_time(&self) -> Duration {
+        self.fault_time
+    }
+
+    /// Layers the underlying model has.
+    pub fn n_layers(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Is layer `index` currently resident?
+    pub fn is_resident(&self, index: usize) -> bool {
+        matches!(self.entries.get(index), Some(Some(_)))
+    }
+
+    /// Fetch layer `index`, faulting it in (and evicting cold layers)
+    /// on a miss. The borrow is valid until the next cache call.
+    pub fn get(&mut self, index: usize) -> Result<&QuantizedTensor> {
+        if index >= self.entries.len() {
+            return Err(Error::InvalidArg(format!(
+                "layer index {index} out of range ({} layers)",
+                self.entries.len()
+            )));
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        if self.entries[index].is_some() {
+            self.counters.hits += 1;
+            let e = self.entries[index].as_mut().expect("checked resident");
+            e.last_used = clock;
+            return Ok(&e.tensor);
+        }
+
+        self.counters.misses += 1;
+        let bytes = self.decoder.source().meta(index).n_symbols;
+        // Evict LRU layers until the faulted one fits; construction
+        // guarantees `bytes <= budget`, so this terminates with the
+        // invariant `resident_bytes <= budget` intact.
+        while self.counters.resident_bytes + bytes > self.counters.budget_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter_map(|(i, e)| e.as_ref().map(|e| (e.last_used, i)))
+                .min()
+                .map(|(_, i)| i)
+                .expect("over budget implies a resident entry");
+            let evicted = self.entries[victim].take().expect("victim is resident");
+            self.counters.resident_bytes -= evicted.bytes;
+            self.counters.resident_layers -= 1;
+            self.counters.evictions += 1;
+        }
+
+        let t0 = Instant::now();
+        let tensor = self.decoder.decode_layer(index)?;
+        self.fault_time += t0.elapsed();
+
+        self.counters.resident_bytes += bytes;
+        self.counters.resident_layers += 1;
+        self.counters.peak_resident_bytes = self
+            .counters
+            .peak_resident_bytes
+            .max(self.counters.resident_bytes);
+        self.entries[index] = Some(Entry {
+            tensor,
+            bytes,
+            last_used: clock,
+        });
+        Ok(&self.entries[index].as_ref().expect("just inserted").tensor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::synthetic_layers;
+    use crate::quant::BitWidth;
+    use crate::rng::Rng;
+    use crate::store::{compress, decode_layer, ElmModel};
+
+    fn source(n_layers: usize, seed: u64) -> (ElmModel, Arc<SegmentSource>) {
+        let layers = synthetic_layers(n_layers, seed);
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let src = Arc::new(SegmentSource::from_model(Arc::new(model.clone())));
+        (model, src)
+    }
+
+    fn layer_bytes(model: &ElmModel) -> Vec<usize> {
+        model.layers.iter().map(|m| m.n_symbols).collect()
+    }
+
+    #[test]
+    fn budget_smaller_than_one_layer_errors_cleanly() {
+        let (model, src) = source(6, 0x10);
+        let largest = *layer_bytes(&model).iter().max().unwrap();
+        let err = LruWeightCache::new(Arc::clone(&src), largest - 1).unwrap_err();
+        assert!(err.to_string().contains("thrash"), "{err}");
+        // Exactly one layer is the smallest legal budget.
+        assert!(LruWeightCache::new(src, largest).is_ok());
+    }
+
+    #[test]
+    fn hits_require_no_decode_and_bump_no_miss() {
+        let (model, src) = source(5, 0x11);
+        let total: usize = layer_bytes(&model).iter().sum();
+        let mut cache = LruWeightCache::new(src, total).unwrap();
+        for i in 0..model.layers.len() {
+            cache.get(i).unwrap();
+        }
+        let after_walk = cache.counters();
+        assert_eq!(after_walk.misses, model.layers.len() as u64);
+        assert_eq!(after_walk.evictions, 0, "everything fits: no evictions");
+        for i in 0..model.layers.len() {
+            cache.get(i).unwrap();
+        }
+        let after_rewalk = cache.counters();
+        assert_eq!(after_rewalk.misses, after_walk.misses);
+        assert_eq!(after_rewalk.hits, model.layers.len() as u64);
+        assert_eq!(after_rewalk.resident_layers, model.layers.len());
+    }
+
+    #[test]
+    fn eviction_keeps_resident_bytes_within_budget() {
+        let (model, src) = source(10, 0x12);
+        let bytes = layer_bytes(&model);
+        let largest = *bytes.iter().max().unwrap();
+        let total: usize = bytes.iter().sum();
+        // A budget around half the model forces evictions on a full walk.
+        let budget = largest.max(total / 2);
+        let mut cache = LruWeightCache::new(src, budget).unwrap();
+        for round in 0..3 {
+            for i in 0..model.layers.len() {
+                let got = cache.get(i).unwrap();
+                let want = decode_layer(&model, i).unwrap();
+                assert_eq!(got.symbols.data(), want.symbols.data(), "round {round} layer {i}");
+                let c = cache.counters();
+                assert!(
+                    c.resident_bytes <= budget,
+                    "resident {} exceeds budget {budget}",
+                    c.resident_bytes
+                );
+            }
+        }
+        let c = cache.counters();
+        assert!(c.evictions > 0, "budget {budget} < total {total} must evict");
+        assert!(c.peak_resident_bytes <= budget);
+        assert!(cache.fault_time() > Duration::ZERO);
+    }
+
+    #[test]
+    fn lru_order_evicts_the_coldest_layer() {
+        // Three equal-sized layers, budget for exactly two: touching
+        // 0,1 then 2 must evict 0 (the coldest), keep 1 and 2.
+        let layers: Vec<(String, crate::tensor::TensorF32)> = (0..3)
+            .map(|i| {
+                let mut rng = Rng::new(0x20 + i as u64);
+                (
+                    format!("l{i}"),
+                    crate::tensor::TensorF32::new(vec![512], rng.gaussian_vec(512, 0.0, 0.05))
+                        .unwrap(),
+                )
+            })
+            .collect();
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let src = Arc::new(SegmentSource::from_model(Arc::new(model)));
+        let mut cache = LruWeightCache::new(src, 1024).unwrap();
+        cache.get(0).unwrap();
+        cache.get(1).unwrap();
+        cache.get(0).unwrap(); // 1 is now the coldest
+        cache.get(2).unwrap(); // must evict 1
+        assert!(cache.is_resident(0));
+        assert!(!cache.is_resident(1));
+        assert!(cache.is_resident(2));
+        assert_eq!(cache.counters().evictions, 1);
+    }
+
+    #[test]
+    fn out_of_range_index_is_an_error_not_a_panic() {
+        let (_, src) = source(4, 0x13);
+        let mut cache = LruWeightCache::new(src, usize::MAX / 2).unwrap();
+        assert!(cache.get(4).is_err());
+    }
+
+    #[test]
+    fn property_any_access_pattern_any_budget_is_bitexact() {
+        // The eviction-correctness property: whatever the access
+        // pattern and budget, every fetched layer is bit-identical to
+        // the eager decode, and residency never exceeds the budget.
+        let mut rng = Rng::new(0xCAC4E);
+        for case in 0..6 {
+            let n_layers = 2 + rng.below(10);
+            let (model, src) = source(n_layers, 0x9000 + case);
+            let bytes = layer_bytes(&model);
+            let largest = *bytes.iter().max().unwrap();
+            let total: usize = bytes.iter().sum();
+            let budget = largest + rng.below(total.saturating_sub(largest) + 1);
+            let mut cache = LruWeightCache::new(src, budget).unwrap();
+            let eager: Vec<_> = (0..n_layers)
+                .map(|i| decode_layer(&model, i).unwrap())
+                .collect();
+            for _ in 0..60 {
+                let i = rng.below(n_layers);
+                let got = cache.get(i).unwrap();
+                assert_eq!(got.symbols.data(), eager[i].symbols.data());
+                assert_eq!(got.params, eager[i].params);
+                assert!(cache.counters().resident_bytes <= budget);
+            }
+            let c = cache.counters();
+            assert_eq!(c.hits + c.misses, 60);
+            assert!(c.peak_resident_bytes <= budget);
+        }
+    }
+}

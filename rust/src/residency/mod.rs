@@ -1,0 +1,81 @@
+//! **Weight-residency subsystem**: serve models whose *decoded* weights
+//! exceed device RAM (the Huff-LLM / arXiv:2502.00922 direction the
+//! paper's edge story leads to, and "On the Compressibility of
+//! Quantized LLMs", arXiv:2403.01384, frames as decompression-on-
+//! demand).
+//!
+//! The PR 1 streaming decoder bounded *load-time* memory; this module
+//! bounds **serve-time** memory:
+//!
+//! * [`LruWeightCache`] — decoded layers under a configurable byte
+//!   budget; a miss re-decodes the layer's segment through the
+//!   re-entrant [`crate::decode::SegmentDecoder`] (per-segment CRC-32
+//!   makes random re-entry safe), evicting least-recently-used layers
+//!   first. Peak resident decoded bytes never exceed the budget.
+//! * [`ResidentWeightSet`] — the cache plus the always-resident fp32
+//!   rest: the partially-resident analogue of
+//!   [`crate::runtime::WeightSet`], with a bounded-memory
+//!   [`ResidentWeightSet::digest`] that reproduces the eager
+//!   [`crate::coordinator::digest_weights`] bit for bit.
+//! * [`ResidentDigestBackend`] — an engine backend whose every prefill
+//!   and decode step walks the full weight set through the cache, so
+//!   cold layers fault in *during generation* and the
+//!   [`CacheCounters`] surface live in the server's `{"stats":true}`
+//!   line.
+//!
+//! Paired with a file-backed [`crate::store::SegmentSource`], total
+//! resident state is `O(manifest + cache budget)` — the container's
+//! payload stays on disk and the decoded working set stays under the
+//! budget, which is what lets a model larger than RAM serve at all.
+//!
+//! ## Scan behavior (why LRU, and when it pays)
+//!
+//! A dense forward pass touches every layer in the same order each
+//! token. Under LRU, the residents always form a most-recent suffix of
+//! the access sequence, so a strictly cyclic pass over a model bigger
+//! than the budget re-decodes **every** layer — the per-token fault
+//! cost is the *full* parallel decode, regardless of how much of the
+//! model fits ([`crate::device::LatencyModel::fault_in_per_token`]
+//! models this as pinned residency: pass `resident_layers = 0` for
+//! this cache on a cyclic scan; fractional values are the headroom a
+//! pinning/decode-ahead policy recovers). The cache wins whenever
+//! access is *not* a full cyclic scan:
+//! skewed access across multiplexed models, partial passes, early-exit
+//! inference — and it is the substrate the ROADMAP's decode-ahead item
+//! builds on (prefetch layer `i+1` during layer `i`'s matmul, hiding
+//! the fault latency the counters here make visible).
+//!
+//! ## Example
+//!
+//! ```
+//! use std::sync::Arc;
+//! use entrollm::quant::BitWidth;
+//! use entrollm::residency::ResidentWeightSet;
+//! use entrollm::store::{compress, SegmentSource};
+//! use entrollm::tensor::TensorF32;
+//!
+//! // Three equal-size layers; a budget of exactly one decoded layer
+//! // (256 symbol bytes) — the legal minimum.
+//! let layers: Vec<(String, TensorF32)> = (0..3)
+//!     .map(|i| {
+//!         let data = (0..256).map(|j| (j as f32 - 128.0) * 1e-3).collect();
+//!         (format!("l{i}"), TensorF32::new(vec![256], data).unwrap())
+//!     })
+//!     .collect();
+//! let (elm, _) = compress(&layers, BitWidth::U4)?;
+//! let source = Arc::new(SegmentSource::from_model(Arc::new(elm)));
+//! let mut ws = ResidentWeightSet::new(source, 256, Vec::new())?;
+//! ws.layer(0)?; // cold: faults the segment in
+//! ws.layer(0)?; // warm: served from residency
+//! ws.layer(1)?; // evicts layer 0 to stay under budget
+//! let c = ws.counters();
+//! assert_eq!((c.hits, c.misses, c.evictions), (1, 2, 1));
+//! assert!(c.peak_resident_bytes <= 256);
+//! # Ok::<(), entrollm::Error>(())
+//! ```
+
+mod cache;
+mod serve;
+
+pub use cache::{CacheCounters, LruWeightCache};
+pub use serve::{ResidentDigestBackend, ResidentWeightSet};

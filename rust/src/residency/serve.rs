@@ -1,0 +1,339 @@
+//! Serving over a residency cache: [`ResidentWeightSet`] (the
+//! cache-backed analogue of [`crate::runtime::WeightSet`]) and
+//! [`ResidentDigestBackend`] (the engine backend that faults layers in
+//! during generation).
+
+use super::cache::{CacheCounters, LruWeightCache};
+use crate::coordinator::backend::{
+    digest_decode_next, digest_f32_entry, digest_prefill_next, digest_quant_entry, fnv1a64,
+    Backend, BackendCfg, FNV1A64_INIT,
+};
+use crate::quant::QuantizedTensor;
+use crate::store::SegmentSource;
+use crate::tensor::TensorF32;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// The weight tensors a serving engine needs, held **partially
+/// resident**: quantized layers live in an [`LruWeightCache`] and fault
+/// in on access; the fp32 rest (norm tensors — a sliver of the model)
+/// stays always-resident like in [`crate::runtime::WeightSet`].
+pub struct ResidentWeightSet {
+    cache: LruWeightCache,
+    f32s: HashMap<String, TensorF32>,
+    /// Layer name → storage-order index (fault-in by name).
+    by_name: HashMap<String, usize>,
+    /// `(name, index)` in sorted-name order — the digest walk order,
+    /// fixed at construction so per-token digests allocate nothing.
+    digest_order: Vec<(String, usize)>,
+}
+
+impl ResidentWeightSet {
+    /// Weight set over `source` with a decoded-byte `budget_bytes` for
+    /// the quantized layers, plus the always-resident fp32 rest.
+    pub fn new(
+        source: Arc<SegmentSource>,
+        budget_bytes: usize,
+        f32_rest: Vec<(String, TensorF32)>,
+    ) -> Result<Self> {
+        let by_name: HashMap<String, usize> = source
+            .layers()
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (m.name.clone(), i))
+            .collect();
+        // Walk the deduplicated name map, not the raw manifest, so the
+        // digest sees exactly the layers an eager `WeightSet` would.
+        let mut digest_order: Vec<(String, usize)> =
+            by_name.iter().map(|(n, &i)| (n.clone(), i)).collect();
+        digest_order.sort();
+        Ok(ResidentWeightSet {
+            cache: LruWeightCache::new(source, budget_bytes)?,
+            f32s: f32_rest.into_iter().collect(),
+            by_name,
+            digest_order,
+        })
+    }
+
+    /// Cache counter snapshot.
+    pub fn counters(&self) -> CacheCounters {
+        self.cache.counters()
+    }
+
+    /// Borrow the cache (introspection/benches).
+    pub fn cache(&self) -> &LruWeightCache {
+        &self.cache
+    }
+
+    /// Quantized layer by storage-order index, faulting it in if cold.
+    pub fn layer(&mut self, index: usize) -> Result<&QuantizedTensor> {
+        self.cache.get(index)
+    }
+
+    /// Quantized layer by manifest name, faulting it in if cold.
+    pub fn layer_by_name(&mut self, name: &str) -> Result<&QuantizedTensor> {
+        let index = *self
+            .by_name
+            .get(name)
+            .ok_or_else(|| Error::InvalidArg(format!("unknown quantized layer {name:?}")))?;
+        self.cache.get(index)
+    }
+
+    /// Always-resident fp32 tensor by name.
+    pub fn f32(&self, name: &str) -> Option<&TensorF32> {
+        self.f32s.get(name)
+    }
+
+    /// Quantized layer count.
+    pub fn n_layers(&self) -> usize {
+        self.cache.n_layers()
+    }
+
+    /// Digest of the **full** weight set, faulting layers through the
+    /// cache in sorted-name order — peak resident decoded bytes stay
+    /// within the budget, yet the result equals
+    /// [`crate::coordinator::digest_weights`] of the eagerly decoded
+    /// set bit for bit. This is the losslessness oracle for serving
+    /// models larger than the budget.
+    pub fn digest(&mut self) -> Result<u64> {
+        let mut h = FNV1A64_INIT;
+        h = fnv1a64(h, &(self.digest_order.len() as u64).to_le_bytes());
+        for (name, index) in &self.digest_order {
+            let q = self.cache.get(*index)?;
+            h = digest_quant_entry(h, name, q);
+        }
+        let mut fnames: Vec<&String> = self.f32s.keys().collect();
+        fnames.sort();
+        h = fnv1a64(h, &(fnames.len() as u64).to_le_bytes());
+        for name in fnames {
+            h = digest_f32_entry(h, name, &self.f32s[name]);
+        }
+        Ok(h)
+    }
+}
+
+/// Engine backend that serves through a [`ResidentWeightSet`]: every
+/// prefill and every decode step walks the full weight set through the
+/// cache — exactly the per-layer access pattern of a real forward pass
+/// — so generation faults cold layers in (and the hit/miss/evict
+/// counters move) *during* serving, not just at load.
+///
+/// Generation is digest-driven like
+/// [`crate::coordinator::DigestBackend`], via the same shared mixers:
+/// the two backends emit identical tokens iff their weight sets are
+/// bit-identical, which is how tests pin "a model bigger than the
+/// budget still serves the right tokens".
+pub struct ResidentDigestBackend {
+    cfg: BackendCfg,
+    weights: ResidentWeightSet,
+    /// Decode steps executed.
+    pub steps: usize,
+    /// Prefills executed.
+    pub prefills: usize,
+}
+
+impl ResidentDigestBackend {
+    /// Backend over a resident weight set.
+    pub fn new(weights: ResidentWeightSet, batch: usize, max_seq: usize, vocab: usize) -> Self {
+        ResidentDigestBackend {
+            cfg: BackendCfg {
+                batch,
+                max_seq,
+                prefill_len: (max_seq / 2).max(1),
+                vocab,
+            },
+            weights,
+            steps: 0,
+            prefills: 0,
+        }
+    }
+
+    /// Borrow the resident weight set.
+    pub fn weights(&self) -> &ResidentWeightSet {
+        &self.weights
+    }
+
+    fn onehot(&self, tok: u64) -> Vec<f32> {
+        let mut l = vec![0.0f32; self.cfg.vocab];
+        l[(tok % self.cfg.vocab as u64) as usize] = 10.0;
+        l
+    }
+}
+
+impl Backend for ResidentDigestBackend {
+    fn cfg(&self) -> BackendCfg {
+        self.cfg
+    }
+
+    fn prefill(&mut self, prompt: &[u32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.prefills += 1;
+        // One full weight pass through the cache, like a real prefill.
+        let digest = self.weights.digest()?;
+        let next = digest_prefill_next(digest, prompt, self.cfg.vocab);
+        let kv = vec![next as f32; 8];
+        Ok((self.onehot(next), kv.clone(), kv))
+    }
+
+    fn set_slot(&mut self, _slot: usize, _k1: &[f32], _v1: &[f32]) -> Result<()> {
+        // Generation is digest-driven; there is no KV state to splice.
+        Ok(())
+    }
+
+    fn decode(&mut self, tokens: &[u32], pos: &[u32]) -> Result<Vec<f32>> {
+        assert_eq!(tokens.len(), self.cfg.batch);
+        assert_eq!(pos.len(), self.cfg.batch);
+        self.steps += 1;
+        // Each batched decode step is one more weight pass: every layer
+        // is touched, so cold layers fault in mid-generation.
+        let digest = self.weights.digest()?;
+        let mut out = Vec::with_capacity(self.cfg.batch * self.cfg.vocab);
+        for (slot, (&t, &p)) in tokens.iter().zip(pos).enumerate() {
+            out.extend_from_slice(
+                &self.onehot(digest_decode_next(digest, slot, t, p, self.cfg.vocab)),
+            );
+        }
+        Ok(out)
+    }
+
+    fn residency(&self) -> Option<CacheCounters> {
+        Some(self.weights.counters())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{digest_weights, DigestBackend, Engine, EngineConfig, Request};
+    use crate::pipeline::synthetic_layers;
+    use crate::quant::BitWidth;
+    use crate::runtime::WeightSet;
+    use crate::store::{compress, SegmentSource};
+
+    /// Synthetic model + the eager weight set the residency path must
+    /// be indistinguishable from.
+    fn fixture(n_layers: usize, seed: u64) -> (Arc<SegmentSource>, WeightSet, usize, usize) {
+        let layers = synthetic_layers(n_layers, seed);
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let eager = WeightSet::from_elm(&model, 2, Vec::new()).unwrap();
+        let bytes: Vec<usize> = model.layers.iter().map(|m| m.n_symbols).collect();
+        let largest = *bytes.iter().max().unwrap();
+        let total: usize = bytes.iter().sum();
+        let src = Arc::new(SegmentSource::from_model(Arc::new(model)));
+        (src, eager, largest, total)
+    }
+
+    #[test]
+    fn resident_digest_equals_eager_digest_under_tight_budget() {
+        let (src, eager, largest, total) = fixture(12, 0x77);
+        // Budget well below the full model: digesting must evict.
+        let budget = largest.max(total / 3);
+        assert!(budget < total, "fixture must not fit entirely");
+        let mut ws = ResidentWeightSet::new(src, budget, Vec::new()).unwrap();
+        let want = digest_weights(&eager);
+        assert_eq!(ws.digest().unwrap(), want);
+        // Re-digesting (cache now warm-ish) must be stable.
+        assert_eq!(ws.digest().unwrap(), want);
+        let c = ws.counters();
+        assert!(c.evictions > 0, "tight budget must evict");
+        assert!(c.peak_resident_bytes <= budget);
+    }
+
+    fn run_engine<B: Backend>(mut engine: Engine<B>) -> Vec<(u64, Vec<u32>)> {
+        for id in 0..5u64 {
+            engine
+                .submit(Request::greedy(id, vec![3 + id as u32, 7], 6))
+                .unwrap();
+        }
+        let mut out: Vec<(u64, Vec<u32>)> = engine
+            .run_to_completion(1000)
+            .unwrap()
+            .into_iter()
+            .map(|r| (r.id, r.tokens))
+            .collect();
+        out.sort();
+        out
+    }
+
+    #[test]
+    fn resident_backend_generates_identical_tokens_to_eager_backend() {
+        let (src, eager, largest, total) = fixture(10, 0x78);
+        let budget = largest.max(total / 4);
+        let ws = ResidentWeightSet::new(src, budget, Vec::new()).unwrap();
+
+        let resident = run_engine(Engine::new(
+            ResidentDigestBackend::new(ws, 2, 32, 64),
+            EngineConfig::default(),
+        ));
+        let full = run_engine(Engine::new(
+            DigestBackend::from_weights(&eager, 2, 32, 64),
+            EngineConfig::default(),
+        ));
+        assert_eq!(resident, full, "residency must be invisible in the tokens");
+    }
+
+    #[test]
+    fn residency_counters_move_during_generation_and_reach_the_engine() {
+        let (src, _, largest, total) = fixture(8, 0x79);
+        let budget = largest.max(total / 3);
+        assert!(budget < total);
+        let ws = ResidentWeightSet::new(src, budget, Vec::new()).unwrap();
+        let mut engine = Engine::new(
+            ResidentDigestBackend::new(ws, 2, 32, 64),
+            EngineConfig::default(),
+        );
+        assert_eq!(engine.residency().unwrap().misses, 0, "cold at start");
+        engine.submit(Request::greedy(1, vec![5, 6], 4)).unwrap();
+        engine.run_to_completion(100).unwrap();
+        let c = engine.residency().expect("resident backend reports counters");
+        assert!(c.misses > 0, "cold layers must fault in");
+        assert!(c.evictions > 0, "tight budget must evict mid-generation");
+        assert!(c.peak_resident_bytes <= budget);
+        // A cyclic full pass per step never revisits a layer before LRU
+        // drops it (see the module docs on scan behavior), so every
+        // access under a below-model budget is a miss.
+        assert_eq!(c.hits, 0);
+        assert_eq!(c.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn budget_covering_the_model_hits_after_warmup() {
+        let (src, _, _, total) = fixture(8, 0x7C);
+        let ws = ResidentWeightSet::new(src, total, Vec::new()).unwrap();
+        let mut engine = Engine::new(
+            ResidentDigestBackend::new(ws, 2, 32, 64),
+            EngineConfig::default(),
+        );
+        engine.submit(Request::greedy(1, vec![5, 6], 4)).unwrap();
+        engine.run_to_completion(100).unwrap();
+        let c = engine.residency().unwrap();
+        assert_eq!(c.misses, 8, "one cold fault per layer");
+        assert!(c.hits > 0, "later passes are all hits");
+        assert_eq!(c.evictions, 0);
+        assert!(c.hit_rate() > 0.5);
+    }
+
+    #[test]
+    fn layer_by_name_faults_and_unknown_name_errors() {
+        let (src, eager, _, total) = fixture(6, 0x7A);
+        let mut ws = ResidentWeightSet::new(src, total, Vec::new()).unwrap();
+        let q = ws.layer_by_name("blocks.2.w").unwrap();
+        assert_eq!(
+            q.symbols.data(),
+            eager.quants["blocks.2.w"].symbols.data()
+        );
+        assert!(ws.layer_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn f32_rest_participates_in_the_digest() {
+        let (src, mut eager, _, total) = fixture(5, 0x7B);
+        let norm = TensorF32::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        eager.f32s.insert("ln.w".into(), norm.clone());
+        let mut ws =
+            ResidentWeightSet::new(src, total, vec![("ln.w".into(), norm.clone())]).unwrap();
+        assert_eq!(ws.digest().unwrap(), digest_weights(&eager));
+        assert_eq!(ws.f32("ln.w").unwrap().data(), norm.data());
+        assert!(ws.f32("missing").is_none());
+    }
+}

@@ -100,10 +100,13 @@ enum Incoming {
 /// Serialize an engine-stats snapshot (the `{"stats": true}` admin
 /// line's reply): serving counters plus live occupancy, so an operator
 /// can watch a streaming-loaded server warm up without a side channel.
+/// When the backend serves weights through a residency cache
+/// ([`crate::residency`]), the cache's hit/miss/evict counters and
+/// byte occupancy ride along under `cache_*` keys.
 pub fn format_stats<B: Backend>(engine: &Engine<B>) -> String {
     let s = engine.stats();
     let q = engine.queue_stats();
-    json::obj(vec![
+    let mut fields = vec![
         ("completed", json::num(s.completed as f64)),
         ("tokens", json::num(s.tokens as f64)),
         ("decode_steps", json::num(s.decode_steps as f64)),
@@ -112,8 +115,19 @@ pub fn format_stats<B: Backend>(engine: &Engine<B>) -> String {
         ("queue_depth", json::num(q.depth as f64)),
         ("admitted", json::num(q.admitted as f64)),
         ("rejected", json::num(q.rejected as f64)),
-    ])
-    .to_json()
+    ];
+    if let Some(c) = engine.residency() {
+        fields.push(("cache_hits", json::num(c.hits as f64)));
+        fields.push(("cache_misses", json::num(c.misses as f64)));
+        fields.push(("cache_evictions", json::num(c.evictions as f64)));
+        fields.push(("cache_resident_bytes", json::num(c.resident_bytes as f64)));
+        fields.push((
+            "cache_peak_resident_bytes",
+            json::num(c.peak_resident_bytes as f64),
+        ));
+        fields.push(("cache_budget_bytes", json::num(c.budget_bytes as f64)));
+    }
+    json::obj(fields).to_json()
 }
 
 /// Serve an engine over TCP until `stop` flips. Returns total requests
@@ -399,5 +413,67 @@ mod tests {
         assert_eq!(v.get("completed").unwrap().as_usize().unwrap(), 0);
         assert_eq!(v.get("queue_depth").unwrap().as_usize().unwrap(), 0);
         assert!(v.get("mean_occupancy").unwrap().as_f64().unwrap() >= 0.0);
+        // Fully-resident backends have no residency cache to report.
+        assert!(v.get_opt("cache_hits").is_none());
+    }
+
+    /// The acceptance loop for the weight-residency subsystem: a model
+    /// whose decoded weights exceed the byte budget serves over TCP,
+    /// and the `{"stats":true}` admin line carries the cache counters.
+    #[test]
+    fn stats_line_surfaces_residency_counters_over_loopback() {
+        use crate::pipeline::synthetic_layers;
+        use crate::quant::BitWidth;
+        use crate::residency::{ResidentDigestBackend, ResidentWeightSet};
+        use crate::store::{compress, SegmentSource};
+
+        let layers = synthetic_layers(8, 0xFEED);
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let bytes: Vec<usize> = model.layers.iter().map(|m| m.n_symbols).collect();
+        let largest = *bytes.iter().max().unwrap();
+        let total: usize = bytes.iter().sum();
+        let budget = largest.max(total / 2);
+        assert!(budget < total, "model must exceed the budget");
+        let src = Arc::new(SegmentSource::from_model(Arc::new(model)));
+        let ws = ResidentWeightSet::new(src, budget, Vec::new()).unwrap();
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let server = std::thread::spawn(move || {
+            let mut engine = Engine::new(
+                ResidentDigestBackend::new(ws, 2, 32, 256),
+                EngineConfig::default(),
+            );
+            serve(&mut engine, listener, stop2).unwrap()
+        });
+
+        let mut c = Client::connect(&addr).unwrap();
+        let reply = c.request("residency", 4, 0.0).unwrap();
+        // Token values are digest-driven, so generation may stop early
+        // on the protocol's '.' stop token; at least one token arrives.
+        assert!(reply.get("tokens").unwrap().as_usize().unwrap() >= 1);
+
+        let stats = c.stats().unwrap();
+        assert!(stats.get("cache_misses").unwrap().as_usize().unwrap() > 0);
+        assert!(
+            stats.get("cache_evictions").unwrap().as_usize().unwrap() > 0,
+            "under-budget serving must evict"
+        );
+        let peak = stats
+            .get("cache_peak_resident_bytes")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        assert!(peak <= budget, "peak {peak} must respect budget {budget}");
+        assert_eq!(
+            stats.get("cache_budget_bytes").unwrap().as_usize().unwrap(),
+            budget
+        );
+
+        stop.store(true, Ordering::Relaxed);
+        let served = server.join().unwrap();
+        assert_eq!(served, 1);
     }
 }

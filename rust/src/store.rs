@@ -20,14 +20,30 @@
 //! segment per weight tensor** — the "parameter space segmentation" that
 //! makes §III-C parallel decoding possible: segment starts/ends are known
 //! from the manifest before any bit is decoded.
+//!
+//! The byte-level specification third parties need to write their own
+//! encoders/decoders lives in `docs/FORMAT.md` at the repository root;
+//! this module is the reference implementation.
+//!
+//! Two access modes:
+//!
+//! * [`ElmModel`] holds the whole payload in memory (the cloud/build
+//!   side, and small models).
+//! * [`SegmentSource`] abstracts *where the payload bytes live*: opened
+//!   with [`SegmentSource::open`] it parses only the header + manifest
+//!   and reads each segment from disk on demand, so a streaming or
+//!   cache-resident consumer ([`crate::decode::StreamingDecoder`],
+//!   [`crate::residency::LruWeightCache`]) never pays `O(model)` RSS.
 
 use crate::entropy::shannon_entropy;
 use crate::huffman::{CodeSpec, Decoder, Encoder, FreqTable};
 use crate::quant::{quantize_mixed, BitWidth, QuantParams, QuantizedTensor, Scheme};
 use crate::tensor::{Shape, TensorF32, TensorU8};
 use crate::{Error, Result};
-use std::io::{Read, Write};
+use std::borrow::Cow;
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 
 const MAGIC: &[u8; 4] = b"ELM1";
 const VERSION: u32 = 1;
@@ -124,13 +140,20 @@ impl ElmModel {
 
     /// Serialized container size in bytes (manifest + payload).
     pub fn container_bytes(&self) -> usize {
-        let manifest: usize = self
-            .layers
-            .iter()
-            .map(|l| 2 + l.name.len() + 1 + 8 * l.shape.rank() + 1 + 4 + 4 + 8 + 8 + 4)
-            .sum();
-        4 + 4 + 1 + 4 + 256 + manifest + self.payload.len()
+        header_bytes(&self.layers) + self.payload.len()
     }
+}
+
+/// Serialized size of everything **before** the payload: magic, version,
+/// bit width, layer count, the 256-byte code-length table, and the layer
+/// manifest. This is also the payload's byte offset within a container
+/// file, which is what lazy segment reads seek relative to.
+pub fn header_bytes(layers: &[LayerMeta]) -> usize {
+    let manifest: usize = layers
+        .iter()
+        .map(|l| 2 + l.name.len() + 1 + 8 * l.shape.rank() + 1 + 4 + 4 + 8 + 8 + 4)
+        .sum();
+    4 + 4 + 1 + 4 + 256 + manifest
 }
 
 /// One independently decodable, byte-aligned segment of an
@@ -195,6 +218,154 @@ impl<'a> Iterator for SegmentCursor<'a> {
 }
 
 impl<'a> ExactSizeIterator for SegmentCursor<'a> {}
+
+/// Where a [`SegmentSource`]'s payload bytes live.
+#[derive(Debug)]
+enum Backing {
+    /// Whole payload resident in memory (wraps an [`ElmModel`]).
+    Memory(Arc<ElmModel>),
+    /// Payload left on disk; each segment is read on demand.
+    File {
+        file: Mutex<std::fs::File>,
+        /// Byte offset of the payload within the file (= header size).
+        payload_base: u64,
+    },
+}
+
+/// Random-access segment provider that decouples *what the manifest
+/// says* from *where the payload bytes live*.
+///
+/// [`SegmentSource::open`] parses only the header + manifest and keeps
+/// the file handle, reading each encoded segment from disk the moment a
+/// consumer touches it — so loading a model costs `O(manifest)` resident
+/// bytes, not `O(payload)`. [`SegmentSource::from_model`] wraps an
+/// in-memory container behind the same interface, which is what the
+/// streaming decoder and the weight-residency cache program against.
+///
+/// Thread-safe: `&self` methods only, so an `Arc<SegmentSource>` can be
+/// shared across decode workers (file reads serialize on an internal
+/// lock; decode dominates).
+#[derive(Debug)]
+pub struct SegmentSource {
+    bits: BitWidth,
+    code: CodeSpec,
+    layers: Vec<LayerMeta>,
+    backing: Backing,
+}
+
+impl SegmentSource {
+    /// Source over an in-memory container (shares the payload, never
+    /// copies it).
+    pub fn from_model(model: Arc<ElmModel>) -> Self {
+        SegmentSource {
+            bits: model.bits,
+            code: model.code.clone(),
+            layers: model.layers.clone(),
+            backing: Backing::Memory(model),
+        }
+    }
+
+    /// Open a container file **lazily**: parse header + manifest,
+    /// validate the file length against the manifest, and leave the
+    /// payload on disk for on-demand [`SegmentSource::read_segment`]
+    /// calls.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let mut file = std::fs::File::open(path.as_ref())?;
+        let head = {
+            let mut r = Reader {
+                inner: std::io::BufReader::new(&mut file),
+            };
+            read_manifest(&mut r)?
+        };
+        let payload_base = header_bytes(&head.layers) as u64;
+        let expect = payload_base + head.payload_len as u64;
+        let actual = file.metadata()?.len();
+        if actual != expect {
+            return Err(Error::Format(format!(
+                "container is {actual} bytes, header + manifest claims {expect}"
+            )));
+        }
+        Ok(SegmentSource {
+            bits: head.bits,
+            code: head.code,
+            layers: head.layers,
+            backing: Backing::File {
+                file: Mutex::new(file),
+                payload_base,
+            },
+        })
+    }
+
+    /// Quantization bit width all layers share.
+    pub fn bits(&self) -> BitWidth {
+        self.bits
+    }
+
+    /// The model-global canonical Huffman code.
+    pub fn code(&self) -> &CodeSpec {
+        &self.code
+    }
+
+    /// Layer manifest, in storage order.
+    pub fn layers(&self) -> &[LayerMeta] {
+        &self.layers
+    }
+
+    /// Manifest entry for layer `index`.
+    pub fn meta(&self, index: usize) -> &LayerMeta {
+        &self.layers[index]
+    }
+
+    /// Number of layers.
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total parameters across layers.
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.n_symbols).sum()
+    }
+
+    /// Encoded payload bytes this source keeps resident (0 for a
+    /// file-backed source — that is the lazy-load win).
+    pub fn resident_payload_bytes(&self) -> usize {
+        match &self.backing {
+            Backing::Memory(model) => model.payload.len(),
+            Backing::File { .. } => 0,
+        }
+    }
+
+    /// Read layer `index`'s encoded segment: borrowed from the resident
+    /// payload, or seek+read of exactly `encoded_len` bytes from disk.
+    pub fn read_segment(&self, index: usize) -> Result<Cow<'_, [u8]>> {
+        let m = &self.layers[index];
+        match &self.backing {
+            Backing::Memory(model) => Ok(Cow::Borrowed(model.segment(index))),
+            Backing::File { file, payload_base } => {
+                let mut f = file.lock().unwrap();
+                f.seek(SeekFrom::Start(payload_base + m.offset as u64))?;
+                let mut buf = vec![0u8; m.encoded_len];
+                f.read_exact(&mut buf)?;
+                Ok(Cow::Owned(buf))
+            }
+        }
+    }
+
+    /// Read layer `index`'s segment and check it against the stored
+    /// CRC-32 — the guard every decode path goes through, and what makes
+    /// random re-entry (cache fault-in) safe against torn/corrupt reads.
+    pub fn verified_segment(&self, index: usize) -> Result<Cow<'_, [u8]>> {
+        let seg = self.read_segment(index)?;
+        let m = &self.layers[index];
+        if crate::crc32::hash(&seg) != m.crc32 {
+            return Err(Error::Format(format!(
+                "layer {:?}: segment CRC mismatch",
+                m.name
+            )));
+        }
+        Ok(seg)
+    }
+}
 
 /// Compress a set of named fp32 layers: mixed quantization (§III-A) →
 /// pooled frequency table → model-global Huffman code (§III-B) →
@@ -343,6 +514,93 @@ impl<R: Read> Reader<R> {
     }
 }
 
+/// Everything a container stores *before* the payload, parsed and
+/// validated: the shared decode state plus the layer manifest (with
+/// per-layer payload offsets already accumulated).
+struct ManifestHead {
+    bits: BitWidth,
+    code: CodeSpec,
+    layers: Vec<LayerMeta>,
+    /// Total payload length the manifest claims.
+    payload_len: usize,
+}
+
+/// Parse the header + manifest off a reader, leaving it positioned at
+/// the first payload byte. Shared by the eager loader
+/// ([`ElmModel::read_from`]) and the lazy one ([`SegmentSource::open`]),
+/// so the two paths can never diverge on validation.
+fn read_manifest<R: Read>(r: &mut Reader<R>) -> Result<ManifestHead> {
+    let magic = r.bytes(4)?;
+    if magic != MAGIC {
+        return Err(Error::Format(format!("bad magic {magic:02x?}")));
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(Error::Format(format!("unsupported ELM version {version}")));
+    }
+    let bits = match r.u8()? {
+        4 => BitWidth::U4,
+        8 => BitWidth::U8,
+        other => return Err(Error::Format(format!("bad bit width {other}"))),
+    };
+    let n_layers = r.u32()? as usize;
+    if n_layers == 0 || n_layers > 1_000_000 {
+        return Err(Error::Format(format!("implausible layer count {n_layers}")));
+    }
+    let lengths = r.bytes(256)?;
+    let code = CodeSpec::from_lengths(&lengths)?;
+    let mut layers = Vec::with_capacity(n_layers);
+    let mut offset = 0usize;
+    for _ in 0..n_layers {
+        let name_len = r.u16()? as usize;
+        let name = String::from_utf8(r.bytes(name_len)?)
+            .map_err(|_| Error::Format("layer name not utf-8".into()))?;
+        let rank = r.u8()? as usize;
+        if rank > 8 {
+            return Err(Error::Format(format!("implausible rank {rank}")));
+        }
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(r.u64()? as usize);
+        }
+        let shape = Shape(dims);
+        let scheme = Scheme::from_tag(r.u8()?)?;
+        let scale = r.f32()?;
+        let zero_point = r.f32()?;
+        let n_symbols = r.u64()? as usize;
+        if shape.numel() != n_symbols {
+            return Err(Error::Format(format!(
+                "layer {name:?}: shape {shape} != {n_symbols} symbols"
+            )));
+        }
+        let encoded_len = r.u64()? as usize;
+        let crc32 = r.u32()?;
+        layers.push(LayerMeta {
+            name,
+            shape,
+            params: QuantParams {
+                scheme,
+                bits,
+                scale,
+                zero_point,
+            },
+            n_symbols,
+            offset,
+            encoded_len,
+            crc32,
+        });
+        offset = offset
+            .checked_add(encoded_len)
+            .ok_or_else(|| Error::Format("payload offset overflow".into()))?;
+    }
+    Ok(ManifestHead {
+        bits,
+        code,
+        layers,
+        payload_len: offset,
+    })
+}
+
 impl ElmModel {
     /// Serialize to a writer.
     pub fn write_to<W: Write>(&self, w: W) -> Result<()> {
@@ -385,81 +643,20 @@ impl ElmModel {
     /// Deserialize from a reader, validating magic/version/lengths.
     pub fn read_from<R: Read>(r: R) -> Result<Self> {
         let mut r = Reader { inner: r };
-        let magic = r.bytes(4)?;
-        if magic != MAGIC {
-            return Err(Error::Format(format!("bad magic {magic:02x?}")));
-        }
-        let version = r.u32()?;
-        if version != VERSION {
-            return Err(Error::Format(format!("unsupported ELM version {version}")));
-        }
-        let bits = match r.u8()? {
-            4 => BitWidth::U4,
-            8 => BitWidth::U8,
-            other => return Err(Error::Format(format!("bad bit width {other}"))),
-        };
-        let n_layers = r.u32()? as usize;
-        if n_layers == 0 || n_layers > 1_000_000 {
-            return Err(Error::Format(format!("implausible layer count {n_layers}")));
-        }
-        let lengths = r.bytes(256)?;
-        let code = CodeSpec::from_lengths(&lengths)?;
-        let mut layers = Vec::with_capacity(n_layers);
-        let mut offset = 0usize;
-        for _ in 0..n_layers {
-            let name_len = r.u16()? as usize;
-            let name = String::from_utf8(r.bytes(name_len)?)
-                .map_err(|_| Error::Format("layer name not utf-8".into()))?;
-            let rank = r.u8()? as usize;
-            if rank > 8 {
-                return Err(Error::Format(format!("implausible rank {rank}")));
-            }
-            let mut dims = Vec::with_capacity(rank);
-            for _ in 0..rank {
-                dims.push(r.u64()? as usize);
-            }
-            let shape = Shape(dims);
-            let scheme = Scheme::from_tag(r.u8()?)?;
-            let scale = r.f32()?;
-            let zero_point = r.f32()?;
-            let n_symbols = r.u64()? as usize;
-            if shape.numel() != n_symbols {
-                return Err(Error::Format(format!(
-                    "layer {name:?}: shape {shape} != {n_symbols} symbols"
-                )));
-            }
-            let encoded_len = r.u64()? as usize;
-            let crc32 = r.u32()?;
-            layers.push(LayerMeta {
-                name,
-                shape,
-                params: QuantParams {
-                    scheme,
-                    bits,
-                    scale,
-                    zero_point,
-                },
-                n_symbols,
-                offset,
-                encoded_len,
-                crc32,
-            });
-            offset = offset
-                .checked_add(encoded_len)
-                .ok_or_else(|| Error::Format("payload offset overflow".into()))?;
-        }
+        let head = read_manifest(&mut r)?;
         let mut payload = Vec::new();
         r.inner.read_to_end(&mut payload)?;
-        if payload.len() != offset {
+        if payload.len() != head.payload_len {
             return Err(Error::Format(format!(
-                "payload is {} bytes, manifest claims {offset}",
-                payload.len()
+                "payload is {} bytes, manifest claims {}",
+                payload.len(),
+                head.payload_len
             )));
         }
         Ok(ElmModel {
-            bits,
-            code,
-            layers,
+            bits: head.bits,
+            code: head.code,
+            layers: head.layers,
             payload,
         })
     }
@@ -628,6 +825,93 @@ mod tests {
         model.payload[off] ^= 0x01;
         assert!(model.verify_segment(1).is_err());
         assert!(model.verify_segment(0).is_ok());
+    }
+
+    #[test]
+    fn segment_source_memory_and_file_backings_agree() {
+        let layers = make_layers(8);
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let dir = std::env::temp_dir().join(format!("elm_src_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.elm");
+        model.save(&path).unwrap();
+
+        let model = Arc::new(model);
+        let mem = SegmentSource::from_model(Arc::clone(&model));
+        let lazy = SegmentSource::open(&path).unwrap();
+
+        assert_eq!(mem.n_layers(), lazy.n_layers());
+        assert_eq!(mem.n_params(), lazy.n_params());
+        assert_eq!(mem.bits(), lazy.bits());
+        assert_eq!(mem.code().lengths(), lazy.code().lengths());
+        assert!(mem.resident_payload_bytes() > 0);
+        assert_eq!(lazy.resident_payload_bytes(), 0, "lazy source must not slurp");
+
+        // Random re-entry order: reads must agree byte-for-byte and pass
+        // CRC verification on both backings.
+        for &i in &[2usize, 0, 2, 1, 0] {
+            let a = mem.verified_segment(i).unwrap();
+            let b = lazy.verified_segment(i).unwrap();
+            assert_eq!(a.as_ref(), b.as_ref());
+            assert_eq!(a.as_ref(), model.segment(i));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn segment_source_file_corruption_caught_by_crc() {
+        let layers = make_layers(9);
+        let (model, _) = compress(&layers, BitWidth::U4).unwrap();
+        let dir = std::env::temp_dir().join(format!("elm_srcbad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.elm");
+        model.save(&path).unwrap();
+
+        // Flip one byte inside layer 1's segment on disk.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let base = header_bytes(&model.layers);
+        bytes[base + model.layers[1].offset] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let lazy = SegmentSource::open(&path).unwrap();
+        assert!(lazy.verified_segment(1).is_err());
+        assert!(lazy.verified_segment(0).is_ok());
+        assert!(lazy.verified_segment(2).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn segment_source_rejects_wrong_file_length() {
+        let layers = make_layers(10);
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let dir = std::env::temp_dir().join(format!("elm_srctr_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.elm");
+        model.save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+
+        // Truncated payload: manifest parses, length check must fail.
+        std::fs::write(&path, &full[..full.len() - 1]).unwrap();
+        assert!(SegmentSource::open(&path).is_err());
+
+        // Trailing garbage is equally rejected.
+        let mut padded = full.clone();
+        padded.push(0);
+        std::fs::write(&path, &padded).unwrap();
+        assert!(SegmentSource::open(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn header_bytes_matches_serialized_prefix() {
+        let layers = make_layers(11);
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let mut buf = Vec::new();
+        model.write_to(&mut buf).unwrap();
+        assert_eq!(buf.len(), header_bytes(&model.layers) + model.payload.len());
+        assert_eq!(buf.len(), model.container_bytes());
+        // The bytes at the computed payload base are the payload itself.
+        assert_eq!(&buf[header_bytes(&model.layers)..], &model.payload[..]);
     }
 
     #[test]

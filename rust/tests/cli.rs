@@ -151,6 +151,50 @@ fn synthetic_compress_inspect_decompress_roundtrip() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Artifact-free residency serving: a synthetic model generates through
+/// the LRU weight cache under a sub-model byte budget, and the CLI
+/// reports the cache counters.
+#[test]
+fn generate_with_weight_budget_serves_synthetic_model() {
+    let (ok, text) = run(&[
+        "generate",
+        "--synthetic",
+        "10",
+        "--seed",
+        "3",
+        "--weight-budget-mb",
+        "0.02",
+        "--prompt",
+        "hi",
+        "--max-tokens",
+        "6",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("synthetic model: 10 layers"), "{text}");
+    assert!(text.contains("weight-residency cache"), "{text}");
+    assert!(text.contains("response 1"), "{text}");
+    assert!(text.contains("cache:"), "{text}");
+}
+
+/// A budget smaller than one decoded layer must fail up front with the
+/// thrash explanation, not hang or loop.
+#[test]
+fn weight_budget_below_one_layer_fails_cleanly() {
+    let (ok, text) = run(&[
+        "generate",
+        "--synthetic",
+        "10",
+        "--seed",
+        "3",
+        "--weight-budget-mb",
+        "0.0001",
+        "--prompt",
+        "hi",
+    ]);
+    assert!(!ok, "must fail: {text}");
+    assert!(text.contains("thrash"), "{text}");
+}
+
 #[test]
 fn eval_ppl_quality_ordering_via_cli() {
     if !have_artifacts() {
