@@ -7,7 +7,7 @@
 
 use super::kv::KvMirror;
 use crate::quant::QuantizedTensor;
-use crate::residency::CacheCounters;
+use crate::residency::{CacheCounters, PrefetchCounters};
 use crate::runtime::{ModelRuntime, PrefillOut, WeightSet};
 use crate::tensor::TensorF32;
 use crate::Result;
@@ -41,10 +41,19 @@ pub trait Backend {
     fn decode(&mut self, tokens: &[u32], pos: &[u32]) -> Result<Vec<f32>>;
 
     /// Weight-residency cache counters, when this backend serves
-    /// weights through an [`crate::residency::LruWeightCache`]
+    /// weights through a [`crate::residency::WeightCache`]
     /// (`None` for fully-resident backends). The engine surfaces these
     /// in the server's `{"stats":true}` admin line.
     fn residency(&self) -> Option<CacheCounters> {
+        None
+    }
+
+    /// Decode-ahead prefetch counters, when this backend overlaps
+    /// layer decode with token compute
+    /// ([`crate::residency::PrefetchingDigestBackend`]; `None`
+    /// otherwise). Surfaced as the `prefetch_*` fields of the server's
+    /// `{"stats":true}` admin line.
+    fn prefetch(&self) -> Option<PrefetchCounters> {
         None
     }
 }

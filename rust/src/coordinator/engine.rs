@@ -139,6 +139,13 @@ impl<B: Backend> Engine<B> {
         self.backend.residency()
     }
 
+    /// Decode-ahead prefetch counters, when the backend overlaps layer
+    /// decode with token compute (`None` otherwise) — the `prefetch_*`
+    /// half of the `{"stats":true}` admin line.
+    pub fn prefetch(&self) -> Option<crate::residency::PrefetchCounters> {
+        self.backend.prefetch()
+    }
+
     fn sample_cfg(req: &Request) -> SampleCfg {
         SampleCfg {
             temperature: req.temperature,

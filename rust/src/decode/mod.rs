@@ -32,7 +32,7 @@ use crate::{Error, Result};
 use std::time::{Duration, Instant};
 
 /// Per-thread work accounting from one parallel decode.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct ThreadStats {
     /// Segments this thread decoded.
     pub segments: usize,

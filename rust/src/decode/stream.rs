@@ -255,7 +255,7 @@ impl StreamingDecoder {
 ///
 /// [`LayerStream`] is the in-order pipeline for *loading*; this is its
 /// random-access counterpart for *serving* — the fault-in path of the
-/// weight-residency cache ([`crate::residency::LruWeightCache`]), which
+/// weight-residency cache ([`crate::residency::WeightCache`]), which
 /// must re-decode an evicted layer mid-generation. Per-segment CRC-32
 /// verification runs on every call, so random re-entry is as guarded as
 /// the sequential walk.
@@ -286,6 +286,26 @@ impl SegmentDecoder {
             )));
         }
         decode_one(&self.source, &self.decoder, index)
+    }
+
+    /// [`SegmentDecoder::decode_layer`] plus the per-worker accounting
+    /// the streaming workers keep (`segments`, `encoded_bytes`,
+    /// `symbols`, `busy`) folded into `stats` — shared by the
+    /// residency cache's synchronous fault path and the decode-ahead
+    /// prefetch pool ([`crate::residency::prefetch`]).
+    pub fn decode_layer_stats(
+        &self,
+        index: usize,
+        stats: &mut ThreadStats,
+    ) -> Result<QuantizedTensor> {
+        let t0 = Instant::now();
+        let tensor = self.decode_layer(index)?;
+        let meta = self.source.meta(index);
+        stats.segments += 1;
+        stats.encoded_bytes += meta.encoded_len;
+        stats.symbols += meta.n_symbols;
+        stats.busy += t0.elapsed();
+        Ok(tensor)
     }
 }
 

@@ -13,7 +13,11 @@
 //! * `fault-in` = the residency-cache tax: with `R` of `L` decoded
 //!   layers *pinned* resident, each token step re-decodes the missing
 //!   `(L-R)/L` fraction ([`LatencyModel::fault_in_per_token`]; pass
-//!   `R = 0` for the shipped pure-LRU cache on a cyclic scan).
+//!   `R = 0` for a pure-LRU cache on a cyclic scan);
+//! * `overlapped fault-in` = the decode-ahead pipeline
+//!   (`residency::prefetch`): the fault bill hides behind compute, so a
+//!   token costs `max(compute, decode)` instead of their sum
+//!   ([`LatencyModel::overlapped_token_gen`]).
 
 use super::Profile;
 
@@ -211,14 +215,15 @@ impl LatencyModel {
     ///
     /// `resident_layers` models a pinned (policy-optimal for cyclic
     /// scans) residency, i.e. the headroom a decode-ahead / pin-next
-    /// policy can recover. The *shipped* pure-LRU cache
-    /// (`crate::residency::LruWeightCache`) under a strictly cyclic
-    /// dense forward pass degenerates to **zero** effective residency
-    /// whenever the budget is below the model (every access misses —
-    /// see the `residency` module docs on scan behavior), so model it
-    /// by passing `resident_layers = 0`. Zero cost when the workload
-    /// has no Huffman stage, when the layer structure is unknown
-    /// (`n_layers == 0`), or when everything is pinned.
+    /// policy recovers. A pure-LRU `crate::residency::WeightCache`
+    /// under a strictly cyclic dense forward pass degenerates to
+    /// **zero** effective residency whenever the budget is below the
+    /// model (every access misses — see the `residency` module docs on
+    /// scan behavior), so model it by passing `resident_layers = 0`;
+    /// the scan-resistant segmented-LRU policy approaches
+    /// `resident_layers = budget_layers - 1`. Zero cost when the
+    /// workload has no Huffman stage, when the layer structure is
+    /// unknown (`n_layers == 0`), or when everything is pinned.
     pub fn fault_in_per_token(
         &self,
         w: &Workload,
@@ -252,6 +257,50 @@ impl LatencyModel {
         resident_layers: usize,
     ) -> f64 {
         1.0 / self.faulted_token_gen(w, n_layers, resident_layers).max(1e-18)
+    }
+
+    /// Steady-state per-token latency when **decode-ahead overlaps**
+    /// fault-in with token compute (`residency::prefetch`): while layer
+    /// `i`'s GEMV streams, a worker pool re-decodes layer `i+1`, so a
+    /// token costs the *slower pipeline side*, not the sum:
+    ///
+    /// ```text
+    /// overlapped = max(token_gen, fault_in_per_token)
+    /// ```
+    ///
+    /// Degrades exactly to [`LatencyModel::token_gen`] at full
+    /// residency (nothing to hide) and to the fault bill alone when the
+    /// workload is decode-bound; always `<=`
+    /// [`LatencyModel::faulted_token_gen`], which pays the two phases
+    /// serially.
+    pub fn overlapped_token_gen(
+        &self,
+        w: &Workload,
+        n_layers: usize,
+        resident_layers: usize,
+    ) -> f64 {
+        self.token_gen(w)
+            .total
+            .max(self.fault_in_per_token(w, n_layers, resident_layers))
+    }
+
+    /// Tokens/second with decode-ahead overlap (the
+    /// `benches/decode_ahead.rs` headline, modeled).
+    pub fn overlapped_tokens_per_sec(
+        &self,
+        w: &Workload,
+        n_layers: usize,
+        resident_layers: usize,
+    ) -> f64 {
+        1.0 / self.overlapped_token_gen(w, n_layers, resident_layers).max(1e-18)
+    }
+
+    /// Serial-fault / overlapped-fault latency ratio (`>= 1`): what
+    /// hiding decode behind compute buys at a given residency. Peaks at
+    /// 2.0 when the two pipeline sides are balanced.
+    pub fn overlap_speedup(&self, w: &Workload, n_layers: usize, resident_layers: usize) -> f64 {
+        self.faulted_token_gen(w, n_layers, resident_layers)
+            / self.overlapped_token_gen(w, n_layers, resident_layers).max(1e-18)
     }
 }
 
@@ -490,6 +539,69 @@ mod tests {
         let m = LatencyModel::new(JETSON_P3450);
         assert_eq!(m.fault_in_per_token(&without, 32, 4), 0.0);
         assert_eq!(m.fault_in_per_token(&with, 0, 4), 0.0, "unknown structure");
+    }
+
+    #[test]
+    fn overlap_never_exceeds_the_serial_fault_bill() {
+        let (_, with) = table2_workloads(PHI3, 8, 5.58, 512, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        for resident in 0..=32usize {
+            let overlapped = m.overlapped_token_gen(&with, 32, resident);
+            let serial = m.faulted_token_gen(&with, 32, resident);
+            assert!(overlapped <= serial + 1e-15, "resident {resident}");
+            // And never undercuts either pipeline side.
+            assert!(overlapped >= m.token_gen(&with).total - 1e-15);
+            assert!(overlapped >= m.fault_in_per_token(&with, 32, resident) - 1e-15);
+            assert!(m.overlap_speedup(&with, 32, resident) >= 1.0 - 1e-12);
+        }
+    }
+
+    #[test]
+    fn overlap_degrades_to_plain_token_gen_at_full_residency() {
+        let (_, with) = table2_workloads(PHI3, 8, 5.58, 512, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        let full = m.overlapped_token_gen(&with, 32, 32);
+        assert!((full - m.token_gen(&with).total).abs() < 1e-12);
+        assert!((m.overlap_speedup(&with, 32, 32) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_bound_overlap_costs_exactly_the_decode() {
+        // With nothing resident, the paper-scale fault bill dwarfs one
+        // token's compute: the overlapped cost is the decode itself,
+        // and the speedup approaches (compute + decode) / decode.
+        let (_, with) = table2_workloads(PHI3, 8, 5.58, 512, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        let fault = m.fault_in_per_token(&with, 32, 0);
+        let compute = m.token_gen(&with).total;
+        assert!(fault > compute, "paper-scale decode dominates one GEMV");
+        let overlapped = m.overlapped_token_gen(&with, 32, 0);
+        assert!((overlapped - fault).abs() < 1e-12);
+        let want = (compute + fault) / fault;
+        assert!((m.overlap_speedup(&with, 32, 0) - want).abs() < 1e-9);
+        // Tokens/sec improves accordingly.
+        assert!(
+            m.overlapped_tokens_per_sec(&with, 32, 0) > m.faulted_tokens_per_sec(&with, 32, 0)
+        );
+    }
+
+    #[test]
+    fn overlap_speedup_caps_at_two_and_peaks_when_balanced() {
+        let (_, with) = table2_workloads(PHI3, 8, 5.58, 512, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        for resident in 0..=32usize {
+            let s = m.overlap_speedup(&with, 32, resident);
+            assert!(s <= 2.0 + 1e-9, "resident {resident}: speedup {s} > 2");
+        }
+    }
+
+    #[test]
+    fn no_huffman_means_no_overlap_effect() {
+        let (without, _) = table2_workloads(PHI3, 8, 5.58, 512, 4, 1.0);
+        let m = LatencyModel::new(JETSON_P3450);
+        let t = m.overlapped_token_gen(&without, 32, 0);
+        assert!((t - m.token_gen(&without).total).abs() < 1e-12);
+        assert!((m.overlap_speedup(&without, 32, 0) - 1.0).abs() < 1e-9);
     }
 
     #[test]

@@ -28,7 +28,7 @@
 //! | [`decode`] | §III-C | parameter-space segmentation + parallel decoding |
 //! | [`decode::stream`] | §III-C | streaming layer-ahead decode with a bounded prefetch window |
 //! | [`store`] | §III-B | ELM compressed-model container (eager + lazy segment access) |
-//! | [`residency`] | — | LRU weight-residency cache: serve models larger than device RAM |
+//! | [`residency`] | — | weight-residency cache (scan-resistant policies) + decode-ahead prefetch: serve models larger than device RAM |
 //! | [`entropy`] | §IV-A | Shannon entropy / effective-bits / histograms |
 //! | [`device`] | §IV-C/D | Jetson-class bandwidth/compute cost model |
 //! | [`runtime`] | — | PJRT executor for the AOT artifacts |

@@ -11,7 +11,10 @@
 use crate::coordinator::PjrtBackend;
 use crate::decode::{StreamStats, StreamingDecoder};
 use crate::quant::BitWidth;
-use crate::residency::{ResidentDigestBackend, ResidentWeightSet};
+use crate::residency::{
+    PrefetchConfig, PrefetchingDigestBackend, PrefetchingWeightSet, ResidentDigestBackend,
+    ResidentWeightSet,
+};
 use crate::rng::Rng;
 use crate::runtime::{load_weights_bin, Manifest, ModelRuntime, Variant, WeightSet};
 use crate::store::{compress, CompressionReport, ElmModel, SegmentSource};
@@ -254,11 +257,25 @@ pub fn open_resident_weights(
     ResidentWeightSet::new(source, budget_bytes, f32_rest)
 }
 
-/// Residency-serving backend straight from an `.elm` file: no PJRT
-/// artifacts needed — generation is digest-driven
+/// Fault-on-demand residency-serving backend over any segment source:
+/// no PJRT artifacts needed — generation is digest-driven
 /// ([`crate::residency::ResidentDigestBackend`]), faulting layers
-/// through the LRU cache on every weight pass. This is what
-/// `entrollm serve --elm … --weight-budget-mb …` runs.
+/// through the LRU cache on every weight pass. The single construction
+/// point the CLI and the convenience wrappers below share, and the
+/// fault-on-demand counterpart of [`prefetching_digest_backend`].
+pub fn resident_digest_backend(
+    source: Arc<SegmentSource>,
+    budget_bytes: usize,
+    batch: usize,
+    max_seq: usize,
+    vocab: usize,
+) -> Result<ResidentDigestBackend> {
+    let ws = ResidentWeightSet::new(source, budget_bytes, Vec::new())?;
+    Ok(ResidentDigestBackend::new(ws, batch, max_seq, vocab))
+}
+
+/// [`resident_digest_backend`] straight from an `.elm` file on disk
+/// (lazy open: the payload stays there).
 pub fn load_resident_digest_backend(
     elm_path: impl AsRef<Path>,
     budget_bytes: usize,
@@ -266,8 +283,8 @@ pub fn load_resident_digest_backend(
     max_seq: usize,
     vocab: usize,
 ) -> Result<ResidentDigestBackend> {
-    let ws = open_resident_weights(elm_path, budget_bytes, Vec::new())?;
-    Ok(ResidentDigestBackend::new(ws, batch, max_seq, vocab))
+    let source = Arc::new(SegmentSource::open(elm_path)?);
+    resident_digest_backend(source, budget_bytes, batch, max_seq, vocab)
 }
 
 /// In-memory variant of [`load_resident_digest_backend`] over a
@@ -283,11 +300,43 @@ pub fn synthetic_resident_digest_backend(
     max_seq: usize,
     vocab: usize,
 ) -> Result<ResidentDigestBackend> {
-    let layers = synthetic_layers(n_layers, seed);
-    let (elm, _) = compress(&layers, bits)?;
-    let source = Arc::new(SegmentSource::from_model(Arc::new(elm)));
-    let ws = ResidentWeightSet::new(source, budget_bytes, Vec::new())?;
-    Ok(ResidentDigestBackend::new(ws, batch, max_seq, vocab))
+    let source = residency_source(None, n_layers, seed, bits)?;
+    resident_digest_backend(source, budget_bytes, batch, max_seq, vocab)
+}
+
+/// Resolve the CLI's residency model source: a lazily opened `.elm`
+/// file (payload stays on disk), or a freshly compressed in-memory
+/// synthetic model.
+pub fn residency_source(
+    elm: Option<&str>,
+    synthetic: usize,
+    seed: u64,
+    bits: BitWidth,
+) -> Result<Arc<SegmentSource>> {
+    match elm {
+        Some(path) => Ok(Arc::new(SegmentSource::open(path)?)),
+        None => {
+            let layers = synthetic_layers(synthetic, seed);
+            let (elm, _) = compress(&layers, bits)?;
+            Ok(Arc::new(SegmentSource::from_model(Arc::new(elm))))
+        }
+    }
+}
+
+/// Decode-ahead serving backend over any segment source — what
+/// `entrollm generate/serve --decode-ahead N` runs: the residency
+/// cache under a scan-resistant policy, with a worker pool decoding
+/// layer `i+1` while layer `i` is consumed.
+pub fn prefetching_digest_backend(
+    source: Arc<SegmentSource>,
+    budget_bytes: usize,
+    cfg: PrefetchConfig,
+    batch: usize,
+    max_seq: usize,
+    vocab: usize,
+) -> Result<PrefetchingDigestBackend> {
+    let ws = PrefetchingWeightSet::new(source, budget_bytes, Vec::new(), cfg)?;
+    Ok(PrefetchingDigestBackend::new(ws, batch, max_seq, vocab))
 }
 
 /// Deterministic synthetic "trained" layers (Gaussian-ish, like Fig. 4

@@ -1,15 +1,38 @@
-//! The LRU layer cache: a byte budget, resident [`QuantizedTensor`]s,
-//! and the fault-in path through [`SegmentDecoder`].
+//! The byte-budgeted layer cache: resident [`QuantizedTensor`]s behind
+//! a replacement [`Policy`], with the fault-in path through
+//! [`SegmentDecoder`] and **pinning** for the decode-ahead prefetcher
+//! ([`crate::residency::prefetch`]).
 
-use crate::decode::SegmentDecoder;
+use crate::decode::{SegmentDecoder, ThreadStats};
 use crate::quant::QuantizedTensor;
 use crate::store::SegmentSource;
 use crate::{Error, Result};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-/// Observability counters for one [`LruWeightCache`] — what the
-/// server's `{"stats":true}` admin line surfaces as `cache_*` fields.
+/// Replacement policy of a [`WeightCache`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Policy {
+    /// Pure least-recently-used eviction (the PR 2 behavior). Optimal
+    /// for skewed access, but a strictly cyclic full pass over a model
+    /// bigger than the budget misses on **every** access — the residents
+    /// always form a most-recent suffix of the scan (see the
+    /// [`crate::residency`] module docs).
+    #[default]
+    Lru,
+    /// Scan-resistant segmented LRU. Entries enter a *probationary*
+    /// segment and are promoted to a *protected* segment on re-access;
+    /// eviction takes the **most recently inserted** probationary entry
+    /// first (so a scan's stream of once-touched layers churns a single
+    /// slot while established residents survive) and falls back to the
+    /// protected LRU only when probation is empty. On a cyclic pass over
+    /// `N` equal layers with budget `N-1`, this hits `N-2` layers per
+    /// pass where pure LRU hits zero.
+    SegmentedLru,
+}
+
+/// Observability counters for one [`WeightCache`] — what the server's
+/// `{"stats":true}` admin line surfaces as `cache_*` fields.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct CacheCounters {
     /// Accesses served from a resident layer.
@@ -27,6 +50,9 @@ pub struct CacheCounters {
     pub budget_bytes: usize,
     /// Layers currently resident.
     pub resident_layers: usize,
+    /// Layers currently pinned (never evicted; the decode-ahead
+    /// prefetcher pins a published layer until it is consumed).
+    pub pinned_layers: usize,
 }
 
 impl CacheCounters {
@@ -46,36 +72,58 @@ struct Entry {
     /// Decoded size this entry charges against the budget (one byte per
     /// symbol — the u8 symbol buffer dominates a decoded layer).
     bytes: usize,
-    /// Logical timestamp of the last access (LRU order).
+    /// Logical timestamp of the last access (recency order).
     last_used: u64,
+    /// Logical timestamp of insertion (scan-resistant victim order).
+    inserted: u64,
+    /// Promoted out of probation by a re-access ([`Policy::SegmentedLru`]).
+    protected: bool,
+    /// Pinned entries are never chosen as eviction victims.
+    pinned: bool,
 }
 
-/// LRU **weight-residency cache** over a [`SegmentSource`].
+/// Byte-budgeted **weight-residency cache** over a [`SegmentSource`].
 ///
 /// Holds decoded layers up to a configurable byte budget; a miss
 /// re-decodes the layer's segment via the re-entrant
-/// [`SegmentDecoder`] (CRC-checked random re-entry), evicting
-/// least-recently-used layers first until the faulted layer fits. This
-/// is what lets a model whose *decoded* weights exceed device RAM keep
-/// serving: resident decoded bytes never exceed the budget, and cold
-/// layers pay a re-decode instead of permanent residency.
+/// [`SegmentDecoder`] (CRC-checked random re-entry), evicting victims
+/// chosen by the configured [`Policy`] until the faulted layer fits.
+/// This is what lets a model whose *decoded* weights exceed device RAM
+/// keep serving: resident decoded bytes never exceed the budget, and
+/// cold layers pay a re-decode instead of permanent residency.
+///
+/// The decode-ahead prefetcher drives the cache through the split
+/// [`WeightCache::lookup`] / [`WeightCache::insert`] halves (decode
+/// happens on a worker, outside any lock) and pins published layers so
+/// eviction can never outrun the consumer.
 ///
 /// Construction fails up front if the budget cannot hold the largest
 /// single layer — such a cache could never hit and every access would
 /// thrash, so it is an error, not a degraded mode.
-pub struct LruWeightCache {
+pub struct WeightCache {
     decoder: SegmentDecoder,
+    policy: Policy,
     entries: Vec<Option<Entry>>,
     /// Logical clock; bumped on every access.
     clock: u64,
     counters: CacheCounters,
-    /// Wallclock spent re-decoding faulted segments.
-    fault_time: Duration,
+    /// Fault-decode accounting (busy time, segments, symbols).
+    stats: ThreadStats,
 }
 
-impl LruWeightCache {
-    /// Cache over `source` with a decoded-byte `budget_bytes`.
+impl WeightCache {
+    /// Cache over `source` with a decoded-byte `budget_bytes` and the
+    /// default pure-LRU policy.
     pub fn new(source: Arc<SegmentSource>, budget_bytes: usize) -> Result<Self> {
+        Self::with_policy(source, budget_bytes, Policy::Lru)
+    }
+
+    /// Cache with an explicit replacement [`Policy`].
+    pub fn with_policy(
+        source: Arc<SegmentSource>,
+        budget_bytes: usize,
+        policy: Policy,
+    ) -> Result<Self> {
         let largest = source
             .layers()
             .iter()
@@ -90,15 +138,16 @@ impl LruWeightCache {
             )));
         }
         let n = source.n_layers();
-        Ok(LruWeightCache {
+        Ok(WeightCache {
             decoder: SegmentDecoder::new(source)?,
+            policy,
             entries: (0..n).map(|_| None).collect(),
             clock: 0,
             counters: CacheCounters {
                 budget_bytes,
                 ..CacheCounters::default()
             },
-            fault_time: Duration::ZERO,
+            stats: ThreadStats::default(),
         })
     }
 
@@ -107,14 +156,21 @@ impl LruWeightCache {
         self.decoder.source()
     }
 
+    /// The configured replacement policy.
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
     /// Counter snapshot.
     pub fn counters(&self) -> CacheCounters {
         self.counters
     }
 
-    /// Wallclock spent re-decoding faulted segments so far.
+    /// Wallclock spent re-decoding faulted segments so far (only the
+    /// synchronous [`WeightCache::get`] path; prefetch workers account
+    /// their decode time separately).
     pub fn fault_time(&self) -> Duration {
-        self.fault_time
+        self.stats.busy
     }
 
     /// Layers the underlying model has.
@@ -127,60 +183,232 @@ impl LruWeightCache {
         matches!(self.entries.get(index), Some(Some(_)))
     }
 
-    /// Fetch layer `index`, faulting it in (and evicting cold layers)
-    /// on a miss. The borrow is valid until the next cache call.
-    pub fn get(&mut self, index: usize) -> Result<&QuantizedTensor> {
+    /// Is layer `index` resident *and* pinned?
+    pub fn is_pinned(&self, index: usize) -> bool {
+        matches!(self.entries.get(index), Some(Some(e)) if e.pinned)
+    }
+
+    /// Pin a resident layer so it cannot be evicted. Returns `false`
+    /// (and does nothing) when the layer is not resident.
+    pub fn pin(&mut self, index: usize) -> bool {
+        match self.entries.get_mut(index) {
+            Some(Some(e)) => {
+                if !e.pinned {
+                    e.pinned = true;
+                    self.counters.pinned_layers += 1;
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Release a pin (no-op if the layer is absent or unpinned).
+    pub fn unpin(&mut self, index: usize) {
+        if let Some(Some(e)) = self.entries.get_mut(index) {
+            if e.pinned {
+                e.pinned = false;
+                self.counters.pinned_layers -= 1;
+            }
+        }
+    }
+
+    fn check_index(&self, index: usize) -> Result<()> {
         if index >= self.entries.len() {
             return Err(Error::InvalidArg(format!(
                 "layer index {index} out of range ({} layers)",
                 self.entries.len()
             )));
         }
+        Ok(())
+    }
+
+    /// Record an access outcome without touching an entry (the prefetch
+    /// consumer counts hits/misses itself because an access may resolve
+    /// only after a worker publishes the layer).
+    pub(crate) fn note_access(&mut self, hit: bool) {
+        if hit {
+            self.counters.hits += 1;
+        } else {
+            self.counters.misses += 1;
+        }
+    }
+
+    /// Touch layer `index` if resident: bump recency, promote out of
+    /// probation under [`Policy::SegmentedLru`], and return the tensor.
+    /// Does **not** move the hit/miss counters (the prefetch consumer
+    /// counts its own access outcomes); [`WeightCache::get`] is the
+    /// counting all-in-one path.
+    pub fn lookup(&mut self, index: usize) -> Option<&QuantizedTensor> {
         self.clock += 1;
         let clock = self.clock;
-        if self.entries[index].is_some() {
-            self.counters.hits += 1;
-            let e = self.entries[index].as_mut().expect("checked resident");
-            e.last_used = clock;
-            return Ok(&e.tensor);
+        let protect = self.policy == Policy::SegmentedLru;
+        match self.entries.get_mut(index) {
+            Some(Some(e)) => {
+                e.last_used = clock;
+                if protect {
+                    e.protected = true;
+                }
+                Some(&e.tensor)
+            }
+            _ => None,
         }
+    }
 
-        self.counters.misses += 1;
-        let bytes = self.decoder.source().meta(index).n_symbols;
-        // Evict LRU layers until the faulted one fits; construction
-        // guarantees `bytes <= budget`, so this terminates with the
-        // invariant `resident_bytes <= budget` intact.
-        while self.counters.resident_bytes + bytes > self.counters.budget_bytes {
-            let victim = self
+    /// Touch layer `index` for a serve that already paid its decode
+    /// (prefetch consume / post-fault serve): recency bump only — no
+    /// probation promotion, mirroring [`WeightCache::get`]'s
+    /// first-touch semantics — and no counters.
+    pub(crate) fn peek_serve(&mut self, index: usize) -> Option<&QuantizedTensor> {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.entries.get_mut(index) {
+            Some(Some(e)) => {
+                e.last_used = clock;
+                Some(&e.tensor)
+            }
+            _ => None,
+        }
+    }
+
+    /// Pick an eviction victim under the policy, skipping pinned
+    /// entries. `None` when every resident entry is pinned.
+    fn victim(&self) -> Option<usize> {
+        let live = |(i, e): (usize, &Option<Entry>)| e.as_ref().map(|e| (i, e));
+        match self.policy {
+            Policy::Lru => self
                 .entries
                 .iter()
                 .enumerate()
-                .filter_map(|(i, e)| e.as_ref().map(|e| (e.last_used, i)))
-                .min()
-                .map(|(_, i)| i)
-                .expect("over budget implies a resident entry");
-            let evicted = self.entries[victim].take().expect("victim is resident");
-            self.counters.resident_bytes -= evicted.bytes;
-            self.counters.resident_layers -= 1;
-            self.counters.evictions += 1;
+                .filter_map(live)
+                .filter(|(_, e)| !e.pinned)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i),
+            Policy::SegmentedLru => {
+                let probation = self
+                    .entries
+                    .iter()
+                    .enumerate()
+                    .filter_map(live)
+                    .filter(|(_, e)| !e.pinned && !e.protected)
+                    .max_by_key(|(_, e)| e.inserted)
+                    .map(|(i, _)| i);
+                probation.or_else(|| {
+                    self.entries
+                        .iter()
+                        .enumerate()
+                        .filter_map(live)
+                        .filter(|(_, e)| !e.pinned && e.protected)
+                        .min_by_key(|(_, e)| e.last_used)
+                        .map(|(i, _)| i)
+                })
+            }
         }
+    }
 
-        let t0 = Instant::now();
-        let tensor = self.decoder.decode_layer(index)?;
-        self.fault_time += t0.elapsed();
+    /// Evict unpinned victims until `bytes` more decoded bytes fit
+    /// under the budget. Errors when pinned layers block eviction —
+    /// the prefetch window validation at construction makes that
+    /// unreachable in the shipped configurations.
+    fn make_room(&mut self, index: usize, bytes: usize) -> Result<()> {
+        // Construction guarantees `bytes <= budget`, so this terminates
+        // with the invariant `resident_bytes <= budget` intact unless
+        // pins block eviction.
+        while self.counters.resident_bytes + bytes > self.counters.budget_bytes {
+            let Some(victim) = self.victim() else {
+                return Err(Error::Engine(format!(
+                    "cache budget {} B exhausted by {} pinned layers; cannot make \
+                     room for layer {index} ({bytes} B) — shrink the decode-ahead \
+                     window or raise the budget",
+                    self.counters.budget_bytes, self.counters.pinned_layers
+                )));
+            };
+            if let Some(evicted) = self.entries[victim].take() {
+                self.counters.resident_bytes -= evicted.bytes;
+                self.counters.resident_layers -= 1;
+                self.counters.evictions += 1;
+            }
+        }
+        Ok(())
+    }
 
+    /// Install an externally decoded layer (the prefetch publish path),
+    /// evicting unpinned victims until it fits. `pinned` entries stay
+    /// resident until [`WeightCache::unpin`]. Inserting an
+    /// already-resident layer keeps the existing tensor and only
+    /// strengthens the pin (a prefetch that raced a synchronous fault).
+    ///
+    /// Does not move the hit/miss counters: an insert is not an access.
+    /// The layer was necessarily decoded *before* this call, so on the
+    /// concurrent prefetch path the decoded-but-uninserted tensor
+    /// transiently lives beside a full cache — that overshoot is what
+    /// the `(window + 1) × largest` construction floor budgets for.
+    /// The synchronous [`WeightCache::get`] path instead evicts before
+    /// it decodes and never exceeds the budget at any instant.
+    pub fn insert(&mut self, index: usize, tensor: QuantizedTensor, pinned: bool) -> Result<()> {
+        self.check_index(index)?;
+        self.clock += 1;
+        let clock = self.clock;
+        if self.entries[index].is_some() {
+            if pinned {
+                self.pin(index);
+            }
+            return Ok(());
+        }
+        let bytes = self.decoder.source().meta(index).n_symbols;
+        self.make_room(index, bytes)?;
         self.counters.resident_bytes += bytes;
         self.counters.resident_layers += 1;
         self.counters.peak_resident_bytes = self
             .counters
             .peak_resident_bytes
             .max(self.counters.resident_bytes);
+        if pinned {
+            self.counters.pinned_layers += 1;
+        }
         self.entries[index] = Some(Entry {
             tensor,
             bytes,
             last_used: clock,
+            inserted: clock,
+            protected: false,
+            pinned,
         });
-        Ok(&self.entries[index].as_ref().expect("just inserted").tensor)
+        Ok(())
+    }
+
+    /// Fetch layer `index`, faulting it in synchronously (and evicting
+    /// cold layers) on a miss. The borrow is valid until the next cache
+    /// call.
+    pub fn get(&mut self, index: usize) -> Result<&QuantizedTensor> {
+        self.check_index(index)?;
+        if self.entries[index].is_some() {
+            self.counters.hits += 1;
+            self.clock += 1;
+            let clock = self.clock;
+            let protect = self.policy == Policy::SegmentedLru;
+            let e = self.entries[index].as_mut().expect("checked resident");
+            e.last_used = clock;
+            if protect {
+                e.protected = true;
+            }
+            return Ok(&e.tensor);
+        }
+
+        self.counters.misses += 1;
+        // Evict *before* decoding (PR 2 ordering): the decoded buffer
+        // is only allocated once room exists, so resident decoded
+        // bytes never exceed the budget even transiently on this path.
+        let bytes = self.decoder.source().meta(index).n_symbols;
+        self.make_room(index, bytes)?;
+        let tensor = self.decoder.decode_layer_stats(index, &mut self.stats)?;
+        self.insert(index, tensor, false)?;
+        match self.entries[index].as_ref() {
+            Some(e) => Ok(&e.tensor),
+            None => Err(Error::Engine(format!(
+                "layer {index} missing immediately after fault-in"
+            ))),
+        }
     }
 }
 
@@ -199,6 +427,23 @@ mod tests {
         (model, src)
     }
 
+    /// `n` equal-size layers (512 decoded bytes each) — the shape the
+    /// policy tests need so "budget = k layers" is exact.
+    fn equal_source(n: usize, seed: u64) -> Arc<SegmentSource> {
+        let layers: Vec<(String, crate::tensor::TensorF32)> = (0..n)
+            .map(|i| {
+                let mut rng = Rng::new(seed + i as u64);
+                (
+                    format!("l{i}"),
+                    crate::tensor::TensorF32::new(vec![512], rng.gaussian_vec(512, 0.0, 0.05))
+                        .unwrap(),
+                )
+            })
+            .collect();
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        Arc::new(SegmentSource::from_model(Arc::new(model)))
+    }
+
     fn layer_bytes(model: &ElmModel) -> Vec<usize> {
         model.layers.iter().map(|m| m.n_symbols).collect()
     }
@@ -207,17 +452,17 @@ mod tests {
     fn budget_smaller_than_one_layer_errors_cleanly() {
         let (model, src) = source(6, 0x10);
         let largest = *layer_bytes(&model).iter().max().unwrap();
-        let err = LruWeightCache::new(Arc::clone(&src), largest - 1).unwrap_err();
+        let err = WeightCache::new(Arc::clone(&src), largest - 1).unwrap_err();
         assert!(err.to_string().contains("thrash"), "{err}");
         // Exactly one layer is the smallest legal budget.
-        assert!(LruWeightCache::new(src, largest).is_ok());
+        assert!(WeightCache::new(src, largest).is_ok());
     }
 
     #[test]
     fn hits_require_no_decode_and_bump_no_miss() {
         let (model, src) = source(5, 0x11);
         let total: usize = layer_bytes(&model).iter().sum();
-        let mut cache = LruWeightCache::new(src, total).unwrap();
+        let mut cache = WeightCache::new(src, total).unwrap();
         for i in 0..model.layers.len() {
             cache.get(i).unwrap();
         }
@@ -241,7 +486,7 @@ mod tests {
         let total: usize = bytes.iter().sum();
         // A budget around half the model forces evictions on a full walk.
         let budget = largest.max(total / 2);
-        let mut cache = LruWeightCache::new(src, budget).unwrap();
+        let mut cache = WeightCache::new(src, budget).unwrap();
         for round in 0..3 {
             for i in 0..model.layers.len() {
                 let got = cache.get(i).unwrap();
@@ -265,19 +510,8 @@ mod tests {
     fn lru_order_evicts_the_coldest_layer() {
         // Three equal-sized layers, budget for exactly two: touching
         // 0,1 then 2 must evict 0 (the coldest), keep 1 and 2.
-        let layers: Vec<(String, crate::tensor::TensorF32)> = (0..3)
-            .map(|i| {
-                let mut rng = Rng::new(0x20 + i as u64);
-                (
-                    format!("l{i}"),
-                    crate::tensor::TensorF32::new(vec![512], rng.gaussian_vec(512, 0.0, 0.05))
-                        .unwrap(),
-                )
-            })
-            .collect();
-        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
-        let src = Arc::new(SegmentSource::from_model(Arc::new(model)));
-        let mut cache = LruWeightCache::new(src, 1024).unwrap();
+        let src = equal_source(3, 0x20);
+        let mut cache = WeightCache::new(src, 1024).unwrap();
         cache.get(0).unwrap();
         cache.get(1).unwrap();
         cache.get(0).unwrap(); // 1 is now the coldest
@@ -291,15 +525,131 @@ mod tests {
     #[test]
     fn out_of_range_index_is_an_error_not_a_panic() {
         let (_, src) = source(4, 0x13);
-        let mut cache = LruWeightCache::new(src, usize::MAX / 2).unwrap();
+        let mut cache = WeightCache::new(src, usize::MAX / 2).unwrap();
         assert!(cache.get(4).is_err());
+        assert!(cache.lookup(4).is_none());
+    }
+
+    /// The scan-resistance satellite, on the policy alone: a cyclic
+    /// full pass over `N` equal layers with budget `N-1` must hit at
+    /// least `N-2` layers per pass under [`Policy::SegmentedLru`],
+    /// while pure LRU hits zero.
+    #[test]
+    fn segmented_lru_survives_cyclic_scans_where_lru_scores_zero() {
+        let n = 8usize;
+        let budget = (n - 1) * 512;
+
+        let mut slru =
+            WeightCache::with_policy(equal_source(n, 0x30), budget, Policy::SegmentedLru).unwrap();
+        let mut lru =
+            WeightCache::with_policy(equal_source(n, 0x30), budget, Policy::Lru).unwrap();
+
+        // Warmup pass: everything cold on both policies.
+        for i in 0..n {
+            slru.get(i).unwrap();
+            lru.get(i).unwrap();
+        }
+        assert_eq!(slru.counters().hits, 0);
+        assert_eq!(lru.counters().hits, 0);
+
+        for pass in 0..4 {
+            let before = slru.counters().hits;
+            for i in 0..n {
+                slru.get(i).unwrap();
+                lru.get(i).unwrap();
+                assert!(slru.counters().resident_bytes <= budget);
+            }
+            let per_pass = slru.counters().hits - before;
+            assert!(
+                per_pass as usize >= n - 2,
+                "pass {pass}: segmented LRU hit {per_pass} of {n}, want >= {}",
+                n - 2
+            );
+        }
+        assert_eq!(lru.counters().hits, 0, "pure LRU thrashes on a cyclic scan");
+        assert!(lru.counters().evictions > slru.counters().evictions);
     }
 
     #[test]
-    fn property_any_access_pattern_any_budget_is_bitexact() {
+    fn pinned_layers_are_never_eviction_victims() {
+        // Budget for three layers; pin one, then stream the rest
+        // through — the pinned layer must survive every eviction even
+        // though (under LRU, never being re-accessed) it would
+        // otherwise be the first victim every time.
+        let n = 6usize;
+        let src = equal_source(n, 0x31);
+        let mut cache = WeightCache::with_policy(src, 3 * 512, Policy::Lru).unwrap();
+        cache.get(3).unwrap();
+        assert!(cache.pin(3));
+        assert!(cache.is_pinned(3));
+        assert_eq!(cache.counters().pinned_layers, 1);
+        for round in 0..3 {
+            for i in [0usize, 1, 2, 4, 5] {
+                cache.get(i).unwrap();
+                assert!(cache.is_resident(3), "round {round}: pinned layer evicted");
+            }
+        }
+        assert!(cache.counters().evictions > 0, "unpinned layers must churn");
+        // Unpinning makes it the coldest entry — the very next eviction
+        // takes it.
+        cache.unpin(3);
+        assert_eq!(cache.counters().pinned_layers, 0);
+        let absent = (0..n).find(|&i| !cache.is_resident(i)).unwrap();
+        cache.get(absent).unwrap();
+        assert!(!cache.is_resident(3), "unpinned layer must fall out first");
+        // Pinning a non-resident layer reports failure.
+        assert!(!cache.pin(3));
+    }
+
+    #[test]
+    fn insert_when_everything_pinned_errors_instead_of_breaking_budget() {
+        let n = 4usize;
+        let src = equal_source(n, 0x32);
+        let mut cache = WeightCache::with_policy(src, 2 * 512, Policy::SegmentedLru).unwrap();
+        cache.get(0).unwrap();
+        cache.get(1).unwrap();
+        assert!(cache.pin(0));
+        assert!(cache.pin(1));
+        let err = cache.get(2).unwrap_err();
+        assert!(err.to_string().contains("pinned"), "{err}");
+        assert!(cache.counters().resident_bytes <= 2 * 512);
+        // Releasing a pin unblocks the fault.
+        cache.unpin(0);
+        assert!(cache.get(2).is_ok());
+    }
+
+    #[test]
+    fn lookup_insert_split_matches_get() {
+        // The prefetch path (external decode + insert + lookup) must
+        // leave the cache bit-identical to the synchronous get path.
+        let (model, src) = source(6, 0x33);
+        let total: usize = layer_bytes(&model).iter().sum();
+        let decoder = SegmentDecoder::new(Arc::clone(&src)).unwrap();
+        let mut cache = WeightCache::with_policy(src, total, Policy::SegmentedLru).unwrap();
+        assert!(cache.lookup(2).is_none(), "cold lookup is a miss");
+        let tensor = decoder.decode_layer(2).unwrap();
+        cache.insert(2, tensor, true).unwrap();
+        assert!(cache.is_pinned(2));
+        // Double insert is a no-op that keeps the pin.
+        let again = decoder.decode_layer(2).unwrap();
+        cache.insert(2, again, false).unwrap();
+        assert!(cache.is_pinned(2));
+        assert_eq!(cache.counters().resident_layers, 1);
+        let want = decode_layer(&model, 2).unwrap();
+        let got = cache.lookup(2).expect("resident after insert");
+        assert_eq!(got.symbols.data(), want.symbols.data());
+        assert_eq!(got.params, want.params);
+        // Inserts and lookups moved no hit/miss counters.
+        let c = cache.counters();
+        assert_eq!((c.hits, c.misses), (0, 0));
+    }
+
+    #[test]
+    fn property_any_access_pattern_any_budget_any_policy_is_bitexact() {
         // The eviction-correctness property: whatever the access
-        // pattern and budget, every fetched layer is bit-identical to
-        // the eager decode, and residency never exceeds the budget.
+        // pattern, budget, and policy, every fetched layer is
+        // bit-identical to the eager decode, and residency never
+        // exceeds the budget.
         let mut rng = Rng::new(0xCAC4E);
         for case in 0..6 {
             let n_layers = 2 + rng.below(10);
@@ -308,7 +658,12 @@ mod tests {
             let largest = *bytes.iter().max().unwrap();
             let total: usize = bytes.iter().sum();
             let budget = largest + rng.below(total.saturating_sub(largest) + 1);
-            let mut cache = LruWeightCache::new(src, budget).unwrap();
+            let policy = if rng.below(2) == 0 {
+                Policy::Lru
+            } else {
+                Policy::SegmentedLru
+            };
+            let mut cache = WeightCache::with_policy(src, budget, policy).unwrap();
             let eager: Vec<_> = (0..n_layers)
                 .map(|i| decode_layer(&model, i).unwrap())
                 .collect();

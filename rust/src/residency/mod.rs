@@ -7,11 +7,13 @@
 //! The PR 1 streaming decoder bounded *load-time* memory; this module
 //! bounds **serve-time** memory:
 //!
-//! * [`LruWeightCache`] — decoded layers under a configurable byte
+//! * [`WeightCache`] — decoded layers under a configurable byte
 //!   budget; a miss re-decodes the layer's segment through the
 //!   re-entrant [`crate::decode::SegmentDecoder`] (per-segment CRC-32
-//!   makes random re-entry safe), evicting least-recently-used layers
-//!   first. Peak resident decoded bytes never exceed the budget.
+//!   makes random re-entry safe), evicting victims chosen by a
+//!   replacement [`Policy`] (pure LRU, or the scan-resistant segmented
+//!   LRU the prefetcher layers on). Peak resident decoded bytes never
+//!   exceed the budget.
 //! * [`ResidentWeightSet`] — the cache plus the always-resident fp32
 //!   rest: the partially-resident analogue of
 //!   [`crate::runtime::WeightSet`], with a bounded-memory
@@ -22,28 +24,38 @@
 //!   cold layers fault in *during generation* and the
 //!   [`CacheCounters`] surface live in the server's `{"stats":true}`
 //!   line.
+//! * [`prefetch`] — the decode-ahead engine: while layer `i` is being
+//!   consumed in a token step, a worker pool decodes layer `i+1` and
+//!   **pins** it until consumed ([`PrefetchingWeightSet`],
+//!   [`PrefetchingDigestBackend`]), hiding the fault cost the counters
+//!   above make visible. Deterministically testable through the
+//!   [`TestScheduler`] seam.
 //!
 //! Paired with a file-backed [`crate::store::SegmentSource`], total
 //! resident state is `O(manifest + cache budget)` — the container's
 //! payload stays on disk and the decoded working set stays under the
 //! budget, which is what lets a model larger than RAM serve at all.
 //!
-//! ## Scan behavior (why LRU, and when it pays)
+//! ## Scan behavior (why pure LRU loses, and what replaces it)
 //!
 //! A dense forward pass touches every layer in the same order each
-//! token. Under LRU, the residents always form a most-recent suffix of
-//! the access sequence, so a strictly cyclic pass over a model bigger
-//! than the budget re-decodes **every** layer — the per-token fault
-//! cost is the *full* parallel decode, regardless of how much of the
-//! model fits ([`crate::device::LatencyModel::fault_in_per_token`]
-//! models this as pinned residency: pass `resident_layers = 0` for
-//! this cache on a cyclic scan; fractional values are the headroom a
-//! pinning/decode-ahead policy recovers). The cache wins whenever
-//! access is *not* a full cyclic scan:
-//! skewed access across multiplexed models, partial passes, early-exit
-//! inference — and it is the substrate the ROADMAP's decode-ahead item
-//! builds on (prefetch layer `i+1` during layer `i`'s matmul, hiding
-//! the fault latency the counters here make visible).
+//! token. Under pure LRU, the residents always form a most-recent
+//! suffix of the access sequence, so a strictly cyclic pass over a
+//! model bigger than the budget re-decodes **every** layer — the
+//! per-token fault cost is the *full* parallel decode, regardless of
+//! how much of the model fits
+//! ([`crate::device::LatencyModel::fault_in_per_token`] models this as
+//! pinned residency: pass `resident_layers = 0` for pure LRU on a
+//! cyclic scan). Two mechanisms recover the headroom:
+//!
+//! * [`Policy::SegmentedLru`] is **scan-resistant**: on a cyclic pass
+//!   over `N` equal layers with budget `N-1` it keeps `N-2` layers hot
+//!   per pass where LRU keeps zero;
+//! * the [`prefetch`] engine **hides** whatever still faults by
+//!   decoding layer `i+1` on a worker pool during layer `i`'s compute
+//!   and pinning it until consumed
+//!   ([`crate::device::LatencyModel::overlapped_token_gen`]:
+//!   `max(compute, decode)` per token instead of their sum).
 //!
 //! ## Example
 //!
@@ -75,7 +87,12 @@
 //! ```
 
 mod cache;
+pub mod prefetch;
 mod serve;
 
-pub use cache::{CacheCounters, LruWeightCache};
+pub use cache::{CacheCounters, Policy, WeightCache};
+pub use prefetch::{
+    Job, PrefetchConfig, PrefetchCounters, PrefetchShared, PrefetchingDigestBackend,
+    PrefetchingWeightSet, TestScheduler,
+};
 pub use serve::{ResidentDigestBackend, ResidentWeightSet};

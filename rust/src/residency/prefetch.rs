@@ -1,0 +1,1087 @@
+//! **Decode-ahead prefetch during generation**: while layer `i` is
+//! being consumed in a token step, a background worker pool decodes
+//! layer `i+1`'s segment and pins it until consumed — the Huff-LLM
+//! overlap (arXiv:2502.00922) that hides the residency cache's
+//! per-token fault cost behind compute
+//! ([`crate::device::LatencyModel::overlapped_token_gen`] models the
+//! effect as `max(compute, decode)` instead of their sum).
+//!
+//! Concurrency shape: one [`WeightCache`] (scan-resistant
+//! [`Policy::SegmentedLru`] by default) plus a prefetch queue behind a
+//! single mutex, two condvars (`work` wakes idle workers, `done` wakes
+//! a consumer waiting on an in-flight decode), and the re-entrant
+//! [`SegmentDecoder`] shared lock-free by every worker. Decodes always
+//! run **outside** the lock; only claim/publish/consume touch it.
+//!
+//! Every piece of worker work is an explicit claim → decode → publish
+//! job ([`PrefetchShared::try_claim`], [`PrefetchShared::decode_job`],
+//! [`PrefetchShared::publish`]), so tests can drive interleavings
+//! deterministically through a [`TestScheduler`] (no background
+//! threads, no sleeps) while production wraps the same three steps in
+//! a thread-pool loop.
+//!
+//! Invariants the deterministic tests pin down:
+//!
+//! * a published (pinned) layer is never evicted before it is consumed;
+//! * a layer that is mid-decode on a worker and faulted synchronously
+//!   by the consumer is decoded exactly once (the consumer waits on
+//!   `done` instead of decoding again);
+//! * cancellation (engine drop) wakes and joins every worker and never
+//!   poisons the shared lock.
+
+use super::cache::{CacheCounters, Policy, WeightCache};
+use crate::coordinator::backend::{
+    digest_decode_next, digest_f32_entry, digest_prefill_next, digest_quant_entry, fnv1a64,
+    Backend, BackendCfg, FNV1A64_INIT,
+};
+use crate::decode::{SegmentDecoder, ThreadStats};
+use crate::quant::QuantizedTensor;
+use crate::store::SegmentSource;
+use crate::tensor::TensorF32;
+use crate::{Error, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Decode-ahead configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefetchConfig {
+    /// How many layers ahead of the consumer to schedule (the window;
+    /// clamped to `n_layers - 1`). The budget must hold
+    /// `decode_ahead + 1` copies of the largest layer so pinned
+    /// prefetches can never wedge the cache.
+    pub decode_ahead: usize,
+    /// Background decode threads, capped at the effective window (each
+    /// worker holds at most one decoded layer outside cache accounting,
+    /// so the cap keeps true peak memory within the budget floor). `0`
+    /// spawns none — prefetch jobs then only run when a
+    /// [`TestScheduler`] steps them (or the consumer faults
+    /// synchronously), which is what the deterministic tests use.
+    pub workers: usize,
+    /// Replacement policy under the prefetcher.
+    pub policy: Policy,
+}
+
+impl Default for PrefetchConfig {
+    fn default() -> Self {
+        PrefetchConfig {
+            decode_ahead: 2,
+            workers: 2,
+            policy: Policy::SegmentedLru,
+        }
+    }
+}
+
+/// Observability counters for one prefetch engine — the `prefetch_*`
+/// fields of the server's `{"stats":true}` admin line.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PrefetchCounters {
+    /// Prefetch jobs enqueued.
+    pub scheduled: u64,
+    /// Decodes published by prefetch workers.
+    pub completed: u64,
+    /// Consumer accesses served by a layer a worker decoded ahead
+    /// (the entry was still pinned when consumed).
+    pub hits: u64,
+    /// Times the consumer blocked on an in-flight prefetch decode
+    /// instead of decoding the layer again itself.
+    pub waits: u64,
+    /// Layers the consumer decoded synchronously on its own thread
+    /// (the prefetcher never got there).
+    pub sync_faults: u64,
+    /// Claimed queue entries skipped because the layer was already
+    /// resident or in flight by then.
+    pub redundant: u64,
+}
+
+/// A claimed prefetch job: the layer is marked in-flight until the
+/// holder hands a decode result back to [`PrefetchShared::publish`].
+#[derive(Debug)]
+pub struct Job {
+    index: usize,
+}
+
+impl Job {
+    /// The layer this job decodes.
+    pub fn index(&self) -> usize {
+        self.index
+    }
+}
+
+struct State {
+    cache: WeightCache,
+    queue: VecDeque<usize>,
+    inflight: Vec<bool>,
+    /// First worker-side failure; delivered once to the next consumer.
+    error: Option<Error>,
+    cancelled: bool,
+    counters: PrefetchCounters,
+}
+
+/// Shared core of the decode-ahead engine: cache + queue behind one
+/// mutex, decode strictly outside it. Workers and the consumer are
+/// symmetric clients of this object, which is what lets tests replace
+/// the worker pool with manual stepping.
+pub struct PrefetchShared {
+    state: Mutex<State>,
+    /// Workers wait here for queued work (or cancellation).
+    work: Condvar,
+    /// Consumers wait here for an in-flight decode to publish.
+    done: Condvar,
+    decoder: SegmentDecoder,
+    /// Decode-ahead window: also the cap on simultaneously pinned
+    /// layers, which (with the construction-time budget check) is what
+    /// makes "eviction blocked by pins" unreachable.
+    window: usize,
+}
+
+impl PrefetchShared {
+    fn new(
+        source: Arc<SegmentSource>,
+        budget_bytes: usize,
+        policy: Policy,
+        window: usize,
+    ) -> Result<Arc<Self>> {
+        let n = source.n_layers();
+        let decoder = SegmentDecoder::new(Arc::clone(&source))?;
+        Ok(Arc::new(PrefetchShared {
+            state: Mutex::new(State {
+                cache: WeightCache::with_policy(source, budget_bytes, policy)?,
+                queue: VecDeque::new(),
+                inflight: vec![false; n],
+                error: None,
+                cancelled: false,
+                counters: PrefetchCounters::default(),
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            decoder,
+            window,
+        }))
+    }
+
+    /// Layers the underlying model has.
+    pub fn n_layers(&self) -> usize {
+        self.state.lock().unwrap().cache.n_layers()
+    }
+
+    /// Residency-cache counter snapshot.
+    pub fn cache_counters(&self) -> CacheCounters {
+        self.state.lock().unwrap().cache.counters()
+    }
+
+    /// Prefetch counter snapshot.
+    pub fn counters(&self) -> PrefetchCounters {
+        self.state.lock().unwrap().counters
+    }
+
+    /// Is layer `index` currently resident?
+    pub fn is_resident(&self, index: usize) -> bool {
+        self.state.lock().unwrap().cache.is_resident(index)
+    }
+
+    /// Is layer `index` resident and pinned (published, unconsumed)?
+    pub fn is_pinned(&self, index: usize) -> bool {
+        self.state.lock().unwrap().cache.is_pinned(index)
+    }
+
+    /// Has a worker panic poisoned the shared lock? Always `false` in
+    /// correct operation — the cancellation test asserts it stays that
+    /// way through an engine drop.
+    pub fn poisoned(&self) -> bool {
+        self.state.is_poisoned()
+    }
+
+    /// Enqueue prefetch jobs for `indices` (deduplicated against the
+    /// queue, resident layers, and in-flight decodes), then wake the
+    /// workers.
+    pub fn schedule(&self, indices: &[usize]) {
+        let mut st = self.state.lock().unwrap();
+        if st.cancelled {
+            return;
+        }
+        for &idx in indices {
+            if idx < st.inflight.len()
+                && !st.inflight[idx]
+                && !st.cache.is_resident(idx)
+                && !st.queue.contains(&idx)
+            {
+                st.queue.push_back(idx);
+                st.counters.scheduled += 1;
+            }
+        }
+        drop(st);
+        self.work.notify_all();
+    }
+
+    fn claim_locked(st: &mut State) -> Option<Job> {
+        while let Some(idx) = st.queue.pop_front() {
+            if st.cache.is_resident(idx) || st.inflight[idx] {
+                st.counters.redundant += 1;
+                continue;
+            }
+            st.inflight[idx] = true;
+            return Some(Job { index: idx });
+        }
+        None
+    }
+
+    /// Claim the next useful queued job without blocking, marking its
+    /// layer in-flight (exactly what a pool worker does). The manual
+    /// half of the scheduler seam.
+    pub fn try_claim(&self) -> Option<Job> {
+        Self::claim_locked(&mut self.state.lock().unwrap())
+    }
+
+    /// Blocking claim for pool workers: parks on `work` until a job or
+    /// cancellation arrives. `None` means shut down.
+    fn claim_blocking(&self) -> Option<Job> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.cancelled {
+                return None;
+            }
+            if let Some(job) = Self::claim_locked(&mut st) {
+                return Some(job);
+            }
+            st = self.work.wait(st).unwrap();
+        }
+    }
+
+    /// Decode a claimed job. Runs on the caller's thread with **no**
+    /// lock held — this is the long pole the prefetcher overlaps with
+    /// token compute.
+    pub fn decode_job(&self, job: &Job, stats: &mut ThreadStats) -> Result<QuantizedTensor> {
+        self.decoder.decode_layer_stats(job.index, stats)
+    }
+
+    /// Publish a decode result: insert the layer **pinned** (so
+    /// eviction cannot outrun the consumer), clear the in-flight mark,
+    /// and wake anyone waiting on it. Errors are parked for the next
+    /// consumer access. After cancellation the result is discarded but
+    /// the in-flight mark is still cleared, so a blocked consumer can
+    /// always make progress.
+    pub fn publish(&self, job: Job, result: Result<QuantizedTensor>) {
+        let mut st = self.state.lock().unwrap();
+        st.inflight[job.index] = false;
+        if !st.cancelled {
+            // Pin so eviction cannot outrun the consumer — but cap the
+            // pinned population at the window, so stale queue entries
+            // (scheduled, then evicted again before their claim) can
+            // never pin the whole budget.
+            let pin = st.cache.counters().pinned_layers < self.window;
+            match result.and_then(|t| st.cache.insert(job.index, t, pin)) {
+                Ok(()) => st.counters.completed += 1,
+                Err(e) => {
+                    if st.error.is_none() {
+                        st.error = Some(e);
+                    }
+                }
+            }
+        }
+        drop(st);
+        self.done.notify_all();
+    }
+
+    /// Consume layer `index`: serve it from residency (a prefetched
+    /// layer is unpinned here — consumption is what releases it), wait
+    /// for an in-flight decode to publish, or fault it in synchronously
+    /// on the calling thread. `f` runs with the state lock held, so the
+    /// borrow never escapes; keep it to a digest fold or a copy-out.
+    pub fn with_layer<R>(&self, index: usize, f: impl FnOnce(&QuantizedTensor) -> R) -> Result<R> {
+        let mut st = self.state.lock().unwrap();
+        if index >= st.inflight.len() {
+            return Err(Error::InvalidArg(format!(
+                "layer index {index} out of range ({} layers)",
+                st.inflight.len()
+            )));
+        }
+        // Did this access pay for a decode (either by waiting on a
+        // worker or by decoding here)? Determines hit/miss accounting.
+        let mut faulted = false;
+        loop {
+            if let Some(e) = st.error.take() {
+                return Err(e);
+            }
+            if st.cancelled {
+                return Err(Error::Engine("decode-ahead prefetcher is shut down".into()));
+            }
+            if st.cache.is_resident(index) {
+                let was_pinned = st.cache.is_pinned(index);
+                if was_pinned {
+                    st.cache.unpin(index);
+                    st.counters.hits += 1;
+                }
+                st.cache.note_access(!faulted);
+                // A genuinely warm re-access promotes out of probation;
+                // a first touch (sync fault, wait, or fresh prefetch)
+                // keeps the `get` path's first-touch semantics.
+                let q = if !faulted && !was_pinned {
+                    st.cache.lookup(index)
+                } else {
+                    st.cache.peek_serve(index)
+                };
+                if let Some(q) = q {
+                    return Ok(f(q));
+                }
+                // Unreachable (resident above), but looping is safe and
+                // panicking under the lock is not.
+                continue;
+            }
+            if st.inflight[index] {
+                // A worker is mid-decode on exactly this layer: wait for
+                // its publish instead of decoding the segment twice. One
+                // logical wait per access — `done` is notified by every
+                // publish, so re-wakes must not re-count.
+                if !faulted {
+                    st.counters.waits += 1;
+                }
+                faulted = true;
+                st = self.done.wait(st).unwrap();
+                continue;
+            }
+            // Synchronous fault: claim the layer ourselves so no worker
+            // duplicates the decode, release the lock for the decode,
+            // then re-enter the loop to serve it.
+            st.inflight[index] = true;
+            st.counters.sync_faults += 1;
+            faulted = true;
+            drop(st);
+            let mut stats = ThreadStats::default();
+            let result = self.decoder.decode_layer_stats(index, &mut stats);
+            st = self.state.lock().unwrap();
+            st.inflight[index] = false;
+            // The in-flight mark is cleared either way: wake any waiter
+            // before acting on the result.
+            self.done.notify_all();
+            match result {
+                Ok(t) => st.cache.insert(index, t, false)?,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Cancel the engine: stop all workers and unblock any waiter.
+    pub fn cancel(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.cancelled = true;
+        st.queue.clear();
+        drop(st);
+        self.work.notify_all();
+        self.done.notify_all();
+    }
+}
+
+fn worker(shared: &PrefetchShared) -> ThreadStats {
+    let mut stats = ThreadStats::default();
+    while let Some(job) = shared.claim_blocking() {
+        let result = shared.decode_job(&job, &mut stats);
+        shared.publish(job, result);
+    }
+    stats
+}
+
+/// Manual, deterministic driver for prefetch work: claims and executes
+/// queued jobs step by step **on the calling thread**, so tests control
+/// the exact interleaving of "worker" progress against consumer
+/// accesses without real threads or sleeps. Pair it with
+/// [`PrefetchConfig`] `workers: 0` so no background pool races for
+/// jobs.
+pub struct TestScheduler {
+    shared: Arc<PrefetchShared>,
+    stats: ThreadStats,
+}
+
+impl TestScheduler {
+    /// Scheduler over a prefetch engine's shared core.
+    pub fn new(shared: Arc<PrefetchShared>) -> Self {
+        TestScheduler {
+            shared,
+            stats: ThreadStats::default(),
+        }
+    }
+
+    /// Claim the next queued job, marking its layer in-flight — the
+    /// "worker picked it up" step, without decoding anything yet.
+    pub fn claim(&mut self) -> Option<Job> {
+        self.shared.try_claim()
+    }
+
+    /// Decode a claimed job on this thread (the "worker is mid-decode"
+    /// state lives between this call and [`TestScheduler::publish`]).
+    pub fn decode(&mut self, job: &Job) -> Result<QuantizedTensor> {
+        self.shared.decode_job(job, &mut self.stats)
+    }
+
+    /// Publish a decode result into the cache, completing the job.
+    pub fn publish(&mut self, job: Job, result: Result<QuantizedTensor>) {
+        self.shared.publish(job, result);
+    }
+
+    /// Run one whole job to completion (claim → decode → publish).
+    /// Returns the layer index, or `None` when the queue held no
+    /// runnable job.
+    pub fn step(&mut self) -> Option<usize> {
+        let job = self.claim()?;
+        let index = job.index();
+        let result = self.decode(&job);
+        self.publish(job, result);
+        Some(index)
+    }
+
+    /// Drain the queue; returns how many jobs actually decoded.
+    pub fn run_all(&mut self) -> usize {
+        let mut n = 0;
+        while self.step().is_some() {
+            n += 1;
+        }
+        n
+    }
+
+    /// Decode accounting for the jobs this scheduler executed.
+    pub fn stats(&self) -> &ThreadStats {
+        &self.stats
+    }
+}
+
+/// The weight tensors a serving engine needs, held partially resident
+/// behind a **decode-ahead prefetcher**: consuming one layer schedules
+/// the next `decode_ahead` layers of the walk onto the worker pool, so
+/// by the time the consumer arrives they are already decoded and
+/// pinned. The fp32 rest (norm tensors) stays always-resident, as in
+/// [`crate::runtime::WeightSet`].
+pub struct PrefetchingWeightSet {
+    shared: Arc<PrefetchShared>,
+    handles: Vec<std::thread::JoinHandle<ThreadStats>>,
+    f32s: HashMap<String, TensorF32>,
+    /// `(name, index)` in sorted-name order — the digest walk order,
+    /// fixed at construction so per-token digests allocate nothing.
+    digest_order: Vec<(String, usize)>,
+    /// Effective decode-ahead window (clamped to `n_layers - 1`).
+    window: usize,
+}
+
+impl PrefetchingWeightSet {
+    /// Weight set over `source` with a decoded-byte `budget_bytes`, the
+    /// always-resident fp32 rest, and a decode-ahead `cfg`. Fails up
+    /// front when the budget cannot hold the window plus the active
+    /// layer — a smaller budget would let pinned prefetches wedge the
+    /// cache.
+    pub fn new(
+        source: Arc<SegmentSource>,
+        budget_bytes: usize,
+        f32_rest: Vec<(String, TensorF32)>,
+        cfg: PrefetchConfig,
+    ) -> Result<Self> {
+        let window = cfg.decode_ahead.min(source.n_layers().saturating_sub(1));
+        let largest = source
+            .layers()
+            .iter()
+            .map(|m| m.n_symbols)
+            .max()
+            .unwrap_or(0);
+        let need = largest.saturating_mul(window + 1);
+        if budget_bytes < need {
+            return Err(Error::InvalidArg(format!(
+                "weight budget {budget_bytes} B cannot hold a decode-ahead window of \
+                 {window} layers plus the active layer (needs >= {need} B at \
+                 {largest} B/layer) — lower --decode-ahead or raise the budget"
+            )));
+        }
+        let by_name: HashMap<&str, usize> = source
+            .layers()
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (m.name.as_str(), i))
+            .collect();
+        // Walk the deduplicated name map, not the raw manifest, so the
+        // digest sees exactly the layers an eager `WeightSet` would.
+        let mut digest_order: Vec<(String, usize)> = by_name
+            .into_iter()
+            .map(|(n, i)| (n.to_string(), i))
+            .collect();
+        digest_order.sort();
+        let shared = PrefetchShared::new(source, budget_bytes, cfg.policy, window)?;
+        // Cap the pool at the window: each worker holds at most one
+        // decoded-but-unpublished layer outside cache accounting, so
+        // `workers <= window` keeps true peak memory within the same
+        // `(window + 1) × largest` floor the constructor just checked
+        // (and more decode threads than a window can feed is waste).
+        let workers = cfg.workers.min(window);
+        let handles = (0..workers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker(&shared))
+            })
+            .collect();
+        Ok(PrefetchingWeightSet {
+            shared,
+            handles,
+            f32s: f32_rest.into_iter().collect(),
+            digest_order,
+            window,
+        })
+    }
+
+    /// The shared prefetch core (tests and benches drive it directly).
+    pub fn shared(&self) -> &Arc<PrefetchShared> {
+        &self.shared
+    }
+
+    /// Residency-cache counter snapshot.
+    pub fn counters(&self) -> CacheCounters {
+        self.shared.cache_counters()
+    }
+
+    /// Prefetch counter snapshot.
+    pub fn prefetch_counters(&self) -> PrefetchCounters {
+        self.shared.counters()
+    }
+
+    /// Quantized layer count.
+    pub fn n_layers(&self) -> usize {
+        self.digest_order.len()
+    }
+
+    /// Effective decode-ahead window.
+    pub fn decode_ahead(&self) -> usize {
+        self.window
+    }
+
+    /// Worker threads actually spawned (`cfg.workers` capped at the
+    /// window).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Always-resident fp32 tensor by name.
+    pub fn f32(&self, name: &str) -> Option<&TensorF32> {
+        self.f32s.get(name)
+    }
+
+    /// Schedule the `window` layers that follow walk position `pos`
+    /// (wrapping — dense generation re-walks the model every token
+    /// step, so prefetching past the end warms the next pass).
+    fn schedule_ahead(&self, pos: usize) {
+        let n = self.digest_order.len();
+        if self.window == 0 || n == 0 {
+            return;
+        }
+        let ahead: Vec<usize> = (1..=self.window)
+            .map(|k| self.digest_order[(pos + k) % n].1)
+            .collect();
+        self.shared.schedule(&ahead);
+    }
+
+    /// Digest of the full weight set, walking layers through the
+    /// prefetching cache in sorted-name order while scheduling each
+    /// layer's successors onto the worker pool. Bit-identical to
+    /// [`crate::coordinator::digest_weights`] of the eagerly decoded
+    /// set and to [`super::ResidentWeightSet::digest`] — the
+    /// losslessness oracle that pins "prefetch changes *when* layers
+    /// decode, never *what* they decode to".
+    pub fn digest(&self) -> Result<u64> {
+        let mut h = FNV1A64_INIT;
+        h = fnv1a64(h, &(self.digest_order.len() as u64).to_le_bytes());
+        for (pos, (name, index)) in self.digest_order.iter().enumerate() {
+            self.schedule_ahead(pos);
+            h = self
+                .shared
+                .with_layer(*index, |q| digest_quant_entry(h, name, q))?;
+        }
+        let mut fnames: Vec<&String> = self.f32s.keys().collect();
+        fnames.sort();
+        h = fnv1a64(h, &(fnames.len() as u64).to_le_bytes());
+        for name in fnames {
+            h = digest_f32_entry(h, name, &self.f32s[name]);
+        }
+        Ok(h)
+    }
+}
+
+impl Drop for PrefetchingWeightSet {
+    fn drop(&mut self) {
+        self.shared.cancel();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Engine backend that serves through a [`PrefetchingWeightSet`]:
+/// every prefill and decode step walks the full weight set — the
+/// per-layer access pattern of a real forward pass — but each consumed
+/// layer schedules its successors onto the background pool, so faults
+/// overlap with the token's remaining compute instead of serializing
+/// in front of it.
+///
+/// Generation is digest-driven via the same shared mixers as
+/// [`crate::coordinator::DigestBackend`] and
+/// [`super::ResidentDigestBackend`], so the three backends emit
+/// identical tokens iff their weight sets are bit-identical — the
+/// property the decode-ahead tests and `benches/decode_ahead.rs` rely
+/// on.
+pub struct PrefetchingDigestBackend {
+    cfg: BackendCfg,
+    weights: PrefetchingWeightSet,
+    /// Decode steps executed.
+    pub steps: usize,
+    /// Prefills executed.
+    pub prefills: usize,
+}
+
+impl PrefetchingDigestBackend {
+    /// Backend over a prefetching weight set.
+    pub fn new(weights: PrefetchingWeightSet, batch: usize, max_seq: usize, vocab: usize) -> Self {
+        PrefetchingDigestBackend {
+            cfg: BackendCfg {
+                batch,
+                max_seq,
+                prefill_len: (max_seq / 2).max(1),
+                vocab,
+            },
+            weights,
+            steps: 0,
+            prefills: 0,
+        }
+    }
+
+    /// Borrow the prefetching weight set.
+    pub fn weights(&self) -> &PrefetchingWeightSet {
+        &self.weights
+    }
+
+    fn onehot(&self, tok: u64) -> Vec<f32> {
+        let mut l = vec![0.0f32; self.cfg.vocab];
+        l[(tok % self.cfg.vocab as u64) as usize] = 10.0;
+        l
+    }
+}
+
+impl Backend for PrefetchingDigestBackend {
+    fn cfg(&self) -> BackendCfg {
+        self.cfg
+    }
+
+    fn prefill(&mut self, prompt: &[u32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.prefills += 1;
+        // One full weight pass through the prefetching cache.
+        let digest = self.weights.digest()?;
+        let next = digest_prefill_next(digest, prompt, self.cfg.vocab);
+        let kv = vec![next as f32; 8];
+        Ok((self.onehot(next), kv.clone(), kv))
+    }
+
+    fn set_slot(&mut self, _slot: usize, _k1: &[f32], _v1: &[f32]) -> Result<()> {
+        // Generation is digest-driven; there is no KV state to splice.
+        Ok(())
+    }
+
+    fn decode(&mut self, tokens: &[u32], pos: &[u32]) -> Result<Vec<f32>> {
+        assert_eq!(tokens.len(), self.cfg.batch);
+        assert_eq!(pos.len(), self.cfg.batch);
+        self.steps += 1;
+        // Each batched decode step is one more weight pass; layer `i+1`
+        // decodes on the pool while layer `i`'s digest fold runs here.
+        let digest = self.weights.digest()?;
+        let mut out = Vec::with_capacity(self.cfg.batch * self.cfg.vocab);
+        for (slot, (&t, &p)) in tokens.iter().zip(pos).enumerate() {
+            out.extend_from_slice(
+                &self.onehot(digest_decode_next(digest, slot, t, p, self.cfg.vocab)),
+            );
+        }
+        Ok(out)
+    }
+
+    fn residency(&self) -> Option<CacheCounters> {
+        Some(self.weights.counters())
+    }
+
+    fn prefetch(&self) -> Option<PrefetchCounters> {
+        Some(self.weights.prefetch_counters())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::serve::{ResidentDigestBackend, ResidentWeightSet};
+    use super::*;
+    use crate::coordinator::{digest_weights, DigestBackend, Engine, EngineConfig, Request};
+    use crate::pipeline::synthetic_layers;
+    use crate::quant::BitWidth;
+    use crate::rng::Rng;
+    use crate::runtime::WeightSet;
+    use crate::store::{compress, decode_layer, ElmModel};
+
+    fn fixture(n_layers: usize, seed: u64) -> (ElmModel, Arc<SegmentSource>) {
+        let layers = synthetic_layers(n_layers, seed);
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let src = Arc::new(SegmentSource::from_model(Arc::new(model.clone())));
+        (model, src)
+    }
+
+    /// `n` equal-size layers (512 decoded bytes each) so budgets count
+    /// whole layers exactly.
+    fn equal_fixture(n: usize, seed: u64) -> (ElmModel, Arc<SegmentSource>) {
+        let layers: Vec<(String, crate::tensor::TensorF32)> = (0..n)
+            .map(|i| {
+                let mut rng = Rng::new(seed + i as u64);
+                (
+                    format!("l{i}"),
+                    crate::tensor::TensorF32::new(vec![512], rng.gaussian_vec(512, 0.0, 0.05))
+                        .unwrap(),
+                )
+            })
+            .collect();
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let src = Arc::new(SegmentSource::from_model(Arc::new(model.clone())));
+        (model, src)
+    }
+
+    fn manual_set(
+        src: Arc<SegmentSource>,
+        budget: usize,
+        decode_ahead: usize,
+    ) -> PrefetchingWeightSet {
+        PrefetchingWeightSet::new(
+            src,
+            budget,
+            Vec::new(),
+            PrefetchConfig {
+                decode_ahead,
+                workers: 0,
+                policy: Policy::SegmentedLru,
+            },
+        )
+        .unwrap()
+    }
+
+    /// Deterministic interleaving (a): a published-but-unconsumed
+    /// (pinned) layer survives arbitrary eviction pressure, and
+    /// consumption is what releases it.
+    #[test]
+    fn deterministic_pinned_prefetch_is_never_evicted() {
+        let (model, src) = equal_fixture(6, 0x40);
+        // Window 1 + active layer = 2 layers; budget holds 3.
+        let ws = manual_set(src, 3 * 512, 1);
+        let shared = Arc::clone(ws.shared());
+        let mut ts = TestScheduler::new(Arc::clone(&shared));
+
+        shared.schedule(&[3]);
+        assert_eq!(ts.step(), Some(3), "manual step decodes the scheduled job");
+        assert!(shared.is_resident(3));
+        assert!(shared.is_pinned(3));
+
+        // Hammer the cache with synchronous faults of every other
+        // layer: evictions must happen, but never of the pinned layer.
+        for round in 0..3 {
+            for i in [0usize, 1, 2, 4, 5] {
+                shared.with_layer(i, |_| ()).unwrap();
+                assert!(shared.is_pinned(3), "round {round}: pinned layer lost");
+            }
+        }
+        assert!(shared.cache_counters().evictions > 0);
+
+        // Consuming the layer unpins it — and serves the right bytes.
+        let want = decode_layer(&model, 3).unwrap();
+        let got = shared.with_layer(3, |q| q.symbols.data().to_vec()).unwrap();
+        assert_eq!(got, want.symbols.data());
+        assert!(!shared.is_pinned(3));
+        assert_eq!(shared.counters().hits, 1, "consumption is the prefetch hit");
+    }
+
+    /// Deterministic interleaving (b): a layer that is mid-decode on a
+    /// "worker" (claimed, not yet published) and faulted synchronously
+    /// by the consumer is decoded exactly once — the consumer waits for
+    /// the publish instead of decoding the segment again.
+    #[test]
+    fn deterministic_mid_decode_fault_decodes_exactly_once() {
+        let (model, src) = equal_fixture(4, 0x41);
+        let ws = manual_set(src, 2 * 512, 1);
+        let shared = Arc::clone(ws.shared());
+        let mut ts = TestScheduler::new(Arc::clone(&shared));
+
+        shared.schedule(&[2]);
+        let job = ts.claim().expect("scheduled job is claimable");
+        assert_eq!(job.index(), 2);
+        let result = ts.decode(&job);
+        // The job is now "mid-decode": in-flight, nothing published.
+        assert!(!shared.is_resident(2));
+
+        let want = decode_layer(&model, 2).unwrap();
+        std::thread::scope(|s| {
+            let consumer =
+                s.spawn(|| shared.with_layer(2, |q| q.symbols.data().to_vec()).unwrap());
+            // Whether the consumer reaches the wait before or after this
+            // publish, the outcome is the same: one decode, right bytes.
+            ts.publish(job, result);
+            assert_eq!(consumer.join().unwrap(), want.symbols.data());
+        });
+
+        let p = shared.counters();
+        assert_eq!(p.completed, 1, "exactly one decode published");
+        assert_eq!(p.sync_faults, 0, "the consumer never decoded it again");
+        assert_eq!(ts.stats().segments, 1, "one segment decoded in total");
+        assert_eq!(p.hits, 1, "served as a prefetch hit");
+    }
+
+    /// Deterministic interleaving (c): dropping the engine mid-flight
+    /// cancels the pool, joins every worker, and leaves the shared lock
+    /// unpoisoned; later consumer calls fail cleanly instead of
+    /// hanging.
+    #[test]
+    fn deterministic_cancellation_on_engine_drop_leaves_no_poisoned_lock() {
+        let (_, src) = fixture(10, 0x42);
+        let total: usize = src.layers().iter().map(|m| m.n_symbols).sum();
+        let largest = src.layers().iter().map(|m| m.n_symbols).max().unwrap();
+        let ws = PrefetchingWeightSet::new(
+            src,
+            // Skewed synthetic sizes: keep the budget above the
+            // decode-ahead floor whatever the largest layer is.
+            total.max(4 * largest),
+            Vec::new(),
+            PrefetchConfig {
+                decode_ahead: 3,
+                workers: 2,
+                policy: Policy::SegmentedLru,
+            },
+        )
+        .unwrap();
+        let shared = Arc::clone(ws.shared());
+        let mut engine = Engine::new(
+            PrefetchingDigestBackend::new(ws, 2, 32, 64),
+            EngineConfig::default(),
+        );
+        engine.submit(Request::greedy(1, vec![5, 6], 3)).unwrap();
+        // One step leaves prefetch jobs scheduled and workers active.
+        engine.step().unwrap();
+        drop(engine);
+
+        assert!(!shared.poisoned(), "drop must not poison the shared lock");
+        let err = shared.with_layer(0, |_| ()).unwrap_err();
+        assert!(err.to_string().contains("shut down"), "{err}");
+        // Scheduling after cancellation is a no-op, not a hang.
+        shared.schedule(&[1, 2]);
+        assert!(shared.try_claim().is_none());
+    }
+
+    #[test]
+    fn scheduling_skips_resident_and_inflight_layers() {
+        let (_, src) = equal_fixture(5, 0x43);
+        let ws = manual_set(src, 3 * 512, 2);
+        let shared = Arc::clone(ws.shared());
+        let mut ts = TestScheduler::new(Arc::clone(&shared));
+
+        shared.schedule(&[1, 1, 99]); // duplicate + out of range
+        assert_eq!(shared.counters().scheduled, 1);
+        assert_eq!(ts.step(), Some(1));
+
+        shared.schedule(&[1]); // already resident: not enqueued
+        assert_eq!(shared.counters().scheduled, 1);
+
+        shared.schedule(&[2]);
+        let job = ts.claim().unwrap(); // 2 is now in flight
+        shared.schedule(&[2]); // in flight: not enqueued
+        assert_eq!(shared.counters().scheduled, 2);
+        let r = ts.decode(&job);
+        ts.publish(job, r);
+
+        // A queued layer that becomes resident before its claim is
+        // skipped as redundant.
+        shared.with_layer(3, |_| ()).unwrap();
+        // 3 resident; enqueue 4 then fault 4 synchronously.
+        shared.schedule(&[4]);
+        shared.with_layer(4, |_| ()).unwrap();
+        assert!(ts.step().is_none(), "stale queue entry must not re-decode");
+        assert!(shared.counters().redundant >= 1);
+    }
+
+    #[test]
+    fn digest_equals_eager_and_resident_under_tight_budget() {
+        // Equal-size layers so "budget = 6 of 12 layers" is exact: the
+        // walk must evict, and the decode-ahead floor (window 3 + 1
+        // layers) still fits.
+        let (model, src) = equal_fixture(12, 0x44);
+        let eager = WeightSet::from_elm(&model, 2, Vec::new()).unwrap();
+        let want = digest_weights(&eager);
+        let budget = 6 * 512;
+
+        let mut resident = ResidentWeightSet::new(Arc::clone(&src), budget, Vec::new()).unwrap();
+        assert_eq!(resident.digest().unwrap(), want);
+
+        for workers in [0usize, 2] {
+            let ws = PrefetchingWeightSet::new(
+                Arc::clone(&src),
+                budget,
+                Vec::new(),
+                PrefetchConfig {
+                    decode_ahead: 3,
+                    workers,
+                    policy: Policy::SegmentedLru,
+                },
+            )
+            .unwrap();
+            assert_eq!(ws.digest().unwrap(), want, "workers={workers}");
+            // Re-digesting (cache warm, queue churned) must be stable.
+            assert_eq!(ws.digest().unwrap(), want, "workers={workers} re-digest");
+            let c = ws.counters();
+            assert!(c.peak_resident_bytes <= budget);
+        }
+    }
+
+    /// The property satellite: for random (budget, decode-ahead window,
+    /// request pattern) triples, the prefetching backend's generation
+    /// is bit-identical to the eager digest backend and to the PR 2
+    /// fault-on-demand resident backend.
+    #[test]
+    fn property_prefetching_generation_is_bit_identical_to_eager_and_resident() {
+        let mut rng = Rng::new(0xAEAD);
+        for case in 0..5 {
+            let n_layers = 3 + rng.below(8);
+            let (model, src) = fixture(n_layers, 0xB000 + case);
+            let eager = WeightSet::from_elm(&model, 2, Vec::new()).unwrap();
+            let largest = model.layers.iter().map(|m| m.n_symbols).max().unwrap();
+            let total: usize = model.layers.iter().map(|m| m.n_symbols).sum();
+
+            let decode_ahead = 1 + rng.below(3);
+            let floor = largest * (decode_ahead.min(n_layers - 1) + 1);
+            let budget = floor + rng.below(total.saturating_sub(floor) + 1);
+            let workers = rng.below(3);
+
+            // Random request pattern, shared across the three backends.
+            let reqs: Vec<Request> = (0..1 + rng.below(4))
+                .map(|id| {
+                    let prompt: Vec<u32> =
+                        (0..1 + rng.below(5)).map(|_| rng.below(60) as u32).collect();
+                    Request::greedy(id as u64, prompt, 1 + rng.below(6))
+                })
+                .collect();
+
+            fn run<B: Backend>(mut engine: Engine<B>, reqs: &[Request]) -> Vec<(u64, Vec<u32>)> {
+                for r in reqs {
+                    engine.submit(r.clone()).unwrap();
+                }
+                let mut out: Vec<(u64, Vec<u32>)> = engine
+                    .run_to_completion(1000)
+                    .unwrap()
+                    .into_iter()
+                    .map(|r| (r.id, r.tokens))
+                    .collect();
+                out.sort();
+                out
+            }
+
+            let golden = run(
+                Engine::new(
+                    DigestBackend::from_weights(&eager, 2, 32, 64),
+                    EngineConfig::default(),
+                ),
+                &reqs,
+            );
+            let resident = run(
+                Engine::new(
+                    ResidentDigestBackend::new(
+                        ResidentWeightSet::new(Arc::clone(&src), budget, Vec::new()).unwrap(),
+                        2,
+                        32,
+                        64,
+                    ),
+                    EngineConfig::default(),
+                ),
+                &reqs,
+            );
+            let prefetching = run(
+                Engine::new(
+                    PrefetchingDigestBackend::new(
+                        PrefetchingWeightSet::new(
+                            Arc::clone(&src),
+                            budget,
+                            Vec::new(),
+                            PrefetchConfig {
+                                decode_ahead,
+                                workers,
+                                policy: Policy::SegmentedLru,
+                            },
+                        )
+                        .unwrap(),
+                        2,
+                        32,
+                        64,
+                    ),
+                    EngineConfig::default(),
+                ),
+                &reqs,
+            );
+            assert_eq!(golden, resident, "case {case}: resident diverged");
+            assert_eq!(
+                golden, prefetching,
+                "case {case}: decode-ahead (window {decode_ahead}, {workers} workers, \
+                 budget {budget}) changed the tokens"
+            );
+        }
+    }
+
+    #[test]
+    fn manual_pool_prefetch_converts_misses_into_hits_across_passes() {
+        let (_, src) = equal_fixture(8, 0x45);
+        // Budget below the model so the walk evicts.
+        let ws = manual_set(src, 5 * 512, 2);
+        let shared = Arc::clone(ws.shared());
+        let mut ts = TestScheduler::new(Arc::clone(&shared));
+
+        // Pass 1: nobody runs the queue, so every access sync-faults.
+        let first = ws.digest().unwrap();
+        let after_pass1 = shared.counters();
+        assert_eq!(after_pass1.completed, 0);
+        assert_eq!(after_pass1.sync_faults, 8);
+        assert!(after_pass1.scheduled > 0, "walk must schedule ahead");
+
+        // Drain the queue manually (the "workers finally ran" moment),
+        // then re-walk: prefetched layers serve as pinned hits.
+        ts.run_all();
+        let second = ws.digest().unwrap();
+        assert_eq!(first, second, "prefetch must not change the digest");
+        let after_pass2 = shared.counters();
+        assert!(
+            after_pass2.hits > 0,
+            "published layers must serve as prefetch hits: {after_pass2:?}"
+        );
+        assert!(shared.cache_counters().peak_resident_bytes <= 5 * 512);
+    }
+
+    #[test]
+    fn window_too_large_for_budget_is_rejected_up_front() {
+        let (_, src) = equal_fixture(6, 0x46);
+        let err = PrefetchingWeightSet::new(
+            src,
+            2 * 512,
+            Vec::new(),
+            PrefetchConfig {
+                decode_ahead: 4,
+                workers: 0,
+                policy: Policy::SegmentedLru,
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("decode-ahead"), "{err}");
+    }
+
+    #[test]
+    fn f32_rest_participates_in_the_digest() {
+        let (model, src) = fixture(5, 0x47);
+        let mut eager = WeightSet::from_elm(&model, 2, Vec::new()).unwrap();
+        let norm = TensorF32::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        eager.f32s.insert("ln.w".into(), norm.clone());
+        let total: usize = model.layers.iter().map(|m| m.n_symbols).sum();
+        let largest = model.layers.iter().map(|m| m.n_symbols).max().unwrap();
+        let ws = PrefetchingWeightSet::new(
+            src,
+            total.max(3 * largest),
+            vec![("ln.w".into(), norm.clone())],
+            PrefetchConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(ws.digest().unwrap(), digest_weights(&eager));
+        assert_eq!(ws.f32("ln.w").unwrap().data(), norm.data());
+        assert!(ws.f32("missing").is_none());
+    }
+}

@@ -3,7 +3,7 @@
 //! [`ResidentDigestBackend`] (the engine backend that faults layers in
 //! during generation).
 
-use super::cache::{CacheCounters, LruWeightCache};
+use super::cache::{CacheCounters, WeightCache};
 use crate::coordinator::backend::{
     digest_decode_next, digest_f32_entry, digest_prefill_next, digest_quant_entry, fnv1a64,
     Backend, BackendCfg, FNV1A64_INIT,
@@ -16,11 +16,13 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 /// The weight tensors a serving engine needs, held **partially
-/// resident**: quantized layers live in an [`LruWeightCache`] and fault
-/// in on access; the fp32 rest (norm tensors — a sliver of the model)
+/// resident**: quantized layers live in a [`WeightCache`] (pure LRU —
+/// the fault-on-demand baseline the decode-ahead
+/// [`super::PrefetchingWeightSet`] is measured against) and fault in
+/// on access; the fp32 rest (norm tensors — a sliver of the model)
 /// stays always-resident like in [`crate::runtime::WeightSet`].
 pub struct ResidentWeightSet {
-    cache: LruWeightCache,
+    cache: WeightCache,
     f32s: HashMap<String, TensorF32>,
     /// Layer name → storage-order index (fault-in by name).
     by_name: HashMap<String, usize>,
@@ -49,7 +51,7 @@ impl ResidentWeightSet {
             by_name.iter().map(|(n, &i)| (n.clone(), i)).collect();
         digest_order.sort();
         Ok(ResidentWeightSet {
-            cache: LruWeightCache::new(source, budget_bytes)?,
+            cache: WeightCache::new(source, budget_bytes)?,
             f32s: f32_rest.into_iter().collect(),
             by_name,
             digest_order,
@@ -62,7 +64,7 @@ impl ResidentWeightSet {
     }
 
     /// Borrow the cache (introspection/benches).
-    pub fn cache(&self) -> &LruWeightCache {
+    pub fn cache(&self) -> &WeightCache {
         &self.cache
     }
 

@@ -102,7 +102,10 @@ enum Incoming {
 /// can watch a streaming-loaded server warm up without a side channel.
 /// When the backend serves weights through a residency cache
 /// ([`crate::residency`]), the cache's hit/miss/evict counters and
-/// byte occupancy ride along under `cache_*` keys.
+/// byte occupancy ride along under `cache_*` keys; when it prefetches
+/// decode-ahead ([`crate::residency::prefetch`]), the prefetcher's
+/// scheduled/completed/hit/wait counters ride along under `prefetch_*`
+/// keys.
 pub fn format_stats<B: Backend>(engine: &Engine<B>) -> String {
     let s = engine.stats();
     let q = engine.queue_stats();
@@ -126,6 +129,14 @@ pub fn format_stats<B: Backend>(engine: &Engine<B>) -> String {
             json::num(c.peak_resident_bytes as f64),
         ));
         fields.push(("cache_budget_bytes", json::num(c.budget_bytes as f64)));
+        fields.push(("cache_pinned_layers", json::num(c.pinned_layers as f64)));
+    }
+    if let Some(p) = engine.prefetch() {
+        fields.push(("prefetch_scheduled", json::num(p.scheduled as f64)));
+        fields.push(("prefetch_completed", json::num(p.completed as f64)));
+        fields.push(("prefetch_hits", json::num(p.hits as f64)));
+        fields.push(("prefetch_waits", json::num(p.waits as f64)));
+        fields.push(("prefetch_sync_faults", json::num(p.sync_faults as f64)));
     }
     json::obj(fields).to_json()
 }
@@ -471,6 +482,64 @@ mod tests {
             stats.get("cache_budget_bytes").unwrap().as_usize().unwrap(),
             budget
         );
+
+        stop.store(true, Ordering::Relaxed);
+        let served = server.join().unwrap();
+        assert_eq!(served, 1);
+    }
+
+    /// The decode-ahead acceptance loop: a prefetching backend serves
+    /// over TCP and the `{"stats":true}` admin line carries both the
+    /// `cache_*` and the `prefetch_*` counter families.
+    #[test]
+    fn stats_line_surfaces_prefetch_counters_over_loopback() {
+        use crate::pipeline::synthetic_layers;
+        use crate::quant::BitWidth;
+        use crate::residency::{PrefetchConfig, PrefetchingDigestBackend, PrefetchingWeightSet};
+        use crate::store::{compress, SegmentSource};
+
+        let layers = synthetic_layers(8, 0xFEED);
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let total: usize = model.layers.iter().map(|m| m.n_symbols).sum();
+        let largest = model.layers.iter().map(|m| m.n_symbols).max().unwrap();
+        // Whole model plus the decode-ahead floor (window 2 + active).
+        let budget = total.max(3 * largest);
+        let src = Arc::new(SegmentSource::from_model(Arc::new(model)));
+        let ws = PrefetchingWeightSet::new(src, budget, Vec::new(), PrefetchConfig::default())
+            .unwrap();
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let server = std::thread::spawn(move || {
+            let mut engine = Engine::new(
+                PrefetchingDigestBackend::new(ws, 2, 32, 256),
+                EngineConfig::default(),
+            );
+            serve(&mut engine, listener, stop2).unwrap()
+        });
+
+        let mut c = Client::connect(&addr).unwrap();
+        let reply = c.request("decode ahead", 4, 0.0).unwrap();
+        assert!(reply.get("tokens").unwrap().as_usize().unwrap() >= 1);
+
+        let stats = c.stats().unwrap();
+        // Residency family still present…
+        assert!(stats.get("cache_misses").unwrap().as_usize().unwrap() > 0);
+        // …and the prefetch family rides along. The walk schedules
+        // ahead on every consumed layer; how many jobs the pool won
+        // against the consumer is timing-dependent, so only
+        // `scheduled` has a guaranteed floor.
+        assert!(stats.get("prefetch_scheduled").unwrap().as_usize().unwrap() > 0);
+        for key in [
+            "prefetch_completed",
+            "prefetch_hits",
+            "prefetch_waits",
+            "prefetch_sync_faults",
+        ] {
+            assert!(stats.get(key).is_ok(), "missing {key}: {stats:?}");
+        }
 
         stop.store(true, Ordering::Relaxed);
         let served = server.join().unwrap();

@@ -33,7 +33,7 @@
 //!   with [`SegmentSource::open`] it parses only the header + manifest
 //!   and reads each segment from disk on demand, so a streaming or
 //!   cache-resident consumer ([`crate::decode::StreamingDecoder`],
-//!   [`crate::residency::LruWeightCache`]) never pays `O(model)` RSS.
+//!   [`crate::residency::WeightCache`]) never pays `O(model)` RSS.
 
 use crate::entropy::shannon_entropy;
 use crate::huffman::{CodeSpec, Decoder, Encoder, FreqTable};
@@ -133,9 +133,14 @@ impl ElmModel {
         self.layers.iter().map(|l| l.n_symbols).sum()
     }
 
-    /// Effective bits/param of the stored payload.
+    /// Effective bits/param of the stored payload (0 for a zero-layer
+    /// container — no params, no payload).
     pub fn effective_bits(&self) -> f64 {
-        8.0 * self.payload.len() as f64 / self.n_params() as f64
+        let n = self.n_params();
+        if n == 0 {
+            return 0.0;
+        }
+        8.0 * self.payload.len() as f64 / n as f64
     }
 
     /// Serialized container size in bytes (manifest + payload).
@@ -544,11 +549,21 @@ fn read_manifest<R: Read>(r: &mut Reader<R>) -> Result<ManifestHead> {
         other => return Err(Error::Format(format!("bad bit width {other}"))),
     };
     let n_layers = r.u32()? as usize;
-    if n_layers == 0 || n_layers > 1_000_000 {
+    if n_layers > 1_000_000 {
         return Err(Error::Format(format!("implausible layer count {n_layers}")));
     }
     let lengths = r.bytes(256)?;
-    let code = CodeSpec::from_lengths(&lengths)?;
+    // A zero-layer container is legal (an empty weight set decompresses
+    // to an empty EQW dump); it has no symbols, so an all-zero length
+    // table is accepted by substituting the degenerate one-symbol code
+    // — nothing will ever be decoded with it.
+    let code = if n_layers == 0 && lengths.iter().all(|&l| l == 0) {
+        let mut one = [0u8; 256];
+        one[0] = 1;
+        CodeSpec::from_lengths(&one)?
+    } else {
+        CodeSpec::from_lengths(&lengths)?
+    };
     let mut layers = Vec::with_capacity(n_layers);
     let mut offset = 0usize;
     for _ in 0..n_layers {
@@ -912,6 +927,61 @@ mod tests {
         assert_eq!(buf.len(), model.container_bytes());
         // The bytes at the computed payload base are the payload itself.
         assert_eq!(&buf[header_bytes(&model.layers)..], &model.payload[..]);
+    }
+
+    #[test]
+    fn zero_layer_container_roundtrips_on_both_readers() {
+        // `compress` refuses empty inputs, but the format allows an
+        // empty weight set (e.g. a model whose every tensor stays fp32)
+        // — both readers must accept it so `decompress` can emit a
+        // valid empty EQW dump.
+        let mut one = [0u8; 256];
+        one[0] = 1;
+        let model = ElmModel {
+            bits: BitWidth::U8,
+            code: CodeSpec::from_lengths(&one).unwrap(),
+            layers: Vec::new(),
+            payload: Vec::new(),
+        };
+        let mut buf = Vec::new();
+        model.write_to(&mut buf).unwrap();
+        assert_eq!(buf.len(), header_bytes(&[]));
+
+        let loaded = ElmModel::read_from(buf.as_slice()).unwrap();
+        assert!(loaded.layers.is_empty());
+        assert!(loaded.payload.is_empty());
+        assert_eq!(loaded.n_params(), 0);
+        assert_eq!(loaded.effective_bits(), 0.0, "no params: defined, not NaN");
+
+        let dir = std::env::temp_dir().join(format!("elm_zero_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("zero.elm");
+        model.save(&path).unwrap();
+        let lazy = SegmentSource::open(&path).unwrap();
+        assert_eq!(lazy.n_layers(), 0);
+        assert_eq!(lazy.n_params(), 0);
+
+        // An all-zero codebook is accepted for zero layers only.
+        let mut zero_code = buf.clone();
+        for b in zero_code[13..13 + 256].iter_mut() {
+            *b = 0;
+        }
+        assert!(ElmModel::read_from(zero_code.as_slice()).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn nonzero_layers_with_empty_codebook_still_rejected() {
+        let layers = make_layers(12);
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let mut buf = Vec::new();
+        model.write_to(&mut buf).unwrap();
+        // Zero out the codebook: with layers present this cannot code
+        // anything and must be rejected.
+        for b in buf[13..13 + 256].iter_mut() {
+            *b = 0;
+        }
+        assert!(ElmModel::read_from(buf.as_slice()).is_err());
     }
 
     #[test]

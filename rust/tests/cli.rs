@@ -176,6 +176,131 @@ fn generate_with_weight_budget_serves_synthetic_model() {
     assert!(text.contains("cache:"), "{text}");
 }
 
+/// Decode-ahead serving through the CLI: `--decode-ahead N` prefetches
+/// layer `i+1` while layer `i` is consumed, and the run report carries
+/// the prefetch counters next to the cache counters.
+#[test]
+fn generate_with_decode_ahead_prefetches_and_reports_counters() {
+    let (ok, text) = run(&[
+        "generate",
+        "--synthetic",
+        "10",
+        "--seed",
+        "3",
+        "--weight-budget-mb",
+        "0.06",
+        "--decode-ahead",
+        "2",
+        "--prompt",
+        "hi",
+        "--max-tokens",
+        "6",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("synthetic model: 10 layers"), "{text}");
+    assert!(text.contains("decode-ahead prefetch: window 2 layers"), "{text}");
+    assert!(text.contains("response 1"), "{text}");
+    assert!(text.contains("cache:"), "{text}");
+    assert!(text.contains("prefetch:"), "{text}");
+}
+
+/// `--decode-ahead` with the same prompt/seed/budget must generate the
+/// exact same text as the fault-on-demand path — prefetch changes
+/// *when* layers decode, never *what* they decode to.
+#[test]
+fn decode_ahead_generation_is_token_identical_to_fault_on_demand() {
+    let base = [
+        "generate",
+        "--synthetic",
+        "8",
+        "--seed",
+        "11",
+        "--weight-budget-mb",
+        "0.08",
+        "--prompt",
+        "edge",
+        "--max-tokens",
+        "8",
+    ];
+    let (ok, plain) = run(&base);
+    assert!(ok, "{plain}");
+    let mut ahead_args: Vec<&str> = base.to_vec();
+    ahead_args.extend_from_slice(&["--decode-ahead", "2"]);
+    let (ok, ahead) = run(&ahead_args);
+    assert!(ok, "{ahead}");
+    let text_of = |out: &str| -> String {
+        // The generated text is the line after the response header.
+        let mut lines = out.lines();
+        lines.find(|l| l.starts_with("--- response")).expect("response header");
+        lines.next().expect("generated text").to_string()
+    };
+    assert_eq!(text_of(&plain), text_of(&ahead), "plain:\n{plain}\nahead:\n{ahead}");
+}
+
+/// A zero-layer container decompresses to a valid *empty* EQW dump
+/// (exit 0 AND an output file), on both the eager and the streaming
+/// path — regression for the streaming path silently writing nothing.
+#[test]
+fn decompress_zero_layer_container_writes_valid_empty_eqw() {
+    use entrollm::huffman::CodeSpec;
+    use entrollm::quant::BitWidth;
+    use entrollm::store::ElmModel;
+
+    let dir = std::env::temp_dir().join(format!("cli_zero_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let elm = dir.join("zero.elm");
+    let mut one = [0u8; 256];
+    one[0] = 1;
+    ElmModel {
+        bits: BitWidth::U8,
+        code: CodeSpec::from_lengths(&one).unwrap(),
+        layers: Vec::new(),
+        payload: Vec::new(),
+    }
+    .save(&elm)
+    .unwrap();
+
+    // Every reader must accept the container, not just decompress.
+    let (ok, text) = run(&["inspect", "--model", elm.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("0 layers"), "{text}");
+    assert!(text.contains("empty weight set"), "{text}");
+
+    // "EQW1" | u8 bitwidth | u32 n_layers=0, nothing else.
+    let want: Vec<u8> = [b'E', b'Q', b'W', b'1', 8u8, 0, 0, 0, 0].to_vec();
+
+    let out_eager = dir.join("eager.eqw");
+    let (ok, text) = run(&[
+        "decompress",
+        "--model",
+        elm.to_str().unwrap(),
+        "--out",
+        out_eager.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("decoded 0 layers"), "{text}");
+    assert_eq!(std::fs::read(&out_eager).unwrap(), want);
+
+    let out_stream = dir.join("stream.eqw");
+    let (ok, text) = run(&[
+        "decompress",
+        "--model",
+        elm.to_str().unwrap(),
+        "--out",
+        out_stream.to_str().unwrap(),
+        "--stream",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("streaming decode"), "{text}");
+    assert_eq!(
+        std::fs::read(&out_stream).unwrap(),
+        want,
+        "streaming path must write the same valid empty weight set"
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// A budget smaller than one decoded layer must fail up front with the
 /// thrash explanation, not hang or loop.
 #[test]
