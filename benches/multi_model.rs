@@ -1,0 +1,240 @@
+//! Multi-model serving: **2-model interleaved load behind one
+//! coordinator** (shared byte ledger + shared decode pool) vs **two
+//! isolated single-model servers** at the same total byte budget.
+//!
+//! Both arms serve the same request mix from file-backed containers
+//! (payload on disk, decoded residency bounded), and both must emit
+//! bit-identical token streams — the coordinator changes *where bytes
+//! are resident*, never *what the models generate*. The second section
+//! skews the load (one hot model, one cold) to show the ledger's
+//! hot-steals-from-cold behavior, which a static half/half partition
+//! cannot express.
+
+use entrollm::bench::fmt_bytes;
+use entrollm::coordinator::{
+    Engine, EngineConfig, ModelSpec, MultiModelConfig, MultiModelServer, Request,
+};
+use entrollm::metrics::Table;
+use entrollm::pipeline::synthetic_layers;
+use entrollm::quant::BitWidth;
+use entrollm::residency::{
+    Policy, PrefetchConfig, PrefetchingDigestBackend, PrefetchingWeightSet,
+};
+use entrollm::store::{compress, SegmentSource};
+use std::sync::Arc;
+use std::time::Instant;
+
+const MAX_TOKENS: usize = 12;
+const REQS_PER_MODEL: u64 = 6;
+
+fn requests(offset: u64) -> Vec<Request> {
+    (0..REQS_PER_MODEL)
+        .map(|i| {
+            Request::greedy(
+                offset + i,
+                vec![1 + (offset + i) as u32 % 40, 7, 3 + i as u32],
+                MAX_TOKENS,
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("multi_model_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut paths = Vec::new();
+    let mut per_floor = Vec::new();
+    let mut total_decoded = 0usize;
+    for (name, n_layers, seed) in [("alpha", 24usize, 0xA11Au64), ("beta", 16, 0xBE7A)] {
+        let (elm, _) = compress(&synthetic_layers(n_layers, seed), BitWidth::U8).unwrap();
+        let largest = elm.layers.iter().map(|m| m.n_symbols).max().unwrap();
+        per_floor.push(4 * largest); // decode-ahead 3 + active layer
+        total_decoded += elm.n_params();
+        let path = dir.join(format!("{name}.elm"));
+        elm.save(&path).unwrap();
+        paths.push((name.to_string(), path));
+    }
+    // Total budget: about half of both models decoded, never below the
+    // summed decode-ahead floors; each isolated arm gets exactly half.
+    let total_budget = (total_decoded / 2).max(2 * per_floor.iter().sum::<usize>());
+    let per_budget = total_budget / 2;
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let pool_workers = cores.saturating_sub(1).clamp(1, 4);
+    let decode_ahead = 3usize;
+    println!(
+        "2 models | decoded {} total | shared budget {} ({} per isolated server) | \
+         decode-ahead {decode_ahead} | {pool_workers} pool workers\n",
+        fmt_bytes(total_decoded),
+        fmt_bytes(total_budget),
+        fmt_bytes(per_budget),
+    );
+
+    // ---- Arm 1: two isolated single-model engines, half the budget
+    // each, private worker pools. Driven by the SAME single-threaded
+    // interleaved step loop as the coordinator arm below, so the
+    // wall-clock delta isolates the shared-ledger/shared-pool design —
+    // not a difference in driver threading.
+    let isolated_cfg = PrefetchConfig {
+        decode_ahead,
+        workers: (pool_workers / 2).max(1),
+        policy: Policy::SegmentedLru,
+    };
+    let mut iso_engines: Vec<_> = paths
+        .iter()
+        .map(|(_, path)| {
+            let source = Arc::new(SegmentSource::open(path).unwrap());
+            let ws =
+                PrefetchingWeightSet::new(source, per_budget, Vec::new(), isolated_cfg).unwrap();
+            Engine::new(
+                PrefetchingDigestBackend::new(ws, 2, 64, 256),
+                EngineConfig::default(),
+            )
+        })
+        .collect();
+    let t0 = Instant::now();
+    for (mi, engine) in iso_engines.iter_mut().enumerate() {
+        for r in requests(100 * mi as u64) {
+            engine.submit(r).unwrap();
+        }
+    }
+    let mut iso_results = vec![Vec::new(), Vec::new()];
+    let mut steps = 0usize;
+    while iso_engines.iter().any(|e| e.has_work()) && steps < 1_000_000 {
+        for (mi, engine) in iso_engines.iter_mut().enumerate() {
+            let responses = engine.step().unwrap();
+            iso_results[mi].extend(responses.into_iter().map(|r| (r.id, r.tokens)));
+        }
+        steps += 1;
+    }
+    let iso_wall = t0.elapsed().as_secs_f64();
+    for m in &mut iso_results {
+        m.sort();
+    }
+    let iso_tokens: usize = iso_results
+        .iter()
+        .flat_map(|m| m.iter().map(|(_, t)| t.len()))
+        .sum();
+
+    // ---- Arm 2: one coordinator, same total budget, shared ledger +
+    // shared pool, interleaved submissions.
+    let mut multi = MultiModelServer::new(
+        paths
+            .iter()
+            .map(|(name, path)| ModelSpec {
+                name: name.clone(),
+                source: Arc::new(SegmentSource::open(path).unwrap()),
+            })
+            .collect(),
+        MultiModelConfig {
+            budget_bytes: total_budget,
+            decode_ahead,
+            workers: pool_workers,
+            ..MultiModelConfig::default()
+        },
+    )
+    .unwrap();
+    let t1 = Instant::now();
+    for (ra, rb) in requests(0).into_iter().zip(requests(100)) {
+        multi.engine_mut(0).submit(ra).unwrap();
+        multi.engine_mut(1).submit(rb).unwrap();
+    }
+    let mut multi_results = vec![Vec::new(), Vec::new()];
+    let mut steps = 0usize;
+    while multi.has_work() && steps < 1_000_000 {
+        for mi in 0..multi.n_models() {
+            let responses = multi.engine_mut(mi).step().unwrap();
+            multi_results[mi].extend(responses.into_iter().map(|r| (r.id, r.tokens)));
+        }
+        steps += 1;
+    }
+    let multi_wall = t1.elapsed().as_secs_f64();
+    for m in &mut multi_results {
+        m.sort();
+    }
+    let multi_tokens: usize = multi_results
+        .iter()
+        .flat_map(|m| m.iter().map(|(_, t)| t.len()))
+        .sum();
+
+    // Bit-identical acceptance: the coordinator must not change tokens.
+    assert_eq!(
+        iso_results, multi_results,
+        "multi-model serving changed a token stream"
+    );
+    assert_eq!(iso_tokens, multi_tokens);
+    let lc = multi.ledger().counters();
+    assert!(lc.peak_used_bytes <= lc.budget_bytes, "budget violated: {lc:?}");
+
+    let mut table = Table::new(
+        "Interleaved 2-model load at the same total budget",
+        &["arm", "wall s", "tok/s", "tokens"],
+    );
+    table.row(&[
+        "2 isolated servers".into(),
+        format!("{iso_wall:.3}"),
+        format!("{:.1}", iso_tokens as f64 / iso_wall.max(1e-12)),
+        iso_tokens.to_string(),
+    ]);
+    table.row(&[
+        "multi-model coordinator".into(),
+        format!("{multi_wall:.3}"),
+        format!("{:.1}", multi_tokens as f64 / multi_wall.max(1e-12)),
+        multi_tokens.to_string(),
+    ]);
+    table.emit("multi_model");
+
+    // ---- Skewed load: alpha hot, beta cold. A static half/half split
+    // would cap alpha at per_budget; the shared ledger lets it steal
+    // beta's residency instead.
+    let mut skewed = MultiModelServer::new(
+        paths
+            .iter()
+            .map(|(name, path)| ModelSpec {
+                name: name.clone(),
+                source: Arc::new(SegmentSource::open(path).unwrap()),
+            })
+            .collect(),
+        MultiModelConfig {
+            budget_bytes: total_budget,
+            decode_ahead,
+            workers: pool_workers,
+            ..MultiModelConfig::default()
+        },
+    )
+    .unwrap();
+    // One request warms beta, then alpha hammers.
+    skewed
+        .engine_mut(1)
+        .submit(Request::greedy(999, vec![9, 9], 4))
+        .unwrap();
+    let mut steps = 0usize;
+    while skewed.engine(1).has_work() && steps < 100_000 {
+        skewed.engine_mut(1).step().unwrap();
+        steps += 1;
+    }
+    for r in requests(0) {
+        skewed.engine_mut(0).submit(r).unwrap();
+    }
+    let mut steps = 0usize;
+    while skewed.engine(0).has_work() && steps < 1_000_000 {
+        skewed.engine_mut(0).step().unwrap();
+        steps += 1;
+    }
+    let ledger = skewed.ledger();
+    let (hot, cold) = (ledger.used_by(0), ledger.used_by(1));
+    println!(
+        "\nskewed load: hot model holds {} of the shared pool, cold model {} \
+         (static 50/50 would cap the hot model at {})",
+        fmt_bytes(hot),
+        fmt_bytes(cold),
+        fmt_bytes(per_budget),
+    );
+    assert!(
+        hot >= cold,
+        "hot model must hold at least as much residency as the cold one"
+    );
+    assert!(ledger.counters().used_bytes <= total_budget);
+
+    std::fs::remove_dir_all(&dir).ok();
+    println!("\nmulti_model bench OK");
+}

@@ -11,8 +11,12 @@ use std::collections::BTreeMap;
 pub struct Args {
     /// First token (the subcommand).
     pub command: String,
-    /// `--key value` pairs.
+    /// `--key value` pairs (last occurrence wins — the single-value
+    /// view; see [`Args::all`] for every occurrence).
     pub flags: BTreeMap<String, String>,
+    /// Every occurrence of each flag, in command-line order (repeatable
+    /// flags like `--elm a.elm --elm b.elm`).
+    pub repeated: BTreeMap<String, Vec<String>>,
     /// Bare `--switch` tokens.
     pub switches: Vec<String>,
     /// Remaining positional arguments.
@@ -28,17 +32,21 @@ impl Args {
             command,
             ..Default::default()
         };
+        fn put(args: &mut Args, k: String, v: String) {
+            args.repeated.entry(k.clone()).or_default().push(v.clone());
+            args.flags.insert(k, v);
+        }
         while let Some(tok) = it.next() {
             if let Some(stripped) = tok.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
-                    args.flags.insert(k.to_string(), v.to_string());
+                    put(&mut args, k.to_string(), v.to_string());
                 } else if it
                     .peek()
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
                     let v = it.next().unwrap();
-                    args.flags.insert(stripped.to_string(), v);
+                    put(&mut args, stripped.to_string(), v);
                 } else {
                     args.switches.push(stripped.to_string());
                 }
@@ -80,6 +88,12 @@ impl Args {
     /// Is a bare switch present?
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Every value a repeatable flag was given, in command-line order
+    /// (empty slice when absent) — e.g. `--elm a.elm --elm b.elm`.
+    pub fn all(&self, key: &str) -> &[String] {
+        self.repeated.get(key).map(Vec::as_slice).unwrap_or(&[])
     }
 }
 
@@ -132,5 +146,18 @@ mod tests {
     fn empty_argv() {
         let a = parse(&[]);
         assert_eq!(a.command, "");
+    }
+
+    #[test]
+    fn repeated_flags_keep_every_value_in_order() {
+        let a = parse(&[
+            "serve", "--elm", "a.elm", "--elm=b.elm", "--model", "x=1.elm", "--port", "7",
+        ]);
+        assert_eq!(a.all("elm"), ["a.elm", "b.elm"]);
+        assert_eq!(a.all("model"), ["x=1.elm"]);
+        assert!(a.all("missing").is_empty());
+        // The single-value view still works (last wins).
+        assert_eq!(a.opt("elm", ""), "b.elm");
+        assert_eq!(a.req("port").unwrap(), "7");
     }
 }

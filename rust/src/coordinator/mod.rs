@@ -12,12 +12,16 @@
 //! * [`batcher`] — bounded FIFO admission queue with stats;
 //! * [`sampler`] — greedy / temperature / top-k sampling;
 //! * [`engine`] — the step loop: admit → prefill → batched decode →
-//!   sample → retire, with continuous slot refill.
+//!   sample → retire, with continuous slot refill;
+//! * [`multi`] — the multi-model coordinator: one engine per hosted
+//!   model, all drawing on a shared decode worker pool and one global
+//!   weight budget ([`MultiModelServer`]).
 
 pub mod backend;
 pub mod batcher;
 pub mod engine;
 pub mod kv;
+pub mod multi;
 pub mod request;
 pub mod sampler;
 
@@ -29,5 +33,6 @@ pub use backend::{
 pub use batcher::{AdmissionQueue, QueueStats};
 pub use engine::{Engine, EngineConfig, EngineStats};
 pub use kv::KvMirror;
+pub use multi::{ModelSpec, MultiModelConfig, MultiModelServer};
 pub use request::{Request, Response, Timing};
 pub use sampler::{SampleCfg, Sampler};

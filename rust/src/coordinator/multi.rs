@@ -1,0 +1,420 @@
+//! **Multi-model serving coordinator**: several ELM containers behind
+//! one server, each with its own generation engine, all drawing on one
+//! shared decode worker pool and one global decoded-byte budget.
+//!
+//! This is the serving-time framing of entropy-coded weights (Huff-LLM,
+//! arXiv:2502.00922; "On the Compressibility of Quantized LLMs",
+//! arXiv:2403.01384): the compressed container is a *schedulable
+//! resource*, not just a storage win. Concretely:
+//!
+//! * every model gets its own [`Engine`] over a
+//!   [`PrefetchingDigestBackend`] (continuous batching, decode-ahead
+//!   prefetch, per-model `cache_*`/`prefetch_*` counters);
+//! * all models share **one** [`ResidencyLedger`] — a global
+//!   `--weight-budget-mb` that per-model caches draw from, so a hot
+//!   model steals residency from a cold one instead of thrashing
+//!   inside a static partition;
+//! * all models share **one** [`PrefetchPool`] of decode workers, so
+//!   decode parallelism (and decoded-but-unpublished memory overshoot)
+//!   is bounded for the whole process, not per model.
+//!
+//! Requests are routed by the line protocol's optional `"model"` field
+//! ([`crate::server::serve_multi`]); the first model is the default
+//! when the field is omitted, and unknown names earn an error line.
+
+use super::engine::{Engine, EngineConfig};
+use crate::residency::{
+    Policy, PrefetchConfig, PrefetchPool, PrefetchingDigestBackend, PrefetchingWeightSet,
+    ResidencyLedger,
+};
+use crate::store::SegmentSource;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One model to host: a routing name plus its segment source (a lazily
+/// opened `.elm` container, or an in-memory one for tests/benches).
+pub struct ModelSpec {
+    /// Routing name (the line protocol's `"model"` field).
+    pub name: String,
+    /// The container the model's engine serves from.
+    pub source: Arc<SegmentSource>,
+}
+
+/// Construction parameters of a [`MultiModelServer`].
+#[derive(Debug, Clone)]
+pub struct MultiModelConfig {
+    /// Global decoded-byte budget shared by every model's cache.
+    pub budget_bytes: usize,
+    /// Decode-ahead window per model (clamped per model to
+    /// `n_layers - 1`).
+    pub decode_ahead: usize,
+    /// Decode worker threads in the shared pool.
+    pub workers: usize,
+    /// Decode batch width (slots) per engine.
+    pub batch: usize,
+    /// KV capacity in tokens per engine.
+    pub max_seq: usize,
+    /// Vocabulary size (byte-level serving uses 256).
+    pub vocab: usize,
+    /// Per-engine queue/sampler configuration.
+    pub engine: EngineConfig,
+}
+
+impl Default for MultiModelConfig {
+    fn default() -> Self {
+        MultiModelConfig {
+            budget_bytes: 64 << 20,
+            decode_ahead: 2,
+            workers: 2,
+            batch: 2,
+            max_seq: 64,
+            vocab: 256,
+            engine: EngineConfig::default(),
+        }
+    }
+}
+
+struct ModelEntry {
+    name: String,
+    engine: Engine<PrefetchingDigestBackend>,
+}
+
+/// N models, one port: per-model engines over a shared byte ledger and
+/// a shared decode worker pool. The TCP front end lives in
+/// [`crate::server::serve_multi`]; this type owns the engines and the
+/// routing table.
+pub struct MultiModelServer {
+    /// Declared first so the shared workers stop and join before any
+    /// engine (and its prefetch core) is torn down.
+    pool: PrefetchPool,
+    ledger: Arc<ResidencyLedger>,
+    entries: Vec<ModelEntry>,
+    by_name: HashMap<String, usize>,
+}
+
+impl MultiModelServer {
+    /// Build one engine per spec over a shared ledger + worker pool.
+    ///
+    /// Fails up front when: no models, a duplicate/empty name, or the
+    /// global budget cannot hold the **sum** of every model's
+    /// decode-ahead floor (`(window + 1) × largest layer` each) — the
+    /// cross-model analogue of the single-model floor check, and what
+    /// keeps "every byte pinned by peers" unreachable.
+    pub fn new(specs: Vec<ModelSpec>, cfg: MultiModelConfig) -> Result<Self> {
+        if specs.is_empty() {
+            return Err(Error::InvalidArg(
+                "multi-model server needs at least one model".into(),
+            ));
+        }
+        let mut by_name = HashMap::new();
+        for (i, spec) in specs.iter().enumerate() {
+            if spec.name.is_empty() {
+                return Err(Error::InvalidArg("model names must be non-empty".into()));
+            }
+            if by_name.insert(spec.name.clone(), i).is_some() {
+                return Err(Error::InvalidArg(format!(
+                    "duplicate model name {:?}",
+                    spec.name
+                )));
+            }
+        }
+        let mut floor_sum = 0usize;
+        for spec in &specs {
+            let window = cfg
+                .decode_ahead
+                .min(spec.source.n_layers().saturating_sub(1));
+            let largest = spec
+                .source
+                .layers()
+                .iter()
+                .map(|m| m.n_symbols)
+                .max()
+                .unwrap_or(0);
+            floor_sum = floor_sum.saturating_add(largest.saturating_mul(window + 1));
+        }
+        if cfg.budget_bytes < floor_sum {
+            return Err(Error::InvalidArg(format!(
+                "global weight budget {} B cannot hold every model's decode-ahead \
+                 floor (sum {} B across {} models) — lower --decode-ahead or raise \
+                 the budget",
+                cfg.budget_bytes,
+                floor_sum,
+                specs.len()
+            )));
+        }
+
+        let ledger = ResidencyLedger::new(cfg.budget_bytes);
+        let pcfg = PrefetchConfig {
+            decode_ahead: cfg.decode_ahead,
+            // No private workers: the shared pool below drives every
+            // model's queue.
+            workers: 0,
+            policy: Policy::SegmentedLru,
+        };
+        let mut entries = Vec::with_capacity(specs.len());
+        let mut shares = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let ws = PrefetchingWeightSet::with_ledger(
+                spec.source,
+                Arc::clone(&ledger),
+                Vec::new(),
+                pcfg,
+            )?;
+            shares.push(Arc::clone(ws.shared()));
+            entries.push(ModelEntry {
+                name: spec.name,
+                engine: Engine::new(
+                    PrefetchingDigestBackend::new(ws, cfg.batch, cfg.max_seq, cfg.vocab),
+                    cfg.engine.clone(),
+                ),
+            });
+        }
+        // Peer links (indexed by ledger slot = construction order) let
+        // a hot model shed a cold one's residency.
+        let weak: Vec<_> = shares.iter().map(Arc::downgrade).collect();
+        for share in &shares {
+            share.link_peers(weak.clone());
+        }
+        let pool = PrefetchPool::new(shares, cfg.workers);
+        Ok(MultiModelServer {
+            pool,
+            ledger,
+            entries,
+            by_name,
+        })
+    }
+
+    /// Hosted model count.
+    pub fn n_models(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Routing name of model `index`.
+    pub fn name(&self, index: usize) -> &str {
+        &self.entries[index].name
+    }
+
+    /// Resolve a request's optional `"model"` field to an engine index:
+    /// the first (default) model when omitted, an error naming the
+    /// hosted models when unknown.
+    pub fn resolve(&self, model: Option<&str>) -> Result<usize> {
+        match model {
+            None => Ok(0),
+            Some(name) => self.by_name.get(name).copied().ok_or_else(|| {
+                Error::InvalidArg(format!(
+                    "unknown model {name:?} (hosted: {})",
+                    self.entries
+                        .iter()
+                        .map(|e| e.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ))
+            }),
+        }
+    }
+
+    /// Borrow model `index`'s engine.
+    pub fn engine(&self, index: usize) -> &Engine<PrefetchingDigestBackend> {
+        &self.entries[index].engine
+    }
+
+    /// Mutably borrow model `index`'s engine (submit/step).
+    pub fn engine_mut(&mut self, index: usize) -> &mut Engine<PrefetchingDigestBackend> {
+        &mut self.entries[index].engine
+    }
+
+    /// The shared byte ledger.
+    pub fn ledger(&self) -> &Arc<ResidencyLedger> {
+        &self.ledger
+    }
+
+    /// The shared decode worker pool.
+    pub fn pool(&self) -> &PrefetchPool {
+        &self.pool
+    }
+
+    /// Does any engine have queued or active work?
+    pub fn has_work(&self) -> bool {
+        self.entries.iter().any(|e| e.engine.has_work())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Request;
+    use crate::pipeline::synthetic_layers;
+    use crate::quant::BitWidth;
+    use crate::store::compress;
+
+    fn spec(name: &str, n_layers: usize, seed: u64) -> ModelSpec {
+        let layers = synthetic_layers(n_layers, seed);
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        ModelSpec {
+            name: name.into(),
+            source: Arc::new(SegmentSource::from_model(Arc::new(model))),
+        }
+    }
+
+    /// Whole decoded model, but never below the decode-ahead floor
+    /// (default window 2 + active layer) the coordinator enforces.
+    fn total_bytes(spec: &ModelSpec) -> usize {
+        let largest = spec
+            .source
+            .layers()
+            .iter()
+            .map(|m| m.n_symbols)
+            .max()
+            .unwrap_or(0);
+        spec.source.n_params().max(3 * largest)
+    }
+
+    #[test]
+    fn construction_validates_names_and_budget_floor() {
+        let cfg = MultiModelConfig::default();
+        assert!(MultiModelServer::new(Vec::new(), cfg.clone()).is_err());
+
+        let dup = vec![spec("a", 4, 1), spec("a", 4, 2)];
+        let err = MultiModelServer::new(dup, cfg.clone()).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+
+        let unnamed = vec![ModelSpec {
+            name: String::new(),
+            source: spec("x", 4, 3).source,
+        }];
+        let err = MultiModelServer::new(unnamed, cfg.clone()).unwrap_err();
+        assert!(err.to_string().contains("non-empty"), "{err}");
+
+        // A budget below the summed decode-ahead floors is rejected up
+        // front, naming the shortfall.
+        let tiny = MultiModelConfig {
+            budget_bytes: 16,
+            ..cfg
+        };
+        let err = MultiModelServer::new(vec![spec("a", 4, 4), spec("b", 4, 5)], tiny).unwrap_err();
+        assert!(err.to_string().contains("floor"), "{err}");
+    }
+
+    #[test]
+    fn resolve_routes_default_known_and_unknown() {
+        let a = spec("alpha", 4, 10);
+        let b = spec("beta", 4, 11);
+        let budget = total_bytes(&a) + total_bytes(&b);
+        let multi = MultiModelServer::new(
+            vec![a, b],
+            MultiModelConfig {
+                budget_bytes: budget,
+                ..MultiModelConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(multi.n_models(), 2);
+        assert_eq!(multi.resolve(None).unwrap(), 0, "first model is default");
+        assert_eq!(multi.resolve(Some("beta")).unwrap(), 1);
+        let err = multi.resolve(Some("gamma")).unwrap_err();
+        assert!(err.to_string().contains("unknown model"), "{err}");
+        assert!(err.to_string().contains("alpha"), "lists hosted: {err}");
+    }
+
+    /// The tentpole acceptance at the engine level: two models served
+    /// through one coordinator (shared ledger + shared pool) generate
+    /// token streams bit-identical to two isolated single-model
+    /// engines at the same per-model budget.
+    #[test]
+    fn two_models_generate_bit_identical_to_isolated_engines() {
+        let a = spec("alpha", 6, 0x90);
+        let b = spec("beta", 8, 0x91);
+        let per_budget = |s: &ModelSpec| {
+            let largest = s
+                .source
+                .layers()
+                .iter()
+                .map(|m| m.n_symbols)
+                .max()
+                .unwrap();
+            // Tight enough to evict, high enough for the window floor.
+            (total_bytes(s) / 2).max(3 * largest)
+        };
+        let (budget_a, budget_b) = (per_budget(&a), per_budget(&b));
+
+        let reqs =
+            |offset: u64| -> Vec<Request> {
+                (0..3)
+                    .map(|i| {
+                        Request::greedy(offset + i, vec![5 + i as u32, 9, 2 + i as u32], 6)
+                    })
+                    .collect()
+            };
+
+        // Isolated reference runs, one engine per model.
+        let isolated = |s: &ModelSpec, budget: usize, reqs: &[Request]| {
+            let ws = PrefetchingWeightSet::new(
+                Arc::clone(&s.source),
+                budget,
+                Vec::new(),
+                PrefetchConfig {
+                    decode_ahead: 2,
+                    workers: 2,
+                    policy: Policy::SegmentedLru,
+                },
+            )
+            .unwrap();
+            let mut engine = Engine::new(
+                PrefetchingDigestBackend::new(ws, 2, 64, 256),
+                EngineConfig::default(),
+            );
+            for r in reqs {
+                engine.submit(r.clone()).unwrap();
+            }
+            let mut out: Vec<(u64, Vec<u32>)> = engine
+                .run_to_completion(10_000)
+                .unwrap()
+                .into_iter()
+                .map(|r| (r.id, r.tokens))
+                .collect();
+            out.sort();
+            out
+        };
+        let want_a = isolated(&a, budget_a, &reqs(0));
+        let want_b = isolated(&b, budget_b, &reqs(100));
+
+        // Multi: same total budget, both models behind one coordinator,
+        // requests interleaved across the two engines.
+        let mut multi = MultiModelServer::new(
+            vec![a, b],
+            MultiModelConfig {
+                budget_bytes: budget_a + budget_b,
+                ..MultiModelConfig::default()
+            },
+        )
+        .unwrap();
+        for (ra, rb) in reqs(0).into_iter().zip(reqs(100)) {
+            multi.engine_mut(0).submit(ra).unwrap();
+            multi.engine_mut(1).submit(rb).unwrap();
+        }
+        let mut got_a = Vec::new();
+        let mut got_b = Vec::new();
+        let mut steps = 0;
+        while multi.has_work() && steps < 10_000 {
+            for (mi, out) in [(0, &mut got_a), (1, &mut got_b)] {
+                for resp in multi.engine_mut(mi).step().unwrap() {
+                    out.push((resp.id, resp.tokens));
+                }
+            }
+            steps += 1;
+        }
+        got_a.sort();
+        got_b.sort();
+        assert_eq!(got_a, want_a, "model alpha's tokens diverged under multi");
+        assert_eq!(got_b, want_b, "model beta's tokens diverged under multi");
+
+        // Shared accounting stayed within the global budget.
+        let lc = multi.ledger().counters();
+        assert!(lc.peak_used_bytes <= lc.budget_bytes, "{lc:?}");
+        assert_eq!(lc.models, 2);
+        // Both models moved their own cache counters.
+        assert!(multi.engine(0).residency().unwrap().misses > 0);
+        assert!(multi.engine(1).residency().unwrap().misses > 0);
+    }
+}

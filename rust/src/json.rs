@@ -142,6 +142,26 @@ impl Value {
         Ok(n as usize)
     }
 
+    /// As u64, **strictly**: the number must be a non-negative integer
+    /// *below* 2^53, the range where f64 represents every integer
+    /// exactly. Anything else — negative, fractional, NaN/infinite, or
+    /// at/beyond 2^53 (where the JSON→f64 parse itself already rounds,
+    /// e.g. 2^53+1 parses to 2^53) — is an error, never a silent
+    /// truncation or wrap: `n as u64` on such values would quietly
+    /// collide distinct inputs (the request-id bug this accessor
+    /// exists to prevent).
+    pub fn as_u64(&self) -> Result<u64> {
+        const EXACT_BOUND: f64 = 9_007_199_254_740_992.0; // 2^53
+        let n = self.as_f64()?;
+        // NaN fails the fract test (NaN != 0.0), infinities the bound.
+        if n < 0.0 || n >= EXACT_BOUND || n.fract() != 0.0 {
+            return Err(Error::Json(format!(
+                "expected an integer in [0, 2^53), got {n}"
+            )));
+        }
+        Ok(n as u64)
+    }
+
     /// Object field lookup.
     pub fn get(&self, key: &str) -> Result<&Value> {
         self.as_object()?
@@ -475,5 +495,23 @@ mod tests {
         assert!(v.get("a").unwrap().as_usize().is_err());
         assert!(v.get("missing").is_err());
         assert!(v.get_opt("missing").is_none());
+    }
+
+    #[test]
+    fn as_u64_is_exact_or_error() {
+        let ok = |s: &str| Value::parse(s).unwrap().as_u64();
+        assert_eq!(ok("0").unwrap(), 0);
+        assert_eq!(ok("7").unwrap(), 7);
+        assert_eq!(ok("9007199254740991").unwrap(), (1 << 53) - 1);
+        // Negative, fractional, and ≥2^53 values would all wrap or
+        // collide under `as u64` — they must be errors instead. Note
+        // 2^53+1 already parses to 2^53, which is exactly why the
+        // bound is strict.
+        assert!(ok("-1").is_err());
+        assert!(ok("1.5").is_err());
+        assert!(ok("1e20").is_err());
+        assert!(ok("9007199254740992").is_err());
+        assert!(ok("9007199254740993").is_err());
+        assert!(ok("\"7\"").is_err(), "strings are not ids");
     }
 }

@@ -16,6 +16,9 @@
 //!                     [--stream --prefetch-layers K [--elm model.elm]]
 //!                     [--weight-budget-mb M [--elm model.elm | --synthetic N]
 //!                      [--decode-ahead N [--prefetch-workers W]]]
+//! entrollm serve      --elm a.elm --elm b.elm | --model name=path [--model ...]
+//!                     [--port 7433] [--weight-budget-mb M]
+//!                     [--decode-ahead N] [--prefetch-workers W]
 //! entrollm latency    [--params 3.8e9] [--prefill-tokens 512]
 //!                     [--layers L --prefetch-layers K]
 //! ```
@@ -29,6 +32,14 @@
 //! scan-resistant (segmented LRU) replacement policy. `{"stats":true}`
 //! on the serve port reports the cache's hit/miss/evict counters plus
 //! the `prefetch_*` counters when decode-ahead is on.
+//!
+//! Passing several containers (repeated `--elm`, or named `--model
+//! name=path` pairs) serves them all from one port: requests route by
+//! an optional `"model"` field, every model's cache draws on the
+//! **shared** `--weight-budget-mb` (a hot model steals residency from
+//! a cold one), one worker pool decodes ahead for all of them, and
+//! `{"stats":true}` grows a per-model `models` array plus `ledger_*`
+//! fields. See `docs/SERVING.md`.
 
 use entrollm::bench::{fmt_bytes, fmt_secs};
 use entrollm::cli::Args;
@@ -101,7 +112,10 @@ commands:
                 --weight-budget-mb M [--elm F | --synthetic N] serves a
                 model larger than the budget via the residency cache,
                 no artifacts needed; --decode-ahead N overlaps fault-in
-                with token compute
+                with token compute; repeated --elm (or --model
+                name=path) serves several models from one port behind
+                one shared budget + decode pool, routed by the
+                request's "model" field
   latency       Table II-style latency model for an edge profile,
                 including streaming (layer-ahead) first-token estimates
                 and residency fault-in costs (serial and decode-ahead
@@ -520,8 +534,97 @@ fn serve_with<B: entrollm::coordinator::Backend>(backend: B, port: u16, tag: &st
     Ok(())
 }
 
+/// `serve` hosts several models when `--model name=path` appears (any
+/// count) or `--elm` is repeated; a single `--elm` stays on the
+/// single-model residency path. Bare `--elm` entries are named by file
+/// stem.
+fn multi_model_specs(args: &Args) -> Result<Option<Vec<(String, String)>>> {
+    let models = args.all("model");
+    let elms = args.all("elm");
+    if models.is_empty() && elms.len() < 2 {
+        return Ok(None);
+    }
+    let mut specs = Vec::with_capacity(models.len() + elms.len());
+    for m in models {
+        let Some((name, path)) = m.split_once('=') else {
+            return Err(Error::InvalidArg(format!(
+                "--model expects name=path (e.g. --model chat=chat.elm), got {m:?}"
+            )));
+        };
+        if name.is_empty() || path.is_empty() {
+            return Err(Error::InvalidArg(format!(
+                "--model expects a non-empty name and path, got {m:?}"
+            )));
+        }
+        specs.push((name.to_string(), path.to_string()));
+    }
+    for path in elms {
+        let name = std::path::Path::new(path)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or(path.as_str())
+            .to_string();
+        specs.push((name, path.clone()));
+    }
+    Ok(Some(specs))
+}
+
+/// Multi-model serving: every named container behind one port, one
+/// shared byte budget, one decode worker pool.
+fn serve_multi_models(args: &Args, specs: Vec<(String, String)>, port: u16) -> Result<()> {
+    for conflicting in ["artifacts", "flavor", "synthetic"] {
+        if args.flags.contains_key(conflicting) {
+            return Err(Error::InvalidArg(format!(
+                "--{conflicting} cannot be combined with multi-model serving \
+                 (repeated --elm / --model name=path)"
+            )));
+        }
+    }
+    if args.has("stream") {
+        return Err(Error::InvalidArg(
+            "--stream is the PJRT streaming-load path; multi-model serving already \
+             reads segments lazily — drop it"
+                .into(),
+        ));
+    }
+    let mb: f64 = args.opt_parse("weight-budget-mb", 64.0f64)?;
+    let budget = entrollm::pipeline::weight_budget_bytes(mb)?;
+    let decode_ahead: usize = args.opt_parse("decode-ahead", 2usize)?;
+    let workers: usize = args.opt_parse("prefetch-workers", 2usize)?.clamp(1, 32);
+    let mut multi =
+        entrollm::pipeline::open_multi_model_server(specs, budget, decode_ahead, workers)?;
+    println!(
+        "multi-model serving: {} models | shared budget {} | decode-ahead {} | \
+         {} pool workers",
+        multi.n_models(),
+        fmt_bytes(budget),
+        decode_ahead,
+        multi.pool().workers(),
+    );
+    for i in 0..multi.n_models() {
+        println!(
+            "  model {:<20} {} quantized layers",
+            multi.name(i),
+            multi.engine(i).backend().weights().n_layers(),
+        );
+    }
+    let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
+    println!(
+        "serving {} models on 127.0.0.1:{port} (route with the request's \
+         \"model\" field; ctrl-c to stop)",
+        multi.n_models()
+    );
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let served = entrollm::server::serve_multi(&mut multi, listener, stop)?;
+    println!("served {served} requests");
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let port: u16 = args.opt_parse("port", 7433)?;
+    if let Some(specs) = multi_model_specs(args)? {
+        return serve_multi_models(args, specs, port);
+    }
     if wants_residency(args) {
         return match resident_serving(args)? {
             ResidentServing::Plain(b) => serve_with(b, port, "resident (digest backend)"),

@@ -323,6 +323,33 @@ pub fn residency_source(
     }
 }
 
+/// Open several ELM containers **lazily** and assemble the multi-model
+/// serving coordinator: one engine per `(name, path)` pair, all
+/// drawing on one shared decoded-byte budget ([`crate::residency::ResidencyLedger`])
+/// and one shared decode worker pool — the `entrollm serve
+/// --model name=path --model ...` (or repeated `--elm`) deploy path.
+pub fn open_multi_model_server(
+    specs: Vec<(String, String)>,
+    budget_bytes: usize,
+    decode_ahead: usize,
+    workers: usize,
+) -> Result<crate::coordinator::MultiModelServer> {
+    let mut model_specs = Vec::with_capacity(specs.len());
+    for (name, path) in specs {
+        model_specs.push(crate::coordinator::ModelSpec {
+            name,
+            source: Arc::new(SegmentSource::open(&path)?),
+        });
+    }
+    let cfg = crate::coordinator::MultiModelConfig {
+        budget_bytes,
+        decode_ahead,
+        workers,
+        ..crate::coordinator::MultiModelConfig::default()
+    };
+    crate::coordinator::MultiModelServer::new(model_specs, cfg)
+}
+
 /// Decode-ahead serving backend over any segment source — what
 /// `entrollm generate/serve --decode-ahead N` runs: the residency
 /// cache under a scan-resistant policy, with a worker pool decoding
@@ -454,6 +481,39 @@ mod tests {
 
         // A budget below one layer is rejected up front.
         assert!(open_resident_weights(&path, largest - 1, Vec::new()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn multi_model_server_opens_lazily_from_disk() {
+        let dir = std::env::temp_dir().join(format!("pipe_multi_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut paths = Vec::new();
+        let mut budget = 0usize;
+        for (name, n, seed) in [("a", 5usize, 0xA1u64), ("b", 7, 0xB2)] {
+            let (elm, _) = compress(&synthetic_layers(n, seed), BitWidth::U8).unwrap();
+            let largest = elm.layers.iter().map(|m| m.n_symbols).max().unwrap();
+            // Whole model, but never below the decode-ahead floor
+            // (window 2 + active layer) the coordinator enforces.
+            budget += elm.n_params().max(3 * largest);
+            let path = dir.join(format!("{name}.elm"));
+            elm.save(&path).unwrap();
+            paths.push((name.to_string(), path.to_str().unwrap().to_string()));
+        }
+        let multi = open_multi_model_server(paths, budget, 2, 1).unwrap();
+        assert_eq!(multi.n_models(), 2);
+        assert_eq!(multi.name(0), "a");
+        assert_eq!(multi.resolve(Some("b")).unwrap(), 1);
+        assert!(multi.resolve(Some("zzz")).is_err());
+        assert_eq!(multi.ledger().counters().budget_bytes, budget);
+        // A missing container path fails cleanly.
+        assert!(open_multi_model_server(
+            vec![("x".into(), dir.join("absent.elm").to_str().unwrap().into())],
+            budget,
+            2,
+            1
+        )
+        .is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -3,6 +3,7 @@
 //! [`SegmentDecoder`] and **pinning** for the decode-ahead prefetcher
 //! ([`crate::residency::prefetch`]).
 
+use super::ledger::ResidencyLedger;
 use crate::decode::{SegmentDecoder, ThreadStats};
 use crate::quant::QuantizedTensor;
 use crate::store::SegmentSource;
@@ -109,6 +110,9 @@ pub struct WeightCache {
     counters: CacheCounters,
     /// Fault-decode accounting (busy time, segments, symbols).
     stats: ThreadStats,
+    /// Shared byte budget this cache draws from, when it is one of
+    /// several in a multi-model pool (`None` → private budget).
+    ledger: Option<(Arc<ResidencyLedger>, usize)>,
 }
 
 impl WeightCache {
@@ -123,6 +127,32 @@ impl WeightCache {
         source: Arc<SegmentSource>,
         budget_bytes: usize,
         policy: Policy,
+    ) -> Result<Self> {
+        Self::build(source, budget_bytes, policy, None)
+    }
+
+    /// Cache drawing on a **shared** [`ResidencyLedger`] instead of a
+    /// private budget: every charge/release moves the global ledger, so
+    /// several models' caches compete for one byte pool (the
+    /// multi-model serving shape). The cache registers itself as one
+    /// ledger slot; eviction still only removes *this* cache's entries
+    /// — cross-model reclaim is driven by
+    /// [`super::PrefetchShared`]'s peer-shed path.
+    pub fn with_ledger(
+        source: Arc<SegmentSource>,
+        ledger: Arc<ResidencyLedger>,
+        policy: Policy,
+    ) -> Result<Self> {
+        let budget = ledger.budget();
+        let slot = ledger.register();
+        Self::build(source, budget, policy, Some((ledger, slot)))
+    }
+
+    fn build(
+        source: Arc<SegmentSource>,
+        budget_bytes: usize,
+        policy: Policy,
+        ledger: Option<(Arc<ResidencyLedger>, usize)>,
     ) -> Result<Self> {
         let largest = source
             .layers()
@@ -148,7 +178,37 @@ impl WeightCache {
                 ..CacheCounters::default()
             },
             stats: ThreadStats::default(),
+            ledger,
         })
+    }
+
+    /// The shared ledger and this cache's slot in it, when budgeted
+    /// through one.
+    pub(crate) fn ledger_handle(&self) -> Option<(Arc<ResidencyLedger>, usize)> {
+        self.ledger.as_ref().map(|(l, s)| (Arc::clone(l), *s))
+    }
+
+    fn release_bytes(&mut self, bytes: usize) {
+        self.counters.resident_bytes -= bytes;
+        if let Some((ledger, slot)) = &self.ledger {
+            ledger.release(*slot, bytes);
+        }
+    }
+
+    fn touch_ledger(&self) {
+        if let Some((ledger, slot)) = &self.ledger {
+            ledger.touch(*slot);
+        }
+    }
+
+    /// Stamp this cache's model as just-accessed in the shared ledger
+    /// (no-op with a private budget). The prefetch consumer calls it
+    /// once on entry — the single recency stamp per access, so even a
+    /// model's first-ever fault ranks hotter than idle peers (a cold
+    /// model could otherwise neither steal nor fit) without doubling
+    /// traffic on the one mutex every model shares.
+    pub(crate) fn touch_shared(&self) {
+        self.touch_ledger();
     }
 
     /// The source the cache faults from.
@@ -310,26 +370,67 @@ impl WeightCache {
     /// under the budget. Errors when pinned layers block eviction —
     /// the prefetch window validation at construction makes that
     /// unreachable in the shipped configurations.
-    fn make_room(&mut self, index: usize, bytes: usize) -> Result<()> {
-        // Construction guarantees `bytes <= budget`, so this terminates
-        // with the invariant `resident_bytes <= budget` intact unless
-        // pins block eviction.
-        while self.counters.resident_bytes + bytes > self.counters.budget_bytes {
+    /// Secure `bytes` of budget for layer `index`, evicting this
+    /// cache's own unpinned victims as needed. Construction guarantees
+    /// `bytes <= budget`, so this terminates with the invariant
+    /// `resident <= budget` intact unless pins (or, under a shared
+    /// ledger, peer models — the peer-shed path reclaims from them
+    /// *before* an insert reaches here) hold everything.
+    ///
+    /// With a shared ledger the check-and-charge is **atomic** (the
+    /// ledger's `try_charge`): concurrent inserts from different
+    /// models can never both pass a room check and overshoot the
+    /// global budget together.
+    fn reserve(&mut self, index: usize, bytes: usize) -> Result<()> {
+        loop {
+            let charged = match &self.ledger {
+                Some((ledger, slot)) => ledger.try_charge(*slot, bytes),
+                None => self.counters.resident_bytes + bytes <= self.counters.budget_bytes,
+            };
+            if charged {
+                self.counters.resident_bytes += bytes;
+                self.counters.peak_resident_bytes = self
+                    .counters
+                    .peak_resident_bytes
+                    .max(self.counters.resident_bytes);
+                return Ok(());
+            }
             let Some(victim) = self.victim() else {
                 return Err(Error::Engine(format!(
-                    "cache budget {} B exhausted by {} pinned layers; cannot make \
-                     room for layer {index} ({bytes} B) — shrink the decode-ahead \
-                     window or raise the budget",
+                    "cache budget {} B exhausted ({} pinned layers here, peers may \
+                     hold the rest); cannot make room for layer {index} ({bytes} B) \
+                     — shrink the decode-ahead window or raise the budget",
                     self.counters.budget_bytes, self.counters.pinned_layers
                 )));
             };
             if let Some(evicted) = self.entries[victim].take() {
-                self.counters.resident_bytes -= evicted.bytes;
+                self.release_bytes(evicted.bytes);
                 self.counters.resident_layers -= 1;
                 self.counters.evictions += 1;
             }
         }
-        Ok(())
+    }
+
+    /// Evict unpinned entries in policy order until at least `bytes`
+    /// decoded bytes have been released, or nothing evictable remains.
+    /// Returns the bytes actually freed. This is the **peer-shed**
+    /// entry point of shared-ledger serving: a hot model reclaiming
+    /// global budget calls it on a colder model's cache.
+    pub fn shed(&mut self, bytes: usize) -> usize {
+        let mut freed = 0usize;
+        while freed < bytes {
+            let Some(victim) = self.victim() else { break };
+            match self.entries[victim].take() {
+                Some(evicted) => {
+                    self.release_bytes(evicted.bytes);
+                    self.counters.resident_layers -= 1;
+                    self.counters.evictions += 1;
+                    freed += evicted.bytes;
+                }
+                None => break,
+            }
+        }
+        freed
     }
 
     /// Install an externally decoded layer (the prefetch publish path),
@@ -347,8 +448,6 @@ impl WeightCache {
     /// it decodes and never exceeds the budget at any instant.
     pub fn insert(&mut self, index: usize, tensor: QuantizedTensor, pinned: bool) -> Result<()> {
         self.check_index(index)?;
-        self.clock += 1;
-        let clock = self.clock;
         if self.entries[index].is_some() {
             if pinned {
                 self.pin(index);
@@ -356,13 +455,18 @@ impl WeightCache {
             return Ok(());
         }
         let bytes = self.decoder.source().meta(index).n_symbols;
-        self.make_room(index, bytes)?;
-        self.counters.resident_bytes += bytes;
+        self.reserve(index, bytes)?;
+        self.install(index, tensor, pinned, bytes);
+        Ok(())
+    }
+
+    /// Create the entry for a layer whose bytes were already secured by
+    /// [`WeightCache::reserve`] (byte accounting happens there, entry
+    /// bookkeeping here).
+    fn install(&mut self, index: usize, tensor: QuantizedTensor, pinned: bool, bytes: usize) {
+        self.clock += 1;
+        let clock = self.clock;
         self.counters.resident_layers += 1;
-        self.counters.peak_resident_bytes = self
-            .counters
-            .peak_resident_bytes
-            .max(self.counters.resident_bytes);
         if pinned {
             self.counters.pinned_layers += 1;
         }
@@ -374,7 +478,6 @@ impl WeightCache {
             protected: false,
             pinned,
         });
-        Ok(())
     }
 
     /// Fetch layer `index`, faulting it in synchronously (and evicting
@@ -382,6 +485,7 @@ impl WeightCache {
     /// call.
     pub fn get(&mut self, index: usize) -> Result<&QuantizedTensor> {
         self.check_index(index)?;
+        self.touch_ledger();
         if self.entries[index].is_some() {
             self.counters.hits += 1;
             self.clock += 1;
@@ -396,13 +500,22 @@ impl WeightCache {
         }
 
         self.counters.misses += 1;
-        // Evict *before* decoding (PR 2 ordering): the decoded buffer
+        // Reserve *before* decoding (PR 2 ordering): the decoded buffer
         // is only allocated once room exists, so resident decoded
-        // bytes never exceed the budget even transiently on this path.
+        // bytes never exceed the budget even transiently on this path —
+        // and under a shared ledger the reservation also keeps a
+        // concurrent peer from claiming the same headroom mid-decode.
         let bytes = self.decoder.source().meta(index).n_symbols;
-        self.make_room(index, bytes)?;
-        let tensor = self.decoder.decode_layer_stats(index, &mut self.stats)?;
-        self.insert(index, tensor, false)?;
+        self.reserve(index, bytes)?;
+        let tensor = match self.decoder.decode_layer_stats(index, &mut self.stats) {
+            Ok(t) => t,
+            Err(e) => {
+                // Hand the unused reservation back before surfacing.
+                self.release_bytes(bytes);
+                return Err(e);
+            }
+        };
+        self.install(index, tensor, false, bytes);
         match self.entries[index].as_ref() {
             Some(e) => Ok(&e.tensor),
             None => Err(Error::Engine(format!(

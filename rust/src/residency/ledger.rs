@@ -1,0 +1,237 @@
+//! **Shared residency byte ledger**: one global decoded-byte budget
+//! drawn on by several per-model [`super::WeightCache`]s — the
+//! accounting substrate of multi-model serving
+//! ([`crate::coordinator::MultiModelServer`]).
+//!
+//! Each cache keeps its own entries, policy, and counters; what they
+//! share is the *byte budget*. Every insert charges the ledger, every
+//! eviction releases it, and every access stamps the owning model's
+//! recency clock — so when the pool is full, a faulting model can ask
+//! "which models are colder than me?" and reclaim bytes from them
+//! ([`super::PrefetchShared`]'s peer-shed path). That is what lets a
+//! hot model steal residency from a cold one instead of thrashing
+//! inside a fixed static partition.
+//!
+//! Locking: the ledger mutex is a **leaf** lock. Cache/prefetch code
+//! calls into the ledger while holding a per-model state lock, so the
+//! ledger must never call back into any cache — and it cannot: it only
+//! does arithmetic. Poisoning is recovered, not propagated: every
+//! critical section leaves the counters consistent, so a panicked
+//! peer thread must not take the whole serving pool down with it.
+
+use std::sync::{Arc, Mutex, PoisonError};
+
+/// Snapshot of a [`ResidencyLedger`]'s global accounting — surfaced as
+/// the `ledger_*` fields of the multi-model server's `{"stats":true}`
+/// admin line.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct LedgerCounters {
+    /// Configured global byte budget.
+    pub budget_bytes: usize,
+    /// Decoded bytes currently charged across all models.
+    pub used_bytes: usize,
+    /// High-water mark of `used_bytes`.
+    pub peak_used_bytes: usize,
+    /// Registered models.
+    pub models: usize,
+}
+
+struct ModelUsage {
+    /// Decoded bytes this model currently has charged.
+    used: usize,
+    /// Ledger clock value of this model's most recent access.
+    last_access: u64,
+}
+
+struct Inner {
+    budget: usize,
+    used: usize,
+    peak: usize,
+    /// Logical clock; bumped on every touch.
+    clock: u64,
+    models: Vec<ModelUsage>,
+}
+
+/// One global decoded-byte budget shared by several weight caches.
+///
+/// See the [module docs](self) for the role it plays and the locking
+/// discipline. Constructed once per serving pool
+/// ([`ResidencyLedger::new`]), then handed to each cache via
+/// [`super::WeightCache::with_ledger`].
+pub struct ResidencyLedger {
+    inner: Mutex<Inner>,
+}
+
+impl ResidencyLedger {
+    /// Ledger with a global `budget_bytes` decoded-byte budget.
+    pub fn new(budget_bytes: usize) -> Arc<Self> {
+        Arc::new(ResidencyLedger {
+            inner: Mutex::new(Inner {
+                budget: budget_bytes,
+                used: 0,
+                peak: 0,
+                clock: 0,
+                models: Vec::new(),
+            }),
+        })
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// The configured global byte budget.
+    pub fn budget(&self) -> usize {
+        self.lock().budget
+    }
+
+    /// Register one model; returns its ledger slot.
+    pub fn register(&self) -> usize {
+        let mut st = self.lock();
+        st.models.push(ModelUsage {
+            used: 0,
+            last_access: 0,
+        });
+        st.models.len() - 1
+    }
+
+    /// Atomically charge `bytes` to `slot` **iff** they fit the global
+    /// budget; returns whether the charge was made. Check-and-charge is
+    /// one critical section, so concurrent inserts from different
+    /// models can never both pass a room check and overshoot together.
+    pub(crate) fn try_charge(&self, slot: usize, bytes: usize) -> bool {
+        let mut st = self.lock();
+        if st.used + bytes > st.budget {
+            return false;
+        }
+        st.used += bytes;
+        st.peak = st.peak.max(st.used);
+        st.models[slot].used += bytes;
+        true
+    }
+
+    /// Release `bytes` from `slot` (an eviction from that model's cache).
+    pub(crate) fn release(&self, slot: usize, bytes: usize) {
+        let mut st = self.lock();
+        st.used = st.used.saturating_sub(bytes);
+        st.models[slot].used = st.models[slot].used.saturating_sub(bytes);
+    }
+
+    /// Stamp `slot` as just-accessed (recency for peer-shed victim
+    /// selection).
+    pub(crate) fn touch(&self, slot: usize) {
+        let mut st = self.lock();
+        st.clock += 1;
+        let clock = st.clock;
+        st.models[slot].last_access = clock;
+    }
+
+    /// Would charging `extra` more bytes exceed the global budget?
+    pub fn needs_room(&self, extra: usize) -> bool {
+        let st = self.lock();
+        st.used + extra > st.budget
+    }
+
+    /// How many bytes over budget a charge of `extra` would land (0
+    /// when it fits).
+    pub(crate) fn shortfall(&self, extra: usize) -> usize {
+        let st = self.lock();
+        (st.used + extra).saturating_sub(st.budget)
+    }
+
+    /// Slots of models **colder** than `slot` (strictly older
+    /// last-access) that currently hold bytes, coldest first — the
+    /// peer-shed victim order. Never returns `slot` itself, and never
+    /// returns a hotter-or-equal peer, so two equally hot models evict
+    /// their own entries instead of ping-ponging each other's.
+    pub(crate) fn colder_peers(&self, slot: usize) -> Vec<usize> {
+        let st = self.lock();
+        let mine = st.models[slot].last_access;
+        let mut peers: Vec<(u64, usize)> = st
+            .models
+            .iter()
+            .enumerate()
+            .filter(|&(i, m)| i != slot && m.used > 0 && m.last_access < mine)
+            .map(|(i, m)| (m.last_access, i))
+            .collect();
+        peers.sort_unstable();
+        peers.into_iter().map(|(_, i)| i).collect()
+    }
+
+    /// Decoded bytes currently charged to `slot`.
+    pub fn used_by(&self, slot: usize) -> usize {
+        self.lock().models[slot].used
+    }
+
+    /// Global counter snapshot.
+    pub fn counters(&self) -> LedgerCounters {
+        let st = self.lock();
+        LedgerCounters {
+            budget_bytes: st.budget,
+            used_bytes: st.used,
+            peak_used_bytes: st.peak,
+            models: st.models.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_release_track_global_and_per_model_usage() {
+        let ledger = ResidencyLedger::new(1000);
+        let a = ledger.register();
+        let b = ledger.register();
+        assert_eq!((a, b), (0, 1));
+        assert!(ledger.try_charge(a, 400));
+        assert!(ledger.try_charge(b, 500));
+        assert_eq!(ledger.used_by(a), 400);
+        assert_eq!(ledger.used_by(b), 500);
+        let c = ledger.counters();
+        assert_eq!(c.used_bytes, 900);
+        assert_eq!(c.peak_used_bytes, 900);
+        assert_eq!(c.models, 2);
+        assert!(!ledger.needs_room(100));
+        assert!(ledger.needs_room(101));
+        assert_eq!(ledger.shortfall(301), 201);
+        // A charge that would overshoot is refused atomically.
+        assert!(!ledger.try_charge(a, 101));
+        assert_eq!(ledger.counters().used_bytes, 900, "refused charge is free");
+        ledger.release(b, 500);
+        assert_eq!(ledger.counters().used_bytes, 400);
+        assert_eq!(ledger.counters().peak_used_bytes, 900, "peak sticks");
+    }
+
+    #[test]
+    fn colder_peers_orders_strictly_older_holders_coldest_first() {
+        let ledger = ResidencyLedger::new(1000);
+        let a = ledger.register();
+        let b = ledger.register();
+        let c = ledger.register();
+        assert!(ledger.try_charge(a, 10));
+        assert!(ledger.try_charge(b, 10));
+        assert!(ledger.try_charge(c, 10));
+        ledger.touch(b); // coldest holder after a
+        ledger.touch(c);
+        ledger.touch(a); // hottest
+        assert_eq!(ledger.colder_peers(a), vec![b, c]);
+        // A peer at equal or newer heat is never a victim.
+        assert_eq!(ledger.colder_peers(b), Vec::<usize>::new());
+        assert_eq!(ledger.colder_peers(c), vec![b]);
+        // Peers with no bytes are skipped.
+        ledger.release(b, 10);
+        assert_eq!(ledger.colder_peers(a), vec![c]);
+    }
+
+    #[test]
+    fn untouched_models_are_colder_than_touched_ones() {
+        let ledger = ResidencyLedger::new(100);
+        let a = ledger.register();
+        let b = ledger.register();
+        assert!(ledger.try_charge(b, 50));
+        ledger.touch(a);
+        assert_eq!(ledger.colder_peers(a), vec![b]);
+    }
+}

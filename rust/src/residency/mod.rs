@@ -30,6 +30,11 @@
 //!   [`PrefetchingDigestBackend`]), hiding the fault cost the counters
 //!   above make visible. Deterministically testable through the
 //!   [`TestScheduler`] seam.
+//! * [`ledger`] — the shared-budget substrate of **multi-model
+//!   serving** ([`crate::coordinator::MultiModelServer`]): several
+//!   models' caches draw on one global [`ResidencyLedger`], a hot
+//!   model reclaims bytes from strictly colder peers, and one
+//!   [`PrefetchPool`] drives every model's decode-ahead queue.
 //!
 //! Paired with a file-backed [`crate::store::SegmentSource`], total
 //! resident state is `O(manifest + cache budget)` — the container's
@@ -87,12 +92,14 @@
 //! ```
 
 mod cache;
+pub mod ledger;
 pub mod prefetch;
 mod serve;
 
 pub use cache::{CacheCounters, Policy, WeightCache};
+pub use ledger::{LedgerCounters, ResidencyLedger};
 pub use prefetch::{
-    Job, PrefetchConfig, PrefetchCounters, PrefetchShared, PrefetchingDigestBackend,
-    PrefetchingWeightSet, TestScheduler,
+    Job, PrefetchConfig, PrefetchCounters, PrefetchPool, PrefetchShared,
+    PrefetchingDigestBackend, PrefetchingWeightSet, TestScheduler,
 };
 pub use serve::{ResidentDigestBackend, ResidentWeightSet};

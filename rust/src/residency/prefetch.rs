@@ -30,6 +30,7 @@
 //!   poisons the shared lock.
 
 use super::cache::{CacheCounters, Policy, WeightCache};
+use super::ledger::ResidencyLedger;
 use crate::coordinator::backend::{
     digest_decode_next, digest_f32_entry, digest_prefill_next, digest_quant_entry, fnv1a64,
     Backend, BackendCfg, FNV1A64_INIT,
@@ -40,7 +41,9 @@ use crate::store::SegmentSource;
 use crate::tensor::TensorF32;
 use crate::{Error, Result};
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, PoisonError, Weak};
+use std::time::Duration;
 
 /// Decode-ahead configuration.
 #[derive(Debug, Clone, Copy)]
@@ -132,20 +135,27 @@ pub struct PrefetchShared {
     /// layers, which (with the construction-time budget check) is what
     /// makes "eviction blocked by pins" unreachable.
     window: usize,
+    /// Shared byte ledger + this engine's slot, when part of a
+    /// multi-model pool (mirrors the cache's handle so peer reclaim can
+    /// consult the ledger without taking the state lock).
+    ledger: Option<(Arc<ResidencyLedger>, usize)>,
+    /// Peer engines in the same shared-ledger pool, indexed by ledger
+    /// slot — the shed targets of [`PrefetchShared::reclaim_from_peers`].
+    peers: OnceLock<Vec<Weak<PrefetchShared>>>,
+    /// Wakeup channel to a shared [`PrefetchPool`], when one drives
+    /// this engine's queue instead of a private worker set.
+    pool_signal: OnceLock<Arc<PoolSignal>>,
 }
 
 impl PrefetchShared {
-    fn new(
-        source: Arc<SegmentSource>,
-        budget_bytes: usize,
-        policy: Policy,
-        window: usize,
-    ) -> Result<Arc<Self>> {
+    fn from_cache(cache: WeightCache, window: usize) -> Result<Arc<Self>> {
+        let source = Arc::clone(cache.source());
         let n = source.n_layers();
-        let decoder = SegmentDecoder::new(Arc::clone(&source))?;
+        let decoder = SegmentDecoder::new(source)?;
+        let ledger = cache.ledger_handle();
         Ok(Arc::new(PrefetchShared {
             state: Mutex::new(State {
-                cache: WeightCache::with_policy(source, budget_bytes, policy)?,
+                cache,
                 queue: VecDeque::new(),
                 inflight: vec![false; n],
                 error: None,
@@ -156,46 +166,117 @@ impl PrefetchShared {
             done: Condvar::new(),
             decoder,
             window,
+            ledger,
+            peers: OnceLock::new(),
+            pool_signal: OnceLock::new(),
         }))
+    }
+
+    /// Lock the shared state, **recovering** from poisoning: every
+    /// critical section in this module leaves the state consistent, so
+    /// one panicked client thread (e.g. a consumer closure that threw)
+    /// must not cascade into a server-wide panic via `lock().unwrap()`.
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
     /// Layers the underlying model has.
     pub fn n_layers(&self) -> usize {
-        self.state.lock().unwrap().cache.n_layers()
+        self.lock_state().cache.n_layers()
     }
 
     /// Residency-cache counter snapshot.
     pub fn cache_counters(&self) -> CacheCounters {
-        self.state.lock().unwrap().cache.counters()
+        self.lock_state().cache.counters()
     }
 
     /// Prefetch counter snapshot.
     pub fn counters(&self) -> PrefetchCounters {
-        self.state.lock().unwrap().counters
+        self.lock_state().counters
     }
 
     /// Is layer `index` currently resident?
     pub fn is_resident(&self, index: usize) -> bool {
-        self.state.lock().unwrap().cache.is_resident(index)
+        self.lock_state().cache.is_resident(index)
     }
 
     /// Is layer `index` resident and pinned (published, unconsumed)?
     pub fn is_pinned(&self, index: usize) -> bool {
-        self.state.lock().unwrap().cache.is_pinned(index)
+        self.lock_state().cache.is_pinned(index)
     }
 
-    /// Has a worker panic poisoned the shared lock? Always `false` in
-    /// correct operation — the cancellation test asserts it stays that
-    /// way through an engine drop.
+    /// Has a client panic poisoned the shared lock? Poisoning is
+    /// **recovered** everywhere in this module (see
+    /// [`PrefetchShared::lock_state`]), so a `true` here is
+    /// informational — serving continues — but the cancellation test
+    /// still asserts a clean engine drop never trips it.
     pub fn poisoned(&self) -> bool {
         self.state.is_poisoned()
+    }
+
+    /// The shared ledger this engine draws from, when budgeted through
+    /// one (multi-model pools).
+    pub fn ledger(&self) -> Option<&Arc<ResidencyLedger>> {
+        self.ledger.as_ref().map(|(l, _)| l)
+    }
+
+    /// This engine's slot in the shared ledger.
+    pub fn ledger_slot(&self) -> Option<usize> {
+        self.ledger.as_ref().map(|(_, s)| *s)
+    }
+
+    /// Wire this engine to its shared-ledger peers, indexed by ledger
+    /// slot (the coordinator calls this once after building every
+    /// engine). Later calls are ignored.
+    pub fn link_peers(&self, peers: Vec<Weak<PrefetchShared>>) {
+        let _ = self.peers.set(peers);
+    }
+
+    /// Attach the wakeup signal of a shared [`PrefetchPool`]. Later
+    /// calls are ignored.
+    pub(crate) fn attach_pool_signal(&self, signal: Arc<PoolSignal>) {
+        let _ = self.pool_signal.set(signal);
+    }
+
+    /// Evict unpinned entries from **this** engine's cache until
+    /// `bytes` decoded bytes are freed (or nothing evictable remains);
+    /// returns the bytes freed. Peers call this to reclaim shared
+    /// budget from a colder model.
+    pub fn shed(&self, bytes: usize) -> usize {
+        self.lock_state().cache.shed(bytes)
+    }
+
+    /// Make global headroom for `incoming` decoded bytes by shedding
+    /// **strictly colder** peers, coldest first. Must be called with no
+    /// state lock held (peer shedding takes the peer's lock); a no-op
+    /// outside shared-ledger pools, when the ledger already has room,
+    /// or when every peer is hotter — in which case the insert path
+    /// falls back to evicting this engine's own entries.
+    fn reclaim_from_peers(&self, incoming: usize) {
+        let Some((ledger, me)) = &self.ledger else {
+            return;
+        };
+        if !ledger.needs_room(incoming) {
+            return;
+        }
+        let Some(peers) = self.peers.get() else {
+            return;
+        };
+        for slot in ledger.colder_peers(*me) {
+            if !ledger.needs_room(incoming) {
+                break;
+            }
+            if let Some(peer) = peers.get(slot).and_then(|w| w.upgrade()) {
+                peer.shed(ledger.shortfall(incoming));
+            }
+        }
     }
 
     /// Enqueue prefetch jobs for `indices` (deduplicated against the
     /// queue, resident layers, and in-flight decodes), then wake the
     /// workers.
     pub fn schedule(&self, indices: &[usize]) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         if st.cancelled {
             return;
         }
@@ -211,6 +292,9 @@ impl PrefetchShared {
         }
         drop(st);
         self.work.notify_all();
+        if let Some(signal) = self.pool_signal.get() {
+            signal.bump();
+        }
     }
 
     fn claim_locked(st: &mut State) -> Option<Job> {
@@ -229,13 +313,13 @@ impl PrefetchShared {
     /// layer in-flight (exactly what a pool worker does). The manual
     /// half of the scheduler seam.
     pub fn try_claim(&self) -> Option<Job> {
-        Self::claim_locked(&mut self.state.lock().unwrap())
+        Self::claim_locked(&mut self.lock_state())
     }
 
     /// Blocking claim for pool workers: parks on `work` until a job or
     /// cancellation arrives. `None` means shut down.
     fn claim_blocking(&self) -> Option<Job> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         loop {
             if st.cancelled {
                 return None;
@@ -243,7 +327,7 @@ impl PrefetchShared {
             if let Some(job) = Self::claim_locked(&mut st) {
                 return Some(job);
             }
-            st = self.work.wait(st).unwrap();
+            st = self.work.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
     }
 
@@ -261,7 +345,14 @@ impl PrefetchShared {
     /// the in-flight mark is still cleared, so a blocked consumer can
     /// always make progress.
     pub fn publish(&self, job: Job, result: Result<QuantizedTensor>) {
-        let mut st = self.state.lock().unwrap();
+        // Shared-ledger pools: make global headroom by shedding colder
+        // peers *before* taking our own lock (lock ordering: never hold
+        // two engines' state locks at once).
+        if result.is_ok() {
+            let bytes = self.decoder.source().meta(job.index).n_symbols;
+            self.reclaim_from_peers(bytes);
+        }
+        let mut st = self.lock_state();
         st.inflight[job.index] = false;
         if !st.cancelled {
             // Pin so eviction cannot outrun the consumer — but cap the
@@ -269,8 +360,25 @@ impl PrefetchShared {
             // (scheduled, then evicted again before their claim) can
             // never pin the whole budget.
             let pin = st.cache.counters().pinned_layers < self.window;
-            match result.and_then(|t| st.cache.insert(job.index, t, pin)) {
-                Ok(()) => st.counters.completed += 1,
+            match result {
+                Ok(t) => match st.cache.insert(job.index, t, pin) {
+                    Ok(()) => st.counters.completed += 1,
+                    // Under a shared ledger a failed insert means a peer
+                    // transiently claimed the headroom between reclaim
+                    // and insert. Prefetch is advisory: drop the decoded
+                    // layer — the consumer will fault it in with its own
+                    // (entry-stamped, therefore always-winning) reclaim.
+                    Err(_) if self.ledger.is_some() => {}
+                    // With a private budget an insert can only fail when
+                    // the pins-block-eviction invariant broke: record it
+                    // so the next consumer access surfaces the bug
+                    // instead of silently re-decoding every layer.
+                    Err(e) => {
+                        if st.error.is_none() {
+                            st.error = Some(e);
+                        }
+                    }
+                },
                 Err(e) => {
                     if st.error.is_none() {
                         st.error = Some(e);
@@ -288,13 +396,16 @@ impl PrefetchShared {
     /// on the calling thread. `f` runs with the state lock held, so the
     /// borrow never escapes; keep it to a digest fold or a copy-out.
     pub fn with_layer<R>(&self, index: usize, f: impl FnOnce(&QuantizedTensor) -> R) -> Result<R> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         if index >= st.inflight.len() {
             return Err(Error::InvalidArg(format!(
                 "layer index {index} out of range ({} layers)",
                 st.inflight.len()
             )));
         }
+        // Shared-ledger pools: stamp this model hot *now*, so a fault a
+        // few lines down can reclaim from genuinely idle peers.
+        st.cache.touch_shared();
         // Did this access pay for a decode (either by waiting on a
         // worker or by decoding here)? Determines hit/miss accounting.
         let mut faulted = false;
@@ -336,7 +447,7 @@ impl PrefetchShared {
                     st.counters.waits += 1;
                 }
                 faulted = true;
-                st = self.done.wait(st).unwrap();
+                st = self.done.wait(st).unwrap_or_else(PoisonError::into_inner);
                 continue;
             }
             // Synchronous fault: claim the layer ourselves so no worker
@@ -348,13 +459,34 @@ impl PrefetchShared {
             drop(st);
             let mut stats = ThreadStats::default();
             let result = self.decoder.decode_layer_stats(index, &mut stats);
-            st = self.state.lock().unwrap();
+            if result.is_ok() {
+                // Shared-ledger pools: steal headroom from colder peers
+                // while no state lock is held (same ordering rule as
+                // the publish path).
+                self.reclaim_from_peers(self.decoder.source().meta(index).n_symbols);
+            }
+            st = self.lock_state();
             st.inflight[index] = false;
             // The in-flight mark is cleared either way: wake any waiter
             // before acting on the result.
             self.done.notify_all();
             match result {
-                Ok(t) => st.cache.insert(index, t, false)?,
+                Ok(t) => {
+                    st.cache.note_access(false);
+                    let out = f(&t);
+                    match st.cache.insert(index, t, false) {
+                        Ok(()) => {}
+                        // Shared-budget contention in the worst instant
+                        // (a peer claimed the headroom between our
+                        // reclaim and this insert): serve uncached
+                        // rather than failing the request.
+                        Err(_) if self.ledger.is_some() => {}
+                        // Private budget: an insert failure is a broken
+                        // pin invariant — surface it.
+                        Err(e) => return Err(e),
+                    }
+                    return Ok(out);
+                }
                 Err(e) => return Err(e),
             }
         }
@@ -362,13 +494,142 @@ impl PrefetchShared {
 
     /// Cancel the engine: stop all workers and unblock any waiter.
     pub fn cancel(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         st.cancelled = true;
         st.queue.clear();
         drop(st);
         self.work.notify_all();
         self.done.notify_all();
+        if let Some(signal) = self.pool_signal.get() {
+            signal.bump();
+        }
     }
+}
+
+/// Wakeup channel between [`PrefetchShared::schedule`] and a shared
+/// [`PrefetchPool`]'s workers: a ticket counter under a mutex. Workers
+/// snapshot the ticket, scan every engine's queue, and only park when
+/// the ticket has not moved since the snapshot — so a schedule racing
+/// the scan can never be slept through.
+pub(crate) struct PoolSignal {
+    tickets: Mutex<u64>,
+    cond: Condvar,
+}
+
+impl PoolSignal {
+    fn new() -> Self {
+        PoolSignal {
+            tickets: Mutex::new(0),
+            cond: Condvar::new(),
+        }
+    }
+
+    fn current(&self) -> u64 {
+        *self.tickets.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub(crate) fn bump(&self) {
+        let mut t = self.tickets.lock().unwrap_or_else(PoisonError::into_inner);
+        *t += 1;
+        drop(t);
+        self.cond.notify_all();
+    }
+
+    /// Park until the ticket moves past `seen` (bounded wait: re-checks
+    /// every 50 ms so a missed notify can only cost one tick of
+    /// latency, never a hang).
+    fn wait_past(&self, seen: u64) {
+        let mut t = self.tickets.lock().unwrap_or_else(PoisonError::into_inner);
+        while *t == seen {
+            let (guard, timeout) = self
+                .cond
+                .wait_timeout(t, Duration::from_millis(50))
+                .unwrap_or_else(PoisonError::into_inner);
+            t = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+    }
+}
+
+/// **Shared decode worker pool** over several prefetch engines (one per
+/// model): `workers` threads round-robin claim → decode → publish
+/// across every engine's queue, so all models in a multi-model server
+/// draw on one pool of decode threads instead of spawning a private
+/// pool each — the worker count bounds true decode parallelism (and
+/// decoded-but-unpublished overshoot) for the whole process.
+///
+/// Construct the member engines with `workers: 0` in their
+/// [`PrefetchConfig`] so no private pool races this one for jobs.
+/// Dropping the pool stops and joins every worker.
+pub struct PrefetchPool {
+    signal: Arc<PoolSignal>,
+    stop: Arc<AtomicBool>,
+    handles: Vec<std::thread::JoinHandle<ThreadStats>>,
+}
+
+impl PrefetchPool {
+    /// Pool of `workers` decode threads over `shares` (at least one
+    /// worker is always spawned).
+    pub fn new(shares: Vec<Arc<PrefetchShared>>, workers: usize) -> Self {
+        let signal = Arc::new(PoolSignal::new());
+        for share in &shares {
+            share.attach_pool_signal(Arc::clone(&signal));
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let shares = shares.clone();
+                let signal = Arc::clone(&signal);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || pool_worker(&shares, &signal, &stop))
+            })
+            .collect();
+        PrefetchPool {
+            signal,
+            stop,
+            handles,
+        }
+    }
+
+    /// Worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl Drop for PrefetchPool {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.signal.bump();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn pool_worker(
+    shares: &[Arc<PrefetchShared>],
+    signal: &PoolSignal,
+    stop: &AtomicBool,
+) -> ThreadStats {
+    let mut stats = ThreadStats::default();
+    while !stop.load(Ordering::Relaxed) {
+        let seen = signal.current();
+        let mut did_work = false;
+        for share in shares {
+            while let Some(job) = share.try_claim() {
+                did_work = true;
+                let result = share.decode_job(&job, &mut stats);
+                share.publish(job, result);
+            }
+        }
+        if !did_work {
+            signal.wait_past(seen);
+        }
+    }
+    stats
 }
 
 fn worker(shared: &PrefetchShared) -> ThreadStats {
@@ -472,7 +733,37 @@ impl PrefetchingWeightSet {
         f32_rest: Vec<(String, TensorF32)>,
         cfg: PrefetchConfig,
     ) -> Result<Self> {
-        let window = cfg.decode_ahead.min(source.n_layers().saturating_sub(1));
+        let window = Self::effective_window(&source, cfg.decode_ahead);
+        Self::check_floor(&source, budget_bytes, window)?;
+        let cache = WeightCache::with_policy(Arc::clone(&source), budget_bytes, cfg.policy)?;
+        Self::assemble(source, cache, window, f32_rest, cfg)
+    }
+
+    /// Weight set drawing on a **shared** [`ResidencyLedger`] instead
+    /// of a private budget — one member of a multi-model pool
+    /// ([`crate::coordinator::MultiModelServer`]). The decode-ahead
+    /// floor is checked against the *global* budget here (necessary);
+    /// the coordinator additionally checks that the **sum** of every
+    /// member's floor fits, which is what makes cross-model
+    /// pin-wedging unreachable. Construct with `workers: 0` and drive
+    /// the queue through a shared [`PrefetchPool`].
+    pub fn with_ledger(
+        source: Arc<SegmentSource>,
+        ledger: Arc<ResidencyLedger>,
+        f32_rest: Vec<(String, TensorF32)>,
+        cfg: PrefetchConfig,
+    ) -> Result<Self> {
+        let window = Self::effective_window(&source, cfg.decode_ahead);
+        Self::check_floor(&source, ledger.budget(), window)?;
+        let cache = WeightCache::with_ledger(Arc::clone(&source), ledger, cfg.policy)?;
+        Self::assemble(source, cache, window, f32_rest, cfg)
+    }
+
+    fn effective_window(source: &SegmentSource, decode_ahead: usize) -> usize {
+        decode_ahead.min(source.n_layers().saturating_sub(1))
+    }
+
+    fn check_floor(source: &SegmentSource, budget_bytes: usize, window: usize) -> Result<()> {
         let largest = source
             .layers()
             .iter()
@@ -487,6 +778,16 @@ impl PrefetchingWeightSet {
                  {largest} B/layer) — lower --decode-ahead or raise the budget"
             )));
         }
+        Ok(())
+    }
+
+    fn assemble(
+        source: Arc<SegmentSource>,
+        cache: WeightCache,
+        window: usize,
+        f32_rest: Vec<(String, TensorF32)>,
+        cfg: PrefetchConfig,
+    ) -> Result<Self> {
         let by_name: HashMap<&str, usize> = source
             .layers()
             .iter()
@@ -500,7 +801,7 @@ impl PrefetchingWeightSet {
             .map(|(n, i)| (n.to_string(), i))
             .collect();
         digest_order.sort();
-        let shared = PrefetchShared::new(source, budget_bytes, cfg.policy, window)?;
+        let shared = PrefetchShared::from_cache(cache, window)?;
         // Cap the pool at the window: each worker holds at most one
         // decoded-but-unpublished layer outside cache accounting, so
         // `workers <= window` keeps true peak memory within the same
@@ -1063,6 +1364,116 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("decode-ahead"), "{err}");
+    }
+
+    /// The shared-ledger satellite of multi-model serving: a model
+    /// actively faulting (hot) reclaims global budget from a peer that
+    /// went quiet (cold), and stealing never changes what either model
+    /// decodes to.
+    #[test]
+    fn hot_model_steals_residency_from_cold_peer_via_shared_ledger() {
+        let (model_a, src_a) = equal_fixture(4, 0x60);
+        let (model_b, src_b) = equal_fixture(4, 0x61);
+        // Each model decodes to 4 × 512 B; the shared pool holds 5
+        // layers total, so both cannot be fully resident at once.
+        let budget = 5 * 512;
+        let ledger = ResidencyLedger::new(budget);
+        let cfg = PrefetchConfig {
+            decode_ahead: 1,
+            workers: 0,
+            policy: Policy::SegmentedLru,
+        };
+        let ws_a = PrefetchingWeightSet::with_ledger(src_a, Arc::clone(&ledger), Vec::new(), cfg)
+            .unwrap();
+        let ws_b = PrefetchingWeightSet::with_ledger(src_b, Arc::clone(&ledger), Vec::new(), cfg)
+            .unwrap();
+        let a = Arc::clone(ws_a.shared());
+        let b = Arc::clone(ws_b.shared());
+        assert_eq!(a.ledger_slot(), Some(0));
+        assert_eq!(b.ledger_slot(), Some(1));
+        let peers = vec![Arc::downgrade(&a), Arc::downgrade(&b)];
+        a.link_peers(peers.clone());
+        b.link_peers(peers);
+
+        // Warm B fully, then let A walk: every A fault must steal the
+        // shortfall from B (the strictly colder holder) instead of
+        // erroring or thrashing its own fresh layers.
+        let eager_b = WeightSet::from_elm(&model_b, 2, Vec::new()).unwrap();
+        assert_eq!(ws_b.digest().unwrap(), digest_weights(&eager_b));
+        assert_eq!(ledger.used_by(1), 4 * 512, "B fully resident after warmup");
+
+        let eager_a = WeightSet::from_elm(&model_a, 2, Vec::new()).unwrap();
+        assert_eq!(ws_a.digest().unwrap(), digest_weights(&eager_a));
+        let c = ledger.counters();
+        assert!(c.used_bytes <= budget, "ledger over budget: {c:?}");
+        assert!(c.peak_used_bytes <= budget, "peak over budget: {c:?}");
+        assert!(
+            ledger.used_by(0) > ledger.used_by(1),
+            "hot model must hold more than the cold one (A {} vs B {})",
+            ledger.used_by(0),
+            ledger.used_by(1)
+        );
+        assert!(
+            b.cache_counters().evictions > 0,
+            "stealing must have evicted from the cold peer"
+        );
+        // And the cold model still serves correctly after being robbed.
+        assert_eq!(ws_b.digest().unwrap(), digest_weights(&eager_b));
+    }
+
+    /// One [`PrefetchPool`] drains the queues of several engines —
+    /// the shared-worker-pool shape of multi-model serving.
+    #[test]
+    fn shared_pool_drains_queues_of_multiple_engines() {
+        let (_, src_a) = equal_fixture(6, 0x62);
+        let (_, src_b) = equal_fixture(6, 0x63);
+        let ws_a = manual_set(src_a, 4 * 512, 2);
+        let ws_b = manual_set(src_b, 4 * 512, 2);
+        let a = Arc::clone(ws_a.shared());
+        let b = Arc::clone(ws_b.shared());
+        let pool = PrefetchPool::new(vec![Arc::clone(&a), Arc::clone(&b)], 2);
+        assert_eq!(pool.workers(), 2);
+
+        a.schedule(&[0, 1, 2]);
+        b.schedule(&[3]);
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while (a.counters().completed < 3 || b.counters().completed < 1)
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(a.counters().completed, 3, "pool must drain A's queue");
+        assert_eq!(b.counters().completed, 1, "pool must drain B's queue");
+        assert!(a.is_resident(0) && a.is_resident(1) && a.is_resident(2));
+        assert!(b.is_resident(3));
+        drop(pool); // must stop and join cleanly
+        // Engines still serve after the pool is gone (sync faults).
+        ws_a.shared().with_layer(4, |_| ()).unwrap();
+    }
+
+    /// The lock-poisoning satellite: a consumer closure that panics
+    /// while holding the shared state lock must not cascade into a
+    /// server-wide panic — the next access recovers and serves.
+    #[test]
+    fn poisoned_state_lock_is_recovered_not_cascaded() {
+        let (model, src) = equal_fixture(4, 0x64);
+        let ws = manual_set(src, 3 * 512, 1);
+        let shared = Arc::clone(ws.shared());
+
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = shared.with_layer(0, |_| -> () { panic!("consumer bug") });
+        }));
+        assert!(result.is_err(), "the panic must surface on its own thread");
+        assert!(shared.poisoned(), "the state lock was genuinely poisoned");
+
+        // ...and yet serving continues: accesses recover the lock.
+        let want = decode_layer(&model, 0).unwrap();
+        let got = shared.with_layer(0, |q| q.symbols.data().to_vec()).unwrap();
+        assert_eq!(got, want.symbols.data());
+        shared.schedule(&[1]);
+        let mut ts = TestScheduler::new(Arc::clone(&shared));
+        assert_eq!(ts.step(), Some(1));
+        assert!(shared.is_resident(1));
     }
 
     #[test]

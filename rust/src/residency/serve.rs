@@ -1,7 +1,12 @@
 //! Serving over a residency cache: [`ResidentWeightSet`] (the
 //! cache-backed analogue of [`crate::runtime::WeightSet`]) and
 //! [`ResidentDigestBackend`] (the engine backend that faults layers in
-//! during generation).
+//! during generation). This is the single-model, fault-on-demand
+//! baseline; the decode-ahead counterpart lives in
+//! [`super::prefetch`], and multi-model serving (several such engines
+//! drawing on one shared byte budget) in
+//! [`crate::coordinator::MultiModelServer`] over
+//! [`super::ledger::ResidencyLedger`].
 
 use super::cache::{CacheCounters, WeightCache};
 use crate::coordinator::backend::{

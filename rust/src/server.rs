@@ -6,15 +6,27 @@
 //! single-device edge deployment (one model, one engine loop, multiple
 //! lightweight clients).
 //!
-//! Protocol: one JSON object per line.
+//! Protocol: one JSON object per line (at most [`MAX_LINE_BYTES`]
+//! bytes — longer lines earn an error reply and a dropped connection,
+//! never unbounded buffering).
 //!
 //! ```text
 //! → {"id": 1, "prompt": "the model", "max_tokens": 32, "temperature": 0.8}
 //! ← {"id": 1, "text": "...", "tokens": 32, "finish": "length",
 //!    "first_token_ms": 12.3, "decode_ms": 45.6}
 //! ```
+//!
+//! A multi-model server ([`serve_multi`], over
+//! [`crate::coordinator::MultiModelServer`]) additionally routes by an
+//! optional `"model"` field: the first hosted model serves requests
+//! that omit it, unknown names earn an error line, and the
+//! `{"stats":true}` reply grows a `models` array (per-model serving +
+//! `cache_*`/`prefetch_*` counters) plus `ledger_*` fields for the
+//! shared byte budget. Single-model servers reject the field so a
+//! misrouted client fails loudly instead of silently getting the
+//! wrong model.
 
-use crate::coordinator::{Backend, Engine, Request, Response};
+use crate::coordinator::{Backend, Engine, MultiModelServer, Request, Response};
 use crate::corpus::ByteTokenizer;
 use crate::json::{self, Value};
 use crate::{Error, Result};
@@ -24,6 +36,12 @@ use std::sync::mpsc;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// Hard cap on one protocol line. A line that exceeds it is answered
+/// with an error and the connection is dropped — the reader never
+/// buffers an unbounded line, so one hostile client cannot balloon
+/// server memory.
+pub const MAX_LINE_BYTES: usize = 1 << 20;
 
 /// Parse one request line. Public for tests and the client.
 pub fn parse_request(line: &str, next_id: u64) -> Result<Request> {
@@ -39,11 +57,16 @@ pub fn parse_request_value(v: &Value, next_id: u64) -> Result<Request> {
     if prompt.is_empty() {
         return Err(Error::InvalidArg("empty prompt".into()));
     }
-    let id = v
-        .get_opt("id")
-        .map(|x| x.as_f64().map(|n| n as u64))
-        .transpose()?
-        .unwrap_or(next_id);
+    // Strict id parse: `as_f64()? as u64` would silently truncate a
+    // fractional id, wrap a negative one, and round ids at/beyond 2^53
+    // — three ways for distinct clients to collide on one id and steal
+    // each other's replies. Reject instead.
+    let id = match v.get_opt("id") {
+        None => next_id,
+        Some(x) => x.as_u64().map_err(|_| {
+            Error::InvalidArg("\"id\" must be a non-negative integer below 2^53".into())
+        })?,
+    };
     Ok(Request {
         id,
         prompt,
@@ -92,9 +115,31 @@ pub fn format_response(r: &Response) -> String {
 }
 
 enum Incoming {
-    Req(Request, mpsc::Sender<String>),
+    /// A generation request plus its optional `"model"` routing name.
+    Req(Request, Option<String>, mpsc::Sender<String>),
     Stats(mpsc::Sender<String>),
     Bad(String, mpsc::Sender<String>),
+}
+
+/// Build one error reply line through the real JSON serializer:
+/// quotes, backslashes, and control characters (including newlines) are
+/// escaped losslessly, so hostile content echoed inside an error — a
+/// weird model name, a parser message quoting the input — can never
+/// corrupt the line protocol or smuggle a fake reply.
+fn error_line(msg: &str) -> String {
+    json::obj(vec![("error", json::s(msg))]).to_json()
+}
+
+/// Extract the optional `"model"` routing field (must be a string when
+/// present).
+fn parse_model(v: &Value) -> Result<Option<String>> {
+    match v.get_opt("model") {
+        None => Ok(None),
+        Some(Value::Str(name)) => Ok(Some(name.clone())),
+        Some(other) => Err(Error::InvalidArg(format!(
+            "\"model\" must be a string, got {other:?}"
+        ))),
+    }
 }
 
 /// Serialize an engine-stats snapshot (the `{"stats": true}` admin
@@ -107,6 +152,13 @@ enum Incoming {
 /// scheduled/completed/hit/wait counters ride along under `prefetch_*`
 /// keys.
 pub fn format_stats<B: Backend>(engine: &Engine<B>) -> String {
+    json::obj(engine_stats_fields(engine)).to_json()
+}
+
+/// The per-engine stats fields of the admin line — shared by the
+/// single-model reply ([`format_stats`]) and each entry of the
+/// multi-model `models` array ([`format_multi_stats`]).
+fn engine_stats_fields<B: Backend>(engine: &Engine<B>) -> Vec<(&'static str, Value)> {
     let s = engine.stats();
     let q = engine.queue_stats();
     let mut fields = vec![
@@ -138,7 +190,92 @@ pub fn format_stats<B: Backend>(engine: &Engine<B>) -> String {
         fields.push(("prefetch_waits", json::num(p.waits as f64)));
         fields.push(("prefetch_sync_faults", json::num(p.sync_faults as f64)));
     }
-    json::obj(fields).to_json()
+    fields
+}
+
+/// The multi-model admin-line reply: the existing global fields
+/// (summed across engines), the shared ledger's `ledger_*` fields, and
+/// a `models` array carrying each model's full per-engine snapshot —
+/// serving counters plus its `cache_*`/`prefetch_*` families.
+pub fn format_multi_stats(multi: &MultiModelServer) -> String {
+    let mut completed = 0u64;
+    let mut tokens = 0u64;
+    let mut decode_steps = 0u64;
+    let mut occupancy_sum = 0u64;
+    let mut active = 0usize;
+    let mut depth = 0usize;
+    let mut admitted = 0u64;
+    let mut rejected = 0u64;
+    let mut models = Vec::with_capacity(multi.n_models());
+    for i in 0..multi.n_models() {
+        let engine = multi.engine(i);
+        let s = engine.stats();
+        let q = engine.queue_stats();
+        completed += s.completed;
+        tokens += s.tokens;
+        decode_steps += s.decode_steps;
+        occupancy_sum += s.occupancy_sum;
+        active += engine.active();
+        depth += q.depth;
+        admitted += q.admitted;
+        rejected += q.rejected;
+        let mut fields = vec![("model", json::s(multi.name(i)))];
+        fields.extend(engine_stats_fields(engine));
+        models.push(json::obj(fields));
+    }
+    let mean_occupancy = if decode_steps == 0 {
+        0.0
+    } else {
+        occupancy_sum as f64 / decode_steps as f64
+    };
+    let ledger = multi.ledger().counters();
+    json::obj(vec![
+        ("completed", json::num(completed as f64)),
+        ("tokens", json::num(tokens as f64)),
+        ("decode_steps", json::num(decode_steps as f64)),
+        ("mean_occupancy", json::num(mean_occupancy)),
+        ("active_slots", json::num(active as f64)),
+        ("queue_depth", json::num(depth as f64)),
+        ("admitted", json::num(admitted as f64)),
+        ("rejected", json::num(rejected as f64)),
+        ("ledger_budget_bytes", json::num(ledger.budget_bytes as f64)),
+        ("ledger_used_bytes", json::num(ledger.used_bytes as f64)),
+        (
+            "ledger_peak_used_bytes",
+            json::num(ledger.peak_used_bytes as f64),
+        ),
+        ("models", json::arr(models)),
+    ])
+    .to_json()
+}
+
+/// Spawn the acceptor thread shared by [`serve`] and [`serve_multi`]:
+/// it owns the listener, spawns one reader thread per connection, and
+/// joins them all on shutdown.
+fn spawn_acceptor(
+    listener: TcpListener,
+    tx: mpsc::Sender<Incoming>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut conns = Vec::new();
+        while !stop.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let tx = tx.clone();
+                    let stop = stop.clone();
+                    conns.push(std::thread::spawn(move || read_conn(stream, tx, stop)));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(_) => break,
+            }
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+    })
 }
 
 /// Serve an engine over TCP until `stop` flips. Returns total requests
@@ -151,28 +288,7 @@ pub fn serve<B: Backend>(
 ) -> Result<u64> {
     listener.set_nonblocking(true)?;
     let (tx, rx) = mpsc::channel::<Incoming>();
-
-    // Acceptor thread: owns the listener, spawns per-connection readers.
-    let acc_stop = stop.clone();
-    let acceptor = std::thread::spawn(move || {
-        let mut conns = Vec::new();
-        while !acc_stop.load(Ordering::Relaxed) {
-            match listener.accept() {
-                Ok((stream, _)) => {
-                    let tx = tx.clone();
-                    let stop = acc_stop.clone();
-                    conns.push(std::thread::spawn(move || read_conn(stream, tx, stop)));
-                }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(Duration::from_millis(5));
-                }
-                Err(_) => break,
-            }
-        }
-        for c in conns {
-            let _ = c.join();
-        }
-    });
+    let acceptor = spawn_acceptor(listener, tx, stop.clone());
 
     // Engine loop: drain incoming, step, route responses.
     let mut next_id: u64 = 1;
@@ -183,7 +299,17 @@ pub fn serve<B: Backend>(
         while let Ok(msg) = rx.try_recv() {
             idle = false;
             match msg {
-                Incoming::Req(req, reply) => {
+                Incoming::Req(req, model, reply) => {
+                    if let Some(name) = model {
+                        // One unnamed model here: failing loudly beats
+                        // silently serving the wrong model to a client
+                        // that believes it reached a multi-model host.
+                        let _ = reply.send(error_line(&format!(
+                            "this server hosts a single unnamed model; drop the \
+                             'model' field (got {name:?})"
+                        )));
+                        continue;
+                    }
                     let id = req.id.max(next_id);
                     next_id = id + 1;
                     let mut req = req;
@@ -191,10 +317,7 @@ pub fn serve<B: Backend>(
                     match engine.submit(req) {
                         Ok(()) => waiters.push((id, reply)),
                         Err(e) => {
-                            let _ = reply.send(format!(
-                                r#"{{"error":"{}"}}"#,
-                                e.to_string().replace('"', "'")
-                            ));
+                            let _ = reply.send(error_line(&e.to_string()));
                         }
                     }
                 }
@@ -202,7 +325,7 @@ pub fn serve<B: Backend>(
                     let _ = reply.send(format_stats(engine));
                 }
                 Incoming::Bad(err, reply) => {
-                    let _ = reply.send(format!(r#"{{"error":"{err}"}}"#));
+                    let _ = reply.send(error_line(&err));
                 }
             }
         }
@@ -223,6 +346,183 @@ pub fn serve<B: Backend>(
     drop(rx);
     let _ = acceptor.join();
     Ok(served)
+}
+
+/// Serve a [`MultiModelServer`] over TCP until `stop` flips — the
+/// multi-model counterpart of [`serve`]. Connection handling is
+/// identical; requests route by their optional `"model"` field (first
+/// hosted model when omitted, error line for unknown names), every
+/// model's engine steps in the same loop so a busy model never
+/// starves an idle one's admissions, and `{"stats":true}` answers
+/// with the aggregated + per-model snapshot ([`format_multi_stats`]).
+/// Returns total requests served across all models.
+pub fn serve_multi(
+    multi: &mut MultiModelServer,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+) -> Result<u64> {
+    listener.set_nonblocking(true)?;
+    let (tx, rx) = mpsc::channel::<Incoming>();
+    let acceptor = spawn_acceptor(listener, tx, stop.clone());
+
+    // Engine loop: route incoming by model, step every engine, match
+    // responses back to their waiters by (model, id).
+    let mut next_id: u64 = 1;
+    let mut waiters: Vec<(usize, u64, mpsc::Sender<String>)> = Vec::new();
+    let mut served = 0u64;
+    while !stop.load(Ordering::Relaxed) {
+        let mut idle = true;
+        while let Ok(msg) = rx.try_recv() {
+            idle = false;
+            match msg {
+                Incoming::Req(req, model, reply) => {
+                    let target = match multi.resolve(model.as_deref()) {
+                        Ok(i) => i,
+                        Err(e) => {
+                            let _ = reply.send(error_line(&e.to_string()));
+                            continue;
+                        }
+                    };
+                    // Ids may be remapped upward so they stay unique
+                    // across all connections (two clients reusing id 1
+                    // would otherwise steal each other's replies); the
+                    // reply's id field is authoritative — documented in
+                    // docs/SERVING.md.
+                    let id = req.id.max(next_id);
+                    next_id = id + 1;
+                    let mut req = req;
+                    req.id = id;
+                    match multi.engine_mut(target).submit(req) {
+                        Ok(()) => waiters.push((target, id, reply)),
+                        Err(e) => {
+                            let _ = reply.send(error_line(&e.to_string()));
+                        }
+                    }
+                }
+                Incoming::Stats(reply) => {
+                    let _ = reply.send(format_multi_stats(multi));
+                }
+                Incoming::Bad(err, reply) => {
+                    let _ = reply.send(error_line(&err));
+                }
+            }
+        }
+        for mi in 0..multi.n_models() {
+            if !multi.engine(mi).has_work() {
+                continue;
+            }
+            idle = false;
+            for resp in multi.engine_mut(mi).step()? {
+                served += 1;
+                if let Some(i) = waiters
+                    .iter()
+                    .position(|(m, id, _)| *m == mi && *id == resp.id)
+                {
+                    let (_, _, reply) = waiters.swap_remove(i);
+                    let _ = reply.send(format_response(&resp));
+                }
+            }
+        }
+        if idle {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    drop(rx);
+    let _ = acceptor.join();
+    Ok(served)
+}
+
+/// Outcome of one bounded line read.
+enum LineRead {
+    /// Clean end of stream (any unterminated partial line is dropped —
+    /// a mid-write disconnect never becomes a request).
+    Eof,
+    /// One complete line is in the buffer (newline stripped).
+    Line,
+    /// The line exceeded the cap; its consumed prefix was discarded.
+    Oversized,
+}
+
+/// Read one newline-terminated line into `line`, never letting the
+/// buffer grow past `max` bytes — the memory-safety half of the line
+/// protocol (`BufRead::read_line` would buffer an arbitrarily long
+/// hostile line). I/O errors (including `WouldBlock` timeout ticks)
+/// propagate with the partial line preserved, so the caller can
+/// re-check its stop flag and resume mid-line.
+fn read_bounded_line(
+    reader: &mut BufReader<TcpStream>,
+    line: &mut Vec<u8>,
+    max: usize,
+) -> std::io::Result<LineRead> {
+    enum Step {
+        Done,
+        Oversized,
+        More,
+    }
+    loop {
+        let (step, used) = {
+            let buf = reader.fill_buf()?;
+            if buf.is_empty() {
+                return Ok(LineRead::Eof);
+            }
+            match buf.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    if line.len() + pos > max {
+                        (Step::Oversized, pos + 1)
+                    } else {
+                        line.extend_from_slice(&buf[..pos]);
+                        (Step::Done, pos + 1)
+                    }
+                }
+                None => {
+                    let n = buf.len();
+                    if line.len() + n > max {
+                        (Step::Oversized, n)
+                    } else {
+                        line.extend_from_slice(buf);
+                        (Step::More, n)
+                    }
+                }
+            }
+        };
+        reader.consume(used);
+        match step {
+            Step::Done => return Ok(LineRead::Line),
+            Step::Oversized => return Ok(LineRead::Oversized),
+            Step::More => {}
+        }
+    }
+}
+
+/// Classify one complete protocol line: the `{"stats": true}` admin
+/// line, a generation request (with its optional `"model"` routing
+/// name), or a malformed line that earns an error reply. `None` for
+/// blank lines.
+fn classify_line(line: &[u8], reply_tx: &mpsc::Sender<String>) -> Option<Incoming> {
+    let Ok(text) = std::str::from_utf8(line) else {
+        return Some(Incoming::Bad(
+            "request line is not valid utf-8".into(),
+            reply_tx.clone(),
+        ));
+    };
+    let trimmed = text.trim();
+    if trimmed.is_empty() {
+        return None;
+    }
+    // Parse once; `{"stats": true}` is the admin line, anything else is
+    // a generation request.
+    match Value::parse(trimmed) {
+        Ok(ref v) if matches!(v.get_opt("stats"), Some(Value::Bool(true))) => {
+            Some(Incoming::Stats(reply_tx.clone()))
+        }
+        Ok(ref v) => match parse_model(v)
+            .and_then(|model| parse_request_value(v, 0).map(|req| (req, model)))
+        {
+            Ok((req, model)) => Some(Incoming::Req(req, model, reply_tx.clone())),
+            Err(e) => Some(Incoming::Bad(e.to_string(), reply_tx.clone())),
+        },
+        Err(e) => Some(Incoming::Bad(e.to_string(), reply_tx.clone())),
+    }
 }
 
 fn read_conn(stream: TcpStream, tx: mpsc::Sender<Incoming>, stop: Arc<AtomicBool>) {
@@ -247,41 +547,29 @@ fn read_conn(stream: TcpStream, tx: mpsc::Sender<Incoming>, stop: Arc<AtomicBool
         }
     });
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
+    let mut line: Vec<u8> = Vec::new();
     loop {
         if stop.load(Ordering::Relaxed) {
             break;
         }
-        match reader.read_line(&mut line) {
-            Ok(0) => break, // client closed
-            Ok(_) => {
-                let trimmed = line.trim();
-                if !trimmed.is_empty() {
-                    // Parse once; `{"stats": true}` is the admin line,
-                    // anything else is a generation request.
-                    let msg = match Value::parse(trimmed) {
-                        Ok(ref v)
-                            if matches!(v.get_opt("stats"), Some(Value::Bool(true))) =>
-                        {
-                            Incoming::Stats(reply_tx.clone())
-                        }
-                        Ok(ref v) => match parse_request_value(v, 0) {
-                            Ok(req) => Incoming::Req(req, reply_tx.clone()),
-                            Err(e) => Incoming::Bad(
-                                e.to_string().replace('"', "'"),
-                                reply_tx.clone(),
-                            ),
-                        },
-                        Err(e) => Incoming::Bad(
-                            e.to_string().replace('"', "'"),
-                            reply_tx.clone(),
-                        ),
-                    };
+        match read_bounded_line(&mut reader, &mut line, MAX_LINE_BYTES) {
+            Ok(LineRead::Eof) => break, // client closed
+            Ok(LineRead::Oversized) => {
+                // Answer, then drop the connection: a client this far
+                // out of protocol cannot be resynchronized reliably.
+                let _ = reply_tx.send(error_line(&format!(
+                    "request line exceeds {MAX_LINE_BYTES} bytes; closing connection"
+                )));
+                break;
+            }
+            Ok(LineRead::Line) => {
+                let msg = classify_line(&line, &reply_tx);
+                line.clear();
+                if let Some(msg) = msg {
                     if tx.send(msg).is_err() {
                         break;
                     }
                 }
-                line.clear();
             }
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
@@ -314,6 +602,25 @@ impl Client {
     /// Send one request line and wait for the reply line.
     pub fn request(&mut self, prompt: &str, max_tokens: usize, temperature: f32) -> Result<Value> {
         let line = json::obj(vec![
+            ("prompt", json::s(prompt)),
+            ("max_tokens", json::num(max_tokens as f64)),
+            ("temperature", json::num(temperature as f64)),
+        ])
+        .to_json();
+        self.roundtrip(&line)
+    }
+
+    /// [`Client::request`] with an explicit `"model"` routing name (for
+    /// multi-model servers).
+    pub fn request_model(
+        &mut self,
+        model: &str,
+        prompt: &str,
+        max_tokens: usize,
+        temperature: f32,
+    ) -> Result<Value> {
+        let line = json::obj(vec![
+            ("model", json::s(model)),
             ("prompt", json::s(prompt)),
             ("max_tokens", json::num(max_tokens as f64)),
             ("temperature", json::num(temperature as f64)),
@@ -367,6 +674,27 @@ mod tests {
         assert!(parse_request("not json", 1).is_err());
         assert!(parse_request(r#"{"prompt":""}"#, 1).is_err());
         assert!(parse_request(r#"{"no_prompt":1}"#, 1).is_err());
+    }
+
+    /// Regression for the id-truncation bug: `as_f64()? as u64` turned
+    /// negative ids into huge ones, fractional ids into their floor,
+    /// and ≥2^53 ids into rounded collisions — all silently. Every such
+    /// id must now be rejected.
+    #[test]
+    fn parse_request_rejects_non_integer_ids() {
+        for line in [
+            r#"{"id":-1,"prompt":"x"}"#,
+            r#"{"id":1.25,"prompt":"x"}"#,
+            r#"{"id":1e20,"prompt":"x"}"#,
+            r#"{"id":9007199254740993,"prompt":"x"}"#,
+            r#"{"id":"7","prompt":"x"}"#,
+        ] {
+            let err = parse_request(line, 1).unwrap_err();
+            assert!(err.to_string().contains("id"), "{line}: {err}");
+        }
+        // The largest exactly-representable id is accepted unchanged.
+        let r = parse_request(r#"{"id":9007199254740991,"prompt":"x"}"#, 1).unwrap();
+        assert_eq!(r.id, 9_007_199_254_740_991);
     }
 
     #[test]
@@ -486,6 +814,322 @@ mod tests {
         stop.store(true, Ordering::Relaxed);
         let served = server.join().unwrap();
         assert_eq!(served, 1);
+    }
+
+    /// Adversarial line-protocol suite, part 1: every malformed line on
+    /// a live connection earns an error line, and the connection stays
+    /// usable afterwards.
+    #[test]
+    fn adversarial_lines_earn_error_replies_without_killing_the_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let server = std::thread::spawn(move || {
+            let mut engine = Engine::new(MockBackend::new(2, 32, 128), EngineConfig::default());
+            serve(&mut engine, listener, stop2).unwrap()
+        });
+
+        let mut c = Client::connect(&addr).unwrap();
+        for line in [
+            "{not json",
+            r#"[1,2,3]"#,
+            r#"{"id":-1,"prompt":"x"}"#,
+            r#"{"id":1.5,"prompt":"x"}"#,
+            r#"{"id":1e20,"prompt":"x"}"#,
+            r#"{"model":"m","prompt":"x"}"#, // single-model server: no routing
+            r#"{"model":3,"prompt":"x"}"#,   // model must be a string
+            r#"{"prompt":""}"#,
+        ] {
+            let reply = c.roundtrip(line).unwrap();
+            assert!(
+                reply.get_opt("error").is_some(),
+                "{line} must earn an error line, got {reply:?}"
+            );
+        }
+        // The "model" rejection tells the client what went wrong.
+        let reply = c.roundtrip(r#"{"model":"m","prompt":"x"}"#).unwrap();
+        assert!(
+            reply.get("error").unwrap().as_str().unwrap().contains("single"),
+            "{reply:?}"
+        );
+
+        // After all that abuse, the same connection still serves.
+        let ok = c.request("ab", 2, 0.0).unwrap();
+        assert_eq!(ok.get("tokens").unwrap().as_usize().unwrap(), 2);
+
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
+    }
+
+    /// Adversarial suite, part 2: an oversized line is answered and the
+    /// connection dropped with bounded buffering; a mid-write
+    /// disconnect evaporates; neither disturbs another client.
+    #[test]
+    fn oversized_lines_and_midwrite_disconnects_leave_other_clients_unaffected() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let server = std::thread::spawn(move || {
+            let mut engine = Engine::new(MockBackend::new(2, 32, 128), EngineConfig::default());
+            serve(&mut engine, listener, stop2).unwrap()
+        });
+
+        // A well-behaved client connects first and must stay healthy
+        // throughout.
+        let mut healthy = Client::connect(&addr).unwrap();
+        assert_eq!(
+            healthy.request("ab", 2, 0.0).unwrap().get("tokens").unwrap().as_usize().unwrap(),
+            2
+        );
+
+        // Hostile client 1: one line far beyond the cap, never
+        // newline-terminated. The server must reply with an error (or
+        // just close) without ever buffering the whole thing.
+        {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).ok();
+            let chunk = vec![b'a'; 64 * 1024];
+            let mut sent = 0usize;
+            while sent <= MAX_LINE_BYTES {
+                if s.write_all(&chunk).is_err() {
+                    break; // server already hung up — equally fine
+                }
+                sent += chunk.len();
+            }
+            let mut reader = BufReader::new(s);
+            let mut reply = String::new();
+            let _ = reader.read_line(&mut reply);
+            assert!(
+                reply.is_empty() || reply.contains("exceeds"),
+                "oversized line must be refused, got {reply:?}"
+            );
+            // Connection is closed: the next read sees EOF.
+            let mut rest = String::new();
+            let closed = matches!(reader.read_line(&mut rest), Ok(0));
+            assert!(closed || rest.is_empty(), "server must drop the connection");
+        }
+
+        // Hostile client 2: writes half a JSON object, then vanishes.
+        {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.write_all(br#"{"prompt":"interru"#).unwrap();
+            // dropped here, mid-line, no newline
+        }
+
+        // The healthy client never noticed either neighbor.
+        let ok = healthy.request("cd", 3, 0.0).unwrap();
+        assert_eq!(ok.get("tokens").unwrap().as_usize().unwrap(), 3);
+        let stats = healthy.stats().unwrap();
+        assert_eq!(stats.get("completed").unwrap().as_usize().unwrap(), 2);
+
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
+    }
+
+    /// Adversarial suite, part 3 (the lock-poisoning satellite at the
+    /// server level): a thread that panics while holding the serving
+    /// backend's shared state lock must not cascade — the server keeps
+    /// answering on live and new connections.
+    #[test]
+    fn panicking_handler_thread_does_not_take_the_server_down() {
+        use crate::pipeline::synthetic_layers;
+        use crate::quant::BitWidth;
+        use crate::residency::{PrefetchConfig, PrefetchingDigestBackend, PrefetchingWeightSet};
+        use crate::store::{compress, SegmentSource};
+
+        let layers = synthetic_layers(6, 0xFACE);
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let total: usize = model.layers.iter().map(|m| m.n_symbols).sum();
+        let largest = model.layers.iter().map(|m| m.n_symbols).max().unwrap();
+        let budget = total.max(3 * largest);
+        let src = Arc::new(SegmentSource::from_model(Arc::new(model)));
+        let ws = PrefetchingWeightSet::new(src, budget, Vec::new(), PrefetchConfig::default())
+            .unwrap();
+        let shared = Arc::clone(ws.shared());
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let server = std::thread::spawn(move || {
+            let mut engine = Engine::new(
+                PrefetchingDigestBackend::new(ws, 2, 32, 256),
+                EngineConfig::default(),
+            );
+            serve(&mut engine, listener, stop2).unwrap()
+        });
+
+        let mut c = Client::connect(&addr).unwrap();
+        let first = c.request("first", 3, 0.0).unwrap();
+        assert!(first.get("tokens").unwrap().as_usize().unwrap() >= 1);
+
+        // A handler thread panics while holding the backend's shared
+        // state lock (the cascading-poison scenario).
+        let poisoner = Arc::clone(&shared);
+        std::thread::spawn(move || {
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _ = poisoner.with_layer(0, |_| -> () { panic!("handler bug") });
+            }));
+        })
+        .join()
+        .unwrap();
+
+        // Existing connection still serves…
+        let reply = c.request("still alive", 3, 0.0).unwrap();
+        assert!(reply.get("tokens").unwrap().as_usize().unwrap() >= 1);
+        // …and so does a fresh one, stats included.
+        let mut c2 = Client::connect(&addr).unwrap();
+        let stats = c2.stats().unwrap();
+        assert!(stats.get("completed").unwrap().as_usize().unwrap() >= 2);
+
+        stop.store(true, Ordering::Relaxed);
+        let served = server.join().unwrap();
+        assert_eq!(served, 2);
+    }
+
+    /// The tentpole acceptance over loopback: two models on one port
+    /// produce token streams bit-identical to two isolated
+    /// single-model engines at the same per-model budget, with routing
+    /// by `"model"`, a default model, error lines for unknown names,
+    /// and per-model + ledger fields in `{"stats":true}`.
+    #[test]
+    fn two_models_one_port_bit_identical_with_per_model_stats() {
+        use crate::coordinator::{ModelSpec, MultiModelConfig};
+        use crate::pipeline::synthetic_layers;
+        use crate::quant::BitWidth;
+        use crate::residency::{
+            Policy, PrefetchConfig, PrefetchingDigestBackend, PrefetchingWeightSet,
+        };
+        use crate::store::{compress, SegmentSource};
+
+        let build = |n: usize, seed: u64| {
+            let (m, _) = compress(&synthetic_layers(n, seed), BitWidth::U8).unwrap();
+            Arc::new(SegmentSource::from_model(Arc::new(m)))
+        };
+        let src_a = build(6, 0xA0);
+        let src_b = build(8, 0xB0);
+        let per_budget = |s: &SegmentSource| {
+            let largest = s.layers().iter().map(|m| m.n_symbols).max().unwrap();
+            (s.n_params() / 2).max(3 * largest)
+        };
+        let (budget_a, budget_b) = (per_budget(&src_a), per_budget(&src_b));
+        let prompts_a = ["alpha one", "alpha two"];
+        let prompts_b = ["beta one", "beta two"];
+
+        // Isolated per-model references at the same per-model budget,
+        // fed through `parse_request` so request shape (stop token,
+        // defaults) is exactly what the server builds. Requests run one
+        // at a time: a TCP client blocks on each reply, so the serving
+        // engine sees them sequentially too (slot occupancy — which the
+        // digest backend folds into its tokens — must match).
+        let isolated = |src: &Arc<SegmentSource>, budget: usize, prompts: &[&str]| {
+            let ws = PrefetchingWeightSet::new(
+                Arc::clone(src),
+                budget,
+                Vec::new(),
+                PrefetchConfig {
+                    decode_ahead: 2,
+                    workers: 2,
+                    policy: Policy::SegmentedLru,
+                },
+            )
+            .unwrap();
+            let mut engine = Engine::new(
+                PrefetchingDigestBackend::new(ws, 2, 64, 256),
+                EngineConfig::default(),
+            );
+            let mut texts = Vec::new();
+            for (i, p) in prompts.iter().enumerate() {
+                let line = json::obj(vec![
+                    ("prompt", json::s(p)),
+                    ("max_tokens", json::num(6.0)),
+                ])
+                .to_json();
+                engine.submit(parse_request(&line, 1 + i as u64).unwrap()).unwrap();
+                let rs = engine.run_to_completion(10_000).unwrap();
+                assert_eq!(rs.len(), 1);
+                texts.push(ByteTokenizer.decode(&rs[0].tokens));
+            }
+            texts
+        };
+        let want_a = isolated(&src_a, budget_a, &prompts_a);
+        let want_b = isolated(&src_b, budget_b, &prompts_b);
+
+        // One multi-model server, one port, same total budget.
+        let mut multi = MultiModelServer::new(
+            vec![
+                ModelSpec { name: "alpha".into(), source: src_a },
+                ModelSpec { name: "beta".into(), source: src_b },
+            ],
+            MultiModelConfig {
+                budget_bytes: budget_a + budget_b,
+                ..MultiModelConfig::default()
+            },
+        )
+        .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let server = std::thread::spawn(move || {
+            let served = serve_multi(&mut multi, listener, stop2).unwrap();
+            (served, multi)
+        });
+
+        let mut ca = Client::connect(&addr).unwrap();
+        let mut cb = Client::connect(&addr).unwrap();
+        // Interleaved load across the two models on two connections.
+        let mut got_a = Vec::new();
+        let mut got_b = Vec::new();
+        for i in 0..2 {
+            let ra = ca.request_model("alpha", prompts_a[i], 6, 0.0).unwrap();
+            let rb = cb.request_model("beta", prompts_b[i], 6, 0.0).unwrap();
+            got_a.push(ra.get("text").unwrap().as_str().unwrap().to_string());
+            got_b.push(rb.get("text").unwrap().as_str().unwrap().to_string());
+        }
+        assert_eq!(got_a, want_a, "alpha's stream must match its isolated engine");
+        assert_eq!(got_b, want_b, "beta's stream must match its isolated engine");
+
+        // Omitting "model" routes to the first (default) model.
+        let r = ca.request(prompts_a[0], 6, 0.0).unwrap();
+        assert_eq!(r.get("text").unwrap().as_str().unwrap(), want_a[0]);
+
+        // Unknown model: error line naming the hosted set; the
+        // connection stays usable.
+        let bad = ca.roundtrip(r#"{"model":"gamma","prompt":"x"}"#).unwrap();
+        let msg = bad.get("error").unwrap().as_str().unwrap().to_string();
+        assert!(msg.contains("unknown model"), "{msg}");
+        assert!(msg.contains("alpha") && msg.contains("beta"), "{msg}");
+        let ok = ca.request_model("beta", prompts_b[0], 6, 0.0).unwrap();
+        assert_eq!(ok.get("text").unwrap().as_str().unwrap(), want_b[0]);
+
+        // Admin line: global aggregates + per-model counter families +
+        // shared-ledger fields.
+        let stats = ca.stats().unwrap();
+        assert_eq!(stats.get("completed").unwrap().as_usize().unwrap(), 6);
+        let models = stats.get("models").unwrap().as_array().unwrap().to_vec();
+        assert_eq!(models.len(), 2);
+        assert_eq!(models[0].get("model").unwrap().as_str().unwrap(), "alpha");
+        assert_eq!(models[1].get("model").unwrap().as_str().unwrap(), "beta");
+        for m in &models {
+            assert_eq!(m.get("completed").unwrap().as_usize().unwrap(), 3);
+            assert!(m.get("cache_misses").unwrap().as_usize().unwrap() > 0);
+            assert!(m.get("prefetch_scheduled").unwrap().as_usize().unwrap() > 0);
+        }
+        let budget = stats.get("ledger_budget_bytes").unwrap().as_usize().unwrap();
+        assert_eq!(budget, budget_a + budget_b);
+        assert!(stats.get("ledger_used_bytes").unwrap().as_usize().unwrap() <= budget);
+        assert!(
+            stats.get("ledger_peak_used_bytes").unwrap().as_usize().unwrap() <= budget,
+            "shared budget must hold under interleaved load"
+        );
+
+        stop.store(true, Ordering::Relaxed);
+        let (served, multi) = server.join().unwrap();
+        assert_eq!(served, 6);
+        drop(multi);
     }
 
     /// The decode-ahead acceptance loop: a prefetching backend serves

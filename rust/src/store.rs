@@ -41,9 +41,9 @@ use crate::quant::{quantize_mixed, BitWidth, QuantParams, QuantizedTensor, Schem
 use crate::tensor::{Shape, TensorF32, TensorU8};
 use crate::{Error, Result};
 use std::borrow::Cow;
-use std::io::{Read, Seek, SeekFrom, Write};
+use std::io::{Read, Write};
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 const MAGIC: &[u8; 4] = b"ELM1";
 const VERSION: u32 = 1;
@@ -231,10 +231,62 @@ enum Backing {
     Memory(Arc<ElmModel>),
     /// Payload left on disk; each segment is read on demand.
     File {
-        file: Mutex<std::fs::File>,
+        file: SharedFile,
         /// Byte offset of the payload within the file (= header size).
         payload_base: u64,
     },
+}
+
+/// A container file shared by concurrent readers.
+///
+/// On unix every read is a *positioned* read (`pread`), so prefetch
+/// workers and fault-on-demand consumers never serialize on a seek
+/// lock — each call carries its own offset and the kernel handles the
+/// concurrency. Elsewhere the portable fallback serializes seek+read
+/// behind a mutex (recovering, not panicking, if a reader thread ever
+/// poisoned it: the cursor is repositioned on every read, so there is
+/// no state to corrupt).
+#[derive(Debug)]
+struct SharedFile {
+    #[cfg(unix)]
+    file: std::fs::File,
+    #[cfg(not(unix))]
+    file: std::sync::Mutex<std::fs::File>,
+}
+
+impl SharedFile {
+    fn new(file: std::fs::File) -> Self {
+        #[cfg(unix)]
+        {
+            SharedFile { file }
+        }
+        #[cfg(not(unix))]
+        {
+            SharedFile {
+                file: std::sync::Mutex::new(file),
+            }
+        }
+    }
+
+    /// Fill `buf` from absolute file offset `offset`.
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64) -> Result<()> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt as _;
+            self.file.read_exact_at(buf, offset)?;
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::Seek as _;
+            let mut f = self
+                .file
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            f.seek(std::io::SeekFrom::Start(offset))?;
+            f.read_exact(buf)?;
+        }
+        Ok(())
+    }
 }
 
 /// Random-access segment provider that decouples *what the manifest
@@ -248,8 +300,9 @@ enum Backing {
 /// streaming decoder and the weight-residency cache program against.
 ///
 /// Thread-safe: `&self` methods only, so an `Arc<SegmentSource>` can be
-/// shared across decode workers (file reads serialize on an internal
-/// lock; decode dominates).
+/// shared across decode workers. File reads are *positioned* (each call
+/// carries its own offset — `pread` on unix), so concurrent prefetch
+/// workers never serialize on a shared cursor.
 #[derive(Debug)]
 pub struct SegmentSource {
     bits: BitWidth,
@@ -283,7 +336,12 @@ impl SegmentSource {
             read_manifest(&mut r)?
         };
         let payload_base = header_bytes(&head.layers) as u64;
-        let expect = payload_base + head.payload_len as u64;
+        // Checked: a forged manifest can push the claimed payload length
+        // near u64::MAX, and an overflowing sum here would panic (debug)
+        // or wrap into a bogus comparison (release) instead of erroring.
+        let expect = payload_base
+            .checked_add(head.payload_len as u64)
+            .ok_or_else(|| Error::Format("manifest payload length overflows".into()))?;
         let actual = file.metadata()?.len();
         if actual != expect {
             return Err(Error::Format(format!(
@@ -295,7 +353,7 @@ impl SegmentSource {
             code: head.code,
             layers: head.layers,
             backing: Backing::File {
-                file: Mutex::new(file),
+                file: SharedFile::new(file),
                 payload_base,
             },
         })
@@ -341,16 +399,20 @@ impl SegmentSource {
     }
 
     /// Read layer `index`'s encoded segment: borrowed from the resident
-    /// payload, or seek+read of exactly `encoded_len` bytes from disk.
+    /// payload, or a positioned read of exactly `encoded_len` bytes from
+    /// disk. Concurrent callers never serialize on a seek lock (each
+    /// read carries its own offset), so a prefetch worker pool scales
+    /// with threads instead of queuing behind one file cursor. The
+    /// allocation here is safe against adversarial manifests because
+    /// [`SegmentSource::open`] has already proven every offset/length
+    /// against the actual file size.
     pub fn read_segment(&self, index: usize) -> Result<Cow<'_, [u8]>> {
         let m = &self.layers[index];
         match &self.backing {
             Backing::Memory(model) => Ok(Cow::Borrowed(model.segment(index))),
             Backing::File { file, payload_base } => {
-                let mut f = file.lock().unwrap();
-                f.seek(SeekFrom::Start(payload_base + m.offset as u64))?;
                 let mut buf = vec![0u8; m.encoded_len];
-                f.read_exact(&mut buf)?;
+                file.read_exact_at(&mut buf, payload_base + m.offset as u64)?;
                 Ok(Cow::Owned(buf))
             }
         }
@@ -575,20 +637,40 @@ fn read_manifest<R: Read>(r: &mut Reader<R>) -> Result<ManifestHead> {
             return Err(Error::Format(format!("implausible rank {rank}")));
         }
         let mut dims = Vec::with_capacity(rank);
+        // Checked product: `Shape::numel` is an unchecked multiply, so
+        // adversarial dims must be proven non-overflowing *here*, before
+        // anything downstream trusts the shape.
+        let mut numel: usize = 1;
         for _ in 0..rank {
-            dims.push(r.u64()? as usize);
+            let d = r.u64()? as usize;
+            numel = numel.checked_mul(d).ok_or_else(|| {
+                Error::Format(format!("layer {name:?}: dimension product overflows"))
+            })?;
+            dims.push(d);
         }
         let shape = Shape(dims);
         let scheme = Scheme::from_tag(r.u8()?)?;
         let scale = r.f32()?;
         let zero_point = r.f32()?;
         let n_symbols = r.u64()? as usize;
-        if shape.numel() != n_symbols {
+        if numel != n_symbols {
             return Err(Error::Format(format!(
                 "layer {name:?}: shape {shape} != {n_symbols} symbols"
             )));
         }
         let encoded_len = r.u64()? as usize;
+        // Every coded symbol costs at least one bit, so a segment can
+        // never decode to more than 8× its encoded bytes. Rejecting the
+        // claim here caps the decode-side allocation at O(file size) —
+        // without it a corrupt/adversarial manifest could demand a
+        // terabyte-scale symbol buffer (and OOM the server) before any
+        // CRC check ever runs.
+        if n_symbols > encoded_len.saturating_mul(8) {
+            return Err(Error::Format(format!(
+                "layer {name:?}: {n_symbols} symbols cannot fit in {encoded_len} \
+                 encoded bytes (minimum one bit per symbol)"
+            )));
+        }
         let crc32 = r.u32()?;
         layers.push(LayerMeta {
             name,
@@ -967,6 +1049,97 @@ mod tests {
             *b = 0;
         }
         assert!(ElmModel::read_from(zero_code.as_slice()).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn adversarial_symbol_claim_rejected_before_any_allocation() {
+        // Forge one layer's shape + n_symbols to demand a terabyte-scale
+        // decode buffer while keeping every other field (offsets,
+        // lengths, payload) intact. Both readers must reject the
+        // manifest up front — long before any decode path would
+        // allocate `n_symbols` bytes.
+        let layers = make_layers(13);
+        let (mut model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let huge = 1usize << 41; // ~2.2e12 symbols decoded
+        model.layers[1].shape = Shape(vec![huge]);
+        model.layers[1].n_symbols = huge;
+        let mut buf = Vec::new();
+        model.write_to(&mut buf).unwrap();
+        let err = ElmModel::read_from(buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("cannot fit"), "{err}");
+
+        let dir = std::env::temp_dir().join(format!("elm_adv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("forged.elm");
+        std::fs::write(&path, &buf).unwrap();
+        let err = SegmentSource::open(&path).unwrap_err();
+        assert!(err.to_string().contains("cannot fit"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn adversarial_payload_length_overflow_rejected_at_open() {
+        // A claimed payload length within a header's distance of
+        // u64::MAX would overflow the `payload_base + payload_len`
+        // file-size check — that must be a clean Format error, not a
+        // debug-mode panic or a release-mode wrap.
+        let layers = make_layers(16);
+        let (mut model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let prev: usize = model.layers[..2].iter().map(|m| m.encoded_len).sum();
+        model.layers[2].encoded_len = usize::MAX - prev - 200;
+        let mut buf = Vec::new();
+        model.write_to(&mut buf).unwrap();
+
+        let dir = std::env::temp_dir().join(format!("elm_adv_ov_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("forged.elm");
+        std::fs::write(&path, &buf).unwrap();
+        let err = SegmentSource::open(&path).unwrap_err();
+        assert!(err.to_string().contains("overflows"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn adversarial_dim_product_overflow_rejected() {
+        // Dims whose product overflows usize must be rejected by the
+        // manifest parser itself — `Shape::numel` is an unchecked
+        // multiply, so nothing downstream may ever see such a shape.
+        let layers = make_layers(14);
+        let (mut model, _) = compress(&layers, BitWidth::U8).unwrap();
+        model.layers[0].shape = Shape(vec![1usize << 40, 1usize << 40]);
+        let mut buf = Vec::new();
+        model.write_to(&mut buf).unwrap();
+        let err = ElmModel::read_from(buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("overflows"), "{err}");
+    }
+
+    #[test]
+    fn concurrent_file_backed_segment_reads_are_bitexact() {
+        // Positioned reads: many threads hammering the same file-backed
+        // source (no shared cursor) must each see exactly their own
+        // segment's bytes, CRC-clean.
+        let layers = make_layers(15);
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let dir = std::env::temp_dir().join(format!("elm_conc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.elm");
+        model.save(&path).unwrap();
+        let lazy = Arc::new(SegmentSource::open(&path).unwrap());
+
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let lazy = Arc::clone(&lazy);
+                let model = &model;
+                s.spawn(move || {
+                    for round in 0..8 {
+                        let i = (t + round) % model.layers.len();
+                        let got = lazy.verified_segment(i).unwrap();
+                        assert_eq!(got.as_ref(), model.segment(i));
+                    }
+                });
+            }
+        });
         std::fs::remove_dir_all(&dir).ok();
     }
 
