@@ -13,7 +13,7 @@
 //! * **shuffled (paper)** — shuffle + deal;
 //! * **LPT bin-packing** — size-aware greedy lower bound.
 
-use entrollm::bench::fmt_secs;
+use entrollm::bench::{fmt_secs, quick_mode, quick_or};
 use entrollm::decode::{ParallelDecoder, Strategy};
 use entrollm::metrics::Table;
 use entrollm::quant::BitWidth;
@@ -22,7 +22,12 @@ use entrollm::store::{compress, ElmModel};
 use entrollm::tensor::TensorF32;
 
 const N_SEGMENTS: usize = 160;
-const N_LAYOUTS: u64 = 12;
+
+/// Random layouts sampled per arm (3 in quick/smoke mode — enough to
+/// exercise every strategy and assertion, not enough for statistics).
+fn n_layouts() -> u64 {
+    quick_or(3, 12)
+}
 
 /// Segment sizes with 20% expensive segments placed in random clusters.
 fn clustered_sizes(seed: u64) -> Vec<usize> {
@@ -59,11 +64,12 @@ fn clustered_model(seed: u64) -> ElmModel {
 
 fn main() {
     let mut table = Table::new(
-        "Ablation B: scheduling imbalance over 12 random clustered layouts",
+        "Ablation B: scheduling imbalance over random clustered layouts",
         &["strategy", "threads", "mean imbalance", "worst imbalance", "wall (one layout)"],
     );
 
-    for threads in [2usize, 4, 8] {
+    let thread_counts: &[usize] = if quick_mode() { &[2] } else { &[2, 4, 8] };
+    for &threads in thread_counts {
         let arms: [(&str, Strategy); 4] = [
             ("chunked (naive)", Strategy::Chunked),
             ("interleaved", Strategy::Contiguous),
@@ -72,7 +78,7 @@ fn main() {
         ];
         let mut worst = [0.0f64; 4];
         let mut mean = [0.0f64; 4];
-        for layout in 0..N_LAYOUTS {
+        for layout in 0..n_layouts() {
             let sizes = clustered_sizes(0xAB + layout);
             for (i, (_, strat)) in arms.iter().enumerate() {
                 // For the shuffle, vary the seed per layout too (the
@@ -84,7 +90,7 @@ fn main() {
                 };
                 let imb = strat.imbalance_for_sizes(&sizes, threads);
                 worst[i] = worst[i].max(imb);
-                mean[i] += imb / N_LAYOUTS as f64;
+                mean[i] += imb / n_layouts() as f64;
             }
         }
         // Real decode wallclock on one layout per arm.

@@ -6,6 +6,7 @@
 //! all-asymmetric compressibility while avoiding all-symmetric's
 //! accuracy blowup on zero-straddling layers.
 
+use entrollm::bench::quick_or;
 use entrollm::entropy::shannon_entropy;
 use entrollm::huffman::{CodeSpec, FreqTable};
 use entrollm::metrics::Table;
@@ -17,8 +18,12 @@ use entrollm::tensor::TensorF32;
 fn synth_layers(seed: u64) -> Vec<(String, TensorF32)> {
     let mut rng = Rng::new(seed);
     let mut out = Vec::new();
-    for i in 0..24 {
-        let n = 4096 + rng.below(8192);
+    // Smoke runs shrink both the layer count and the layer size; the
+    // scheme comparison and its assertions hold at any scale.
+    let n_layers = quick_or(8, 24);
+    let base = quick_or(1024, 4096);
+    for i in 0..n_layers {
+        let n = base + rng.below(2 * base);
         // A third of layers single-signed (gates/biases in real nets).
         let data: Vec<f32> = if i % 3 == 0 {
             (0..n).map(|_| rng.range_f32(0.0, 0.12)).collect()
@@ -104,7 +109,7 @@ fn main() {
         }
     };
 
-    run_set("synthetic (24 layers)", &synth_layers(0xAB1A));
+    run_set("synthetic", &synth_layers(0xAB1A));
     if let Ok(ws) = load_weights_bin("artifacts/weights.bin") {
         let big: Vec<_> = ws.into_iter().filter(|(_, t)| t.numel() > 1000).collect();
         run_set("trained tiny-LM", &big);

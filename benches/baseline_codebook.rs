@@ -8,7 +8,7 @@
 //! are reported, since the edge story needs fast decode too.
 
 use entrollm::baselines::{fixed_pack, gzip_bytes, gunzip_bytes, CodebookCoder};
-use entrollm::bench::Bench;
+use entrollm::bench::{quick_or, Bench};
 use entrollm::entropy::shannon_entropy;
 use entrollm::huffman::{encode_with_own_code, Decoder, FreqTable};
 use entrollm::metrics::Table;
@@ -23,10 +23,10 @@ fn symbols(bits: BitWidth, n: usize) -> Vec<u8> {
 }
 
 fn main() {
-    let n = 1_000_000;
-    let bench = Bench::new();
+    let n = quick_or(100_000, 1_000_000);
+    let bench = Bench::auto(Bench::new());
     let mut table = Table::new(
-        "Baseline C: entropy-coding methods on quantized Gaussian weights (1M params)",
+        "Baseline C: entropy-coding methods on quantized Gaussian weights",
         &["bits", "method", "bits/weight", "vs entropy", "decode Msym/s"],
     );
 

@@ -6,6 +6,7 @@
 //! asserts the paper's "bucketing effect": the 4-bit histogram has
 //! higher mode mass and lower entropy than the 8-bit one.
 
+use entrollm::bench::quick_or;
 use entrollm::entropy::{distribution_stats, Histogram};
 use entrollm::huffman::FreqTable;
 use entrollm::pipeline::build_elm;
@@ -27,8 +28,9 @@ fn pooled_freq_from_artifacts(bits: BitWidth) -> Option<FreqTable> {
 }
 
 fn synthetic_freq(bits: BitWidth) -> FreqTable {
+    let n = quick_or(50_000, 400_000);
     let mut rng = Rng::new(0xF164);
-    let w = TensorF32::new(vec![400_000], rng.gaussian_vec(400_000, 0.0, 0.04)).unwrap();
+    let w = TensorF32::new(vec![n], rng.gaussian_vec(n, 0.0, 0.04)).unwrap();
     FreqTable::from_symbols(quantize_mixed(&w, bits).symbols.data())
 }
 

@@ -6,7 +6,7 @@
 //! and a full engine round trip. Numbers land in bench_results/ and
 //! EXPERIMENTS.md §Perf tracks before/after for each optimization.
 
-use entrollm::bench::{fmt_secs, Bench};
+use entrollm::bench::{fmt_secs, quick_or, Bench};
 use entrollm::bitio::{BitReader, BitWriter};
 use entrollm::coordinator::{Backend, Engine, EngineConfig, Request};
 use entrollm::corpus::ByteTokenizer;
@@ -19,14 +19,14 @@ use entrollm::rng::Rng;
 use entrollm::tensor::TensorF32;
 
 fn main() {
-    let bench = Bench::new();
+    let bench = Bench::auto(Bench::new());
     let mut table = Table::new("Hot-path microbenchmarks", &["op", "rate", "unit"]);
-    let n = 1_000_000usize;
+    let n = quick_or(100_000usize, 1_000_000);
     let mut rng = Rng::new(0x407);
     let w = TensorF32::new(vec![n], rng.gaussian_vec(n, 0.0, 0.04)).unwrap();
 
     // Quantization throughput.
-    let stats = bench.run("quantize_mixed u8 (1M)", || {
+    let stats = bench.run("quantize_mixed u8", || {
         std::hint::black_box(quantize_mixed(&w, BitWidth::U8));
     });
     table.row(&[
@@ -42,7 +42,7 @@ fn main() {
 
     // Huffman encode.
     let encoder = entrollm::huffman::Encoder::new(&spec);
-    let stats = bench.run("huffman encode (1M syms)", || {
+    let stats = bench.run("huffman encode", || {
         std::hint::black_box(encoder.encode_to_vec(&syms).unwrap());
     });
     table.row(&[
@@ -54,7 +54,7 @@ fn main() {
     // Huffman LUT decode — THE edge hot path.
     let dec = Decoder::new(&spec).unwrap();
     let mut out = vec![0u8; syms.len()];
-    let stats = bench.run("huffman LUT decode (1M syms)", || {
+    let stats = bench.run("huffman LUT decode", || {
         dec.decode_into(&enc, &mut out).unwrap();
     });
     let serial_rate = n as f64 / stats.median.as_secs_f64() / 1e6;
@@ -65,11 +65,11 @@ fn main() {
     ]);
 
     // Bit-serial oracle for comparison (how much the LUT buys).
-    let slow = Bench {
+    let slow = Bench::auto(Bench {
         measure_for: std::time::Duration::from_millis(400),
         ..Bench::new()
-    };
-    let stats = slow.run("huffman bit-serial decode (1M syms)", || {
+    });
+    let stats = slow.run("huffman bit-serial decode", || {
         std::hint::black_box(dec.decode_bit_serial(&enc, syms.len()).unwrap());
     });
     table.row(&[
@@ -84,7 +84,7 @@ fn main() {
         writer.write_bits((i % 64) as u64, 6);
     }
     let bits = writer.into_bytes();
-    let stats = bench.run("bitreader 6-bit fields (1M)", || {
+    let stats = bench.run("bitreader 6-bit fields", || {
         let mut r = BitReader::new(&bits);
         let mut acc = 0u32;
         for _ in 0..n {
@@ -118,11 +118,11 @@ fn main() {
             backend.runtime().prefill(&rt_prompt).unwrap()
         });
         table.row(&["pjrt prefill cold".into(), fmt_secs(d.as_secs_f64()), "per prompt".into()]);
-        let slow = Bench {
+        let slow = Bench::auto(Bench {
             measure_for: std::time::Duration::from_secs(2),
             warmup_for: std::time::Duration::from_millis(300),
             batches: 7,
-        };
+        });
         let stats = slow.run("pjrt prefill (warm)", || {
             std::hint::black_box(backend.runtime().prefill(&rt_prompt).unwrap());
         });

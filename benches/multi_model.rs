@@ -10,7 +10,7 @@
 //! hot-steals-from-cold behavior, which a static half/half partition
 //! cannot express.
 
-use entrollm::bench::fmt_bytes;
+use entrollm::bench::{fmt_bytes, quick_or};
 use entrollm::coordinator::{
     Engine, EngineConfig, ModelSpec, MultiModelConfig, MultiModelServer, Request,
 };
@@ -24,16 +24,21 @@ use entrollm::store::{compress, SegmentSource};
 use std::sync::Arc;
 use std::time::Instant;
 
-const MAX_TOKENS: usize = 12;
-const REQS_PER_MODEL: u64 = 6;
+fn max_tokens() -> usize {
+    quick_or(4, 12)
+}
+
+fn reqs_per_model() -> u64 {
+    quick_or(2, 6)
+}
 
 fn requests(offset: u64) -> Vec<Request> {
-    (0..REQS_PER_MODEL)
+    (0..reqs_per_model())
         .map(|i| {
             Request::greedy(
                 offset + i,
                 vec![1 + (offset + i) as u32 % 40, 7, 3 + i as u32],
-                MAX_TOKENS,
+                max_tokens(),
             )
         })
         .collect()
@@ -45,7 +50,11 @@ fn main() {
     let mut paths = Vec::new();
     let mut per_floor = Vec::new();
     let mut total_decoded = 0usize;
-    for (name, n_layers, seed) in [("alpha", 24usize, 0xA11Au64), ("beta", 16, 0xBE7A)] {
+    let sizes = quick_or(
+        [("alpha", 10usize, 0xA11Au64), ("beta", 8, 0xBE7A)],
+        [("alpha", 24, 0xA11A), ("beta", 16, 0xBE7A)],
+    );
+    for (name, n_layers, seed) in sizes {
         let (elm, _) = compress(&synthetic_layers(n_layers, seed), BitWidth::U8).unwrap();
         let largest = elm.layers.iter().map(|m| m.n_symbols).max().unwrap();
         per_floor.push(4 * largest); // decode-ahead 3 + active layer
@@ -120,9 +129,8 @@ fn main() {
     let mut multi = MultiModelServer::new(
         paths
             .iter()
-            .map(|(name, path)| ModelSpec {
-                name: name.clone(),
-                source: Arc::new(SegmentSource::open(path).unwrap()),
+            .map(|(name, path)| {
+                ModelSpec::new(name.clone(), Arc::new(SegmentSource::open(path).unwrap()))
             })
             .collect(),
         MultiModelConfig {
@@ -189,9 +197,8 @@ fn main() {
     let mut skewed = MultiModelServer::new(
         paths
             .iter()
-            .map(|(name, path)| ModelSpec {
-                name: name.clone(),
-                source: Arc::new(SegmentSource::open(path).unwrap()),
+            .map(|(name, path)| {
+                ModelSpec::new(name.clone(), Arc::new(SegmentSource::open(path).unwrap()))
             })
             .collect(),
         MultiModelConfig {

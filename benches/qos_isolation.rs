@@ -1,0 +1,283 @@
+//! Per-model QoS under the shared residency ledger: a **reserved
+//! latency-critical model** keeps serving from residency while a batch
+//! peer hammers the shared pool, vs the PR 4 **unreserved baseline**
+//! at the same total byte budget.
+//!
+//! Both arms run the identical request schedule (alternating batch
+//! bursts with single latency-model requests) through a
+//! [`MultiModelServer`]; the only difference is the latency model's
+//! `reserve`/`weight`. The bench asserts the QoS contract, not just
+//! measures it:
+//!
+//! * the reserved model never holds fewer than its reserved bytes
+//!   once warmed, no matter how hot the batch peer runs;
+//! * its measured fault rate is **strictly lower** than the
+//!   unreserved baseline's;
+//! * both arms emit **bit-identical token streams** — reservations
+//!   move *where bytes are resident*, never *what models generate*;
+//! * a config whose reservations exceed the global budget is rejected
+//!   at startup.
+
+use entrollm::bench::{fmt_bytes, quick_or};
+use entrollm::coordinator::{ModelSpec, MultiModelConfig, MultiModelServer, Request};
+use entrollm::metrics::Table;
+use entrollm::quant::BitWidth;
+use entrollm::rng::Rng;
+use entrollm::store::{compress, ElmModel, SegmentSource};
+use entrollm::tensor::TensorF32;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// `n` equal-size layers (512 decoded bytes each), so "budget = k
+/// layers" is exact and the reserve can cover the latency model to
+/// the byte.
+fn equal_model(n: usize, seed: u64) -> ElmModel {
+    let layers: Vec<(String, TensorF32)> = (0..n)
+        .map(|i| {
+            let mut rng = Rng::new(seed + i as u64);
+            (
+                format!("l{i}"),
+                TensorF32::new(vec![512], rng.gaussian_vec(512, 0.0, 0.05)).unwrap(),
+            )
+        })
+        .collect();
+    compress(&layers, BitWidth::U8).unwrap().0
+}
+
+struct ArmResult {
+    latency_tokens: Vec<(u64, Vec<u32>)>,
+    batch_tokens: Vec<(u64, Vec<u32>)>,
+    fault_rate: f64,
+    latency_tok_per_sec: f64,
+    min_latency_resident: usize,
+    shed_by_peers: u64,
+}
+
+fn drain(multi: &mut MultiModelServer, mi: usize, sink: &mut Vec<(u64, Vec<u32>)>) {
+    let mut steps = 0usize;
+    while multi.engine(mi).has_work() && steps < 1_000_000 {
+        for r in multi.engine_mut(mi).step().unwrap() {
+            sink.push((r.id, r.tokens));
+        }
+        steps += 1;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_arm(
+    lat_path: &std::path::Path,
+    bat_path: &std::path::Path,
+    budget: usize,
+    reserve: usize,
+    weight: f64,
+    rounds: usize,
+    batch_reqs: u64,
+    max_tokens: usize,
+) -> ArmResult {
+    let latency_spec = ModelSpec::new(
+        "latency",
+        Arc::new(SegmentSource::open(lat_path).unwrap()),
+    )
+    .with_qos(reserve, weight);
+    let batch_spec = ModelSpec::new("batch", Arc::new(SegmentSource::open(bat_path).unwrap()));
+    let mut multi = MultiModelServer::new(
+        vec![latency_spec, batch_spec],
+        MultiModelConfig {
+            budget_bytes: budget,
+            decode_ahead: 1,
+            workers: 2,
+            ..MultiModelConfig::default()
+        },
+    )
+    .unwrap();
+
+    let mut latency_tokens = Vec::new();
+    let mut batch_tokens = Vec::new();
+
+    // Warm the latency model once (fills its reserve, when it has
+    // one); warmup faults are excluded from the measured rate.
+    multi
+        .engine_mut(0)
+        .submit(Request::greedy(1, vec![3, 14, 15], max_tokens))
+        .unwrap();
+    drain(&mut multi, 0, &mut latency_tokens);
+    let warm = multi.engine(0).residency().unwrap();
+    let warm_token_count: usize = latency_tokens.iter().map(|(_, t)| t.len()).sum();
+
+    let mut latency_wall = Duration::ZERO;
+    let mut min_latency_resident = usize::MAX;
+    for round in 0..rounds {
+        // Batch burst: the peer runs hot while the latency model idles
+        // — exactly when an unreserved latency model gets robbed.
+        for k in 0..batch_reqs {
+            let id = 100 + round as u64 * batch_reqs + k;
+            multi
+                .engine_mut(1)
+                .submit(Request::greedy(id, vec![7 + (id % 30) as u32, 2], max_tokens))
+                .unwrap();
+        }
+        drain(&mut multi, 1, &mut batch_tokens);
+        min_latency_resident = min_latency_resident.min(multi.ledger().used_by(0));
+
+        // One latency-critical request lands mid-pressure.
+        let t0 = Instant::now();
+        multi
+            .engine_mut(0)
+            .submit(Request::greedy(
+                1000 + round as u64,
+                vec![5, 9 + round as u32 % 20],
+                max_tokens,
+            ))
+            .unwrap();
+        drain(&mut multi, 0, &mut latency_tokens);
+        latency_wall += t0.elapsed();
+        min_latency_resident = min_latency_resident.min(multi.ledger().used_by(0));
+    }
+
+    let after = multi.engine(0).residency().unwrap();
+    let faults = after.misses - warm.misses;
+    let accesses = faults + (after.hits - warm.hits);
+    let lc = multi.ledger().counters();
+    assert!(
+        lc.peak_used_bytes <= lc.budget_bytes,
+        "global budget violated: {lc:?}"
+    );
+    latency_tokens.sort();
+    batch_tokens.sort();
+    // tok/s covers only the measured rounds: the warmup request's
+    // tokens are excluded from the numerator just as its wall time is
+    // excluded from the denominator.
+    let measured_tokens: usize =
+        latency_tokens.iter().map(|(_, t)| t.len()).sum::<usize>() - warm_token_count;
+    ArmResult {
+        latency_tokens,
+        batch_tokens,
+        fault_rate: if accesses == 0 {
+            0.0
+        } else {
+            faults as f64 / accesses as f64
+        },
+        latency_tok_per_sec: measured_tokens as f64 / latency_wall.as_secs_f64().max(1e-12),
+        min_latency_resident,
+        shed_by_peers: multi.model_counters(0).shed_by_peers,
+    }
+}
+
+fn main() {
+    let rounds = quick_or(2usize, 6);
+    let batch_reqs = quick_or(2u64, 4);
+    let max_tokens = quick_or(4usize, 10);
+
+    let dir = std::env::temp_dir().join(format!("qos_isolation_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let lat_elm = equal_model(6, 0x1A7E);
+    let bat_elm = equal_model(20, 0xBA7C);
+    let lat_total = lat_elm.n_params(); // 6 × 512 B decoded
+    let lat_path = dir.join("latency.elm");
+    let bat_path = dir.join("batch.elm");
+    lat_elm.save(&lat_path).unwrap();
+    bat_elm.save(&bat_path).unwrap();
+
+    // Pool holds the latency model plus 4 spare layers: the 20-layer
+    // batch model must churn, and without QoS it churns *through* the
+    // latency model's residency.
+    let budget = lat_total + 4 * 512;
+    let reserve = lat_total;
+    println!(
+        "latency model {} decoded | batch model {} decoded | shared budget {} | \
+         QoS arm reserves {} for the latency model\n",
+        fmt_bytes(lat_total),
+        fmt_bytes(bat_elm.n_params()),
+        fmt_bytes(budget),
+        fmt_bytes(reserve),
+    );
+
+    // Startup acceptance: reserves summing past the budget are
+    // rejected before any engine is built.
+    let over = MultiModelServer::new(
+        vec![
+            ModelSpec::new(
+                "latency",
+                Arc::new(SegmentSource::open(&lat_path).unwrap()),
+            )
+            .with_qos(budget, 1.0),
+            ModelSpec::new("batch", Arc::new(SegmentSource::open(&bat_path).unwrap()))
+                .with_qos(1, 1.0),
+        ],
+        MultiModelConfig {
+            budget_bytes: budget,
+            ..MultiModelConfig::default()
+        },
+    );
+    let err = over.err().expect("over-reserved config must be rejected");
+    assert!(err.to_string().contains("reservations"), "{err}");
+
+    let baseline = run_arm(
+        &lat_path, &bat_path, budget, 0, 1.0, rounds, batch_reqs, max_tokens,
+    );
+    let qos = run_arm(
+        &lat_path, &bat_path, budget, reserve, 4.0, rounds, batch_reqs, max_tokens,
+    );
+
+    // --- The QoS contract ---
+    // Reservations never change a token stream.
+    assert_eq!(
+        baseline.latency_tokens, qos.latency_tokens,
+        "reservation changed the latency model's tokens"
+    );
+    assert_eq!(
+        baseline.batch_tokens, qos.batch_tokens,
+        "reservation changed the batch model's tokens"
+    );
+    // The reserved model keeps >= its reserved bytes resident under
+    // sustained pressure; the unreserved baseline gets robbed.
+    assert!(
+        qos.min_latency_resident >= reserve,
+        "reserved model dipped to {} B (< reserve {} B)",
+        qos.min_latency_resident,
+        reserve
+    );
+    assert!(
+        baseline.min_latency_resident < lat_total,
+        "baseline latency model was never robbed ({} B resident) — the bench \
+         applied no pressure",
+        baseline.min_latency_resident
+    );
+    assert_eq!(qos.shed_by_peers, 0, "peers shed a reserved-only model");
+    // And the reserved model's measured fault rate is strictly lower.
+    assert!(
+        qos.fault_rate < baseline.fault_rate,
+        "QoS fault rate {:.3} must beat the unreserved baseline's {:.3}",
+        qos.fault_rate,
+        baseline.fault_rate
+    );
+
+    let mut table = Table::new(
+        "Reserved latency model under batch pressure (same total budget)",
+        &[
+            "arm",
+            "latency fault rate",
+            "latency tok/s",
+            "min latency resident",
+            "shed by peers",
+        ],
+    );
+    table.row(&[
+        "unreserved (PR 4 baseline)".into(),
+        format!("{:.3}", baseline.fault_rate),
+        format!("{:.1}", baseline.latency_tok_per_sec),
+        fmt_bytes(baseline.min_latency_resident),
+        baseline.shed_by_peers.to_string(),
+    ]);
+    table.row(&[
+        format!("reserve {} weight 4", fmt_bytes(reserve)),
+        format!("{:.3}", qos.fault_rate),
+        format!("{:.1}", qos.latency_tok_per_sec),
+        fmt_bytes(qos.min_latency_resident),
+        qos.shed_by_peers.to_string(),
+    ]);
+    table.emit("qos_isolation");
+
+    std::fs::remove_dir_all(&dir).ok();
+    println!("\nqos_isolation bench OK");
+}

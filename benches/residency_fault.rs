@@ -11,7 +11,7 @@
 //! measured tokens/sec plus the hit/miss/evict counters, then the
 //! modeled Jetson-scale fault-in cost for the same residency fractions.
 
-use entrollm::bench::{fmt_bytes, fmt_secs};
+use entrollm::bench::{fmt_bytes, fmt_secs, quick_or};
 use entrollm::coordinator::{Engine, EngineConfig, Request};
 use entrollm::device::{table2_workloads, LatencyModel, JETSON_P3450};
 use entrollm::metrics::Table;
@@ -23,7 +23,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 fn main() {
-    let n_layers = 24usize;
+    let n_layers = quick_or(10usize, 24);
     let layers = synthetic_layers(n_layers, 0xFA17);
     let (elm, report) = compress(&layers, BitWidth::U8).unwrap();
     let total_decoded: usize = elm.layers.iter().map(|m| m.n_symbols).sum();
@@ -61,9 +61,9 @@ fn main() {
             ResidentDigestBackend::new(ws, 2, 64, 256),
             EngineConfig::default(),
         );
-        for id in 0..8u64 {
+        for id in 0..quick_or(3u64, 8) {
             engine
-                .submit(Request::greedy(id, vec![1 + id as u32, 2, 3], 16))
+                .submit(Request::greedy(id, vec![1 + id as u32, 2, 3], quick_or(6, 16)))
                 .unwrap();
         }
         let t0 = Instant::now();

@@ -9,7 +9,7 @@
 //! model, then prints the modeled Jetson/Table-II numbers where the gap
 //! is at edge scale.
 
-use entrollm::bench::{fmt_secs, Bench};
+use entrollm::bench::{fmt_secs, quick_or, Bench};
 use entrollm::coordinator::{fnv1a64, FNV1A64_INIT};
 use entrollm::decode::{ParallelDecoder, StreamingDecoder};
 use entrollm::device::{table2_workloads, LatencyModel, JETSON_P3450};
@@ -26,7 +26,7 @@ fn stage(symbols: &[u8]) -> u64 {
 }
 
 fn main() {
-    let n_layers = 32usize;
+    let n_layers = quick_or(12usize, 32);
     let threads = 4usize;
     let layers = synthetic_layers(n_layers, 0x7751);
     let (model, report) = compress(&layers, BitWidth::U8).unwrap();
@@ -36,7 +36,7 @@ fn main() {
         report.n_params, report.effective_bits
     );
 
-    let bench = Bench::new();
+    let bench = Bench::auto(Bench::new());
     let mut table = Table::new(
         "Streaming vs eager TTFT (measured on this host + modeled Jetson)",
         &["config", "first weight / TTFT", "note"],
@@ -55,7 +55,7 @@ fn main() {
 
     // Streaming: time until the FIRST layer is delivered.
     let mut streaming_first = f64::MAX;
-    for prefetch in [1usize, 4, 8] {
+    for prefetch in quick_or(vec![2usize], vec![1, 4, 8]) {
         let stats = bench.run(&format!("streaming: first layer (prefetch {prefetch})"), || {
             let mut stream = StreamingDecoder::new(threads, prefetch)
                 .stream(Arc::clone(&model))

@@ -8,12 +8,21 @@
 //! *relative*: uint8 ≈ fp16, uint4 degrades modestly; that ordering is
 //! asserted here.
 
+use entrollm::bench::quick_or;
 use entrollm::metrics::Table;
 use entrollm::pipeline::{eval_ppl, load_backend, Flavor};
 
-const WINDOWS: usize = 16;
-const CLOZE_CASES: usize = 24;
 const CHOICES: usize = 4;
+
+/// Held-out eval windows (fewer in quick/smoke mode).
+fn windows() -> usize {
+    quick_or(4, 16)
+}
+
+/// Cloze cases (fewer in quick/smoke mode).
+fn cloze_cases() -> usize {
+    quick_or(6, 24)
+}
 
 /// 4-way cloze accuracy through the score executable: context = first
 /// S-16 chars of a window, candidates = true 16-char continuation + 3
@@ -29,12 +38,12 @@ fn cloze_accuracy(dir: &str, flavor: Flavor) -> f64 {
         .bytes()
         .map(|b| if b < 128 { b as u32 } else { b'?' as u32 })
         .collect();
-    let n_windows = (toks.len() / s).min(CLOZE_CASES + CHOICES);
+    let n_windows = (toks.len() / s).min(cloze_cases() + CHOICES);
     assert!(n_windows > CHOICES, "eval text too short");
     let window = |i: usize| &toks[i * s..(i + 1) * s];
 
     let mut correct = 0usize;
-    let cases = n_windows.min(CLOZE_CASES);
+    let cases = n_windows.min(cloze_cases());
     for i in 0..cases {
         let ctx = &window(i)[..s - tail];
         let mut best = (f64::INFINITY, usize::MAX);
@@ -82,7 +91,7 @@ fn main() {
         (Flavor::U8, "uint8"),
         (Flavor::U4, "uint4"),
     ] {
-        let (nll, ppl) = eval_ppl(dir, flavor, 4, WINDOWS).unwrap();
+        let (nll, ppl) = eval_ppl(dir, flavor, 4, windows()).unwrap();
         let acc = cloze_accuracy(dir, flavor);
         table.row(&[
             name.into(),

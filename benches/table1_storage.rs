@@ -7,7 +7,7 @@
 //! artifacts exist. Paper reference bands: uint8 → 5.58–5.92 effective
 //! bits; uint4 → 1.39–1.62.
 
-use entrollm::bench::fmt_bytes;
+use entrollm::bench::{fmt_bytes, quick_mode};
 use entrollm::metrics::Table;
 use entrollm::pipeline::build_elm;
 use entrollm::quant::BitWidth;
@@ -105,7 +105,10 @@ fn main() {
         );
     };
 
-    for f in FAMILIES {
+    // Quick/smoke mode runs one family — the assertions are per-row,
+    // so one family still exercises the whole path.
+    let families = if quick_mode() { &FAMILIES[..1] } else { FAMILIES };
+    for f in families {
         let layers = synth_layers(f, 0x7AB1E1);
         add_row(f.name, &layers);
     }

@@ -3,7 +3,7 @@
 //! speedup accounting and a real thread-scaling sweep of the parallel
 //! decoder.
 
-use entrollm::bench::fmt_secs;
+use entrollm::bench::{fmt_secs, quick_or};
 use entrollm::decode::{ParallelDecoder, Strategy};
 use entrollm::device::{table2_workloads, LatencyModel, JETSON_P3450};
 use entrollm::metrics::Table;
@@ -107,7 +107,7 @@ fn main() {
             &["threads", "wall", "Msym/s", "symbol imbalance", "max thread share"],
         );
         let (m, _) = build_elm("artifacts", BitWidth::U8).unwrap();
-        for threads in [1usize, 2, 4, 8] {
+        for threads in quick_or(vec![1usize, 2], vec![1, 2, 4, 8]) {
             let (_, stats) = ParallelDecoder::new(threads)
                 .with_strategy(Strategy::Shuffled { seed: 0x5EED })
                 .decode_model(&m)

@@ -53,6 +53,27 @@ impl Default for Bench {
     }
 }
 
+/// Is the quick/smoke parameterization requested? Set `BENCH_QUICK=1`
+/// (any value but `0`) in the environment, or pass `--quick` on the
+/// bench command line. CI's bench-smoke job runs every bench this way,
+/// so bench code is compiled AND executed on every push without paying
+/// full measurement time — quick runs shrink workloads and timing
+/// windows but still execute every code path and assertion.
+pub fn quick_mode() -> bool {
+    std::env::var_os("BENCH_QUICK").is_some_and(|v| v != "0")
+        || std::env::args().any(|a| a == "--quick")
+}
+
+/// `quick` when [`quick_mode`] is on, else `full` — the one-liner for
+/// sizing a bench workload constant.
+pub fn quick_or<T>(quick: T, full: T) -> T {
+    if quick_mode() {
+        quick
+    } else {
+        full
+    }
+}
+
 impl Bench {
     /// Default-configured runner.
     pub fn new() -> Self {
@@ -65,6 +86,27 @@ impl Bench {
             measure_for: Duration::from_secs(2),
             warmup_for: Duration::from_millis(300),
             batches: 7,
+        }
+    }
+
+    /// Smoke-test configuration: tiny warmup/measure windows for CI's
+    /// bench-smoke job (statistics are meaningless at this size — the
+    /// point is that the code ran).
+    pub fn quick() -> Self {
+        Bench {
+            measure_for: Duration::from_millis(60),
+            warmup_for: Duration::from_millis(10),
+            batches: 3,
+        }
+    }
+
+    /// [`Bench::quick`] under [`quick_mode`], the given config
+    /// otherwise — what every bench's `main` should start from.
+    pub fn auto(full: Bench) -> Self {
+        if quick_mode() {
+            Self::quick()
+        } else {
+            full
         }
     }
 

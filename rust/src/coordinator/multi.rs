@@ -33,12 +33,44 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 /// One model to host: a routing name plus its segment source (a lazily
-/// opened `.elm` container, or an in-memory one for tests/benches).
+/// opened `.elm` container, or an in-memory one for tests/benches),
+/// and its per-model QoS knobs under the shared ledger.
 pub struct ModelSpec {
     /// Routing name (the line protocol's `"model"` field).
     pub name: String,
     /// The container the model's engine serves from.
     pub source: Arc<SegmentSource>,
+    /// Minimum residency reservation: decoded bytes peers can never
+    /// reclaim from this model, and headroom the shared ledger keeps
+    /// committed for it even while unfilled (the `reserve-mb=N` part
+    /// of `--model name=path,reserve-mb=N`). `0` = no guarantee (the
+    /// PR 4 behavior).
+    pub reserve_bytes: usize,
+    /// Admission weight: how aggressively this model may shed peers
+    /// above everyone's reserve (the `weight=W` part of the `--model`
+    /// syntax). Equal weights shed only strictly-colder peers; a
+    /// strictly higher weight may also shed hotter lower-weight ones.
+    /// Must be finite and positive; default `1.0`.
+    pub weight: f64,
+}
+
+impl ModelSpec {
+    /// Spec with no reservation and the default admission weight.
+    pub fn new(name: impl Into<String>, source: Arc<SegmentSource>) -> Self {
+        ModelSpec {
+            name: name.into(),
+            source,
+            reserve_bytes: 0,
+            weight: 1.0,
+        }
+    }
+
+    /// Attach QoS knobs (builder style).
+    pub fn with_qos(mut self, reserve_bytes: usize, weight: f64) -> Self {
+        self.reserve_bytes = reserve_bytes;
+        self.weight = weight;
+        self
+    }
 }
 
 /// Construction parameters of a [`MultiModelServer`].
@@ -96,11 +128,15 @@ pub struct MultiModelServer {
 impl MultiModelServer {
     /// Build one engine per spec over a shared ledger + worker pool.
     ///
-    /// Fails up front when: no models, a duplicate/empty name, or the
-    /// global budget cannot hold the **sum** of every model's
-    /// decode-ahead floor (`(window + 1) × largest layer` each) — the
-    /// cross-model analogue of the single-model floor check, and what
-    /// keeps "every byte pinned by peers" unreachable.
+    /// Fails up front when: no models, a duplicate/empty name, a
+    /// non-finite or non-positive admission weight, a **sum of
+    /// reservations** exceeding the global budget (a config whose
+    /// guarantees cannot all be honored at once must be rejected at
+    /// startup, not discovered under load), or a budget that cannot
+    /// hold the **sum** of every model's `max(decode-ahead floor,
+    /// reservation)` — the cross-model analogue of the single-model
+    /// floor check, and what keeps "every byte committed to peers"
+    /// unreachable even when every peer sits on its full reserve.
     pub fn new(specs: Vec<ModelSpec>, cfg: MultiModelConfig) -> Result<Self> {
         if specs.is_empty() {
             return Err(Error::InvalidArg(
@@ -118,6 +154,24 @@ impl MultiModelServer {
                     spec.name
                 )));
             }
+            if !spec.weight.is_finite() || spec.weight <= 0.0 {
+                return Err(Error::InvalidArg(format!(
+                    "model {:?}: admission weight must be a positive finite number, \
+                     got {}",
+                    spec.name, spec.weight
+                )));
+            }
+        }
+        let reserve_sum: usize = specs
+            .iter()
+            .fold(0usize, |acc, s| acc.saturating_add(s.reserve_bytes));
+        if reserve_sum > cfg.budget_bytes {
+            return Err(Error::InvalidArg(format!(
+                "residency reservations sum to {} B but the global weight budget \
+                 is {} B — every reserve is a hard guarantee, so their sum must \
+                 fit the budget; lower the reserves or raise --weight-budget-mb",
+                reserve_sum, cfg.budget_bytes
+            )));
         }
         let mut floor_sum = 0usize;
         for spec in &specs {
@@ -131,13 +185,17 @@ impl MultiModelServer {
                 .map(|m| m.n_symbols)
                 .max()
                 .unwrap_or(0);
-            floor_sum = floor_sum.saturating_add(largest.saturating_mul(window + 1));
+            let floor = largest.saturating_mul(window + 1);
+            // A model committed to its reserve still needs its decode-
+            // ahead floor on top of every peer's commitment, so each
+            // member contributes the larger of the two.
+            floor_sum = floor_sum.saturating_add(floor.max(spec.reserve_bytes));
         }
         if cfg.budget_bytes < floor_sum {
             return Err(Error::InvalidArg(format!(
                 "global weight budget {} B cannot hold every model's decode-ahead \
-                 floor (sum {} B across {} models) — lower --decode-ahead or raise \
-                 the budget",
+                 floor (sum of max(floor, reserve) = {} B across {} models) — \
+                 lower --decode-ahead, lower the reserves, or raise the budget",
                 cfg.budget_bytes,
                 floor_sum,
                 specs.len()
@@ -155,11 +213,13 @@ impl MultiModelServer {
         let mut entries = Vec::with_capacity(specs.len());
         let mut shares = Vec::with_capacity(specs.len());
         for spec in specs {
-            let ws = PrefetchingWeightSet::with_ledger(
+            let ws = PrefetchingWeightSet::with_ledger_qos(
                 spec.source,
                 Arc::clone(&ledger),
                 Vec::new(),
                 pcfg,
+                spec.reserve_bytes,
+                spec.weight,
             )?;
             shares.push(Arc::clone(ws.shared()));
             entries.push(ModelEntry {
@@ -229,6 +289,13 @@ impl MultiModelServer {
         &self.ledger
     }
 
+    /// Model `index`'s QoS snapshot (reservation, weight, usage, shed
+    /// traffic) from the shared ledger — ledger slots are assigned in
+    /// spec order, so slot `index` is model `index`.
+    pub fn model_counters(&self, index: usize) -> crate::residency::ModelQosCounters {
+        self.ledger.model_counters(index)
+    }
+
     /// The shared decode worker pool.
     pub fn pool(&self) -> &PrefetchPool {
         &self.pool
@@ -251,10 +318,7 @@ mod tests {
     fn spec(name: &str, n_layers: usize, seed: u64) -> ModelSpec {
         let layers = synthetic_layers(n_layers, seed);
         let (model, _) = compress(&layers, BitWidth::U8).unwrap();
-        ModelSpec {
-            name: name.into(),
-            source: Arc::new(SegmentSource::from_model(Arc::new(model))),
-        }
+        ModelSpec::new(name, Arc::new(SegmentSource::from_model(Arc::new(model))))
     }
 
     /// Whole decoded model, but never below the decode-ahead floor
@@ -279,10 +343,7 @@ mod tests {
         let err = MultiModelServer::new(dup, cfg.clone()).unwrap_err();
         assert!(err.to_string().contains("duplicate"), "{err}");
 
-        let unnamed = vec![ModelSpec {
-            name: String::new(),
-            source: spec("x", 4, 3).source,
-        }];
+        let unnamed = vec![ModelSpec::new("", spec("x", 4, 3).source)];
         let err = MultiModelServer::new(unnamed, cfg.clone()).unwrap_err();
         assert!(err.to_string().contains("non-empty"), "{err}");
 
@@ -294,6 +355,56 @@ mod tests {
         };
         let err = MultiModelServer::new(vec![spec("a", 4, 4), spec("b", 4, 5)], tiny).unwrap_err();
         assert!(err.to_string().contains("floor"), "{err}");
+    }
+
+    /// The QoS acceptance gate: a config whose reservations sum past
+    /// the global budget is rejected at startup, as is a bogus weight
+    /// — and a reservation that *does* fit constructs fine and
+    /// surfaces in the per-model counters.
+    #[test]
+    fn construction_validates_reservations_and_weights() {
+        let cfg = MultiModelConfig::default();
+        let budget = cfg.budget_bytes;
+
+        // Reserves summing over the budget: rejected, naming both
+        // sides of the inequality.
+        let over = vec![
+            spec("a", 4, 20).with_qos(budget / 2 + 1, 1.0),
+            spec("b", 4, 21).with_qos(budget / 2 + 1, 1.0),
+        ];
+        let err = MultiModelServer::new(over, cfg.clone()).unwrap_err();
+        assert!(err.to_string().contains("reservations"), "{err}");
+        assert!(err.to_string().contains("guarantee"), "{err}");
+
+        // Reserve overflow (usize::MAX each) must not wrap past the
+        // check.
+        let wrap = vec![
+            spec("a", 4, 22).with_qos(usize::MAX, 1.0),
+            spec("b", 4, 23).with_qos(usize::MAX, 1.0),
+        ];
+        assert!(MultiModelServer::new(wrap, cfg.clone()).is_err());
+
+        // Bad admission weights are rejected, naming the model.
+        for w in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let bad = vec![spec("a", 4, 24), spec("b", 4, 25).with_qos(0, w)];
+            let err = MultiModelServer::new(bad, cfg.clone()).unwrap_err();
+            assert!(err.to_string().contains("weight"), "w={w}: {err}");
+            assert!(err.to_string().contains("\"b\""), "w={w}: {err}");
+        }
+
+        // A legal reservation constructs and is visible per model.
+        let ok = vec![
+            spec("latency", 4, 26).with_qos(budget / 4, 3.0),
+            spec("batch", 4, 27),
+        ];
+        let multi = MultiModelServer::new(ok, cfg).unwrap();
+        let q0 = multi.model_counters(0);
+        assert_eq!(q0.reserved_bytes, budget / 4);
+        assert_eq!(q0.weight, 3.0);
+        let q1 = multi.model_counters(1);
+        assert_eq!(q1.reserved_bytes, 0);
+        assert_eq!(q1.weight, 1.0);
+        assert_eq!(multi.ledger().counters().reserved_bytes, budget / 4);
     }
 
     #[test]
@@ -416,5 +527,61 @@ mod tests {
         // Both models moved their own cache counters.
         assert!(multi.engine(0).residency().unwrap().misses > 0);
         assert!(multi.engine(1).residency().unwrap().misses > 0);
+    }
+
+    /// QoS moves *where bytes are resident*, never *what the models
+    /// generate*: the same interleaved load produces bit-identical
+    /// token streams with and without reservations/weights.
+    #[test]
+    fn qos_reservations_never_change_token_streams() {
+        let run = |qos: bool| -> Vec<Vec<(u64, Vec<u32>)>> {
+            let a = spec("alpha", 6, 0x92);
+            let b = spec("beta", 6, 0x93);
+            let budget = total_bytes(&a) + total_bytes(&b);
+            let reserve_a = total_bytes(&a);
+            let specs = if qos {
+                vec![a.with_qos(reserve_a, 4.0), b]
+            } else {
+                vec![a, b]
+            };
+            let mut multi = MultiModelServer::new(
+                specs,
+                MultiModelConfig {
+                    budget_bytes: budget,
+                    ..MultiModelConfig::default()
+                },
+            )
+            .unwrap();
+            for i in 0..3u64 {
+                multi
+                    .engine_mut(0)
+                    .submit(Request::greedy(i, vec![4 + i as u32, 11], 5))
+                    .unwrap();
+                multi
+                    .engine_mut(1)
+                    .submit(Request::greedy(100 + i, vec![2, 8 + i as u32], 5))
+                    .unwrap();
+            }
+            let mut out = vec![Vec::new(), Vec::new()];
+            let mut steps = 0;
+            while multi.has_work() && steps < 10_000 {
+                for mi in 0..2 {
+                    for resp in multi.engine_mut(mi).step().unwrap() {
+                        out[mi].push((resp.id, resp.tokens));
+                    }
+                }
+                steps += 1;
+            }
+            for m in &mut out {
+                m.sort();
+            }
+            let lc = multi.ledger().counters();
+            assert!(lc.peak_used_bytes <= lc.budget_bytes, "{lc:?}");
+            if qos {
+                assert_eq!(multi.model_counters(0).reserved_bytes, reserve_a);
+            }
+            out
+        };
+        assert_eq!(run(false), run(true), "QoS changed a token stream");
     }
 }

@@ -16,7 +16,8 @@
 //!                     [--stream --prefetch-layers K [--elm model.elm]]
 //!                     [--weight-budget-mb M [--elm model.elm | --synthetic N]
 //!                      [--decode-ahead N [--prefetch-workers W]]]
-//! entrollm serve      --elm a.elm --elm b.elm | --model name=path [--model ...]
+//! entrollm serve      --elm a.elm --elm b.elm
+//!                     | --model name=path[,reserve-mb=N][,weight=W] [--model ...]
 //!                     [--port 7433] [--weight-budget-mb M]
 //!                     [--decode-ahead N] [--prefetch-workers W]
 //! entrollm latency    [--params 3.8e9] [--prefill-tokens 512]
@@ -39,7 +40,11 @@
 //! **shared** `--weight-budget-mb` (a hot model steals residency from
 //! a cold one), one worker pool decodes ahead for all of them, and
 //! `{"stats":true}` grows a per-model `models` array plus `ledger_*`
-//! fields. See `docs/SERVING.md`.
+//! fields. Per-model QoS rides on the `--model` value: `--model
+//! name=path,reserve-mb=N,weight=W` guarantees the model `N` MiB of
+//! residency that peers can never reclaim, and lets a higher `weight`
+//! shed hotter lower-weight peers; startup rejects reserves that sum
+//! past the budget. See `docs/SERVING.md`.
 
 use entrollm::bench::{fmt_bytes, fmt_secs};
 use entrollm::cli::Args;
@@ -113,9 +118,11 @@ commands:
                 model larger than the budget via the residency cache,
                 no artifacts needed; --decode-ahead N overlaps fault-in
                 with token compute; repeated --elm (or --model
-                name=path) serves several models from one port behind
-                one shared budget + decode pool, routed by the
-                request's "model" field
+                name=path[,reserve-mb=N][,weight=W]) serves several
+                models from one port behind one shared budget + decode
+                pool, routed by the request's "model" field —
+                reserve-mb guarantees a model residency peers can never
+                reclaim, weight sets shed aggressiveness
   latency       Table II-style latency model for an edge profile,
                 including streaming (layer-ahead) first-token estimates
                 and residency fault-in costs (serial and decode-ahead
@@ -534,11 +541,77 @@ fn serve_with<B: entrollm::coordinator::Backend>(backend: B, port: u16, tag: &st
     Ok(())
 }
 
-/// `serve` hosts several models when `--model name=path` appears (any
-/// count) or `--elm` is repeated; a single `--elm` stays on the
-/// single-model residency path. Bare `--elm` entries are named by file
-/// stem.
-fn multi_model_specs(args: &Args) -> Result<Option<Vec<(String, String)>>> {
+/// Parse one `--model` value: `name=path[,reserve-mb=N][,weight=W]`.
+/// `reserve-mb` is a minimum residency reservation (fractional MiB
+/// allowed, like `--weight-budget-mb`); `weight` is the admission
+/// weight. Both are optional and order-free after the path. Commas
+/// separate options, so a container path containing a comma cannot be
+/// expressed here — the errors point such users at repeated `--elm`,
+/// which takes the path verbatim.
+fn parse_model_flag(raw: &str) -> Result<entrollm::pipeline::ModelFileSpec> {
+    let mut parts = raw.split(',');
+    let head = parts.next().unwrap_or("");
+    let Some((name, path)) = head.split_once('=') else {
+        return Err(Error::InvalidArg(format!(
+            "--model expects name=path[,reserve-mb=N][,weight=W] \
+             (e.g. --model chat=chat.elm,reserve-mb=16,weight=4), got {raw:?}"
+        )));
+    };
+    if name.is_empty() || path.is_empty() {
+        return Err(Error::InvalidArg(format!(
+            "--model expects a non-empty name and path, got {raw:?}"
+        )));
+    }
+    let mut spec = entrollm::pipeline::ModelFileSpec::new(name, path);
+    for part in parts {
+        let Some((key, value)) = part.split_once('=') else {
+            return Err(Error::InvalidArg(format!(
+                "--model option {part:?} must be key=value (reserve-mb=N or \
+                 weight=W), in {raw:?}; paths containing commas cannot be \
+                 passed via --model — use repeated --elm instead"
+            )));
+        };
+        match key {
+            "reserve-mb" => {
+                let mb: f64 = value.parse().map_err(|_| {
+                    Error::InvalidArg(format!(
+                        "--model {name}: cannot parse reserve-mb value {value:?}"
+                    ))
+                })?;
+                if !mb.is_finite() || mb < 0.0 {
+                    return Err(Error::InvalidArg(format!(
+                        "--model {name}: reserve-mb must be a non-negative finite \
+                         number, got {value}"
+                    )));
+                }
+                spec.reserve_bytes = (mb * 1024.0 * 1024.0) as usize;
+            }
+            "weight" => {
+                // Range validation (finite, > 0) happens at coordinator
+                // construction, which names the model in its error.
+                spec.weight = value.parse().map_err(|_| {
+                    Error::InvalidArg(format!(
+                        "--model {name}: cannot parse weight value {value:?}"
+                    ))
+                })?;
+            }
+            other => {
+                return Err(Error::InvalidArg(format!(
+                    "--model {name}: unknown option {other:?} (expected reserve-mb \
+                     or weight; paths containing commas cannot be passed via \
+                     --model — use repeated --elm instead)"
+                )));
+            }
+        }
+    }
+    Ok(spec)
+}
+
+/// `serve` hosts several models when `--model name=path[,qos...]`
+/// appears (any count) or `--elm` is repeated; a single `--elm` stays
+/// on the single-model residency path. Bare `--elm` entries are named
+/// by file stem and carry no reservation.
+fn multi_model_specs(args: &Args) -> Result<Option<Vec<entrollm::pipeline::ModelFileSpec>>> {
     let models = args.all("model");
     let elms = args.all("elm");
     if models.is_empty() && elms.len() < 2 {
@@ -546,17 +619,7 @@ fn multi_model_specs(args: &Args) -> Result<Option<Vec<(String, String)>>> {
     }
     let mut specs = Vec::with_capacity(models.len() + elms.len());
     for m in models {
-        let Some((name, path)) = m.split_once('=') else {
-            return Err(Error::InvalidArg(format!(
-                "--model expects name=path (e.g. --model chat=chat.elm), got {m:?}"
-            )));
-        };
-        if name.is_empty() || path.is_empty() {
-            return Err(Error::InvalidArg(format!(
-                "--model expects a non-empty name and path, got {m:?}"
-            )));
-        }
-        specs.push((name.to_string(), path.to_string()));
+        specs.push(parse_model_flag(m)?);
     }
     for path in elms {
         let name = std::path::Path::new(path)
@@ -564,14 +627,19 @@ fn multi_model_specs(args: &Args) -> Result<Option<Vec<(String, String)>>> {
             .and_then(|s| s.to_str())
             .unwrap_or(path.as_str())
             .to_string();
-        specs.push((name, path.clone()));
+        specs.push(entrollm::pipeline::ModelFileSpec::new(name, path.clone()));
     }
     Ok(Some(specs))
 }
 
 /// Multi-model serving: every named container behind one port, one
-/// shared byte budget, one decode worker pool.
-fn serve_multi_models(args: &Args, specs: Vec<(String, String)>, port: u16) -> Result<()> {
+/// shared byte budget, one decode worker pool — with optional
+/// per-model QoS (residency reservations + admission weights).
+fn serve_multi_models(
+    args: &Args,
+    specs: Vec<entrollm::pipeline::ModelFileSpec>,
+    port: u16,
+) -> Result<()> {
     for conflicting in ["artifacts", "flavor", "synthetic"] {
         if args.flags.contains_key(conflicting) {
             return Err(Error::InvalidArg(format!(
@@ -602,8 +670,18 @@ fn serve_multi_models(args: &Args, specs: Vec<(String, String)>, port: u16) -> R
         multi.pool().workers(),
     );
     for i in 0..multi.n_models() {
+        let q = multi.model_counters(i);
+        let qos = if q.reserved_bytes > 0 || q.weight != 1.0 {
+            format!(
+                " | reserve {} | weight {}",
+                fmt_bytes(q.reserved_bytes),
+                q.weight
+            )
+        } else {
+            String::new()
+        };
         println!(
-            "  model {:<20} {} quantized layers",
+            "  model {:<20} {} quantized layers{qos}",
             multi.name(i),
             multi.engine(i).backend().weights().n_layers(),
         );

@@ -212,14 +212,42 @@ impl Table {
         out
     }
 
-    /// Print markdown to stdout and also save CSV next to the bench
-    /// results (best-effort; directory created on demand).
+    /// Render as a JSON object (`{"title","headers","rows"}`) through
+    /// the real serializer, so commas/quotes in cells stay lossless —
+    /// the machine-readable artifact CI uploads per bench run.
+    pub fn to_json(&self) -> String {
+        use crate::json;
+        json::obj(vec![
+            ("title", json::s(&self.title)),
+            (
+                "headers",
+                json::arr(self.headers.iter().map(|h| json::s(h)).collect()),
+            ),
+            (
+                "rows",
+                json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| json::arr(r.iter().map(|c| json::s(c)).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_json()
+    }
+
+    /// Print markdown to stdout and also save CSV, markdown, and a
+    /// `BENCH_<slug>.json` machine-readable copy next to the bench
+    /// results (best-effort; directory created on demand). CI's
+    /// bench-smoke job uploads `bench_results/` as a workflow
+    /// artifact, so every run's tables survive the runner.
     pub fn emit(&self, slug: &str) {
         println!("{}", self.to_markdown());
         let dir = std::path::Path::new("bench_results");
         if std::fs::create_dir_all(dir).is_ok() {
             let _ = std::fs::write(dir.join(format!("{slug}.csv")), self.to_csv());
             let _ = std::fs::write(dir.join(format!("{slug}.md")), self.to_markdown());
+            let _ = std::fs::write(dir.join(format!("BENCH_{slug}.json")), self.to_json());
         }
     }
 }
@@ -273,5 +301,25 @@ mod tests {
     fn table_rejects_wrong_arity() {
         let mut t = Table::new("Demo", &["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    /// The BENCH_*.json artifact is real JSON: hostile cell content
+    /// (commas, quotes) survives a parse round-trip losslessly.
+    #[test]
+    fn table_json_roundtrips_through_the_parser() {
+        let mut t = Table::new("T, with \"quotes\"", &["col,a", "b"]);
+        t.row(&["1,5".into(), "x\"y".into()]);
+        let v = crate::json::Value::parse(&t.to_json()).unwrap();
+        assert_eq!(
+            v.get("title").unwrap().as_str().unwrap(),
+            "T, with \"quotes\""
+        );
+        let headers = v.get("headers").unwrap().as_array().unwrap().to_vec();
+        assert_eq!(headers[0].as_str().unwrap(), "col,a");
+        let rows = v.get("rows").unwrap().as_array().unwrap().to_vec();
+        assert_eq!(rows.len(), 1);
+        let cells = rows[0].as_array().unwrap();
+        assert_eq!(cells[0].as_str().unwrap(), "1,5");
+        assert_eq!(cells[1].as_str().unwrap(), "x\"y");
     }
 }

@@ -323,23 +323,57 @@ pub fn residency_source(
     }
 }
 
+/// One `--model` entry resolved from the CLI: a named container path
+/// plus its optional per-model QoS knobs (`--model
+/// name=path,reserve-mb=N,weight=W`).
+#[derive(Debug, Clone)]
+pub struct ModelFileSpec {
+    /// Routing name.
+    pub name: String,
+    /// `.elm` container path (opened lazily).
+    pub path: String,
+    /// Minimum residency reservation in bytes (0 = none).
+    pub reserve_bytes: usize,
+    /// Admission weight (1.0 = default).
+    pub weight: f64,
+}
+
+impl ModelFileSpec {
+    /// Spec with no reservation and the default admission weight.
+    pub fn new(name: impl Into<String>, path: impl Into<String>) -> Self {
+        ModelFileSpec {
+            name: name.into(),
+            path: path.into(),
+            reserve_bytes: 0,
+            weight: 1.0,
+        }
+    }
+}
+
 /// Open several ELM containers **lazily** and assemble the multi-model
-/// serving coordinator: one engine per `(name, path)` pair, all
-/// drawing on one shared decoded-byte budget ([`crate::residency::ResidencyLedger`])
-/// and one shared decode worker pool — the `entrollm serve
-/// --model name=path --model ...` (or repeated `--elm`) deploy path.
+/// serving coordinator: one engine per [`ModelFileSpec`], all drawing
+/// on one shared decoded-byte budget
+/// ([`crate::residency::ResidencyLedger`]) and one shared decode
+/// worker pool — the `entrollm serve --model name=path[,reserve-mb=N]
+/// [,weight=W] --model ...` (or repeated `--elm`) deploy path. QoS
+/// validation (reserves must sum within the budget, weights must be
+/// positive and finite) happens in
+/// [`crate::coordinator::MultiModelServer::new`].
 pub fn open_multi_model_server(
-    specs: Vec<(String, String)>,
+    specs: Vec<ModelFileSpec>,
     budget_bytes: usize,
     decode_ahead: usize,
     workers: usize,
 ) -> Result<crate::coordinator::MultiModelServer> {
     let mut model_specs = Vec::with_capacity(specs.len());
-    for (name, path) in specs {
-        model_specs.push(crate::coordinator::ModelSpec {
-            name,
-            source: Arc::new(SegmentSource::open(&path)?),
-        });
+    for spec in specs {
+        model_specs.push(
+            crate::coordinator::ModelSpec::new(
+                spec.name,
+                Arc::new(SegmentSource::open(&spec.path)?),
+            )
+            .with_qos(spec.reserve_bytes, spec.weight),
+        );
     }
     let cfg = crate::coordinator::MultiModelConfig {
         budget_bytes,
@@ -498,17 +532,26 @@ mod tests {
             budget += elm.n_params().max(3 * largest);
             let path = dir.join(format!("{name}.elm"));
             elm.save(&path).unwrap();
-            paths.push((name.to_string(), path.to_str().unwrap().to_string()));
+            paths.push(ModelFileSpec::new(name, path.to_str().unwrap()));
         }
+        // Give the first model a reservation + weight through the file
+        // spec: it must land in the ledger.
+        paths[0].reserve_bytes = budget / 8;
+        paths[0].weight = 2.0;
         let multi = open_multi_model_server(paths, budget, 2, 1).unwrap();
         assert_eq!(multi.n_models(), 2);
         assert_eq!(multi.name(0), "a");
         assert_eq!(multi.resolve(Some("b")).unwrap(), 1);
         assert!(multi.resolve(Some("zzz")).is_err());
         assert_eq!(multi.ledger().counters().budget_bytes, budget);
+        assert_eq!(multi.model_counters(0).reserved_bytes, budget / 8);
+        assert_eq!(multi.model_counters(0).weight, 2.0);
         // A missing container path fails cleanly.
         assert!(open_multi_model_server(
-            vec![("x".into(), dir.join("absent.elm").to_str().unwrap().into())],
+            vec![ModelFileSpec::new(
+                "x",
+                dir.join("absent.elm").to_str().unwrap()
+            )],
             budget,
             2,
             1

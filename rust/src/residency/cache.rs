@@ -137,14 +137,39 @@ impl WeightCache {
     /// multi-model serving shape). The cache registers itself as one
     /// ledger slot; eviction still only removes *this* cache's entries
     /// — cross-model reclaim is driven by
-    /// [`super::PrefetchShared`]'s peer-shed path.
+    /// [`super::PrefetchShared`]'s peer-shed path. No reservation, the
+    /// default admission weight — see [`WeightCache::with_ledger_qos`].
     pub fn with_ledger(
         source: Arc<SegmentSource>,
         ledger: Arc<ResidencyLedger>,
         policy: Policy,
     ) -> Result<Self> {
+        Self::with_ledger_qos(source, ledger, policy, 0, 1.0)
+    }
+
+    /// [`WeightCache::with_ledger`] with per-model QoS: a minimum
+    /// residency `reserve` (bytes peers can never reclaim from this
+    /// cache, and headroom the ledger holds committed for it even when
+    /// unfilled) and an admission `weight` (how aggressively this
+    /// model may shed peers above everyone's reserve — see
+    /// [`ResidencyLedger`]'s module docs). The reservation must fit
+    /// the global budget on its own; the coordinator additionally
+    /// validates that the *sum* of every model's reserve fits.
+    pub fn with_ledger_qos(
+        source: Arc<SegmentSource>,
+        ledger: Arc<ResidencyLedger>,
+        policy: Policy,
+        reserve: usize,
+        weight: f64,
+    ) -> Result<Self> {
         let budget = ledger.budget();
-        let slot = ledger.register();
+        if reserve > budget {
+            return Err(Error::InvalidArg(format!(
+                "residency reservation {reserve} B exceeds the global weight \
+                 budget {budget} B"
+            )));
+        }
+        let slot = ledger.register_with(reserve, weight);
         Self::build(source, budget, policy, Some((ledger, slot)))
     }
 
@@ -334,6 +359,17 @@ impl WeightCache {
     /// Pick an eviction victim under the policy, skipping pinned
     /// entries. `None` when every resident entry is pinned.
     fn victim(&self) -> Option<usize> {
+        self.victim_within(usize::MAX)
+    }
+
+    /// [`WeightCache::victim`] restricted to entries of at most `cap`
+    /// decoded bytes — the reserve-floor-aware variant the peer-shed
+    /// path uses: when the policy's first choice is too large to evict
+    /// without breaching the reservation, a smaller entry later in
+    /// policy order is still a legal victim (layer sizes vary in real
+    /// models, so "first victim too big" must not strand the rest of
+    /// the reclaimable bytes).
+    fn victim_within(&self, cap: usize) -> Option<usize> {
         let live = |(i, e): (usize, &Option<Entry>)| e.as_ref().map(|e| (i, e));
         match self.policy {
             Policy::Lru => self
@@ -341,7 +377,7 @@ impl WeightCache {
                 .iter()
                 .enumerate()
                 .filter_map(live)
-                .filter(|(_, e)| !e.pinned)
+                .filter(|(_, e)| !e.pinned && e.bytes <= cap)
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(i, _)| i),
             Policy::SegmentedLru => {
@@ -350,7 +386,7 @@ impl WeightCache {
                     .iter()
                     .enumerate()
                     .filter_map(live)
-                    .filter(|(_, e)| !e.pinned && !e.protected)
+                    .filter(|(_, e)| !e.pinned && !e.protected && e.bytes <= cap)
                     .max_by_key(|(_, e)| e.inserted)
                     .map(|(i, _)| i);
                 probation.or_else(|| {
@@ -358,7 +394,7 @@ impl WeightCache {
                         .iter()
                         .enumerate()
                         .filter_map(live)
-                        .filter(|(_, e)| !e.pinned && e.protected)
+                        .filter(|(_, e)| !e.pinned && e.protected && e.bytes <= cap)
                         .min_by_key(|(_, e)| e.last_used)
                         .map(|(i, _)| i)
                 })
@@ -415,11 +451,34 @@ impl WeightCache {
     /// decoded bytes have been released, or nothing evictable remains.
     /// Returns the bytes actually freed. This is the **peer-shed**
     /// entry point of shared-ledger serving: a hot model reclaiming
-    /// global budget calls it on a colder model's cache.
+    /// global budget calls it on a colder model's cache — which is why
+    /// it honors this model's own **minimum residency reservation**: an
+    /// eviction that would drop resident bytes below the reserve is
+    /// refused, so peers can pressure this cache down *to* its
+    /// guarantee but never through it. (The cache's own insert path
+    /// evicts through its internal `reserve` step instead and is free
+    /// to dip below its reserve — the guarantee protects a model from
+    /// its peers, not from itself.) Pinned entries are skipped as
+    /// always.
     pub fn shed(&mut self, bytes: usize) -> usize {
+        let floor = self
+            .ledger
+            .as_ref()
+            .map(|(ledger, slot)| ledger.reserve_of(*slot))
+            .unwrap_or(0);
         let mut freed = 0usize;
         while freed < bytes {
-            let Some(victim) = self.victim() else { break };
+            // Only entries small enough to leave the reservation
+            // intact are admissible victims; with unequal layer sizes
+            // the policy's first choice may be too large while a
+            // smaller entry is still legally evictable.
+            let reclaimable = self.counters.resident_bytes.saturating_sub(floor);
+            if reclaimable == 0 {
+                break;
+            }
+            let Some(victim) = self.victim_within(reclaimable) else {
+                break;
+            };
             match self.entries[victim].take() {
                 Some(evicted) => {
                     self.release_bytes(evicted.bytes);
@@ -755,6 +814,98 @@ mod tests {
         // Inserts and lookups moved no hit/miss counters.
         let c = cache.counters();
         assert_eq!((c.hits, c.misses), (0, 0));
+    }
+
+    /// The QoS floor at the cache level: a peer shed can pressure a
+    /// reserved cache down **to** its reservation, never through it —
+    /// while an unreserved cache sheds to empty as before.
+    #[test]
+    fn shed_never_drops_a_reserved_cache_below_its_reserve() {
+        let ledger = ResidencyLedger::new(6 * 512);
+        let mut reserved = WeightCache::with_ledger_qos(
+            equal_source(6, 0x70),
+            Arc::clone(&ledger),
+            Policy::Lru,
+            2 * 512,
+            1.0,
+        )
+        .unwrap();
+        for i in 0..4 {
+            reserved.get(i).unwrap();
+        }
+        assert_eq!(reserved.counters().resident_bytes, 4 * 512);
+        // A peer demanding the world reclaims only down to the reserve.
+        let freed = reserved.shed(usize::MAX);
+        assert_eq!(freed, 2 * 512);
+        assert_eq!(reserved.counters().resident_bytes, 2 * 512);
+        assert_eq!(ledger.used_by(0), 2 * 512);
+        // At the floor, further sheds free nothing.
+        assert_eq!(reserved.shed(1), 0);
+        assert_eq!(reserved.counters().resident_bytes, 2 * 512);
+        // The cache's own insert path is NOT floor-bound: faulting new
+        // layers may still evict its own entries freely.
+        reserved.get(4).unwrap();
+        assert!(reserved.counters().resident_bytes >= 2 * 512);
+
+        // Unreserved: shed drains to empty, exactly the PR 4 behavior.
+        let ledger2 = ResidencyLedger::new(6 * 512);
+        let mut plain =
+            WeightCache::with_ledger(equal_source(6, 0x71), ledger2, Policy::Lru).unwrap();
+        for i in 0..3 {
+            plain.get(i).unwrap();
+        }
+        assert_eq!(plain.shed(usize::MAX), 3 * 512);
+        assert_eq!(plain.counters().resident_bytes, 0);
+    }
+
+    /// Unequal layer sizes: when the policy's first victim is too
+    /// large to evict without breaching the reserve, a smaller entry
+    /// later in policy order must be shed instead of stranding the
+    /// reclaimable bytes.
+    #[test]
+    fn shed_skips_oversized_policy_victim_for_a_smaller_admissible_one() {
+        let layers: Vec<(String, crate::tensor::TensorF32)> = [600usize, 100]
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| {
+                let mut rng = Rng::new(0x80 + i as u64);
+                (
+                    format!("l{i}"),
+                    crate::tensor::TensorF32::new(vec![n], rng.gaussian_vec(n, 0.0, 0.05))
+                        .unwrap(),
+                )
+            })
+            .collect();
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let src = Arc::new(SegmentSource::from_model(Arc::new(model)));
+        let ledger = ResidencyLedger::new(4096);
+        let mut cache =
+            WeightCache::with_ledger_qos(src, Arc::clone(&ledger), Policy::Lru, 150, 1.0).unwrap();
+        cache.get(0).unwrap();
+        cache.get(1).unwrap(); // LRU victim is now layer 0 (600 B)
+        assert_eq!(cache.counters().resident_bytes, 700);
+        // Evicting the 600 B policy victim would leave 100 B, under
+        // the 150 B floor — so the 100 B entry is the legal victim.
+        let freed = cache.shed(usize::MAX);
+        assert_eq!(freed, 100, "the smaller admissible entry must shed");
+        assert!(cache.is_resident(0));
+        assert!(!cache.is_resident(1));
+        assert_eq!(cache.counters().resident_bytes, 600);
+        assert_eq!(ledger.used_by(0), 600);
+    }
+
+    #[test]
+    fn reservation_larger_than_the_global_budget_is_rejected() {
+        let ledger = ResidencyLedger::new(1024);
+        let err = WeightCache::with_ledger_qos(
+            equal_source(2, 0x72),
+            ledger,
+            Policy::Lru,
+            1025,
+            1.0,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("reservation"), "{err}");
     }
 
     #[test]

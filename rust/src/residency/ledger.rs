@@ -12,12 +12,34 @@
 //! hot model steal residency from a cold one instead of thrashing
 //! inside a fixed static partition.
 //!
+//! ## Per-model QoS
+//!
+//! Two knobs, both fixed at registration, bound how hard models can
+//! lean on each other:
+//!
+//! * a **minimum residency reservation** (`reserve` bytes): headroom
+//!   the model is always entitled to. Peers can never reclaim a model
+//!   below its reserve, and an *unfilled* reserve counts as committed
+//!   budget in every peer's admission check — so a latency-critical
+//!   model that went briefly idle still faults straight back into its
+//!   guaranteed bytes instead of queueing behind a batch peer's
+//!   residency.
+//! * an **admission weight** (`weight`): how aggressively the model
+//!   may shed peers *above* everyone's reserve. Equal weights keep the
+//!   PR 4 rule — only strictly-colder peers are victims, so two
+//!   equally hot models never ping-pong each other's entries. A
+//!   strictly higher weight additionally lets a model shed
+//!   hotter-or-equal lower-weight peers (the asymmetry keeps it
+//!   ping-pong-free: the lower-weight peer can never shed back unless
+//!   the high-weight model is strictly colder).
+//!
 //! Locking: the ledger mutex is a **leaf** lock. Cache/prefetch code
 //! calls into the ledger while holding a per-model state lock, so the
 //! ledger must never call back into any cache — and it cannot: it only
 //! does arithmetic. Poisoning is recovered, not propagated: every
 //! critical section leaves the counters consistent, so a panicked
-//! peer thread must not take the whole serving pool down with it.
+//! peer thread must not take the whole serving pool down with it —
+//! and reservations, being plain fields, survive the recovery.
 
 use std::sync::{Arc, Mutex, PoisonError};
 
@@ -34,6 +56,26 @@ pub struct LedgerCounters {
     pub peak_used_bytes: usize,
     /// Registered models.
     pub models: usize,
+    /// Sum of every model's minimum residency reservation.
+    pub reserved_bytes: usize,
+}
+
+/// Per-model QoS snapshot — surfaced as the `reserved_bytes` /
+/// `qos_weight` / `shed_from_peers` / `shed_by_peers` fields of each
+/// entry in the multi-model `{"stats":true}` `models` array.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct ModelQosCounters {
+    /// Configured minimum residency reservation (bytes peers can never
+    /// reclaim).
+    pub reserved_bytes: usize,
+    /// Configured admission weight.
+    pub weight: f64,
+    /// Decoded bytes currently charged to this model.
+    pub used_bytes: usize,
+    /// Bytes this model reclaimed from peers (peer-shed path).
+    pub shed_from_peers: u64,
+    /// Bytes peers reclaimed from this model.
+    pub shed_by_peers: u64,
 }
 
 struct ModelUsage {
@@ -41,6 +83,16 @@ struct ModelUsage {
     used: usize,
     /// Ledger clock value of this model's most recent access.
     last_access: u64,
+    /// Minimum residency reservation: peers can never reclaim this
+    /// model below `reserve`, and the unfilled part counts as
+    /// committed in every peer's admission check.
+    reserve: usize,
+    /// Admission weight (victim-selection aggressiveness).
+    weight: f64,
+    /// Bytes this model reclaimed from peers.
+    shed_from_peers: u64,
+    /// Bytes peers reclaimed from this model.
+    shed_by_peers: u64,
 }
 
 struct Inner {
@@ -52,10 +104,25 @@ struct Inner {
     models: Vec<ModelUsage>,
 }
 
+impl Inner {
+    /// Bytes every *other* model than `slot` is entitled to but has
+    /// not yet used — committed headroom a charge by `slot` must leave
+    /// free, so a reserved peer can always fault back into its
+    /// guarantee.
+    fn peer_unfilled_reserves(&self, slot: usize) -> usize {
+        self.models
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != slot)
+            .map(|(_, m)| m.reserve.saturating_sub(m.used))
+            .fold(0usize, usize::saturating_add)
+    }
+}
+
 /// One global decoded-byte budget shared by several weight caches.
 ///
-/// See the [module docs](self) for the role it plays and the locking
-/// discipline. Constructed once per serving pool
+/// See the [module docs](self) for the role it plays, the QoS knobs,
+/// and the locking discipline. Constructed once per serving pool
 /// ([`ResidencyLedger::new`]), then handed to each cache via
 /// [`super::WeightCache::with_ledger`].
 pub struct ResidencyLedger {
@@ -85,23 +152,50 @@ impl ResidencyLedger {
         self.lock().budget
     }
 
-    /// Register one model; returns its ledger slot.
+    /// Register one model with no reservation and the default weight;
+    /// returns its ledger slot.
     pub fn register(&self) -> usize {
+        self.register_with(0, 1.0)
+    }
+
+    /// Register one model with a minimum residency `reserve` (bytes)
+    /// and an admission `weight`; returns its ledger slot. Non-finite
+    /// or non-positive weights are clamped to the default 1.0 — config
+    /// validation belongs to the coordinator
+    /// ([`crate::coordinator::MultiModelServer::new`] rejects them
+    /// loudly); the ledger never panics over a knob.
+    pub fn register_with(&self, reserve: usize, weight: f64) -> usize {
+        let weight = if weight.is_finite() && weight > 0.0 {
+            weight
+        } else {
+            1.0
+        };
         let mut st = self.lock();
         st.models.push(ModelUsage {
             used: 0,
             last_access: 0,
+            reserve,
+            weight,
+            shed_from_peers: 0,
+            shed_by_peers: 0,
         });
         st.models.len() - 1
     }
 
     /// Atomically charge `bytes` to `slot` **iff** they fit the global
-    /// budget; returns whether the charge was made. Check-and-charge is
-    /// one critical section, so concurrent inserts from different
-    /// models can never both pass a room check and overshoot together.
+    /// budget *minus every peer's unfilled reservation*; returns
+    /// whether the charge was made. Check-and-charge is one critical
+    /// section, so concurrent inserts from different models can never
+    /// both pass a room check and overshoot together — and a reserved
+    /// peer's guaranteed headroom can never be claimed out from under
+    /// it mid-fault.
     pub(crate) fn try_charge(&self, slot: usize, bytes: usize) -> bool {
         let mut st = self.lock();
-        if st.used + bytes > st.budget {
+        // Saturating throughout: an absurd reserve (the coordinator
+        // validates, but the ledger is pub API) must refuse charges,
+        // never wrap into admitting them.
+        let committed = st.used.saturating_add(st.peer_unfilled_reserves(slot));
+        if committed.saturating_add(bytes) > st.budget {
             return false;
         }
         st.used += bytes;
@@ -126,41 +220,97 @@ impl ResidencyLedger {
         st.models[slot].last_access = clock;
     }
 
-    /// Would charging `extra` more bytes exceed the global budget?
-    pub fn needs_room(&self, extra: usize) -> bool {
+    /// Would charging `extra` more bytes to `slot` exceed the global
+    /// budget (counting every peer's unfilled reservation as already
+    /// committed)?
+    pub fn needs_room(&self, slot: usize, extra: usize) -> bool {
         let st = self.lock();
-        st.used + extra > st.budget
+        st.used
+            .saturating_add(st.peer_unfilled_reserves(slot))
+            .saturating_add(extra)
+            > st.budget
     }
 
-    /// How many bytes over budget a charge of `extra` would land (0
-    /// when it fits).
-    pub(crate) fn shortfall(&self, extra: usize) -> usize {
+    /// How many bytes over budget a charge of `extra` to `slot` would
+    /// land, counting peers' unfilled reservations (0 when it fits).
+    pub(crate) fn shortfall(&self, slot: usize, extra: usize) -> usize {
         let st = self.lock();
-        (st.used + extra).saturating_sub(st.budget)
+        st.used
+            .saturating_add(st.peer_unfilled_reserves(slot))
+            .saturating_add(extra)
+            .saturating_sub(st.budget)
     }
 
-    /// Slots of models **colder** than `slot` (strictly older
-    /// last-access) that currently hold bytes, coldest first — the
-    /// peer-shed victim order. Never returns `slot` itself, and never
-    /// returns a hotter-or-equal peer, so two equally hot models evict
-    /// their own entries instead of ping-ponging each other's.
+    /// Peer-shed victim order for `slot`: peers holding **reclaimable**
+    /// bytes (used above their own reserve) that are either *strictly
+    /// colder* (older last-access — the PR 4 rule, weight ties), or —
+    /// when `slot`'s admission weight is strictly higher — any
+    /// lower-weight holder regardless of heat. Strictly-colder victims
+    /// come first (coldest first), then the weight-outranked ones
+    /// (coldest first). Never returns `slot` itself, never a peer at
+    /// or below its reserve, and never a hotter-or-equal peer of equal
+    /// or higher weight — so equally weighted, equally hot models
+    /// evict their own entries instead of ping-ponging each other's.
     pub(crate) fn colder_peers(&self, slot: usize) -> Vec<usize> {
         let st = self.lock();
         let mine = st.models[slot].last_access;
-        let mut peers: Vec<(u64, usize)> = st
-            .models
-            .iter()
-            .enumerate()
-            .filter(|&(i, m)| i != slot && m.used > 0 && m.last_access < mine)
-            .map(|(i, m)| (m.last_access, i))
-            .collect();
-        peers.sort_unstable();
-        peers.into_iter().map(|(_, i)| i).collect()
+        let my_weight = st.models[slot].weight;
+        let mut colder: Vec<(u64, usize)> = Vec::new();
+        let mut outranked: Vec<(u64, usize)> = Vec::new();
+        for (i, m) in st.models.iter().enumerate() {
+            if i == slot || m.used <= m.reserve {
+                continue;
+            }
+            if m.last_access < mine {
+                colder.push((m.last_access, i));
+            } else if my_weight > m.weight {
+                outranked.push((m.last_access, i));
+            }
+        }
+        colder.sort_unstable();
+        outranked.sort_unstable();
+        colder
+            .into_iter()
+            .chain(outranked)
+            .map(|(_, i)| i)
+            .collect()
     }
 
     /// Decoded bytes currently charged to `slot`.
     pub fn used_by(&self, slot: usize) -> usize {
         self.lock().models[slot].used
+    }
+
+    /// `slot`'s configured minimum residency reservation.
+    pub fn reserve_of(&self, slot: usize) -> usize {
+        self.lock().models[slot].reserve
+    }
+
+    /// `slot`'s configured admission weight.
+    pub fn weight_of(&self, slot: usize) -> f64 {
+        self.lock().models[slot].weight
+    }
+
+    /// Record a completed peer shed: `requester` reclaimed `bytes`
+    /// from `victim` (QoS observability; the byte accounting itself
+    /// moved through [`ResidencyLedger::release`] during the shed).
+    pub(crate) fn note_shed(&self, victim: usize, requester: usize, bytes: usize) {
+        let mut st = self.lock();
+        st.models[victim].shed_by_peers += bytes as u64;
+        st.models[requester].shed_from_peers += bytes as u64;
+    }
+
+    /// Per-model QoS counter snapshot.
+    pub fn model_counters(&self, slot: usize) -> ModelQosCounters {
+        let st = self.lock();
+        let m = &st.models[slot];
+        ModelQosCounters {
+            reserved_bytes: m.reserve,
+            weight: m.weight,
+            used_bytes: m.used,
+            shed_from_peers: m.shed_from_peers,
+            shed_by_peers: m.shed_by_peers,
+        }
     }
 
     /// Global counter snapshot.
@@ -171,6 +321,7 @@ impl ResidencyLedger {
             used_bytes: st.used,
             peak_used_bytes: st.peak,
             models: st.models.len(),
+            reserved_bytes: st.models.iter().map(|m| m.reserve).sum(),
         }
     }
 }
@@ -193,15 +344,52 @@ mod tests {
         assert_eq!(c.used_bytes, 900);
         assert_eq!(c.peak_used_bytes, 900);
         assert_eq!(c.models, 2);
-        assert!(!ledger.needs_room(100));
-        assert!(ledger.needs_room(101));
-        assert_eq!(ledger.shortfall(301), 201);
+        assert!(!ledger.needs_room(a, 100));
+        assert!(ledger.needs_room(a, 101));
+        assert_eq!(ledger.shortfall(a, 301), 201);
         // A charge that would overshoot is refused atomically.
         assert!(!ledger.try_charge(a, 101));
         assert_eq!(ledger.counters().used_bytes, 900, "refused charge is free");
         ledger.release(b, 500);
         assert_eq!(ledger.counters().used_bytes, 400);
         assert_eq!(ledger.counters().peak_used_bytes, 900, "peak sticks");
+    }
+
+    /// Boundary satellite: a charge landing *exactly* at the budget is
+    /// admitted; one byte more is refused.
+    #[test]
+    fn try_charge_exactly_at_budget_is_admitted() {
+        let ledger = ResidencyLedger::new(1000);
+        let a = ledger.register();
+        assert!(ledger.try_charge(a, 1000), "exact fill must be admitted");
+        assert_eq!(ledger.counters().used_bytes, 1000);
+        assert!(!ledger.try_charge(a, 1), "one byte over must be refused");
+        assert!(!ledger.needs_room(a, 0), "exactly full is not over");
+        assert!(ledger.needs_room(a, 1));
+        assert_eq!(ledger.shortfall(a, 0), 0);
+    }
+
+    /// Over-release satellite: releasing more bytes than a slot has
+    /// charged saturates both counters at zero instead of underflowing
+    /// (a double-release in a recovering shed path must not wedge the
+    /// ledger into a bogus near-usize::MAX "usage").
+    #[test]
+    fn release_of_more_than_charged_saturates_at_zero() {
+        let ledger = ResidencyLedger::new(1000);
+        let a = ledger.register();
+        let b = ledger.register();
+        assert!(ledger.try_charge(a, 100));
+        assert!(ledger.try_charge(b, 200));
+        ledger.release(a, 500); // 400 more than a ever held
+        assert_eq!(ledger.used_by(a), 0);
+        // The global counter saturates too (it cannot go below zero
+        // even though b still holds 200 — the per-slot view stays
+        // truthful and the next charge re-syncs the peak).
+        assert!(ledger.counters().used_bytes <= 200);
+        assert_eq!(ledger.used_by(b), 200);
+        // The ledger still admits new work afterwards.
+        assert!(ledger.try_charge(a, 300));
+        assert_eq!(ledger.used_by(a), 300);
     }
 
     #[test]
@@ -233,5 +421,142 @@ mod tests {
         assert!(ledger.try_charge(b, 50));
         ledger.touch(a);
         assert_eq!(ledger.colder_peers(a), vec![b]);
+    }
+
+    /// An unfilled reservation counts as committed in every *peer's*
+    /// admission check — but not in the owner's own.
+    #[test]
+    fn unfilled_reserve_blocks_peers_but_not_its_owner() {
+        let ledger = ResidencyLedger::new(1000);
+        let latency = ledger.register_with(600, 1.0);
+        let batch = ledger.register();
+        // The batch model sees only 400 B of headroom even though the
+        // pool is empty: the latency model's reserve is committed.
+        assert!(!ledger.try_charge(batch, 401));
+        assert!(ledger.needs_room(batch, 401));
+        assert_eq!(ledger.shortfall(batch, 401), 1);
+        assert!(ledger.try_charge(batch, 400));
+        // The latency model can always fill its own reserve...
+        assert!(ledger.try_charge(latency, 600));
+        // ...and once filled, the commitment is spent: the ledger is
+        // exactly full.
+        assert_eq!(ledger.counters().used_bytes, 1000);
+        assert!(!ledger.try_charge(batch, 1));
+        // Releasing latency bytes re-arms the reservation: batch still
+        // cannot take the freed headroom.
+        ledger.release(latency, 200);
+        assert!(!ledger.try_charge(batch, 1));
+        assert!(ledger.try_charge(latency, 200));
+        assert_eq!(ledger.counters().reserved_bytes, 600);
+    }
+
+    /// Satellite: when every peer sits at (or below) its reserve there
+    /// is nothing reclaimable — `colder_peers` must return empty so
+    /// the shed loop terminates immediately instead of spinning over
+    /// un-sheddable victims.
+    #[test]
+    fn colder_peers_is_empty_when_all_peers_are_at_reserve() {
+        let ledger = ResidencyLedger::new(1000);
+        let a = ledger.register();
+        let b = ledger.register_with(300, 1.0);
+        let c = ledger.register_with(200, 1.0);
+        // Both peers exactly at their reserves, both colder than a.
+        assert!(ledger.try_charge(b, 300));
+        assert!(ledger.try_charge(c, 150)); // below reserve
+        ledger.touch(a);
+        assert_eq!(
+            ledger.colder_peers(a),
+            Vec::<usize>::new(),
+            "peers at/below reserve hold nothing reclaimable"
+        );
+        // One byte above the reserve and the peer is a victim again.
+        assert!(ledger.try_charge(b, 1));
+        assert_eq!(ledger.colder_peers(a), vec![b]);
+    }
+
+    /// A strictly higher admission weight may shed hotter lower-weight
+    /// holders; equal weights keep the strictly-colder-only rule.
+    #[test]
+    fn higher_weight_outranks_hotter_lower_weight_peers() {
+        let ledger = ResidencyLedger::new(1000);
+        let latency = ledger.register_with(0, 4.0);
+        let batch = ledger.register_with(0, 1.0);
+        assert!(ledger.try_charge(latency, 100));
+        assert!(ledger.try_charge(batch, 100));
+        ledger.touch(latency);
+        ledger.touch(batch); // batch is now strictly hotter
+        // Weight 4 sheds the hotter weight-1 peer anyway...
+        assert_eq!(ledger.colder_peers(latency), vec![batch]);
+        // ...but never the other way around (batch would need latency
+        // to be strictly colder, and it is).
+        assert_eq!(ledger.colder_peers(batch), vec![latency]);
+        ledger.touch(latency); // latency hottest again
+        assert_eq!(ledger.colder_peers(batch), Vec::<usize>::new());
+        // Strictly-colder victims come before weight-outranked ones.
+        let idle = ledger.register_with(0, 2.0);
+        assert!(ledger.try_charge(idle, 50));
+        ledger.touch(batch);
+        // For latency (hot, weight 4): idle (untouched, lower weight)
+        // is strictly colder; batch (hotter than idle, weight 1) is
+        // colder than latency too. Coldest first.
+        assert_eq!(ledger.colder_peers(latency), vec![idle, batch]);
+    }
+
+    /// Bad weights are clamped at registration, never panicked over.
+    #[test]
+    fn non_finite_or_non_positive_weights_fall_back_to_default() {
+        let ledger = ResidencyLedger::new(100);
+        for w in [f64::NAN, f64::INFINITY, 0.0, -3.0] {
+            let slot = ledger.register_with(0, w);
+            assert_eq!(ledger.weight_of(slot), 1.0, "weight {w} must clamp");
+        }
+    }
+
+    /// Shed bookkeeping: `note_shed` moves both directional counters.
+    #[test]
+    fn note_shed_tracks_both_directions() {
+        let ledger = ResidencyLedger::new(1000);
+        let a = ledger.register();
+        let b = ledger.register();
+        ledger.note_shed(b, a, 300);
+        ledger.note_shed(b, a, 200);
+        let qa = ledger.model_counters(a);
+        let qb = ledger.model_counters(b);
+        assert_eq!(qa.shed_from_peers, 500);
+        assert_eq!(qa.shed_by_peers, 0);
+        assert_eq!(qb.shed_by_peers, 500);
+        assert_eq!(qb.shed_from_peers, 0);
+    }
+
+    /// Satellite: reservations (and all QoS state) survive a
+    /// poisoned-lock recovery — a panicked thread holding the ledger
+    /// mutex must not erase anyone's guarantee.
+    #[test]
+    fn reservations_survive_poisoned_lock_recovery() {
+        let ledger = ResidencyLedger::new(1000);
+        let latency = ledger.register_with(600, 2.0);
+        let batch = ledger.register();
+        assert!(ledger.try_charge(latency, 400));
+        assert!(ledger.try_charge(batch, 100));
+
+        // Poison the mutex: a thread panics while holding the guard.
+        let arc = Arc::clone(&ledger);
+        let t = std::thread::spawn(move || {
+            let _guard = arc.inner.lock().unwrap();
+            panic!("holder bug");
+        });
+        assert!(t.join().is_err(), "the panic must surface on its thread");
+        assert!(ledger.inner.is_poisoned(), "lock genuinely poisoned");
+
+        // Every accessor recovers, and the QoS state is intact.
+        assert_eq!(ledger.reserve_of(latency), 600);
+        assert_eq!(ledger.weight_of(latency), 2.0);
+        assert_eq!(ledger.used_by(latency), 400);
+        assert_eq!(ledger.used_by(batch), 100);
+        // The reservation still constrains the batch peer: 600 - 400
+        // unfilled reserve leaves 1000 - 500 - 200 = 300 of headroom.
+        assert!(!ledger.try_charge(batch, 301));
+        assert!(ledger.try_charge(batch, 300));
+        assert_eq!(ledger.counters().reserved_bytes, 600);
     }
 }

@@ -97,7 +97,7 @@ pub mod prefetch;
 mod serve;
 
 pub use cache::{CacheCounters, Policy, WeightCache};
-pub use ledger::{LedgerCounters, ResidencyLedger};
+pub use ledger::{LedgerCounters, ModelQosCounters, ResidencyLedger};
 pub use prefetch::{
     Job, PrefetchConfig, PrefetchCounters, PrefetchPool, PrefetchShared,
     PrefetchingDigestBackend, PrefetchingWeightSet, TestScheduler,

@@ -247,27 +247,36 @@ impl PrefetchShared {
     }
 
     /// Make global headroom for `incoming` decoded bytes by shedding
-    /// **strictly colder** peers, coldest first. Must be called with no
-    /// state lock held (peer shedding takes the peer's lock); a no-op
-    /// outside shared-ledger pools, when the ledger already has room,
-    /// or when every peer is hotter — in which case the insert path
-    /// falls back to evicting this engine's own entries.
+    /// peers in the ledger's QoS victim order — strictly colder peers
+    /// coldest-first, then (for a higher admission weight) hotter
+    /// lower-weight holders. Every victim sheds only down to its own
+    /// minimum residency reservation (the peer's cache enforces the
+    /// floor), and completed sheds move the per-model
+    /// `shed_from_peers`/`shed_by_peers` counters. Must be called with
+    /// no state lock held (peer shedding takes the peer's lock); a
+    /// no-op outside shared-ledger pools, when the ledger already has
+    /// room, or when no peer holds reclaimable bytes — in which case
+    /// the insert path falls back to evicting this engine's own
+    /// entries.
     fn reclaim_from_peers(&self, incoming: usize) {
         let Some((ledger, me)) = &self.ledger else {
             return;
         };
-        if !ledger.needs_room(incoming) {
+        if !ledger.needs_room(*me, incoming) {
             return;
         }
         let Some(peers) = self.peers.get() else {
             return;
         };
         for slot in ledger.colder_peers(*me) {
-            if !ledger.needs_room(incoming) {
+            if !ledger.needs_room(*me, incoming) {
                 break;
             }
             if let Some(peer) = peers.get(slot).and_then(|w| w.upgrade()) {
-                peer.shed(ledger.shortfall(incoming));
+                let freed = peer.shed(ledger.shortfall(*me, incoming));
+                if freed > 0 {
+                    ledger.note_shed(slot, *me, freed);
+                }
             }
         }
     }
@@ -753,9 +762,28 @@ impl PrefetchingWeightSet {
         f32_rest: Vec<(String, TensorF32)>,
         cfg: PrefetchConfig,
     ) -> Result<Self> {
+        Self::with_ledger_qos(source, ledger, f32_rest, cfg, 0, 1.0)
+    }
+
+    /// [`PrefetchingWeightSet::with_ledger`] with per-model QoS: a
+    /// minimum residency `reserve` (bytes peers can never reclaim, and
+    /// committed headroom even while unfilled) and an admission
+    /// `weight` (shed aggressiveness above everyone's reserve) — the
+    /// knobs behind `--model name=path,reserve-mb=N,weight=W`. The
+    /// coordinator validates that the *sum* of every member's reserve
+    /// fits the global budget; this constructor checks only its own.
+    pub fn with_ledger_qos(
+        source: Arc<SegmentSource>,
+        ledger: Arc<ResidencyLedger>,
+        f32_rest: Vec<(String, TensorF32)>,
+        cfg: PrefetchConfig,
+        reserve: usize,
+        weight: f64,
+    ) -> Result<Self> {
         let window = Self::effective_window(&source, cfg.decode_ahead);
         Self::check_floor(&source, ledger.budget(), window)?;
-        let cache = WeightCache::with_ledger(Arc::clone(&source), ledger, cfg.policy)?;
+        let cache =
+            WeightCache::with_ledger_qos(Arc::clone(&source), ledger, cfg.policy, reserve, weight)?;
         Self::assemble(source, cache, window, f32_rest, cfg)
     }
 
@@ -1419,6 +1447,144 @@ mod tests {
         );
         // And the cold model still serves correctly after being robbed.
         assert_eq!(ws_b.digest().unwrap(), digest_weights(&eager_b));
+    }
+
+    /// The QoS tentpole at the engine level: a latency-critical model
+    /// with a full reservation keeps every reserved byte resident
+    /// under sustained pressure from a batch peer, serves its re-walk
+    /// entirely from residency, and neither model's bytes change.
+    #[test]
+    fn reserved_model_is_never_robbed_below_its_reserve() {
+        let (model_lat, src_lat) = equal_fixture(4, 0x65);
+        let (model_bat, src_bat) = equal_fixture(4, 0x66);
+        // Latency model fully reserved (4 layers); pool holds 6, so the
+        // batch model must make do with the 2 unreserved layers.
+        let budget = 6 * 512;
+        let reserve = 4 * 512;
+        let ledger = ResidencyLedger::new(budget);
+        let cfg = PrefetchConfig {
+            decode_ahead: 1,
+            workers: 0,
+            policy: Policy::SegmentedLru,
+        };
+        let ws_lat = PrefetchingWeightSet::with_ledger_qos(
+            src_lat,
+            Arc::clone(&ledger),
+            Vec::new(),
+            cfg,
+            reserve,
+            4.0,
+        )
+        .unwrap();
+        let ws_bat =
+            PrefetchingWeightSet::with_ledger(src_bat, Arc::clone(&ledger), Vec::new(), cfg)
+                .unwrap();
+        let lat = Arc::clone(ws_lat.shared());
+        let bat = Arc::clone(ws_bat.shared());
+        let peers = vec![Arc::downgrade(&lat), Arc::downgrade(&bat)];
+        lat.link_peers(peers.clone());
+        bat.link_peers(peers);
+
+        // Warm the latency model into its reserve.
+        let eager_lat = WeightSet::from_elm(&model_lat, 2, Vec::new()).unwrap();
+        assert_eq!(ws_lat.digest().unwrap(), digest_weights(&eager_lat));
+        assert_eq!(ledger.used_by(0), reserve, "reserve filled after warmup");
+        let warm_misses = lat.cache_counters().misses;
+
+        // Sustained batch pressure: pass after pass, hot the whole
+        // time — and never a byte below the latency model's reserve.
+        let eager_bat = WeightSet::from_elm(&model_bat, 2, Vec::new()).unwrap();
+        for pass in 0..3 {
+            assert_eq!(ws_bat.digest().unwrap(), digest_weights(&eager_bat));
+            assert_eq!(
+                ledger.used_by(0),
+                reserve,
+                "pass {pass}: batch peer robbed the reserve"
+            );
+        }
+        assert!(
+            bat.cache_counters().evictions > 0,
+            "the batch model must thrash in its unreserved slice"
+        );
+        assert_eq!(
+            ledger.model_counters(0).shed_by_peers,
+            0,
+            "nothing was ever reclaimed from the reserved model"
+        );
+
+        // The latency model re-serves entirely from residency: zero
+        // new misses, bit-identical bytes.
+        assert_eq!(ws_lat.digest().unwrap(), digest_weights(&eager_lat));
+        assert_eq!(
+            lat.cache_counters().misses,
+            warm_misses,
+            "reserved re-walk must be all hits"
+        );
+        let c = ledger.counters();
+        assert!(c.peak_used_bytes <= budget, "{c:?}");
+    }
+
+    /// A strictly higher admission weight sheds a hotter lower-weight
+    /// peer on the publish path (where the requester has no recency
+    /// advantage); equal weights drop the advisory prefetch instead —
+    /// the PR 4 strictly-colder rule.
+    #[test]
+    fn higher_weight_sheds_hotter_peer_where_equal_weight_cannot() {
+        for (weight, expect_shed) in [(4.0f64, true), (1.0, false)] {
+            let (_, src_a) = equal_fixture(4, 0x67);
+            let (_, src_b) = equal_fixture(4, 0x68);
+            // Budget holds exactly one model; B warms it full.
+            let ledger = ResidencyLedger::new(4 * 512);
+            let cfg = PrefetchConfig {
+                decode_ahead: 1,
+                workers: 0,
+                policy: Policy::SegmentedLru,
+            };
+            let ws_a = PrefetchingWeightSet::with_ledger_qos(
+                src_a,
+                Arc::clone(&ledger),
+                Vec::new(),
+                cfg,
+                0,
+                weight,
+            )
+            .unwrap();
+            let ws_b =
+                PrefetchingWeightSet::with_ledger(src_b, Arc::clone(&ledger), Vec::new(), cfg)
+                    .unwrap();
+            let a = Arc::clone(ws_a.shared());
+            let b = Arc::clone(ws_b.shared());
+            let peers = vec![Arc::downgrade(&a), Arc::downgrade(&b)];
+            a.link_peers(peers.clone());
+            b.link_peers(peers);
+            ws_b.digest().unwrap(); // B resident and hot
+            assert_eq!(ledger.used_by(1), 4 * 512);
+
+            // A worker decode for model A publishes while B is the
+            // hotter model (A has never been touched).
+            let mut ts = TestScheduler::new(Arc::clone(&a));
+            a.schedule(&[1]);
+            let job = ts.claim().unwrap();
+            let result = ts.decode(&job);
+            b.with_layer(0, |_| ()).unwrap(); // B re-stamps hottest
+            ts.publish(job, result);
+
+            if expect_shed {
+                assert!(a.is_resident(1), "weight {weight} must win residency");
+                assert_eq!(ledger.model_counters(0).shed_from_peers, 512);
+                assert_eq!(ledger.model_counters(1).shed_by_peers, 512);
+                assert_eq!(ledger.used_by(1), 3 * 512);
+            } else {
+                assert!(
+                    !a.is_resident(1),
+                    "equal weight against a hotter peer: advisory prefetch drops"
+                );
+                assert_eq!(ledger.model_counters(0).shed_from_peers, 0);
+                assert_eq!(ledger.used_by(1), 4 * 512, "peer untouched");
+            }
+            let c = ledger.counters();
+            assert!(c.used_bytes <= c.budget_bytes, "{c:?}");
+        }
     }
 
     /// One [`PrefetchPool`] drains the queues of several engines —

@@ -221,6 +221,14 @@ pub fn format_multi_stats(multi: &MultiModelServer) -> String {
         rejected += q.rejected;
         let mut fields = vec![("model", json::s(multi.name(i)))];
         fields.extend(engine_stats_fields(engine));
+        // Per-model QoS under the shared ledger: the configured
+        // reservation/weight plus the shed traffic in both directions,
+        // so an operator can see who is leaning on whom.
+        let q = multi.model_counters(i);
+        fields.push(("reserved_bytes", json::num(q.reserved_bytes as f64)));
+        fields.push(("qos_weight", json::num(q.weight)));
+        fields.push(("shed_from_peers", json::num(q.shed_from_peers as f64)));
+        fields.push(("shed_by_peers", json::num(q.shed_by_peers as f64)));
         models.push(json::obj(fields));
     }
     let mean_occupancy = if decode_steps == 0 {
@@ -243,6 +251,10 @@ pub fn format_multi_stats(multi: &MultiModelServer) -> String {
         (
             "ledger_peak_used_bytes",
             json::num(ledger.peak_used_bytes as f64),
+        ),
+        (
+            "ledger_reserved_bytes",
+            json::num(ledger.reserved_bytes as f64),
         ),
         ("models", json::arr(models)),
     ])
@@ -1057,11 +1069,14 @@ mod tests {
         let want_a = isolated(&src_a, budget_a, &prompts_a);
         let want_b = isolated(&src_b, budget_b, &prompts_b);
 
-        // One multi-model server, one port, same total budget.
+        // One multi-model server, one port, same total budget. Alpha
+        // carries a QoS reservation + weight — which must change
+        // residency pressure only, never tokens (the bit-identical
+        // assertions below hold regardless).
         let mut multi = MultiModelServer::new(
             vec![
-                ModelSpec { name: "alpha".into(), source: src_a },
-                ModelSpec { name: "beta".into(), source: src_b },
+                ModelSpec::new("alpha", src_a).with_qos(budget_a, 2.0),
+                ModelSpec::new("beta", src_b),
             ],
             MultiModelConfig {
                 budget_bytes: budget_a + budget_b,
@@ -1117,9 +1132,26 @@ mod tests {
             assert_eq!(m.get("completed").unwrap().as_usize().unwrap(), 3);
             assert!(m.get("cache_misses").unwrap().as_usize().unwrap() > 0);
             assert!(m.get("prefetch_scheduled").unwrap().as_usize().unwrap() > 0);
+            // The QoS family rides along on every model entry.
+            for key in ["reserved_bytes", "qos_weight", "shed_from_peers", "shed_by_peers"] {
+                assert!(m.get(key).is_ok(), "missing {key}: {m:?}");
+            }
         }
+        assert_eq!(
+            models[0].get("reserved_bytes").unwrap().as_usize().unwrap(),
+            budget_a,
+            "alpha's reservation must surface in its stats entry"
+        );
+        assert_eq!(
+            models[1].get("reserved_bytes").unwrap().as_usize().unwrap(),
+            0
+        );
         let budget = stats.get("ledger_budget_bytes").unwrap().as_usize().unwrap();
         assert_eq!(budget, budget_a + budget_b);
+        assert_eq!(
+            stats.get("ledger_reserved_bytes").unwrap().as_usize().unwrap(),
+            budget_a
+        );
         assert!(stats.get("ledger_used_bytes").unwrap().as_usize().unwrap() <= budget);
         assert!(
             stats.get("ledger_peak_used_bytes").unwrap().as_usize().unwrap() <= budget,

@@ -9,7 +9,7 @@ fn bin() -> PathBuf {
     let mut p = std::env::current_exe().unwrap();
     p.pop(); // deps/
     p.pop(); // release|debug/
-    p.push("entrollm");
+    p.push(if cfg!(windows) { "entrollm.exe" } else { "entrollm" });
     p
 }
 
@@ -318,6 +318,67 @@ fn weight_budget_below_one_layer_fails_cleanly() {
     ]);
     assert!(!ok, "must fail: {text}");
     assert!(text.contains("thrash"), "{text}");
+}
+
+/// QoS config errors on the multi-model path surface at startup —
+/// before the server ever binds a port — with messages naming the
+/// problem: reserves past the budget, malformed `--model` options,
+/// and bogus admission weights.
+#[test]
+fn multi_model_qos_rejects_bad_configs_at_startup() {
+    let dir = std::env::temp_dir().join(format!("cli_qos_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let a = dir.join("a.elm");
+    let b = dir.join("b.elm");
+    for (path, seed) in [(&a, "1"), (&b, "2")] {
+        let (ok, text) = run(&[
+            "compress", "--synthetic", "6", "--seed", seed, "--out", path.to_str().unwrap(),
+        ]);
+        assert!(ok, "{text}");
+    }
+    let (a_s, b_s) = (a.to_str().unwrap(), b.to_str().unwrap());
+
+    // Reservations summing past the global budget: rejected loudly.
+    let (ok, text) = run(&[
+        "serve",
+        &format!("--model=alpha={a_s},reserve-mb=40"),
+        &format!("--model=beta={b_s},reserve-mb=40"),
+        "--weight-budget-mb",
+        "64",
+    ]);
+    assert!(!ok, "must fail: {text}");
+    assert!(text.contains("reservations"), "{text}");
+
+    // Unknown --model option.
+    let (ok, text) = run(&[
+        "serve",
+        &format!("--model=alpha={a_s},bogus=3"),
+        &format!("--model=beta={b_s}"),
+    ]);
+    assert!(!ok, "must fail: {text}");
+    assert!(text.contains("unknown option"), "{text}");
+
+    // Non-positive admission weight: rejected, naming the model.
+    let (ok, text) = run(&[
+        "serve",
+        &format!("--model=alpha={a_s},weight=0"),
+        &format!("--model=beta={b_s}"),
+        "--weight-budget-mb",
+        "64",
+    ]);
+    assert!(!ok, "must fail: {text}");
+    assert!(text.contains("weight"), "{text}");
+
+    // Negative reserve: rejected at parse.
+    let (ok, text) = run(&[
+        "serve",
+        &format!("--model=alpha={a_s},reserve-mb=-1"),
+        &format!("--model=beta={b_s}"),
+    ]);
+    assert!(!ok, "must fail: {text}");
+    assert!(text.contains("reserve-mb"), "{text}");
+
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
