@@ -9,8 +9,11 @@
 //! entirely); the decode-ahead arm schedules layer `i+1`'s decode onto
 //! a worker pool while layer `i` is consumed, under the scan-resistant
 //! segmented-LRU policy, so the fault bill hides behind compute —
-//! `max(compute, decode)` per token instead of their sum. The modeled
-//! Jetson-scale counterpart of the same comparison is
+//! `max(compute, decode)` per token instead of their sum. A third arm
+//! repeats decode-ahead over a *fine-tiled* ELM v2 container, where
+//! prefetch jobs are claimed per tile so the whole pool can share one
+//! upcoming layer. The modeled Jetson-scale counterpart of the same
+//! comparison is
 //! [`entrollm::device::LatencyModel::overlapped_tokens_per_sec`].
 
 use entrollm::bench::{fmt_bytes, quick_mode, quick_or};
@@ -23,7 +26,7 @@ use entrollm::residency::{
     PrefetchConfig, PrefetchingDigestBackend, PrefetchingWeightSet, Policy,
     ResidentDigestBackend, ResidentWeightSet,
 };
-use entrollm::store::{compress, SegmentSource};
+use entrollm::store::{compress, compress_with_tile_size, SegmentSource};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -124,6 +127,44 @@ fn main() {
         ac.misses.to_string(),
         ap.hits.to_string(),
         ap.sync_faults.to_string(),
+    ]);
+
+    // Arm 3: decode-ahead over a *fine-tiled* ELM v2 container
+    // (512-symbol tiles, the `--tile-kb` shape). Prefetch jobs are
+    // per-tile, so every worker can attack the same upcoming layer
+    // instead of one worker owning it end to end.
+    let tiled_path = dir.join("model_tiled.elm");
+    let (tiled_elm, _) = compress_with_tile_size(&layers, BitWidth::U8, Some(512)).unwrap();
+    let n_tiles: usize = tiled_elm.layers.iter().map(|m| m.tiles.len()).sum();
+    tiled_elm.save(&tiled_path).unwrap();
+    let source = Arc::new(SegmentSource::open(&tiled_path).unwrap());
+    let ws = PrefetchingWeightSet::new(
+        source,
+        budget,
+        Vec::new(),
+        PrefetchConfig {
+            decode_ahead,
+            workers,
+            policy: Policy::SegmentedLru,
+        },
+    )
+    .unwrap();
+    let (tiled_tps, tiled_tokens, tiled_engine) =
+        serve_batch(PrefetchingDigestBackend::new(ws, 2, 64, 256));
+    let tc = tiled_engine.residency().unwrap();
+    let tp = tiled_engine.prefetch().unwrap();
+    assert!(tc.peak_resident_bytes <= budget);
+    assert_eq!(
+        fault_tokens, tiled_tokens,
+        "tiled arm must serve the same batch"
+    );
+    table.row(&[
+        format!("decode-ahead, fine tiles ({n_tiles} tiles / {n_layers} layers)"),
+        format!("{tiled_tps:.1}"),
+        tc.hits.to_string(),
+        tc.misses.to_string(),
+        tp.hits.to_string(),
+        tp.sync_faults.to_string(),
     ]);
     table.emit("decode_ahead");
 

@@ -2,11 +2,13 @@
 //!
 //! Covers every stage a request touches: Huffman LUT decode (the edge
 //! bring-up cost), encode, quantization, bit I/O, parallel decode
-//! scaling, and — when artifacts exist — the PJRT prefill/decode steps
+//! scaling, single-hot-layer tile scaling (the ELM v2 intra-layer
+//! parallelism claim), and — when artifacts exist — the PJRT
+//! prefill/decode steps
 //! and a full engine round trip. Numbers land in bench_results/ and
 //! EXPERIMENTS.md §Perf tracks before/after for each optimization.
 
-use entrollm::bench::{fmt_secs, quick_or, Bench};
+use entrollm::bench::{fmt_secs, quick_mode, quick_or, Bench};
 use entrollm::bitio::{BitReader, BitWriter};
 use entrollm::coordinator::{Backend, Engine, EngineConfig, Request};
 use entrollm::corpus::ByteTokenizer;
@@ -97,6 +99,66 @@ fn main() {
         format!("{:.1}", n as f64 / stats.median.as_secs_f64() / 1e6),
         "Mfield/s".into(),
     ]);
+
+    // ELM v2 tile-granular decode: ONE hot layer split into
+    // independently decodable tiles, attacked by a growing worker pool.
+    // Under v1 (one segment per layer) a single hot layer pinned its
+    // whole decode onto one thread no matter how many workers existed;
+    // tiles are the unit of work now, so wall time must drop as the
+    // pool grows.
+    {
+        let hot = quick_or(200_000usize, 1_000_000);
+        let mut hrng = Rng::new(0x71E5);
+        let hot_layer = vec![(
+            "hot.w".to_string(),
+            TensorF32::new(vec![hot], hrng.gaussian_vec(hot, 0.0, 0.04)).unwrap(),
+        )];
+        let (model, _) = entrollm::store::compress_with_tile_size(
+            &hot_layer,
+            BitWidth::U8,
+            Some(hot.div_ceil(16)),
+        )
+        .unwrap();
+        let n_tiles = model.layers[0].tiles.len();
+        let mut walls: Vec<(usize, f64)> = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let pd = ParallelDecoder::new(threads);
+            // Best-of-3 to keep a one-shot wall measurement honest.
+            let mut best = f64::INFINITY;
+            let mut rate = 0.0;
+            for _ in 0..3 {
+                let (out, st) = pd.decode_model(&model).unwrap();
+                std::hint::black_box(&out);
+                let wall = st.wall.as_secs_f64();
+                if wall < best {
+                    best = wall;
+                    rate = st.symbols_per_sec() / 1e6;
+                }
+            }
+            walls.push((threads, best));
+            table.row(&[
+                format!("single hot layer decode (T={threads}, {n_tiles} tiles)"),
+                format!("{rate:.1}"),
+                "Msym/s".into(),
+            ]);
+        }
+        let t1 = walls[0].1;
+        let t4 = walls[2].1;
+        println!(
+            "single hot layer ({n_tiles} tiles): T=1 {} -> T=4 {} ({:.2}x)",
+            fmt_secs(t1),
+            fmt_secs(t4),
+            t1 / t4.max(1e-12)
+        );
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        if !quick_mode() && cores >= 4 {
+            assert!(
+                t4 < t1,
+                "tile-granular decode must let extra workers share one hot layer \
+                 (T=1 {t1:.4}s vs T=4 {t4:.4}s)"
+            );
+        }
+    }
 
     // Parallel decode on the trained model (whole-model wall time).
     if std::path::Path::new("artifacts/weights.bin").exists() {

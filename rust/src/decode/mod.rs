@@ -19,7 +19,7 @@
 mod schedule;
 pub mod stream;
 
-pub use schedule::{Assignment, Strategy};
+pub use schedule::{flat_tiles, Assignment, Strategy};
 pub use stream::{
     DecodedLayer, LayerStream, SegmentDecoder, StreamConfig, StreamStats, StreamingDecoder,
 };
@@ -118,36 +118,43 @@ impl ParallelDecoder {
     }
 
     /// Decode every layer of `model`, returning tensors in layer order
-    /// plus per-thread stats.
+    /// plus per-thread stats. The unit of assignment is the **tile**
+    /// (v2), so a single giant layer is shared by every worker instead
+    /// of serializing on one; `ThreadStats::segments` therefore counts
+    /// tiles. For a v1 container (one synthesized tile per layer) this
+    /// is exactly the classic per-layer schedule.
     pub fn decode_model(&self, model: &ElmModel) -> Result<(Vec<QuantizedTensor>, DecodeStats)> {
         let n = model.layers.len();
         let decoder = Decoder::new(&model.code)?;
-        let assignment = self.strategy.assign(model, self.threads);
+        let (tiles, sizes) = flat_tiles(&model.layers);
+        let assignment = self.strategy.assign_sizes(&sizes, self.threads);
 
         let start = Instant::now();
-        // Each worker owns a disjoint set of layer indices and fills its
-        // own output list; no locks on the decode path.
-        let results: Vec<Result<(Vec<(usize, Vec<u8>)>, ThreadStats)>> = std::thread::scope(|s| {
+        // Each worker owns a disjoint set of flat tile indices and fills
+        // its own output list; no locks on the decode path.
+        type TileOut = Vec<(usize, usize, Vec<u8>)>;
+        let results: Vec<Result<(TileOut, ThreadStats)>> = std::thread::scope(|s| {
             let handles: Vec<_> = assignment
                 .per_thread
                 .iter()
                 .map(|indices| {
                     let decoder = &decoder;
+                    let tiles = &tiles;
                     let indices = indices.clone();
                     s.spawn(move || {
                         let t0 = Instant::now();
                         let mut out = Vec::with_capacity(indices.len());
                         let mut encoded_bytes = 0usize;
                         let mut symbols = 0usize;
-                        for idx in indices {
-                            let meta = &model.layers[idx];
-                            model.verify_segment(idx)?;
-                            let seg = model.segment(idx);
-                            let mut buf = vec![0u8; meta.n_symbols];
-                            decoder.decode_into(seg, &mut buf)?;
-                            encoded_bytes += seg.len();
-                            symbols += meta.n_symbols;
-                            out.push((idx, buf));
+                        for flat in indices {
+                            let (layer, t) = tiles[flat];
+                            let tile = &model.layers[layer].tiles[t];
+                            model.verify_tile(layer, t)?;
+                            let mut buf = vec![0u8; tile.n_symbols];
+                            decoder.decode_into(model.tile_bytes(layer, t), &mut buf)?;
+                            encoded_bytes += tile.encoded_len;
+                            symbols += tile.n_symbols;
+                            out.push((layer, t, buf));
                         }
                         let segments = out.len();
                         Ok((
@@ -165,25 +172,33 @@ impl ParallelDecoder {
             handles.into_iter().map(|h| h.join().expect("decode worker panicked")).collect()
         });
 
-        let mut tensors: Vec<Option<QuantizedTensor>> = (0..n).map(|_| None).collect();
+        // Assemble: place each decoded tile at its symbol offset within
+        // its layer's buffer, then seal layers whose every tile landed.
+        let mut bufs: Vec<Vec<u8>> = model.layers.iter().map(|m| vec![0u8; m.n_symbols]).collect();
+        let mut missing: Vec<usize> = model.layers.iter().map(|m| m.tiles.len()).collect();
         let mut thread_stats = Vec::with_capacity(results.len());
         for res in results {
             let (decoded, stats) = res?;
-            for (idx, symbols) in decoded {
-                let meta = &model.layers[idx];
-                tensors[idx] = Some(QuantizedTensor {
-                    symbols: TensorU8::new(meta.shape.clone(), symbols)?,
-                    params: meta.params,
-                });
+            for (layer, t, tile_syms) in decoded {
+                let tile = &model.layers[layer].tiles[t];
+                bufs[layer][tile.sym_offset..tile.sym_offset + tile.n_symbols]
+                    .copy_from_slice(&tile_syms);
+                missing[layer] -= 1;
             }
             thread_stats.push(stats);
         }
         let wall = start.elapsed();
-        let tensors: Vec<QuantizedTensor> = tensors
-            .into_iter()
-            .enumerate()
-            .map(|(i, t)| t.ok_or_else(|| Error::Format(format!("layer {i} never assigned"))))
-            .collect::<Result<_>>()?;
+        let mut tensors = Vec::with_capacity(n);
+        for (i, buf) in bufs.into_iter().enumerate() {
+            if missing[i] != 0 {
+                return Err(Error::Format(format!("layer {i} never assigned")));
+            }
+            let meta = &model.layers[i];
+            tensors.push(QuantizedTensor {
+                symbols: TensorU8::new(meta.shape.clone(), buf)?,
+                params: meta.params,
+            });
+        }
         Ok((
             tensors,
             DecodeStats {
@@ -238,8 +253,31 @@ mod tests {
         let (_, stats) = ParallelDecoder::new(4).decode_model(&model).unwrap();
         assert_eq!(stats.total_symbols(), model.n_params());
         assert_eq!(stats.total_encoded_bytes(), model.payload.len());
+        // The v2 unit of work is the tile, so `segments` counts tiles.
         let segs: usize = stats.threads.iter().map(|t| t.segments).sum();
-        assert_eq!(segs, model.layers.len());
+        let tiles: usize = model.layers.iter().map(|l| l.tiles.len()).sum();
+        assert_eq!(segs, tiles);
+        assert!(tiles > model.layers.len(), "fixture must be multi-tile");
+    }
+
+    #[test]
+    fn single_hot_layer_is_shared_by_all_workers() {
+        // The v2 point: one giant layer no longer serializes on one
+        // worker — its tiles are dealt across the whole pool.
+        let mut rng = Rng::new(0x77);
+        let layers = vec![(
+            "big".to_string(),
+            TensorF32::new(vec![60_000], rng.gaussian_vec(60_000, 0.0, 0.05)).unwrap(),
+        )];
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+        assert!(model.layers[0].tiles.len() >= 4, "auto tiling must split");
+        let (tensors, stats) = ParallelDecoder::new(4).decode_model(&model).unwrap();
+        let busy = stats.threads.iter().filter(|t| t.symbols > 0).count();
+        assert_eq!(busy, 4, "every worker must decode part of the hot layer");
+        assert_eq!(
+            tensors[0].symbols.data(),
+            quantize_mixed(&layers[0].1, BitWidth::U8).symbols.data()
+        );
     }
 
     #[test]

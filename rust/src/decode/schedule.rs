@@ -8,7 +8,25 @@
 //! exist for the `ablation_decode` bench.
 
 use crate::rng::Rng;
-use crate::store::ElmModel;
+use crate::store::{ElmModel, LayerMeta};
+
+/// Flatten a manifest's tile tables into `(layer, tile)` pairs in
+/// execution order, alongside each tile's encoded byte size — the v2
+/// unit of assignment. Scheduling tiles instead of layers is what lets
+/// every worker attack a single hot layer instead of serializing behind
+/// whoever owns it; for a v1 container (one synthesized tile per layer)
+/// this degenerates to the classic per-layer assignment.
+pub fn flat_tiles(layers: &[LayerMeta]) -> (Vec<(usize, usize)>, Vec<usize>) {
+    let mut tiles = Vec::new();
+    let mut sizes = Vec::new();
+    for (li, l) in layers.iter().enumerate() {
+        for (ti, t) in l.tiles.iter().enumerate() {
+            tiles.push((li, ti));
+            sizes.push(t.encoded_len);
+        }
+    }
+    (tiles, sizes)
+}
 
 /// A computed assignment: layer indices per thread.
 #[derive(Debug, Clone)]
@@ -334,6 +352,20 @@ mod tests {
                 let max = *counts.iter().max().unwrap();
                 assert!(max - min <= 1, "counts {counts:?} spread > 1");
             }
+        }
+    }
+
+    #[test]
+    fn flat_tiles_cover_every_tile_in_execution_order() {
+        let m = model(12, 5);
+        let (tiles, sizes) = flat_tiles(&m.layers);
+        let total: usize = m.layers.iter().map(|l| l.tiles.len()).sum();
+        assert_eq!(tiles.len(), total);
+        assert!(total > m.layers.len(), "fixture must have multi-tile layers");
+        assert_eq!(sizes.iter().sum::<usize>(), m.payload.len());
+        assert!(tiles.windows(2).all(|w| w[0] < w[1]), "execution order");
+        for (k, &(li, ti)) in tiles.iter().enumerate() {
+            assert_eq!(sizes[k], m.layers[li].tiles[ti].encoded_len);
         }
     }
 

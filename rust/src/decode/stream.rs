@@ -15,13 +15,17 @@
 //! of the whole model — the property that lets a memory-limited edge
 //! device start serving before the model fits decoded in RAM.
 //!
-//! Concurrency shape: one [`Strategy::Windowed`] static assignment
-//! (each worker's list ascending in execution order), one mutex-guarded
-//! exchange holding at most `window` decoded layers, two condvars
-//! (consumer waits for the next layer; workers wait for window space).
+//! Concurrency shape: one [`Strategy::Windowed`] static assignment of
+//! **tiles** (each worker's list ascending in execution order), one
+//! mutex-guarded exchange holding at most `window` decoded layers, two
+//! condvars (consumer waits for the next layer; workers wait for window
+//! space). Workers decode tiles and assemble them into per-layer
+//! buffers; the last tile seals the layer — so every worker can attack
+//! the front of the window even when it is a single hot layer.
 //! Deadlock freedom: the consumer always waits for layer `delivered`,
-//! and the worker owning `delivered` is never window-blocked because
-//! its cursor is `<= delivered < delivered + window`.
+//! and any worker owning one of `delivered`'s tiles is never
+//! window-blocked because its ascending cursor is at a tile of some
+//! layer `<= delivered < delivered + window`.
 //!
 //! The stream runs over any [`SegmentSource`]: with a file-backed
 //! source ([`SegmentSource::open`]) segments are read from disk only as
@@ -126,6 +130,10 @@ struct State {
     delivered: usize,
     /// Decoded-but-undelivered layers (at most `window` are `Some`).
     ready: Vec<Option<QuantizedTensor>>,
+    /// In-progress layer assembly: symbol buffer + tiles still missing.
+    /// Workers decode *tiles*; the last tile to land seals the layer
+    /// into `ready`. Only layers inside the window can have an entry.
+    partial: Vec<Option<(Vec<u8>, usize)>>,
     /// First decode failure; poisons the stream.
     error: Option<Error>,
     /// Set when the consumer goes away; workers drain out.
@@ -189,12 +197,18 @@ impl StreamingDecoder {
     pub fn stream_source(&self, source: Arc<SegmentSource>) -> Result<LayerStream> {
         let decoder = Arc::new(Decoder::new(source.code())?);
         let n = source.n_layers();
-        let sizes: Vec<usize> = source.layers().iter().map(|m| m.encoded_len).collect();
+        // The unit of claim is the **tile** (v2): a hot layer's tiles
+        // are dealt across the pool, so every worker can help the front
+        // of the window instead of queueing behind one owner. Flat tile
+        // order is execution order, so window gating stays per layer.
+        let (tiles, sizes) = crate::decode::flat_tiles(source.layers());
         let assignment = self.cfg.strategy.assign_sizes(&sizes, self.cfg.threads);
+        let tiles = Arc::new(tiles);
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 delivered: 0,
                 ready: (0..n).map(|_| None).collect(),
+                partial: (0..n).map(|_| None).collect(),
                 error: None,
                 cancelled: false,
                 resident: 0,
@@ -216,8 +230,9 @@ impl StreamingDecoder {
             let source = Arc::clone(&source);
             let decoder = Arc::clone(&decoder);
             let shared = Arc::clone(&shared);
+            let tiles = Arc::clone(&tiles);
             handles.push(std::thread::spawn(move || {
-                worker(&source, &decoder, &shared, indices)
+                worker(&source, &decoder, &shared, &tiles, indices)
             }));
         }
         Ok(LayerStream {
@@ -292,7 +307,8 @@ impl SegmentDecoder {
     /// the streaming workers keep (`segments`, `encoded_bytes`,
     /// `symbols`, `busy`) folded into `stats` — shared by the
     /// residency cache's synchronous fault path and the decode-ahead
-    /// prefetch pool ([`crate::residency::prefetch`]).
+    /// prefetch pool ([`crate::residency::prefetch`]). `segments`
+    /// counts **tiles**, the v2 unit of decode work.
     pub fn decode_layer_stats(
         &self,
         index: usize,
@@ -301,32 +317,67 @@ impl SegmentDecoder {
         let t0 = Instant::now();
         let tensor = self.decode_layer(index)?;
         let meta = self.source.meta(index);
-        stats.segments += 1;
+        stats.segments += meta.tiles.len();
         stats.encoded_bytes += meta.encoded_len;
         stats.symbols += meta.n_symbols;
         stats.busy += t0.elapsed();
         Ok(tensor)
     }
+
+    /// Decode a single tile of layer `index` behind the tile's own CRC,
+    /// returning its decoded symbols — the claim unit of the
+    /// decode-ahead prefetcher, which assembles tiles into a layer
+    /// buffer itself.
+    pub fn decode_tile(&self, index: usize, t: usize) -> Result<Vec<u8>> {
+        if index >= self.source.n_layers() {
+            return Err(Error::InvalidArg(format!(
+                "layer index {index} out of range ({} layers)",
+                self.source.n_layers()
+            )));
+        }
+        decode_one_tile(&self.source, &self.decoder, index, t)
+    }
 }
 
-/// The one per-layer decode body: CRC-verified segment read → table
-/// decode → tensor. Shared by the streaming workers and the re-entrant
-/// [`SegmentDecoder`] so the two paths cannot drift.
+/// The one per-layer decode body: per-tile CRC-verified reads → table
+/// decode into the layer's symbol buffer → tensor. Shared by the
+/// serving fault path and the re-entrant [`SegmentDecoder`] so decode
+/// output is bit-identical to the eager and streaming paths, for v1
+/// (one synthesized tile) and v2 containers alike.
 fn decode_one(source: &SegmentSource, decoder: &Decoder, index: usize) -> Result<QuantizedTensor> {
     let meta = source.meta(index);
-    let seg = source.verified_segment(index)?;
     let mut buf = vec![0u8; meta.n_symbols];
-    decoder.decode_into(&seg, &mut buf)?;
+    for (t, tile) in meta.tiles.iter().enumerate() {
+        let seg = source.verified_tile(index, t)?;
+        let out = &mut buf[tile.sym_offset..tile.sym_offset + tile.n_symbols];
+        decoder.decode_into(&seg, out)?;
+    }
     Ok(QuantizedTensor {
         symbols: TensorU8::new(meta.shape.clone(), buf)?,
         params: meta.params,
     })
 }
 
+/// Decode one tile of a layer into its own symbol buffer, behind the
+/// tile's CRC.
+fn decode_one_tile(
+    source: &SegmentSource,
+    decoder: &Decoder,
+    index: usize,
+    t: usize,
+) -> Result<Vec<u8>> {
+    let tile = &source.meta(index).tiles[t];
+    let seg = source.verified_tile(index, t)?;
+    let mut buf = vec![0u8; tile.n_symbols];
+    decoder.decode_into(&seg, &mut buf)?;
+    Ok(buf)
+}
+
 fn worker(
     source: &SegmentSource,
     decoder: &Decoder,
     shared: &Shared,
+    tiles: &[(usize, usize)],
     indices: Vec<usize>,
 ) -> ThreadStats {
     let mut stats = ThreadStats {
@@ -335,13 +386,15 @@ fn worker(
         symbols: 0,
         busy: Duration::ZERO,
     };
-    for idx in indices {
-        // Bounded prefetch: block until `idx` is inside the window.
-        // With a file-backed source this also bounds *disk reads*: a
-        // segment's bytes are only pulled once the window admits it.
+    for flat in indices {
+        let (layer, t) = tiles[flat];
+        // Bounded prefetch: block until this tile's *layer* is inside
+        // the window. With a file-backed source this also bounds *disk
+        // reads*: a tile's bytes are only pulled once the window admits
+        // its layer.
         {
             let mut st = shared.state.lock().unwrap();
-            while idx >= st.delivered + shared.window
+            while layer >= st.delivered + shared.window
                 && st.error.is_none()
                 && !st.cancelled
             {
@@ -353,23 +406,51 @@ fn worker(
         }
 
         let t0 = Instant::now();
-        let meta = source.meta(idx);
-        let result = decode_one(source, decoder, idx);
+        let meta = source.meta(layer);
+        let tile = &meta.tiles[t];
+        let result = decode_one_tile(source, decoder, layer, t);
         stats.busy += t0.elapsed();
 
         let mut st = shared.state.lock().unwrap();
         match result {
-            Ok(tensor) => {
+            Ok(tile_syms) => {
                 stats.segments += 1;
-                stats.encoded_bytes += meta.encoded_len;
-                stats.symbols += meta.n_symbols;
-                // All resident layers lie in `[delivered, delivered +
-                // window)`, so the high-water mark is bounded by the
-                // prefetch window.
-                st.resident += 1;
-                st.max_resident = st.max_resident.max(st.resident);
-                st.ready[idx] = Some(tensor);
-                shared.avail.notify_all();
+                stats.encoded_bytes += tile.encoded_len;
+                stats.symbols += tile.n_symbols;
+                let sealed = {
+                    let entry = st.partial[layer]
+                        .get_or_insert_with(|| (vec![0u8; meta.n_symbols], meta.tiles.len()));
+                    entry.0[tile.sym_offset..tile.sym_offset + tile.n_symbols]
+                        .copy_from_slice(&tile_syms);
+                    entry.1 -= 1;
+                    entry.1 == 0
+                };
+                if sealed {
+                    // Last tile seals the layer.
+                    let (buf, _) = st.partial[layer].take().unwrap();
+                    match TensorU8::new(meta.shape.clone(), buf) {
+                        Ok(symbols) => {
+                            // All resident layers lie in `[delivered,
+                            // delivered + window)`, so the high-water
+                            // mark is bounded by the prefetch window.
+                            st.resident += 1;
+                            st.max_resident = st.max_resident.max(st.resident);
+                            st.ready[layer] = Some(QuantizedTensor {
+                                symbols,
+                                params: meta.params,
+                            });
+                            shared.avail.notify_all();
+                        }
+                        Err(e) => {
+                            if st.error.is_none() {
+                                st.error = Some(e);
+                            }
+                            shared.avail.notify_all();
+                            shared.space.notify_all();
+                            return stats;
+                        }
+                    }
+                }
             }
             Err(e) => {
                 if st.error.is_none() {
@@ -636,9 +717,12 @@ mod tests {
         let (_, stats) = StreamingDecoder::new(4, 3)
             .decode_model(Arc::clone(&model))
             .unwrap();
+        // Workers claim tiles (v2), so `segments` counts tiles.
         let segs: usize = stats.threads.iter().map(|t| t.segments).sum();
-        assert_eq!(segs, model.layers.len());
+        let tiles: usize = model.layers.iter().map(|l| l.tiles.len()).sum();
+        assert_eq!(segs, tiles);
         assert_eq!(stats.total_symbols(), model.n_params());
+        assert_eq!(stats.total_encoded_bytes(), model.payload.len());
         assert_eq!(stats.prefetch_layers, 3);
     }
 

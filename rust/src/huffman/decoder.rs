@@ -346,6 +346,90 @@ mod tests {
         assert!(dec.decode(&bytes, syms.len()).is_err());
     }
 
+    /// Seeded differential fuzz: the table-driven hot path
+    /// ([`Decoder::decode_into`]) against the bit-serial canonical
+    /// oracle ([`Decoder::decode_bit_serial`]) on valid, truncated,
+    /// and bit-flipped streams. On every input the two must agree —
+    /// identical output or both reject. The oracle does not itself
+    /// check the byte-alignment padding invariant `decode_into`
+    /// enforces (< 8 leftover bits), so the check re-applies it from
+    /// the code lengths before comparing. `ENTROLLM_FUZZ_CASES`
+    /// bounds the case count (CI smoke runs a small budget); failures
+    /// print a replay seed for [`crate::prop::forall_seeded`].
+    #[test]
+    fn differential_fuzz_decode_into_vs_bit_serial() {
+        let cases: usize = std::env::var("ENTROLLM_FUZZ_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(200);
+        crate::prop::forall(
+            0xD1FF_CA5E,
+            cases,
+            |rng| {
+                let syms = crate::prop::gen::symbols(rng, 2000);
+                let spec = spec_for(&syms);
+                let mut bytes = Encoder::new(&spec).encode_to_vec(&syms).unwrap();
+                let label = match rng.below(3) {
+                    0 => "valid",
+                    1 => {
+                        bytes.truncate(rng.below(bytes.len() + 1));
+                        "truncated"
+                    }
+                    _ => {
+                        for _ in 0..1 + rng.below(8) {
+                            let i = rng.below(bytes.len());
+                            bytes[i] ^= 1 << rng.below(8);
+                        }
+                        "bit-flipped"
+                    }
+                };
+                (label, syms, bytes)
+            },
+            |(label, syms, bytes)| {
+                let spec = spec_for(syms);
+                let dec = Decoder::new(&spec).unwrap();
+                let total_bits = bytes.len() * 8;
+
+                let mut buf = vec![0u8; syms.len()];
+                let fast = dec.decode_into(bytes, &mut buf).map(|()| buf);
+
+                // Oracle, with decode_into's padding invariant applied
+                // on top (consumed bits = sum of decoded code lengths;
+                // the oracle never over-reads, it errors on exhaustion).
+                let oracle = dec.decode_bit_serial(bytes, syms.len()).and_then(|out| {
+                    let consumed: usize = out
+                        .iter()
+                        .map(|&s| spec.lengths()[s as usize] as usize)
+                        .sum();
+                    if total_bits - consumed >= 8 {
+                        Err(Error::Format(format!(
+                            "{} unconsumed bits (oracle padding check)",
+                            total_bits - consumed
+                        )))
+                    } else {
+                        Ok(out)
+                    }
+                });
+
+                match (fast, oracle) {
+                    (Ok(a), Ok(b)) if a != b => {
+                        Err(format!("{label}: both decoded but outputs differ"))
+                    }
+                    (Ok(a), Ok(_)) if *label == "valid" && a != *syms => {
+                        Err(format!("{label}: decoded output differs from the encoded symbols"))
+                    }
+                    (Ok(_), Ok(_)) | (Err(_), Err(_)) => Ok(()),
+                    (Ok(_), Err(e)) => {
+                        Err(format!("{label}: LUT accepted a stream the oracle rejects ({e})"))
+                    }
+                    (Err(e), Ok(_)) => {
+                        Err(format!("{label}: LUT rejected a stream the oracle accepts ({e})"))
+                    }
+                }
+            },
+        );
+    }
+
     #[test]
     fn table_bytes_bounded_by_l2() {
         // The LUT must fit the Jetson's 2 MiB shared L2 with room to spare.

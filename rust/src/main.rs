@@ -3,6 +3,7 @@
 //! ```text
 //! entrollm compress   --artifacts DIR --bits u8|u4 --out model.elm
 //!                     [--synthetic N --seed S]   (no artifacts needed)
+//!                     [--tile-kb K]   (ELM v2 tile granularity, 0 = auto)
 //! entrollm inspect    --model model.elm [--histogram]
 //! entrollm decompress --model model.elm --out weights.eqw [--threads N]
 //!                     [--stream --prefetch-layers K]
@@ -54,7 +55,7 @@ use entrollm::decode::{ParallelDecoder, StreamingDecoder};
 use entrollm::device::{table2_workloads, LatencyModel, JETSON_P3450};
 use entrollm::entropy::{distribution_stats, Histogram};
 use entrollm::huffman::FreqTable;
-use entrollm::pipeline::{build_elm, load_backend, Flavor};
+use entrollm::pipeline::{build_elm_tiled, load_backend, Flavor};
 use entrollm::quant::BitWidth;
 use entrollm::store::ElmModel;
 use entrollm::{Error, Result};
@@ -101,7 +102,9 @@ const HELP: &str = r#"entrollm — entropy-encoded weight compression for edge L
 
 commands:
   compress      quantize (mixed scheme) + Huffman-encode -> .elm container
-                (--synthetic N builds a seeded synthetic model, no artifacts)
+                (--synthetic N builds a seeded synthetic model, no artifacts;
+                --tile-kb K writes independently decodable tiles of K KiB
+                decoded symbols each — 0/default auto-sizes ~4-8 per layer)
   inspect       print an .elm container's manifest and symbol statistics
   decompress    decode an .elm container back to raw quantized weights
                 (--stream decodes layer-ahead with a bounded prefetch
@@ -129,21 +132,44 @@ commands:
                 overlapped)
 "#;
 
+/// Convert the CLI's `--tile-kb` (KiB of decoded symbols per ELM v2
+/// tile; fractional allowed so sub-KiB test models can exercise
+/// multi-tile layers; 0 = auto-size ~4–8 tiles per layer) into the
+/// compressor's per-tile symbol count.
+fn tile_symbols_from_kb(kb: f64) -> Result<Option<usize>> {
+    if !kb.is_finite() || kb < 0.0 {
+        return Err(Error::InvalidArg(format!(
+            "--tile-kb must be a non-negative finite number (0 = auto), got {kb}"
+        )));
+    }
+    if kb == 0.0 {
+        return Ok(None);
+    }
+    Ok(Some(((kb * 1024.0) as usize).max(1)))
+}
+
 fn cmd_compress(args: &Args) -> Result<()> {
     let bits = BitWidth::parse(args.opt("bits", "u8"))?;
     let default_out = format!("model_{bits}.elm");
     let out = args.opt("out", &default_out);
     let synthetic: usize = args.opt_parse("synthetic", 0usize)?;
+    let tile_kb: f64 = args.opt_parse("tile-kb", 0.0f64)?;
+    let tile_symbols = tile_symbols_from_kb(tile_kb)?;
     let (model, report) = if synthetic > 0 {
         let seed: u64 = args.opt_parse("seed", 0x5EED_u64)?;
         let layers = entrollm::pipeline::synthetic_layers(synthetic, seed);
         println!("synthetic model: {synthetic} layers (seed {seed:#x})");
-        entrollm::store::compress(&layers, bits)?
+        entrollm::store::compress_with_tile_size(&layers, bits, tile_symbols)?
     } else {
-        build_elm(args.opt("artifacts", "artifacts"), bits)?
+        build_elm_tiled(args.opt("artifacts", "artifacts"), bits, tile_symbols)?
     };
     model.save(out)?;
     println!("wrote {out}");
+    let n_tiles: usize = model.layers.iter().map(|m| m.tiles.len()).sum();
+    println!(
+        "  tiles           : {n_tiles} across {} layers (independently decodable)",
+        model.layers.len()
+    );
     println!("  parameters      : {}", report.n_params);
     println!("  fp16 baseline   : {}", fmt_bytes(report.fp16_bytes));
     println!("  fixed {}    : {}", bits, fmt_bytes(report.fixed_bytes));
@@ -190,7 +216,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     }
     for m in model.layers.iter().take(8) {
         println!(
-            "  layer {:<24} {} {:?} s={:+.5} z={:+.5} {} -> {}",
+            "  layer {:<24} {} {:?} s={:+.5} z={:+.5} {} -> {} ({} tiles)",
             m.name,
             m.shape,
             m.params.scheme,
@@ -198,6 +224,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             m.params.zero_point,
             fmt_bytes(m.n_symbols * if model.bits == BitWidth::U8 { 1 } else { 1 } / 1),
             fmt_bytes(m.encoded_len),
+            m.tiles.len(),
         );
     }
     if model.layers.len() > 8 {

@@ -62,17 +62,26 @@ impl LatencyHistogram {
         Duration::from_micros((self.sum_us / self.count as u128) as u64)
     }
 
-    /// Approximate quantile (bucket upper bound), q in [0,1].
+    /// Approximate quantile (bucket upper bound, clamped into the
+    /// observed `[min, max]` range), q in [0,1].
+    ///
+    /// The target rank is clamped to at least 1: `q = 0.0` means "the
+    /// smallest sample", not "before any sample" — an unclamped
+    /// `target = 0` made `seen >= target` true at bucket 0 and
+    /// returned ~2 µs no matter what was recorded.
     pub fn quantile(&self, q: f64) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
         }
-        let target = (q * self.count as f64).ceil() as u64;
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
         let mut seen = 0;
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return Duration::from_micros(1 << (i + 1));
+                // Bucket i covers [2^i, 2^(i+1)); report its upper
+                // bound, but never outside what was actually seen.
+                let upper = 1u64 << (i + 1);
+                return Duration::from_micros(upper.clamp(self.min_us, self.max_us));
             }
         }
         Duration::from_micros(self.max_us)
@@ -274,6 +283,66 @@ mod tests {
         let h = LatencyHistogram::new();
         assert_eq!(h.mean(), Duration::ZERO);
         assert_eq!(h.quantile(0.9), Duration::ZERO);
+    }
+
+    /// Regression: `q = 0.0` used to make `target = 0`, so the scan
+    /// matched bucket 0 immediately and reported ~2 µs regardless of
+    /// the data. It must mean "smallest observed sample".
+    #[test]
+    fn quantile_zero_tracks_the_smallest_sample() {
+        let mut h = LatencyHistogram::new();
+        for ms in [50u64, 80, 120] {
+            h.record(Duration::from_millis(ms));
+        }
+        let q0 = h.quantile(0.0);
+        assert!(
+            q0 >= Duration::from_millis(50),
+            "q=0 must not undershoot the minimum, got {q0:?}"
+        );
+        assert!(q0 <= Duration::from_millis(120));
+    }
+
+    /// q = 1.0 lands in the last non-empty bucket and is clamped to
+    /// the observed maximum — never a bucket bound past it.
+    #[test]
+    fn quantile_one_is_clamped_to_the_observed_max() {
+        let mut h = LatencyHistogram::new();
+        for ms in [3u64, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.quantile(1.0), Duration::from_millis(100));
+        assert_eq!(h.quantile(1.0), h.max());
+    }
+
+    /// A single sample answers every quantile with itself (clamped
+    /// into [min, max], which collapses to one point).
+    #[test]
+    fn quantile_of_single_sample_is_that_sample() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_millis(7));
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(
+                h.quantile(q),
+                Duration::from_millis(7),
+                "q={q} on a single-sample histogram"
+            );
+        }
+    }
+
+    /// Samples past the last bucket's lower bound (the catch-all top
+    /// bucket) must report the real max, not the bucket's huge upper
+    /// bound.
+    #[test]
+    fn quantile_in_top_bucket_reports_real_bounds() {
+        let mut h = LatencyHistogram::new();
+        // 2^29 µs ≈ 537 s; anything >= that lands in bucket 29.
+        let big = Duration::from_micros((1u64 << 29) + 123);
+        for _ in 0..4 {
+            h.record(big);
+        }
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(h.quantile(q), big, "q={q} must clamp into [min, max]");
+        }
     }
 
     #[test]

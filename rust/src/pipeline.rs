@@ -17,7 +17,7 @@ use crate::residency::{
 };
 use crate::rng::Rng;
 use crate::runtime::{load_weights_bin, Manifest, ModelRuntime, Variant, WeightSet};
-use crate::store::{compress, CompressionReport, ElmModel, SegmentSource};
+use crate::store::{compress, compress_with_tile_size, CompressionReport, ElmModel, SegmentSource};
 use crate::tensor::TensorF32;
 use crate::{Error, Result};
 use std::path::Path;
@@ -77,16 +77,29 @@ pub fn split_weights(
 }
 
 /// Build an ELM container from the artifacts' trained weights
-/// (Algorithm 1 `CLOUD PROCESSING`).
+/// (Algorithm 1 `CLOUD PROCESSING`), with the default auto tile
+/// sizing (~4–8 independently decodable tiles per typical layer).
 pub fn build_elm(
     artifacts: impl AsRef<Path>,
     bits: BitWidth,
+) -> Result<(ElmModel, CompressionReport)> {
+    build_elm_tiled(artifacts, bits, None)
+}
+
+/// [`build_elm`] with explicit tile granularity: `tile_symbols` caps
+/// how many decoded symbols each ELM v2 tile covers (`None` = auto).
+/// This is the `compress --tile-kb N` path — smaller tiles buy more
+/// intra-layer decode parallelism for a few manifest bytes per tile.
+pub fn build_elm_tiled(
+    artifacts: impl AsRef<Path>,
+    bits: BitWidth,
+    tile_symbols: Option<usize>,
 ) -> Result<(ElmModel, CompressionReport)> {
     let dir = artifacts.as_ref();
     let manifest = Manifest::load(dir.join("manifest.json"))?;
     let weights = load_weights_bin(dir.join("weights.bin"))?;
     let (quantizable, _) = split_weights(&manifest, weights);
-    compress(&quantizable, bits)
+    compress_with_tile_size(&quantizable, bits, tile_symbols)
 }
 
 /// Load a serving backend for a flavor (Algorithm 1 `EDGE DEVICE

@@ -2,6 +2,16 @@
 //! a replacement [`Policy`], with the fault-in path through
 //! [`SegmentDecoder`] and **pinning** for the decode-ahead prefetcher
 //! ([`crate::residency::prefetch`]).
+//!
+//! Residency is keyed and charged per **layer** (a layer's u8 symbol
+//! buffer is the unit a consumer borrows, so it is also the unit that
+//! can be evicted), but since ELM v2 every fault *decodes* at tile
+//! granularity: [`SegmentDecoder`] verifies and decodes each tile of
+//! the layer behind its own CRC, and the decode-ahead prefetcher
+//! claims individual tiles so several workers can fill one layer's
+//! buffer concurrently before the assembled layer is inserted here.
+//! Byte accounting is exact either way — tiles partition the layer's
+//! symbols, so the per-layer charge equals the sum of its tiles.
 
 use super::ledger::ResidencyLedger;
 use crate::decode::{SegmentDecoder, ThreadStats};

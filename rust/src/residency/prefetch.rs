@@ -14,11 +14,16 @@
 //! run **outside** the lock; only claim/publish/consume touch it.
 //!
 //! Every piece of worker work is an explicit claim → decode → publish
-//! job ([`PrefetchShared::try_claim`], [`PrefetchShared::decode_job`],
-//! [`PrefetchShared::publish`]), so tests can drive interleavings
+//! job over **one tile** ([`PrefetchShared::try_claim`],
+//! [`PrefetchShared::decode_job`], [`PrefetchShared::publish`]), so
+//! several workers can attack the independently decodable tiles of a
+//! single hot layer at once (the ELM v2 shape of the paper's parallel
+//! entropy decoding), while tests drive interleavings
 //! deterministically through a [`TestScheduler`] (no background
-//! threads, no sleeps) while production wraps the same three steps in
-//! a thread-pool loop.
+//! threads, no sleeps) and production wraps the same three steps in a
+//! thread-pool loop. Workers assemble decoded tiles into a per-layer
+//! staging buffer under the lock; the publish that seals the last tile
+//! inserts the whole layer, bit-identical to a serial decode.
 //!
 //! Invariants the deterministic tests pin down:
 //!
@@ -53,12 +58,14 @@ pub struct PrefetchConfig {
     /// `decode_ahead + 1` copies of the largest layer so pinned
     /// prefetches can never wedge the cache.
     pub decode_ahead: usize,
-    /// Background decode threads, capped at the effective window (each
-    /// worker holds at most one decoded layer outside cache accounting,
-    /// so the cap keeps true peak memory within the budget floor). `0`
-    /// spawns none — prefetch jobs then only run when a
-    /// [`TestScheduler`] steps them (or the consumer faults
-    /// synchronously), which is what the deterministic tests use.
+    /// Background decode threads, capped at the effective window times
+    /// the largest per-layer tile count (each worker holds at most one
+    /// decoded tile outside cache accounting, so the cap keeps true
+    /// peak memory within the budget floor while still letting every
+    /// worker attack one hot layer's tiles). `0` spawns none —
+    /// prefetch jobs then only run when a [`TestScheduler`] steps them
+    /// (or the consumer faults synchronously), which is what the
+    /// deterministic tests use.
     pub workers: usize,
     /// Replacement policy under the prefetcher.
     pub policy: Policy,
@@ -78,9 +85,10 @@ impl Default for PrefetchConfig {
 /// fields of the server's `{"stats":true}` admin line.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct PrefetchCounters {
-    /// Prefetch jobs enqueued.
+    /// Layers scheduled for prefetch (each expands to one queue entry
+    /// per not-yet-decoded tile).
     pub scheduled: u64,
-    /// Decodes published by prefetch workers.
+    /// Layers fully assembled from worker-decoded tiles and published.
     pub completed: u64,
     /// Consumer accesses served by a layer a worker decoded ahead
     /// (the entry was still pinned when consumed).
@@ -91,29 +99,54 @@ pub struct PrefetchCounters {
     /// Layers the consumer decoded synchronously on its own thread
     /// (the prefetcher never got there).
     pub sync_faults: u64,
-    /// Claimed queue entries skipped because the layer was already
-    /// resident or in flight by then.
+    /// Claimed queue entries skipped because the tile's layer was
+    /// already resident, or the tile itself was in flight or already
+    /// assembled by then.
     pub redundant: u64,
 }
 
-/// A claimed prefetch job: the layer is marked in-flight until the
-/// holder hands a decode result back to [`PrefetchShared::publish`].
+/// A claimed prefetch job: one tile of one layer, marked in-flight
+/// until the holder hands a decode result back to
+/// [`PrefetchShared::publish`].
 #[derive(Debug)]
 pub struct Job {
     index: usize,
+    tile: usize,
 }
 
 impl Job {
-    /// The layer this job decodes.
+    /// The layer this job decodes a tile of.
     pub fn index(&self) -> usize {
         self.index
     }
+
+    /// The tile within the layer.
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+}
+
+/// Worker-side staging buffer for a layer being assembled tile by
+/// tile. Lives outside the cache's byte accounting until the last tile
+/// seals it (bounded by the decode-ahead window, the same overshoot
+/// bound the layer-granular pool had).
+struct PartialLayer {
+    buf: Vec<u8>,
+    /// Tiles already copied into `buf`.
+    done: Vec<bool>,
+    remaining: usize,
 }
 
 struct State {
     cache: WeightCache,
-    queue: VecDeque<usize>,
-    inflight: Vec<bool>,
+    /// `(layer, tile)` prefetch jobs awaiting a claim.
+    queue: VecDeque<(usize, usize)>,
+    /// Per-layer, per-tile in-flight marks.
+    inflight: Vec<Vec<bool>>,
+    /// Per-layer tile assembly in progress (worker path only; the
+    /// synchronous fault path decodes whole layers and discards any
+    /// partial assembly it preempts).
+    partial: Vec<Option<PartialLayer>>,
     /// First worker-side failure; delivered once to the next consumer.
     error: Option<Error>,
     cancelled: bool,
@@ -150,14 +183,15 @@ pub struct PrefetchShared {
 impl PrefetchShared {
     fn from_cache(cache: WeightCache, window: usize) -> Result<Arc<Self>> {
         let source = Arc::clone(cache.source());
-        let n = source.n_layers();
+        let tiles_per: Vec<usize> = source.layers().iter().map(|m| m.tiles.len()).collect();
         let decoder = SegmentDecoder::new(source)?;
         let ledger = cache.ledger_handle();
         Ok(Arc::new(PrefetchShared {
             state: Mutex::new(State {
                 cache,
                 queue: VecDeque::new(),
-                inflight: vec![false; n],
+                inflight: tiles_per.iter().map(|&t| vec![false; t]).collect(),
+                partial: tiles_per.iter().map(|_| None).collect(),
                 error: None,
                 cancelled: false,
                 counters: PrefetchCounters::default(),
@@ -281,21 +315,28 @@ impl PrefetchShared {
         }
     }
 
-    /// Enqueue prefetch jobs for `indices` (deduplicated against the
-    /// queue, resident layers, and in-flight decodes), then wake the
-    /// workers.
+    /// Enqueue prefetch jobs for `indices`, expanded to one `(layer,
+    /// tile)` entry per not-yet-decoded tile (deduplicated against the
+    /// queue, resident layers, in-flight tiles, and tiles already
+    /// assembled into a partial layer), then wake the workers.
     pub fn schedule(&self, indices: &[usize]) {
         let mut st = self.lock_state();
         if st.cancelled {
             return;
         }
         for &idx in indices {
-            if idx < st.inflight.len()
-                && !st.inflight[idx]
-                && !st.cache.is_resident(idx)
-                && !st.queue.contains(&idx)
-            {
-                st.queue.push_back(idx);
+            if idx >= st.inflight.len() || st.cache.is_resident(idx) {
+                continue;
+            }
+            let mut any = false;
+            for t in 0..st.inflight[idx].len() {
+                let assembled = st.partial[idx].as_ref().is_some_and(|p| p.done[t]);
+                if !st.inflight[idx][t] && !assembled && !st.queue.contains(&(idx, t)) {
+                    st.queue.push_back((idx, t));
+                    any = true;
+                }
+            }
+            if any {
                 st.counters.scheduled += 1;
             }
         }
@@ -307,19 +348,20 @@ impl PrefetchShared {
     }
 
     fn claim_locked(st: &mut State) -> Option<Job> {
-        while let Some(idx) = st.queue.pop_front() {
-            if st.cache.is_resident(idx) || st.inflight[idx] {
+        while let Some((idx, tile)) = st.queue.pop_front() {
+            let assembled = st.partial[idx].as_ref().is_some_and(|p| p.done[tile]);
+            if st.cache.is_resident(idx) || st.inflight[idx][tile] || assembled {
                 st.counters.redundant += 1;
                 continue;
             }
-            st.inflight[idx] = true;
-            return Some(Job { index: idx });
+            st.inflight[idx][tile] = true;
+            return Some(Job { index: idx, tile });
         }
         None
     }
 
     /// Claim the next useful queued job without blocking, marking its
-    /// layer in-flight (exactly what a pool worker does). The manual
+    /// tile in-flight (exactly what a pool worker does). The manual
     /// half of the scheduler seam.
     pub fn try_claim(&self) -> Option<Job> {
         Self::claim_locked(&mut self.lock_state())
@@ -340,36 +382,101 @@ impl PrefetchShared {
         }
     }
 
-    /// Decode a claimed job. Runs on the caller's thread with **no**
-    /// lock held — this is the long pole the prefetcher overlaps with
-    /// token compute.
-    pub fn decode_job(&self, job: &Job, stats: &mut ThreadStats) -> Result<QuantizedTensor> {
-        self.decoder.decode_layer_stats(job.index, stats)
+    /// Decode a claimed tile job. Runs on the caller's thread with
+    /// **no** lock held — this is the long pole the prefetcher overlaps
+    /// with token compute.
+    pub fn decode_job(&self, job: &Job, stats: &mut ThreadStats) -> Result<Vec<u8>> {
+        let out = self.decoder.decode_tile(job.index, job.tile)?;
+        let tile = &self.decoder.source().meta(job.index).tiles[job.tile];
+        stats.segments += 1;
+        stats.encoded_bytes += tile.encoded_len;
+        stats.symbols += tile.n_symbols;
+        Ok(out)
     }
 
-    /// Publish a decode result: insert the layer **pinned** (so
-    /// eviction cannot outrun the consumer), clear the in-flight mark,
-    /// and wake anyone waiting on it. Errors are parked for the next
-    /// consumer access. After cancellation the result is discarded but
-    /// the in-flight mark is still cleared, so a blocked consumer can
+    /// Publish a tile decode result: copy it into the layer's staging
+    /// buffer, and when this was the last missing tile, insert the
+    /// assembled layer **pinned** (so eviction cannot outrun the
+    /// consumer), clear the in-flight marks, and wake anyone waiting on
+    /// it. Errors are parked for the next consumer access and drop the
+    /// staging buffer — sibling tiles cannot seal a layer whose stream
+    /// is bad. After cancellation the result is discarded but the
+    /// in-flight mark is still cleared, so a blocked consumer can
     /// always make progress.
-    pub fn publish(&self, job: Job, result: Result<QuantizedTensor>) {
+    pub fn publish(&self, job: Job, result: Result<Vec<u8>>) {
+        let meta = self.decoder.source().meta(job.index);
+        let mut st = self.lock_state();
+        if st.cancelled {
+            st.inflight[job.index][job.tile] = false;
+            drop(st);
+            self.done.notify_all();
+            return;
+        }
+        let mut sealed: Option<Vec<u8>> = None;
+        match result {
+            Ok(bytes) => {
+                let n_tiles = meta.tiles.len();
+                let tile = &meta.tiles[job.tile];
+                let complete = {
+                    let entry = st.partial[job.index].get_or_insert_with(|| PartialLayer {
+                        buf: vec![0u8; meta.n_symbols],
+                        done: vec![false; n_tiles],
+                        remaining: n_tiles,
+                    });
+                    if !entry.done[job.tile] {
+                        entry.buf[tile.sym_offset..tile.sym_offset + tile.n_symbols]
+                            .copy_from_slice(&bytes);
+                        entry.done[job.tile] = true;
+                        entry.remaining -= 1;
+                    }
+                    entry.remaining == 0
+                };
+                if complete {
+                    sealed = st.partial[job.index].take().map(|p| p.buf);
+                    // Hold every tile mark while the seal is in flight,
+                    // so no scheduler, worker, or consumer re-decodes
+                    // the layer between the unlock below and the pinned
+                    // insert.
+                    for m in st.inflight[job.index].iter_mut() {
+                        *m = true;
+                    }
+                } else {
+                    st.inflight[job.index][job.tile] = false;
+                }
+            }
+            Err(e) => {
+                st.inflight[job.index][job.tile] = false;
+                st.partial[job.index] = None;
+                if st.error.is_none() {
+                    st.error = Some(e);
+                }
+            }
+        }
+        drop(st);
+        let Some(buf) = sealed else {
+            self.done.notify_all();
+            return;
+        };
         // Shared-ledger pools: make global headroom by shedding colder
         // peers *before* taking our own lock (lock ordering: never hold
         // two engines' state locks at once).
-        if result.is_ok() {
-            let bytes = self.decoder.source().meta(job.index).n_symbols;
-            self.reclaim_from_peers(bytes);
-        }
+        self.reclaim_from_peers(meta.n_symbols);
+        let assembled = crate::tensor::TensorU8::new(meta.shape.clone(), buf)
+            .map(|symbols| QuantizedTensor {
+                symbols,
+                params: meta.params,
+            });
         let mut st = self.lock_state();
-        st.inflight[job.index] = false;
+        for m in st.inflight[job.index].iter_mut() {
+            *m = false;
+        }
         if !st.cancelled {
             // Pin so eviction cannot outrun the consumer — but cap the
             // pinned population at the window, so stale queue entries
             // (scheduled, then evicted again before their claim) can
             // never pin the whole budget.
             let pin = st.cache.counters().pinned_layers < self.window;
-            match result {
+            match assembled {
                 Ok(t) => match st.cache.insert(job.index, t, pin) {
                     Ok(()) => st.counters.completed += 1,
                     // Under a shared ledger a failed insert means a peer
@@ -447,11 +554,12 @@ impl PrefetchShared {
                 // panicking under the lock is not.
                 continue;
             }
-            if st.inflight[index] {
-                // A worker is mid-decode on exactly this layer: wait for
-                // its publish instead of decoding the segment twice. One
-                // logical wait per access — `done` is notified by every
-                // publish, so re-wakes must not re-count.
+            if st.inflight[index].iter().any(|&b| b) {
+                // A worker is mid-decode on a tile of exactly this
+                // layer: wait for its publish instead of decoding the
+                // stream twice. One logical wait per access — `done` is
+                // notified by every publish, so re-wakes must not
+                // re-count.
                 if !faulted {
                     st.counters.waits += 1;
                 }
@@ -459,10 +567,16 @@ impl PrefetchShared {
                 st = self.done.wait(st).unwrap_or_else(PoisonError::into_inner);
                 continue;
             }
-            // Synchronous fault: claim the layer ourselves so no worker
-            // duplicates the decode, release the lock for the decode,
+            // Synchronous fault: claim every tile of the layer ourselves
+            // so no worker duplicates the decode (queued tile entries
+            // turn redundant at their claim), discard any partial
+            // worker-side assembly — the whole-layer decode below
+            // re-covers those tiles — release the lock for the decode,
             // then re-enter the loop to serve it.
-            st.inflight[index] = true;
+            for m in st.inflight[index].iter_mut() {
+                *m = true;
+            }
+            st.partial[index] = None;
             st.counters.sync_faults += 1;
             faulted = true;
             drop(st);
@@ -475,7 +589,9 @@ impl PrefetchShared {
                 self.reclaim_from_peers(self.decoder.source().meta(index).n_symbols);
             }
             st = self.lock_state();
-            st.inflight[index] = false;
+            for m in st.inflight[index].iter_mut() {
+                *m = false;
+            }
             // The in-flight mark is cleared either way: wake any waiter
             // before acting on the result.
             self.done.notify_all();
@@ -670,25 +786,27 @@ impl TestScheduler {
         }
     }
 
-    /// Claim the next queued job, marking its layer in-flight — the
+    /// Claim the next queued tile job, marking its tile in-flight — the
     /// "worker picked it up" step, without decoding anything yet.
     pub fn claim(&mut self) -> Option<Job> {
         self.shared.try_claim()
     }
 
-    /// Decode a claimed job on this thread (the "worker is mid-decode"
-    /// state lives between this call and [`TestScheduler::publish`]).
-    pub fn decode(&mut self, job: &Job) -> Result<QuantizedTensor> {
+    /// Decode a claimed tile job on this thread (the "worker is
+    /// mid-decode" state lives between this call and
+    /// [`TestScheduler::publish`]).
+    pub fn decode(&mut self, job: &Job) -> Result<Vec<u8>> {
         self.shared.decode_job(job, &mut self.stats)
     }
 
-    /// Publish a decode result into the cache, completing the job.
-    pub fn publish(&mut self, job: Job, result: Result<QuantizedTensor>) {
+    /// Publish a tile decode result, completing the job (and, when it
+    /// was the layer's last missing tile, the layer).
+    pub fn publish(&mut self, job: Job, result: Result<Vec<u8>>) {
         self.shared.publish(job, result);
     }
 
-    /// Run one whole job to completion (claim → decode → publish).
-    /// Returns the layer index, or `None` when the queue held no
+    /// Run one whole tile job to completion (claim → decode → publish).
+    /// Returns the tile's layer index, or `None` when the queue held no
     /// runnable job.
     pub fn step(&mut self) -> Option<usize> {
         let job = self.claim()?;
@@ -830,12 +948,17 @@ impl PrefetchingWeightSet {
             .collect();
         digest_order.sort();
         let shared = PrefetchShared::from_cache(cache, window)?;
-        // Cap the pool at the window: each worker holds at most one
-        // decoded-but-unpublished layer outside cache accounting, so
-        // `workers <= window` keeps true peak memory within the same
-        // `(window + 1) × largest` floor the constructor just checked
-        // (and more decode threads than a window can feed is waste).
-        let workers = cfg.workers.min(window);
+        // Cap the pool at window × tiles-per-layer: each worker holds
+        // at most one decoded-but-unpublished *tile* outside cache
+        // accounting (staging buffers are bounded by the window), so
+        // the cap keeps true peak memory within the same
+        // `(window + 1) × largest` floor the constructor just checked —
+        // while still letting every worker attack one hot layer's
+        // tiles (more decode threads than the window can feed tiles to
+        // is waste).
+        let workers = cfg
+            .workers
+            .min(window.saturating_mul(source.max_tiles_per_layer()));
         let handles = (0..workers)
             .map(|_| {
                 let shared = Arc::clone(&shared);
@@ -877,7 +1000,7 @@ impl PrefetchingWeightSet {
     }
 
     /// Worker threads actually spawned (`cfg.workers` capped at the
-    /// window).
+    /// window times the largest per-layer tile count).
     pub fn workers(&self) -> usize {
         self.handles.len()
     }

@@ -537,6 +537,26 @@ fn classify_line(line: &[u8], reply_tx: &mpsc::Sender<String>) -> Option<Incomin
     }
 }
 
+/// Drain reply lines from `rx` onto `w`, one `\n`-terminated line per
+/// message, until the channel closes or the sink fails. A failed
+/// *flush* ends the loop exactly like a failed write: both mean the
+/// peer is unreachable, and swallowing the flush error (`let _ =
+/// w.flush()`) left the thread happily pushing every later reply into
+/// a sink that had already told us it was dead. Generic over the sink
+/// so the teardown contract is unit-testable without a socket
+/// (`TcpStream::flush` itself is a no-op, but buffered or wrapped
+/// sinks surface real errors there).
+fn writer_loop<W: Write>(rx: mpsc::Receiver<String>, mut w: W) {
+    while let Ok(line) = rx.recv() {
+        if w.write_all(line.as_bytes()).is_err()
+            || w.write_all(b"\n").is_err()
+            || w.flush().is_err()
+        {
+            break;
+        }
+    }
+}
+
 fn read_conn(stream: TcpStream, tx: mpsc::Sender<Incoming>, stop: Arc<AtomicBool>) {
     let peer_write = match stream.try_clone() {
         Ok(s) => s,
@@ -548,16 +568,9 @@ fn read_conn(stream: TcpStream, tx: mpsc::Sender<Incoming>, stop: Arc<AtomicBool
         .set_read_timeout(Some(Duration::from_millis(200)))
         .ok();
     let (reply_tx, reply_rx) = mpsc::channel::<String>();
-    // Writer thread serializes replies back to this connection.
-    let writer = std::thread::spawn(move || {
-        let mut w = peer_write;
-        while let Ok(line) = reply_rx.recv() {
-            if w.write_all(line.as_bytes()).is_err() || w.write_all(b"\n").is_err() {
-                break;
-            }
-            let _ = w.flush();
-        }
-    });
+    // Writer thread serializes replies back to this connection; it
+    // tears down on the first write OR flush error.
+    let writer = std::thread::spawn(move || writer_loop(reply_rx, peer_write));
     let mut reader = BufReader::new(stream);
     let mut line: Vec<u8> = Vec::new();
     loop {
@@ -826,6 +839,112 @@ mod tests {
         stop.store(true, Ordering::Relaxed);
         let served = server.join().unwrap();
         assert_eq!(served, 1);
+    }
+
+    /// A healthy sink drains the whole channel, one line per message.
+    #[test]
+    fn writer_loop_drains_channel_when_sink_is_healthy() {
+        let (tx, rx) = mpsc::channel::<String>();
+        tx.send("a".into()).unwrap();
+        tx.send("b".into()).unwrap();
+        drop(tx);
+        let mut out: Vec<u8> = Vec::new();
+        writer_loop(rx, &mut out);
+        assert_eq!(out, b"a\nb\n");
+    }
+
+    /// Regression: the writer thread used to swallow flush errors
+    /// (`let _ = w.flush();`), so a sink that reported the peer dead at
+    /// flush time kept receiving every later reply. The first failed
+    /// flush must end the loop like a failed write does.
+    #[test]
+    fn writer_loop_tears_down_on_first_flush_failure() {
+        struct FailingFlush {
+            buf: Vec<u8>,
+            flushes: usize,
+        }
+        impl Write for FailingFlush {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.buf.extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                self.flushes += 1;
+                Err(std::io::Error::new(
+                    std::io::ErrorKind::BrokenPipe,
+                    "peer disconnected",
+                ))
+            }
+        }
+        let (tx, rx) = mpsc::channel::<String>();
+        for i in 0..3 {
+            tx.send(format!("line {i}")).unwrap();
+        }
+        drop(tx);
+        let mut w = FailingFlush {
+            buf: Vec::new(),
+            flushes: 0,
+        };
+        writer_loop(rx, &mut w);
+        assert_eq!(w.flushes, 1, "first failed flush must end the loop");
+        assert_eq!(
+            w.buf, b"line 0\n",
+            "replies after the failed flush must not be written into a dead sink"
+        );
+    }
+
+    /// The same contract at the socket level: a client that reads its
+    /// first response line, queues more requests, and disconnects
+    /// *between* response lines must only cost its own connection —
+    /// the server keeps serving a healthy neighbor.
+    #[test]
+    fn client_disconnecting_between_response_lines_leaves_server_healthy() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let server = std::thread::spawn(move || {
+            let mut engine = Engine::new(MockBackend::new(2, 32, 128), EngineConfig::default());
+            serve(&mut engine, listener, stop2).unwrap()
+        });
+
+        let mut healthy = Client::connect(&addr).unwrap();
+        assert_eq!(
+            healthy.request("ab", 2, 0.0).unwrap().get("tokens").unwrap().as_usize().unwrap(),
+            2
+        );
+
+        // The flaky client: one full round trip, then two queued
+        // requests whose replies it will never read.
+        {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).ok();
+            s.write_all(b"{\"prompt\":\"ab\",\"max_tokens\":2}\n").unwrap();
+            let mut reader = BufReader::new(s.try_clone().unwrap());
+            let mut reply = String::new();
+            reader.read_line(&mut reply).unwrap();
+            assert!(reply.contains("tokens"), "{reply:?}");
+            s.write_all(
+                b"{\"prompt\":\"cd\",\"max_tokens\":2}\n{\"prompt\":\"ef\",\"max_tokens\":2}\n",
+            )
+            .unwrap();
+            // Dropped here: the connection dies between response lines,
+            // with replies still owed.
+        }
+
+        // The neighbor never notices: same connection, fresh
+        // connection, and the admin line all still answer.
+        for prompt in ["cd", "ef", "gh"] {
+            let ok = healthy.request(prompt, 2, 0.0).unwrap();
+            assert_eq!(ok.get("tokens").unwrap().as_usize().unwrap(), 2);
+        }
+        let mut fresh = Client::connect(&addr).unwrap();
+        let stats = fresh.stats().unwrap();
+        assert!(stats.get("completed").unwrap().as_usize().unwrap() >= 5);
+
+        stop.store(true, Ordering::Relaxed);
+        let served = server.join().unwrap();
+        assert!(served >= 5, "server must keep serving after the disconnect, served {served}");
     }
 
     /// Adversarial line-protocol suite, part 1: every malformed line on

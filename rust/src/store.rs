@@ -5,7 +5,7 @@
 //! Layout (little-endian):
 //!
 //! ```text
-//! magic "ELM1" | version u32 | bitwidth u8 | n_layers u32
+//! magic "ELM1" | version u32 (= 2) | bitwidth u8 | n_layers u32
 //! global canonical code lengths: 256 × u8      (this is "H" — canonical
 //!                                               codes rebuild from lengths)
 //! per layer:
@@ -13,13 +13,27 @@
 //!   rank u8 | dims: rank × u64
 //!   scheme u8 | scale f32 | zero_point f32
 //!   n_symbols u64 | encoded_len u64 | crc32 u32
-//! payload: concatenated byte-aligned encoded segments (one per layer)
+//!   n_tiles u32                                  (v2 only)
+//!   per tile: n_symbols u64 | encoded_len u64 | crc32 u32
+//! payload: concatenated byte-aligned encoded segments (one per layer),
+//!          each segment the concatenation of its byte-aligned tiles
 //! ```
 //!
 //! Crucially the payload keeps **one independently decodable, byte-aligned
 //! segment per weight tensor** — the "parameter space segmentation" that
 //! makes §III-C parallel decoding possible: segment starts/ends are known
 //! from the manifest before any bit is decoded.
+//!
+//! **v2 tiles** carve each layer segment into independently decodable,
+//! byte-aligned sub-streams so the unit of parallel decode and
+//! decode-ahead prefetch is smaller than a whole layer: every prefetch
+//! worker can attack a single hot layer instead of serializing behind
+//! it. Tile byte offsets and symbol offsets are derived by accumulation
+//! (never stored); each tile carries its own CRC-32 so corruption is
+//! isolated to one tile. **v1 containers remain readable forever**:
+//! [`read_manifest`] dispatches on the version field and synthesizes one
+//! whole-segment tile per layer for v1, so every tile-aware consumer
+//! sees a uniform model.
 //!
 //! The byte-level specification third parties need to write their own
 //! encoders/decoders lives in `docs/FORMAT.md` at the repository root;
@@ -46,7 +60,30 @@ use std::path::Path;
 use std::sync::Arc;
 
 const MAGIC: &[u8; 4] = b"ELM1";
-const VERSION: u32 = 1;
+/// Version written by this build (v2: tiled layer segments).
+const VERSION: u32 = 2;
+/// The original single-tile-per-layer format, still readable.
+const VERSION_V1: u32 = 1;
+/// Serialized bytes per tile-table entry: n_symbols u64 + encoded_len
+/// u64 + crc32 u32.
+const TILE_ENTRY_BYTES: usize = 8 + 8 + 4;
+
+/// One independently decodable, byte-aligned **tile** of a layer
+/// segment — the v2 unit of parallel decode and prefetch claim.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TileMeta {
+    /// First symbol (decoded byte) this tile covers within its layer.
+    pub sym_offset: usize,
+    /// Symbols decoded from this tile.
+    pub n_symbols: usize,
+    /// Byte offset of this tile within the **payload** (absolute, not
+    /// layer-relative).
+    pub offset: usize,
+    /// Encoded tile length in bytes.
+    pub encoded_len: usize,
+    /// CRC32 of the encoded tile bytes.
+    pub crc32: u32,
+}
 
 /// Per-layer manifest entry.
 #[derive(Debug, Clone)]
@@ -65,6 +102,10 @@ pub struct LayerMeta {
     pub encoded_len: usize,
     /// CRC32 of the encoded segment.
     pub crc32: u32,
+    /// Independently decodable tiles covering the segment, in symbol
+    /// order. Always non-empty: v1 containers get one synthesized
+    /// whole-segment tile.
+    pub tiles: Vec<TileMeta>,
 }
 
 /// A compressed model: manifest + global code + payload.
@@ -118,6 +159,25 @@ impl ElmModel {
         Ok(())
     }
 
+    /// Encoded bytes of tile `t` of layer `i`.
+    pub fn tile_bytes(&self, i: usize, t: usize) -> &[u8] {
+        let tile = &self.layers[i].tiles[t];
+        &self.payload[tile.offset..tile.offset + tile.encoded_len]
+    }
+
+    /// Check tile `t` of layer `i` against its own CRC32 — corruption
+    /// in one tile never implicates its siblings.
+    pub fn verify_tile(&self, i: usize, t: usize) -> Result<()> {
+        let m = &self.layers[i];
+        if crate::crc32::hash(self.tile_bytes(i, t)) != m.tiles[t].crc32 {
+            return Err(Error::Format(format!(
+                "layer {:?}: tile {t} CRC mismatch",
+                m.name
+            )));
+        }
+        Ok(())
+    }
+
     /// Cursor over the container's segments in execution (storage)
     /// order — the walk order of the streaming decoder
     /// ([`crate::decode::StreamingDecoder`]).
@@ -151,12 +211,27 @@ impl ElmModel {
 
 /// Serialized size of everything **before** the payload: magic, version,
 /// bit width, layer count, the 256-byte code-length table, and the layer
-/// manifest. This is also the payload's byte offset within a container
-/// file, which is what lazy segment reads seek relative to.
+/// manifest (v2: including each layer's tile table). This is also the
+/// payload's byte offset within a container file written by this build,
+/// which is what lazy segment reads seek relative to. (A *parsed* v1
+/// container's payload base differs — [`SegmentSource::open`] uses the
+/// header length accumulated during parsing, not this function.)
 pub fn header_bytes(layers: &[LayerMeta]) -> usize {
     let manifest: usize = layers
         .iter()
-        .map(|l| 2 + l.name.len() + 1 + 8 * l.shape.rank() + 1 + 4 + 4 + 8 + 8 + 4)
+        .map(|l| {
+            2 + l.name.len()
+                + 1
+                + 8 * l.shape.rank()
+                + 1
+                + 4
+                + 4
+                + 8
+                + 8
+                + 4
+                + 4
+                + TILE_ENTRY_BYTES * l.tiles.len()
+        })
         .sum();
     4 + 4 + 1 + 4 + 256 + manifest
 }
@@ -335,7 +410,10 @@ impl SegmentSource {
             };
             read_manifest(&mut r)?
         };
-        let payload_base = header_bytes(&head.layers) as u64;
+        // v1 and v2 manifests serialize to different lengths for the
+        // same layers, so the payload base is whatever the parser
+        // actually consumed, not a recomputation under today's version.
+        let payload_base = head.header_len as u64;
         // Checked: a forged manifest can push the claimed payload length
         // near u64::MAX, and an overflowing sum here would panic (debug)
         // or wrap into a bogus comparison (release) instead of erroring.
@@ -432,13 +510,73 @@ impl SegmentSource {
         }
         Ok(seg)
     }
+
+    /// Read tile `t` of layer `index`: borrowed from the resident
+    /// payload, or a positioned read of exactly the tile's bytes from
+    /// disk — a prefetch worker attacking one tile never pulls the
+    /// whole layer segment.
+    pub fn read_tile(&self, index: usize, t: usize) -> Result<Cow<'_, [u8]>> {
+        let tile = &self.layers[index].tiles[t];
+        match &self.backing {
+            Backing::Memory(model) => Ok(Cow::Borrowed(model.tile_bytes(index, t))),
+            Backing::File { file, payload_base } => {
+                let mut buf = vec![0u8; tile.encoded_len];
+                file.read_exact_at(&mut buf, payload_base + tile.offset as u64)?;
+                Ok(Cow::Owned(buf))
+            }
+        }
+    }
+
+    /// Read tile `t` of layer `index` and check it against the tile's
+    /// own CRC-32: corruption is caught at tile granularity, so one bad
+    /// tile never poisons its siblings.
+    pub fn verified_tile(&self, index: usize, t: usize) -> Result<Cow<'_, [u8]>> {
+        let bytes = self.read_tile(index, t)?;
+        let m = &self.layers[index];
+        if crate::crc32::hash(&bytes) != m.tiles[t].crc32 {
+            return Err(Error::Format(format!(
+                "layer {:?}: tile {t} CRC mismatch",
+                m.name
+            )));
+        }
+        Ok(bytes)
+    }
+
+    /// Largest tile count of any layer (≥ 1 for a non-empty manifest)
+    /// — the intra-layer parallelism bound prefetch worker sizing keys
+    /// off.
+    pub fn max_tiles_per_layer(&self) -> usize {
+        self.layers.iter().map(|l| l.tiles.len()).max().unwrap_or(1)
+    }
+}
+
+/// Default tile sizing: aim for ~6 tiles per layer, but never slice
+/// below 1024 symbols — tiny tiles pay padding + manifest overhead for
+/// no parallelism a small layer needs.
+fn auto_tile_symbols(n_symbols: usize) -> usize {
+    n_symbols.div_ceil(6).max(1024)
 }
 
 /// Compress a set of named fp32 layers: mixed quantization (§III-A) →
 /// pooled frequency table → model-global Huffman code (§III-B) →
-/// per-layer byte-aligned segments (§III-C). This is Algorithm 1's
-/// `CLOUD PROCESSING` procedure end-to-end.
+/// per-layer byte-aligned segments (§III-C), tiled with the automatic
+/// size rule. This is Algorithm 1's `CLOUD PROCESSING` procedure
+/// end-to-end.
 pub fn compress(layers: &[(String, TensorF32)], bits: BitWidth) -> Result<(ElmModel, CompressionReport)> {
+    compress_with_tile_size(layers, bits, None)
+}
+
+/// [`compress`] with explicit tile granularity: each layer segment is
+/// emitted as independently decodable, byte-aligned tiles of (up to)
+/// `tile_symbols` symbols each (`None` → the automatic ~6-tiles-per-
+/// layer rule, the CLI's `--tile-kb 0`). Decoded output is bit-identical
+/// for any tile size — tiling only changes how much of a layer a single
+/// worker must decode serially.
+pub fn compress_with_tile_size(
+    layers: &[(String, TensorF32)],
+    bits: BitWidth,
+    tile_symbols: Option<usize>,
+) -> Result<(ElmModel, CompressionReport)> {
     if layers.is_empty() {
         return Err(Error::InvalidArg("compress: no layers".into()));
     }
@@ -456,22 +594,48 @@ pub fn compress(layers: &[(String, TensorF32)], bits: BitWidth) -> Result<(ElmMo
     let code = CodeSpec::build(&freq)?;
     let encoder = Encoder::new(&code);
 
-    // 4. Encode each tensor as its own byte-aligned segment (lines 13–15).
+    // 4. Encode each tensor as its own byte-aligned segment (lines
+    //    13–15), carved into independently decodable tiles. Each
+    //    `encode_to_vec` call zero-pads to a whole byte, which is
+    //    exactly the byte alignment the tile table promises.
     let mut payload = Vec::new();
     let mut metas = Vec::with_capacity(layers.len());
     for ((name, _), q) in layers.iter().zip(&quantized) {
-        let seg = encoder.encode_to_vec(q.symbols.data())?;
-        let crc = crate::crc32::hash(&seg);
+        let syms = q.symbols.data();
+        let per_tile = tile_symbols
+            .unwrap_or_else(|| auto_tile_symbols(syms.len()))
+            .max(1);
+        let layer_off = payload.len();
+        let mut tiles = Vec::new();
+        let mut s = 0usize;
+        loop {
+            let end = s.saturating_add(per_tile).min(syms.len());
+            let seg = encoder.encode_to_vec(&syms[s..end])?;
+            tiles.push(TileMeta {
+                sym_offset: s,
+                n_symbols: end - s,
+                offset: payload.len(),
+                encoded_len: seg.len(),
+                crc32: crate::crc32::hash(&seg),
+            });
+            payload.extend_from_slice(&seg);
+            s = end;
+            if s >= syms.len() {
+                // A zero-symbol layer still gets one (empty) tile, so
+                // `tiles` is never empty.
+                break;
+            }
+        }
         metas.push(LayerMeta {
             name: name.clone(),
             shape: q.symbols.shape().clone(),
             params: q.params,
-            n_symbols: q.symbols.numel(),
-            offset: payload.len(),
-            encoded_len: seg.len(),
-            crc32: crc,
+            n_symbols: syms.len(),
+            offset: layer_off,
+            encoded_len: payload.len() - layer_off,
+            crc32: crate::crc32::hash(&payload[layer_off..]),
+            tiles,
         });
-        payload.extend_from_slice(&seg);
     }
 
     let n_params: usize = metas.iter().map(|m| m.n_symbols).sum();
@@ -498,13 +662,18 @@ pub fn compress(layers: &[(String, TensorF32)], bits: BitWidth) -> Result<(ElmMo
 }
 
 /// Decode a single layer of a model (serial path; the parallel path
-/// lives in [`crate::decode`]).
+/// lives in [`crate::decode`]). Walks the layer's tiles behind each
+/// tile's own CRC, so decode output is bit-identical whether the
+/// container is v1 (one synthesized tile) or v2 (many).
 pub fn decode_layer(model: &ElmModel, i: usize) -> Result<QuantizedTensor> {
     let meta = &model.layers[i];
-    model.verify_segment(i)?;
-    let seg = model.segment(i);
     let dec = Decoder::new(&model.code)?;
-    let symbols = dec.decode(seg, meta.n_symbols)?;
+    let mut symbols = vec![0u8; meta.n_symbols];
+    for (t, tile) in meta.tiles.iter().enumerate() {
+        model.verify_tile(i, t)?;
+        let out = &mut symbols[tile.sym_offset..tile.sym_offset + tile.n_symbols];
+        dec.decode_into(model.tile_bytes(i, t), out)?;
+    }
     Ok(QuantizedTensor {
         symbols: TensorU8::new(meta.shape.clone(), symbols)?,
         params: meta.params,
@@ -590,6 +759,11 @@ struct ManifestHead {
     layers: Vec<LayerMeta>,
     /// Total payload length the manifest claims.
     payload_len: usize,
+    /// Bytes the parser consumed before the payload — the payload's
+    /// offset in a container file. Depends on the parsed *version* (a
+    /// v1 manifest has no tile tables), so it cannot be recomputed from
+    /// the layers alone.
+    header_len: usize,
 }
 
 /// Parse the header + manifest off a reader, leaving it positioned at
@@ -601,8 +775,11 @@ fn read_manifest<R: Read>(r: &mut Reader<R>) -> Result<ManifestHead> {
     if magic != MAGIC {
         return Err(Error::Format(format!("bad magic {magic:02x?}")));
     }
+    // Versioned dispatch, not equality: v1 containers (one implicit
+    // whole-segment tile per layer) stay readable forever; v2 adds the
+    // explicit per-layer tile table.
     let version = r.u32()?;
-    if version != VERSION {
+    if version != VERSION_V1 && version != VERSION {
         return Err(Error::Format(format!("unsupported ELM version {version}")));
     }
     let bits = match r.u8()? {
@@ -628,6 +805,8 @@ fn read_manifest<R: Read>(r: &mut Reader<R>) -> Result<ManifestHead> {
     };
     let mut layers = Vec::with_capacity(n_layers);
     let mut offset = 0usize;
+    // magic + version + bits + n_layers + code lengths.
+    let mut header_len = 4 + 4 + 1 + 4 + 256;
     for _ in 0..n_layers {
         let name_len = r.u16()? as usize;
         let name = String::from_utf8(r.bytes(name_len)?)
@@ -672,6 +851,78 @@ fn read_manifest<R: Read>(r: &mut Reader<R>) -> Result<ManifestHead> {
             )));
         }
         let crc32 = r.u32()?;
+        header_len += 2 + name_len + 1 + 8 * rank + 1 + 4 + 4 + 8 + 8 + 4;
+
+        let tiles = if version == VERSION_V1 {
+            // v1: the whole segment is the one tile. Synthesizing it
+            // here is what lets every downstream consumer be uniformly
+            // tile-aware without a version check of its own.
+            vec![TileMeta {
+                sym_offset: 0,
+                n_symbols,
+                offset,
+                encoded_len,
+                crc32,
+            }]
+        } else {
+            let n_tiles = r.u32()? as usize;
+            // Every tile costs at least one payload byte unless the
+            // layer itself is empty (one empty tile).
+            if n_tiles == 0 || n_tiles > encoded_len.max(1) {
+                return Err(Error::Format(format!(
+                    "layer {name:?}: implausible tile count {n_tiles} for \
+                     {encoded_len} encoded bytes"
+                )));
+            }
+            header_len += 4 + TILE_ENTRY_BYTES * n_tiles;
+            let mut tiles = Vec::with_capacity(n_tiles);
+            let mut sym_offset = 0usize;
+            let mut tile_off = offset;
+            for t in 0..n_tiles {
+                let t_symbols = r.u64()? as usize;
+                let t_len = r.u64()? as usize;
+                // Same one-bit-per-symbol bound as the layer check:
+                // rejects allocation-bomb tile claims up front.
+                if t_symbols > t_len.saturating_mul(8) {
+                    return Err(Error::Format(format!(
+                        "layer {name:?}: tile {t}: {t_symbols} symbols cannot \
+                         fit in {t_len} encoded bytes (minimum one bit per \
+                         symbol)"
+                    )));
+                }
+                let t_crc = r.u32()?;
+                tiles.push(TileMeta {
+                    sym_offset,
+                    n_symbols: t_symbols,
+                    offset: tile_off,
+                    encoded_len: t_len,
+                    crc32: t_crc,
+                });
+                sym_offset = sym_offset
+                    .checked_add(t_symbols)
+                    .ok_or_else(|| Error::Format("tile symbol offset overflow".into()))?;
+                tile_off = tile_off
+                    .checked_add(t_len)
+                    .ok_or_else(|| Error::Format("payload offset overflow".into()))?;
+            }
+            // The tile table must tile the segment exactly: same
+            // symbols, same bytes, no gaps or overlap.
+            if sym_offset != n_symbols {
+                return Err(Error::Format(format!(
+                    "layer {name:?}: tiles cover {sym_offset} symbols, \
+                     layer claims {n_symbols}"
+                )));
+            }
+            if tile_off - offset != encoded_len {
+                return Err(Error::Format(format!(
+                    "layer {name:?}: tiles cover {} encoded bytes, layer \
+                     claims {encoded_len}",
+                    tile_off - offset
+                )));
+            }
+            tiles
+        };
+
         layers.push(LayerMeta {
             name,
             shape,
@@ -685,6 +936,7 @@ fn read_manifest<R: Read>(r: &mut Reader<R>) -> Result<ManifestHead> {
             offset,
             encoded_len,
             crc32,
+            tiles,
         });
         offset = offset
             .checked_add(encoded_len)
@@ -695,6 +947,7 @@ fn read_manifest<R: Read>(r: &mut Reader<R>) -> Result<ManifestHead> {
         code,
         layers,
         payload_len: offset,
+        header_len,
     })
 }
 
@@ -723,6 +976,14 @@ impl ElmModel {
             w.u64(m.n_symbols as u64)?;
             w.u64(m.encoded_len as u64)?;
             w.u32(m.crc32)?;
+            w.u32(m.tiles.len() as u32)?;
+            for t in &m.tiles {
+                // Tile symbol/byte offsets are derived by accumulation
+                // on read — only the lengths and the CRC are stored.
+                w.u64(t.n_symbols as u64)?;
+                w.u64(t.encoded_len as u64)?;
+                w.u32(t.crc32)?;
+            }
         }
         w.bytes(&self.payload)?;
         Ok(())
@@ -1087,7 +1348,13 @@ mod tests {
         let layers = make_layers(16);
         let (mut model, _) = compress(&layers, BitWidth::U8).unwrap();
         let prev: usize = model.layers[..2].iter().map(|m| m.encoded_len).sum();
-        model.layers[2].encoded_len = usize::MAX - prev - 200;
+        let huge = usize::MAX - prev - 200;
+        model.layers[2].encoded_len = huge;
+        // Keep the tile table self-consistent (layer 2 is single-tile)
+        // so the forgery survives tile-sum validation and reaches the
+        // file-length overflow check.
+        assert_eq!(model.layers[2].tiles.len(), 1);
+        model.layers[2].tiles[0].encoded_len = huge;
         let mut buf = Vec::new();
         model.write_to(&mut buf).unwrap();
 
@@ -1155,6 +1422,199 @@ mod tests {
             *b = 0;
         }
         assert!(ElmModel::read_from(buf.as_slice()).is_err());
+    }
+
+    /// Serialize a single-tile-per-layer model in the **v1** wire
+    /// format (no tile tables) — what every pre-v2 build wrote.
+    fn write_v1(model: &ElmModel) -> Vec<u8> {
+        let mut w = Writer { inner: Vec::new() };
+        w.bytes(MAGIC).unwrap();
+        w.u32(VERSION_V1).unwrap();
+        w.u8(model.bits.bits() as u8).unwrap();
+        w.u32(model.layers.len() as u32).unwrap();
+        w.bytes(model.code.lengths()).unwrap();
+        for m in &model.layers {
+            w.u16(m.name.len() as u16).unwrap();
+            w.bytes(m.name.as_bytes()).unwrap();
+            w.u8(m.shape.rank() as u8).unwrap();
+            for &d in m.shape.dims() {
+                w.u64(d as u64).unwrap();
+            }
+            w.u8(m.params.scheme.tag()).unwrap();
+            w.f32(m.params.scale).unwrap();
+            w.f32(m.params.zero_point).unwrap();
+            w.u64(m.n_symbols as u64).unwrap();
+            w.u64(m.encoded_len as u64).unwrap();
+            w.u32(m.crc32).unwrap();
+        }
+        w.bytes(&model.payload).unwrap();
+        w.inner
+    }
+
+    #[test]
+    fn v1_container_reads_back_compat_and_decodes_bitexact() {
+        // A v1 writer only ever produced whole-segment encodings, which
+        // single-tile v2 compression reproduces byte for byte.
+        let layers = make_layers(20);
+        let (flat, _) = compress_with_tile_size(&layers, BitWidth::U8, Some(usize::MAX)).unwrap();
+        assert!(flat.layers.iter().all(|l| l.tiles.len() == 1));
+        let buf = write_v1(&flat);
+
+        let loaded = ElmModel::read_from(buf.as_slice()).unwrap();
+        assert_eq!(loaded.payload, flat.payload);
+        for (i, m) in loaded.layers.iter().enumerate() {
+            // v1 parse synthesizes exactly one whole-segment tile.
+            assert_eq!(m.tiles.len(), 1);
+            let t = &m.tiles[0];
+            assert_eq!(t.sym_offset, 0);
+            assert_eq!(t.n_symbols, m.n_symbols);
+            assert_eq!(t.offset, m.offset);
+            assert_eq!(t.encoded_len, m.encoded_len);
+            assert_eq!(t.crc32, m.crc32);
+            // The tile-aware decode path reproduces the source symbols.
+            assert_eq!(
+                decode_layer(&loaded, i).unwrap().symbols.data(),
+                quantize_mixed(&layers[i].1, BitWidth::U8).symbols.data()
+            );
+        }
+
+        // File-backed open must honor the shorter v1 header length.
+        let dir = std::env::temp_dir().join(format!("elm_v1_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.elm");
+        std::fs::write(&path, &buf).unwrap();
+        let lazy = SegmentSource::open(&path).unwrap();
+        assert_eq!(lazy.max_tiles_per_layer(), 1);
+        for i in 0..layers.len() {
+            assert_eq!(
+                lazy.verified_tile(i, 0).unwrap().as_ref(),
+                flat.segment(i)
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn explicit_tile_size_roundtrips_and_tables_are_contiguous() {
+        let layers = make_layers(21);
+        let (model, _) = compress_with_tile_size(&layers, BitWidth::U4, Some(256)).unwrap();
+        assert_eq!(model.layers[0].tiles.len(), 8, "2048 syms / 256 per tile");
+        for (i, l) in model.layers.iter().enumerate() {
+            let mut syms = 0usize;
+            let mut off = l.offset;
+            for t in &l.tiles {
+                assert_eq!(t.sym_offset, syms);
+                assert_eq!(t.offset, off);
+                syms += t.n_symbols;
+                off += t.encoded_len;
+            }
+            assert_eq!(syms, l.n_symbols);
+            assert_eq!(off - l.offset, l.encoded_len);
+            model.verify_segment(i).unwrap();
+        }
+
+        let mut buf = Vec::new();
+        model.write_to(&mut buf).unwrap();
+        assert_eq!(buf.len(), header_bytes(&model.layers) + model.payload.len());
+        let loaded = ElmModel::read_from(buf.as_slice()).unwrap();
+        for (a, b) in loaded.layers.iter().zip(&model.layers) {
+            assert_eq!(a.tiles, b.tiles);
+        }
+        for i in 0..layers.len() {
+            assert_eq!(
+                decode_layer(&loaded, i).unwrap().symbols.data(),
+                quantize_mixed(&layers[i].1, BitWidth::U4).symbols.data()
+            );
+        }
+    }
+
+    #[test]
+    fn tile_size_never_changes_decoded_symbols() {
+        // Tiling re-carves the bitstream (each tile is byte-aligned and
+        // independently padded) but decoded output must be invariant.
+        let layers = make_layers(23);
+        let want: Vec<Vec<u8>> = layers
+            .iter()
+            .map(|(_, w)| quantize_mixed(w, BitWidth::U8).symbols.data().to_vec())
+            .collect();
+        for tile in [Some(1), Some(100), Some(1000), Some(usize::MAX), None] {
+            let (model, _) = compress_with_tile_size(&layers, BitWidth::U8, tile).unwrap();
+            for i in 0..layers.len() {
+                assert_eq!(
+                    decode_layer(&model, i).unwrap().symbols.data(),
+                    &want[i][..],
+                    "tile size {tile:?}, layer {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_tile_caught_by_own_crc_without_poisoning_siblings() {
+        let layers = make_layers(22);
+        let (mut model, _) = compress(&layers, BitWidth::U8).unwrap();
+        let li = model
+            .layers
+            .iter()
+            .position(|l| l.tiles.len() > 1)
+            .expect("auto tiling must split a 2048-symbol layer");
+        let n_tiles = model.layers[li].tiles.len();
+        let bad = n_tiles - 1;
+        let off = model.layers[li].tiles[bad].offset;
+        model.payload[off] ^= 0xFF;
+
+        // The corrupt tile fails its own CRC; every sibling verifies.
+        let err = model.verify_tile(li, bad).unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+        for t in (0..n_tiles).filter(|&t| t != bad) {
+            model.verify_tile(li, t).unwrap();
+        }
+        // Whole-layer decode surfaces the tile error; other layers are
+        // untouched.
+        assert!(decode_layer(&model, li).is_err());
+        for i in (0..model.layers.len()).filter(|&i| i != li) {
+            decode_layer(&model, i).unwrap();
+        }
+    }
+
+    #[test]
+    fn adversarial_tile_table_rejected() {
+        let layers = make_layers(24);
+        let (model, _) = compress(&layers, BitWidth::U8).unwrap();
+
+        // Tile symbol sum disagrees with the layer claim.
+        let mut forged = model.clone();
+        forged.layers[0].tiles[0].n_symbols += 1;
+        let mut buf = Vec::new();
+        forged.write_to(&mut buf).unwrap();
+        let err = ElmModel::read_from(buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("tiles cover"), "{err}");
+
+        // Tile byte sum disagrees with the layer claim.
+        let mut forged = model.clone();
+        forged.layers[0].tiles[0].encoded_len += 1;
+        let mut buf = Vec::new();
+        forged.write_to(&mut buf).unwrap();
+        let err = ElmModel::read_from(buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("tiles cover"), "{err}");
+
+        // A tile claiming more symbols than its bytes can hold is an
+        // allocation bomb — rejected before the sums are even checked.
+        let mut forged = model.clone();
+        let t0_len = forged.layers[0].tiles[0].encoded_len;
+        forged.layers[0].tiles[0].n_symbols = t0_len * 8 + 1;
+        let mut buf = Vec::new();
+        forged.write_to(&mut buf).unwrap();
+        let err = ElmModel::read_from(buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("cannot fit"), "{err}");
+
+        // Implausible tile counts (0, or more tiles than payload bytes).
+        let mut forged = model.clone();
+        forged.layers[0].tiles.clear();
+        let mut buf = Vec::new();
+        forged.write_to(&mut buf).unwrap();
+        let err = ElmModel::read_from(buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("implausible tile count"), "{err}");
     }
 
     #[test]
