@@ -80,6 +80,28 @@ fn main() {
         "Msym/s".into(),
     ]);
 
+    // tANS codec arm on the same stream (measured, no hard floor:
+    // throughput targets stay pinned to the Huffman LUT path).
+    let (ans_table, ans_enc) = entrollm::ans::encode_with_own_table(&syms).unwrap();
+    let ans_encoder = entrollm::ans::Encoder::new(&ans_table);
+    let stats = bench.run("tans encode", || {
+        std::hint::black_box(ans_encoder.encode_to_vec(&syms).unwrap());
+    });
+    table.row(&[
+        "tans encode".into(),
+        format!("{:.1}", n as f64 / stats.median.as_secs_f64() / 1e6),
+        "Msym/s".into(),
+    ]);
+    let ans_dec = entrollm::ans::Decoder::new(&ans_table).unwrap();
+    let stats = bench.run("tans table decode", || {
+        ans_dec.decode_into(&ans_enc, &mut out).unwrap();
+    });
+    table.row(&[
+        "tans table decode".into(),
+        format!("{:.1}", n as f64 / stats.median.as_secs_f64() / 1e6),
+        "Msym/s".into(),
+    ]);
+
     // Raw BitReader consumption rate.
     let mut writer = BitWriter::new();
     for i in 0..n {
@@ -157,6 +179,31 @@ fn main() {
                 "tile-granular decode must let extra workers share one hot layer \
                  (T=1 {t1:.4}s vs T=4 {t4:.4}s)"
             );
+        }
+
+        // Same hot layer through the tANS arm: tiles stay the parallel
+        // unit of work regardless of which codec coded them (measured
+        // only — the scaling assert stays pinned to the Huffman arm).
+        let (ans_model, _) = entrollm::store::compress_with_options(
+            &hot_layer,
+            BitWidth::U8,
+            Some(hot.div_ceil(16)),
+            entrollm::store::CodecChoice::Ans,
+        )
+        .unwrap();
+        for threads in [1usize, 4] {
+            let pd = ParallelDecoder::new(threads);
+            let mut rate = 0.0f64;
+            for _ in 0..3 {
+                let (out, st) = pd.decode_model(&ans_model).unwrap();
+                std::hint::black_box(&out);
+                rate = rate.max(st.symbols_per_sec() / 1e6);
+            }
+            table.row(&[
+                format!("single hot layer tans decode (T={threads}, {n_tiles} tiles)"),
+                format!("{rate:.1}"),
+                "Msym/s".into(),
+            ]);
         }
     }
 

@@ -7,12 +7,13 @@
 //! artifacts exist. Paper reference bands: uint8 → 5.58–5.92 effective
 //! bits; uint4 → 1.39–1.62.
 
+use entrollm::baselines::{fixed_pack, gzip_bytes};
 use entrollm::bench::{fmt_bytes, quick_mode};
 use entrollm::metrics::Table;
 use entrollm::pipeline::build_elm;
-use entrollm::quant::BitWidth;
+use entrollm::quant::{quantize_mixed, BitWidth};
 use entrollm::rng::Rng;
-use entrollm::store::compress;
+use entrollm::store::{compress, compress_with_options, CodecChoice};
 use entrollm::tensor::TensorF32;
 
 /// A scaled-down stand-in for one of the paper's model families.
@@ -134,4 +135,47 @@ fn main() {
 
     table.emit("table1_storage");
     println!("paper reference: uint8 effective bits 5.58-5.92 | uint4 1.39-1.62");
+
+    // Three-way codec comparison on the same fig4-skewed families:
+    // Huffman vs the tANS arm vs a generic order-0 entropy coder
+    // (gzip stand-in — the offline build has no DEFLATE). tANS charges
+    // fractional bits per symbol, so on these skewed post-quantization
+    // distributions its payload must be no larger than Huffman's — the
+    // premise of the v3 codec-negotiated container (docs/FORMAT.md §v3).
+    let mut codecs = Table::new(
+        "Table I (codecs): Huffman vs tANS vs generic order-0 entropy",
+        &[
+            "model", "bits", "huffman", "tans", "generic (sub-gzip)", "tans/huffman",
+        ],
+    );
+    for f in families {
+        let layers = synth_layers(f, 0x7AB1E1);
+        for bits in [BitWidth::U8, BitWidth::U4] {
+            let (_, rh) =
+                compress_with_options(&layers, bits, None, CodecChoice::Huffman).unwrap();
+            let (_, ra) = compress_with_options(&layers, bits, None, CodecChoice::Ans).unwrap();
+            let mut syms = Vec::new();
+            for (_, t) in &layers {
+                syms.extend_from_slice(quantize_mixed(t, bits).symbols.data());
+            }
+            let gz = gzip_bytes(&fixed_pack(&syms, bits).unwrap()).unwrap();
+            codecs.row(&[
+                f.name.to_string(),
+                bits.to_string(),
+                fmt_bytes(rh.encoded_bytes),
+                fmt_bytes(ra.encoded_bytes),
+                fmt_bytes(gz.len()),
+                format!("{:.4}", ra.encoded_bytes as f64 / rh.encoded_bytes as f64),
+            ]);
+            assert!(
+                ra.encoded_bytes <= rh.encoded_bytes,
+                "{} {bits}: tANS payload {} must not exceed Huffman's {}",
+                f.name,
+                ra.encoded_bytes,
+                rh.encoded_bytes
+            );
+        }
+    }
+    codecs.emit("table1_codecs");
+    println!("codec arm OK: tANS payload <= Huffman on every skewed family");
 }

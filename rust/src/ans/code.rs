@@ -1,0 +1,270 @@
+//! Normalized frequency tables for the tANS codec — the `CodeSpec`
+//! analogue (L2, format layer).
+//!
+//! A [`AnsTable`] is the complete, canonical description of a tANS
+//! code: 256 per-symbol slot counts that sum to exactly
+//! `TABLE_SIZE = 2^TABLE_LOG`. Everything else — the deterministic
+//! symbol spread, the encode/decode state tables — is *derived* from
+//! those counts by integer-only rules, so a container only ever
+//! serializes the counts (512 bytes, `u16` LE per symbol) and any
+//! conforming reader rebuilds bit-identical tables. This mirrors the
+//! canonical-Huffman discipline in [`crate::huffman::code`]: the wire
+//! format carries the minimum, the construction is normative.
+
+use crate::huffman::FreqTable;
+use crate::{Error, Result};
+
+/// Symbol alphabet (quantized weights are bytes; uint4 uses `0..=15`).
+pub const ALPHABET: usize = 256;
+
+/// log2 of the state-table size. 12 bits quantizes symbol
+/// probabilities to 1/4096 — within ~0.001 bits/symbol of entropy on
+/// the paper's distributions — while the decode table (4096 × 4 B)
+/// stays L1/L2-resident next to the Huffman LUT.
+pub const TABLE_LOG: u8 = 12;
+
+/// Number of tANS states (and slots in the spread): `2^TABLE_LOG`.
+pub const TABLE_SIZE: usize = 1 << TABLE_LOG;
+
+/// Serialized size of a table: one `u16` (LE) slot count per symbol.
+pub const SERIALIZED_BYTES: usize = ALPHABET * 2;
+
+/// A canonical tANS table: normalized slot counts plus the derived
+/// spread. Construction is integer-only and deterministic, so two
+/// builds from the same counts are identical on every platform.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnsTable {
+    /// Per-symbol slot counts, summing to exactly [`TABLE_SIZE`].
+    /// A zero count means "symbol does not occur" (unencodable).
+    norm: [u16; ALPHABET],
+    /// `cumul[s]` = total slots of all symbols `< s`; `cumul[256]` =
+    /// [`TABLE_SIZE`]. Indexes the per-symbol region of the encode
+    /// state table.
+    cumul: [u32; ALPHABET + 1],
+    /// The symbol occupying each of the [`TABLE_SIZE`] state slots,
+    /// in spread order (see [`spread_symbols`]).
+    spread: Vec<u8>,
+}
+
+/// The deterministic spread: symbol `s` occupies `norm[s]` slots,
+/// visited in symbol order, each placed `STEP` slots after the last
+/// (mod [`TABLE_SIZE`]). `STEP = L/2 + L/8 + 3` is odd, hence coprime
+/// with the power-of-two table size, so the walk visits every slot
+/// exactly once — the standard FSE spread, chosen here for the same
+/// reason: it scatters each symbol's slots roughly uniformly, which
+/// is what keeps the per-state bit counts near `-log2(p)`.
+fn spread_symbols(norm: &[u16; ALPHABET]) -> Vec<u8> {
+    const STEP: usize = (TABLE_SIZE >> 1) + (TABLE_SIZE >> 3) + 3;
+    let mut spread = vec![0u8; TABLE_SIZE];
+    let mut pos = 0usize;
+    for (sym, &n) in norm.iter().enumerate() {
+        for _ in 0..n {
+            spread[pos] = sym as u8;
+            pos = (pos + STEP) & (TABLE_SIZE - 1);
+        }
+    }
+    debug_assert_eq!(pos, 0, "coprime step must close its cycle");
+    spread
+}
+
+impl AnsTable {
+    /// Normalize raw symbol frequencies to slot counts summing to
+    /// [`TABLE_SIZE`] and build the canonical table.
+    ///
+    /// Integer-only largest-remainder style normalization: each
+    /// present symbol gets `max(1, count·L/total)` slots (present
+    /// symbols must stay encodable), then the residual is settled
+    /// deterministically — deficits go to the most frequent symbol
+    /// (smallest index on ties), excess is shaved off the currently
+    /// largest allocation (again smallest index on ties), never below
+    /// one slot.
+    pub fn build(freq: &FreqTable) -> Result<Self> {
+        if freq.distinct() == 0 {
+            return Err(Error::InvalidArg(
+                "cannot build a tANS table from an empty frequency table".into(),
+            ));
+        }
+        // u128 throughout: counts are u64 and the scale multiply
+        // would overflow u64 near saturation.
+        let total: u128 = freq.counts().iter().map(|&c| c as u128).sum();
+        let mut norm = [0u16; ALPHABET];
+        for (sym, &count) in freq.counts().iter().enumerate() {
+            if count == 0 {
+                continue;
+            }
+            let share = (count as u128 * TABLE_SIZE as u128) / total;
+            norm[sym] = (share as u64).clamp(1, TABLE_SIZE as u64) as u16;
+        }
+        let mut sum: i64 = norm.iter().map(|&n| n as i64).sum();
+        // Deficit: award everything to the most frequent symbol — the
+        // cheap symbol absorbs rounding with the least rate damage.
+        if sum < TABLE_SIZE as i64 {
+            let richest = (0..ALPHABET)
+                .filter(|&s| freq.count(s as u8) > 0)
+                .max_by_key(|&s| (freq.count(s as u8), std::cmp::Reverse(s)))
+                .expect("distinct > 0");
+            norm[richest] += (TABLE_SIZE as i64 - sum) as u16;
+            sum = TABLE_SIZE as i64;
+        }
+        // Excess (the max(1,·) floors overshot): shave the largest
+        // allocation one slot at a time. Terminates because
+        // sum > L ≥ 256 ≥ #present implies some norm > 1.
+        while sum > TABLE_SIZE as i64 {
+            let fattest = (0..ALPHABET)
+                .filter(|&s| norm[s] > 1)
+                .max_by_key(|&s| (norm[s], std::cmp::Reverse(s)))
+                .expect("sum > TABLE_SIZE implies a shrinkable symbol");
+            norm[fattest] -= 1;
+            sum -= 1;
+        }
+        Self::from_counts(&norm)
+    }
+
+    /// Rebuild a table from (de)serialized slot counts, validating the
+    /// canonical invariant: counts sum to exactly [`TABLE_SIZE`].
+    /// This is the reader-side entry point — the container stores only
+    /// these counts.
+    pub fn from_counts(norm: &[u16; ALPHABET]) -> Result<Self> {
+        let sum: u64 = norm.iter().map(|&n| n as u64).sum();
+        if sum != TABLE_SIZE as u64 {
+            return Err(Error::Format(format!(
+                "tANS slot counts must sum to {TABLE_SIZE}, got {sum}"
+            )));
+        }
+        let mut cumul = [0u32; ALPHABET + 1];
+        for s in 0..ALPHABET {
+            cumul[s + 1] = cumul[s] + norm[s] as u32;
+        }
+        Ok(AnsTable {
+            norm: *norm,
+            cumul,
+            spread: spread_symbols(norm),
+        })
+    }
+
+    /// Per-symbol normalized slot counts (sum = [`TABLE_SIZE`]).
+    pub fn norm(&self) -> &[u16; ALPHABET] {
+        &self.norm
+    }
+
+    /// Slots of all symbols below `s` (encode-table region offsets).
+    pub fn cumul(&self) -> &[u32; ALPHABET + 1] {
+        &self.cumul
+    }
+
+    /// The symbol occupying each state slot, in spread order.
+    pub fn spread(&self) -> &[u8] {
+        &self.spread
+    }
+
+    /// Serialize the canonical counts: 256 × `u16` little-endian.
+    pub fn to_bytes(&self) -> [u8; SERIALIZED_BYTES] {
+        let mut out = [0u8; SERIALIZED_BYTES];
+        for (s, &n) in self.norm.iter().enumerate() {
+            out[2 * s..2 * s + 2].copy_from_slice(&n.to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize [`to_bytes`](Self::to_bytes) output (container
+    /// reader path). All-zero bytes are NOT special here — that is
+    /// decided by the container rules (see `store::read_manifest`).
+    pub fn from_bytes(bytes: &[u8; SERIALIZED_BYTES]) -> Result<Self> {
+        let mut norm = [0u16; ALPHABET];
+        for (s, slot) in norm.iter_mut().enumerate() {
+            *slot = u16::from_le_bytes([bytes[2 * s], bytes[2 * s + 1]]);
+        }
+        Self::from_counts(&norm)
+    }
+
+    /// Mean code length in bits/symbol this table achieves on the
+    /// given raw frequencies (exact expected cost of the quantized
+    /// probabilities, ignoring the constant 12-bit stream header):
+    /// `Σ p_s · (TABLE_LOG − log2(norm_s))`. Diagnostic only — the
+    /// table build itself never touches floating point.
+    pub fn expected_bits(&self, freq: &FreqTable) -> f64 {
+        let total: u128 = freq.counts().iter().map(|&c| c as u128).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mut bits = 0.0f64;
+        for (s, &count) in freq.counts().iter().enumerate() {
+            if count == 0 || self.norm[s] == 0 {
+                continue;
+            }
+            let p = count as f64 / total as f64;
+            bits += p * (TABLE_LOG as f64 - (self.norm[s] as f64).log2());
+        }
+        bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalization_sums_to_table_size_and_keeps_symbols_encodable() {
+        let mut freq = FreqTable::new();
+        // 200 present symbols with wildly different counts, including
+        // ones far below 1/TABLE_SIZE probability (must still get a slot).
+        for s in 0..200u8 {
+            for _ in 0..(1 + (s as usize % 7) * 1000) {
+                freq.add_symbols(&[s]);
+            }
+        }
+        let t = AnsTable::build(&freq).unwrap();
+        assert_eq!(t.norm().iter().map(|&n| n as u64).sum::<u64>(), TABLE_SIZE as u64);
+        for s in 0..200u8 {
+            assert!(t.norm()[s as usize] >= 1, "present symbol {s} lost its slot");
+        }
+        for s in 200..=255u8 {
+            assert_eq!(t.norm()[s as usize], 0, "absent symbol {s} must stay zero");
+        }
+    }
+
+    #[test]
+    fn spread_covers_every_state_exactly_once() {
+        let mut freq = FreqTable::new();
+        freq.add_symbols(&[0, 0, 0, 1, 1, 2]);
+        let t = AnsTable::build(&freq).unwrap();
+        let mut per_sym = [0u32; ALPHABET];
+        for &s in t.spread() {
+            per_sym[s as usize] += 1;
+        }
+        for s in 0..ALPHABET {
+            assert_eq!(per_sym[s], t.norm()[s] as u32, "spread slots must match norm[{s}]");
+        }
+    }
+
+    #[test]
+    fn single_symbol_table_owns_the_whole_state_space() {
+        let mut freq = FreqTable::new();
+        freq.add_symbols(&[42; 10]);
+        let t = AnsTable::build(&freq).unwrap();
+        assert_eq!(t.norm()[42], TABLE_SIZE as u16);
+        assert!(t.spread().iter().all(|&s| s == 42));
+    }
+
+    #[test]
+    fn from_counts_rejects_bad_sums() {
+        let mut norm = [0u16; ALPHABET];
+        norm[0] = TABLE_SIZE as u16 - 1;
+        assert!(AnsTable::from_counts(&norm).is_err());
+        norm[0] = TABLE_SIZE as u16;
+        norm[1] = 1;
+        assert!(AnsTable::from_counts(&norm).is_err());
+        assert!(AnsTable::from_counts(&[0u16; ALPHABET]).is_err());
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let mut freq = FreqTable::new();
+        let mut rng = crate::rng::Rng::new(7);
+        let syms: Vec<u8> = (0..5000).map(|_| rng.below(256) as u8).collect();
+        freq.add_symbols(&syms);
+        let a = AnsTable::build(&freq).unwrap();
+        let b = AnsTable::build(&freq).unwrap();
+        assert_eq!(a, b);
+    }
+}

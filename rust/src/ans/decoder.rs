@@ -1,0 +1,316 @@
+//! tANS decoding (L2) — the table-driven hot path and its bit-serial
+//! oracle.
+//!
+//! The decoder walks the state chain forward: read the 12-bit final
+//! state the encoder left at the front, then per symbol look up
+//! `(symbol, nbits, base)` for the current state, emit the symbol, and
+//! absorb `nbits` fresh bits into the next state. Two integrity checks
+//! make corrupt streams loud rather than silently plausible:
+//!
+//! * **state return** — the chain must end on the encoder's fixed
+//!   start state (`x = L`); a corrupted stream that still produces
+//!   `n` symbols almost never lands there;
+//! * **exact length** — the stream must be exactly
+//!   `max(ceil(consumed_bits/8), ceil(n/8))` bytes: byte-alignment
+//!   padding plus the codec-independent one-bit-per-symbol floor
+//!   (see [`super::encoder::min_stream_bytes`]), nothing more.
+
+use super::code::{AnsTable, ALPHABET, TABLE_LOG, TABLE_SIZE};
+use super::encoder::min_stream_bytes;
+use crate::bitio::BitReader;
+use crate::{Error, Result};
+
+/// One decode-table entry: what state `st` emits and how it advances.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    /// Symbol emitted from this state.
+    symbol: u8,
+    /// Fresh bits to absorb: `TABLE_LOG - floor(log2(slot))`.
+    nbits: u8,
+    /// `(slot << nbits) - TABLE_SIZE`: next state before the bits.
+    base: u16,
+}
+
+/// Table-driven tANS decoder (one entry per state, 4 bytes each —
+/// 16 KiB, L1-resident on the target edge SoCs).
+#[derive(Debug, Clone)]
+pub struct Decoder {
+    entries: Vec<Entry>,
+    /// Kept for the bit-serial oracle, which must not share the
+    /// packed entries it is checking.
+    norm: [u16; ALPHABET],
+    spread: Vec<u8>,
+}
+
+impl Decoder {
+    /// Precompute the per-state decode entries from a canonical table.
+    pub fn new(table: &AnsTable) -> Result<Self> {
+        let mut next = [0u32; ALPHABET];
+        for (s, slot) in next.iter_mut().enumerate() {
+            *slot = table.norm()[s] as u32;
+        }
+        let mut entries = Vec::with_capacity(TABLE_SIZE);
+        for &sym in table.spread() {
+            let slot = next[sym as usize];
+            next[sym as usize] += 1;
+            // slot ∈ [norm, 2·norm) and norm ≥ 1, so ilog2 is defined
+            // and (slot << nbits) ∈ [L, 2L).
+            let nbits = TABLE_LOG - slot.ilog2() as u8;
+            entries.push(Entry {
+                symbol: sym,
+                nbits,
+                base: ((slot << nbits) - TABLE_SIZE as u32) as u16,
+            });
+        }
+        Ok(Decoder {
+            entries,
+            norm: *table.norm(),
+            spread: table.spread().to_vec(),
+        })
+    }
+
+    /// Decode exactly `out.len()` symbols from `bytes` — the hot path.
+    ///
+    /// Rejects truncation, trailing garbage (beyond alignment padding
+    /// and the one-bit-per-symbol floor), and any stream whose state
+    /// chain does not return to the encoder's start state.
+    pub fn decode_into(&self, bytes: &[u8], out: &mut [u8]) -> Result<()> {
+        if out.is_empty() {
+            return if bytes.is_empty() {
+                Ok(())
+            } else {
+                Err(Error::Format(format!(
+                    "empty tANS segment carries {} bytes",
+                    bytes.len()
+                )))
+            };
+        }
+        let mut r = BitReader::new(bytes);
+        let mut st = r
+            .read_bits(TABLE_LOG)
+            .map_err(|_| Error::Format("tANS stream shorter than its state header".into()))?
+            as usize;
+        for slot in out.iter_mut() {
+            let e = self.entries[st];
+            *slot = e.symbol;
+            let bits = r.read_bits(e.nbits).map_err(|_| {
+                Error::Format("tANS bitstream exhausted before all symbols decoded".into())
+            })?;
+            st = e.base as usize + bits as usize;
+        }
+        if st != 0 {
+            return Err(Error::Format(format!(
+                "tANS state chain ended at {st}, not the encoder start state"
+            )));
+        }
+        let expected = r.bit_pos().div_ceil(8).max(min_stream_bytes(out.len()));
+        if bytes.len() != expected {
+            return Err(Error::Format(format!(
+                "tANS stream is {} bytes, expected exactly {expected}",
+                bytes.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Allocate-and-decode convenience over [`decode_into`](Self::decode_into).
+    pub fn decode(&self, bytes: &[u8], n_symbols: usize) -> Result<Vec<u8>> {
+        let mut out = vec![0u8; n_symbols];
+        self.decode_into(bytes, &mut out)?;
+        Ok(out)
+    }
+
+    /// Naive bit-serial oracle: decodes with only the canonical table
+    /// definition (spread + norm) — no packed entries, no bulk bit
+    /// reads, every derived quantity recomputed per symbol from first
+    /// principles. Slow by design; exists to differentially check
+    /// [`decode_into`](Self::decode_into), so the two share no
+    /// shortcuts that could hide a common bug.
+    pub fn decode_bit_serial(&self, bytes: &[u8], n_symbols: usize) -> Result<Vec<u8>> {
+        if n_symbols == 0 {
+            return if bytes.is_empty() {
+                Ok(Vec::new())
+            } else {
+                Err(Error::Format("empty tANS segment carries bytes".into()))
+            };
+        }
+        let mut r = BitReader::new(bytes);
+        let mut st = 0usize;
+        for _ in 0..TABLE_LOG {
+            st = (st << 1) | r.read_bit().map_err(|_| {
+                Error::Format("tANS stream shorter than its state header".into())
+            })? as usize;
+        }
+        let mut out = Vec::with_capacity(n_symbols);
+        let mut consumed = TABLE_LOG as usize;
+        for _ in 0..n_symbols {
+            let sym = self.spread[st];
+            out.push(sym);
+            // This state's slot value: norm[sym] plus how many earlier
+            // states the spread gave to the same symbol.
+            let rank = self.spread[..st].iter().filter(|&&s| s == sym).count();
+            let mut slot = self.norm[sym as usize] as usize + rank;
+            // Shift the slot back up into [L, 2L) one bit at a time.
+            let mut st_next = slot;
+            let mut nbits = 0usize;
+            while st_next < TABLE_SIZE {
+                let bit = r.read_bit().map_err(|_| {
+                    Error::Format("tANS bitstream exhausted before all symbols decoded".into())
+                })? as usize;
+                st_next = (st_next << 1) | bit;
+                nbits += 1;
+            }
+            consumed += nbits;
+            slot = st_next; // now the full next state in [L, 2L)
+            st = slot - TABLE_SIZE;
+        }
+        if st != 0 {
+            return Err(Error::Format(
+                "tANS state chain ended off the encoder start state (oracle)".into(),
+            ));
+        }
+        let expected = consumed.div_ceil(8).max(min_stream_bytes(n_symbols));
+        if bytes.len() != expected {
+            return Err(Error::Format(format!(
+                "tANS stream is {} bytes, oracle expected exactly {expected}",
+                bytes.len()
+            )));
+        }
+        Ok(out)
+    }
+
+    /// Decode-table footprint in bytes (capacity-planning aid, mirrors
+    /// `huffman::Decoder::table_bytes`).
+    pub fn table_bytes(&self) -> usize {
+        self.entries.len() * std::mem::size_of::<Entry>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encoder::Encoder;
+    use super::*;
+    use crate::huffman::FreqTable;
+
+    fn table_for(symbols: &[u8]) -> AnsTable {
+        AnsTable::build(&FreqTable::from_symbols(symbols)).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_gaussianish_symbols() {
+        let mut rng = crate::rng::Rng::new(0x7A5);
+        let syms: Vec<u8> = (0..20_000)
+            .map(|_| (rng.below(8) + rng.below(8) + rng.below(8)) as u8)
+            .collect();
+        let table = table_for(&syms);
+        let bytes = Encoder::new(&table).encode_to_vec(&syms).unwrap();
+        let dec = Decoder::new(&table).unwrap();
+        assert_eq!(dec.decode(&bytes, syms.len()).unwrap(), syms);
+        assert_eq!(dec.decode_bit_serial(&bytes, syms.len()).unwrap(), syms);
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let syms: Vec<u8> = (0..100u8).cycle().take(10_000).collect();
+        let table = table_for(&syms);
+        let bytes = Encoder::new(&table).encode_to_vec(&syms).unwrap();
+        let dec = Decoder::new(&table).unwrap();
+        assert!(dec.decode(&bytes[..bytes.len() / 2], syms.len()).is_err());
+    }
+
+    #[test]
+    fn excess_trailing_bytes_error() {
+        let syms = vec![1u8, 2, 3, 1, 2, 3, 2, 2];
+        let table = table_for(&syms);
+        let mut bytes = Encoder::new(&table).encode_to_vec(&syms).unwrap();
+        bytes.extend_from_slice(&[0, 0, 0, 0]);
+        let dec = Decoder::new(&table).unwrap();
+        assert!(dec.decode(&bytes, syms.len()).is_err());
+    }
+
+    #[test]
+    fn empty_segment_decodes_from_empty_stream_only() {
+        let table = table_for(&[5, 5, 6]);
+        let dec = Decoder::new(&table).unwrap();
+        assert!(dec.decode(&[], 0).unwrap().is_empty());
+        assert!(dec.decode_bit_serial(&[], 0).unwrap().is_empty());
+        assert!(dec.decode(&[0], 0).is_err());
+        assert!(dec.decode_bit_serial(&[0], 0).is_err());
+    }
+
+    #[test]
+    fn table_bytes_bounded_by_l1() {
+        let table = table_for(&[1, 2, 3, 4, 5]);
+        let dec = Decoder::new(&table).unwrap();
+        assert!(dec.table_bytes() <= 32 * 1024, "decode table must stay cache-resident");
+    }
+
+    /// Seeded differential fuzz for the tANS arm: the table-driven hot
+    /// path ([`Decoder::decode_into`]) against the bit-serial oracle
+    /// ([`Decoder::decode_bit_serial`]) on valid, truncated, and
+    /// bit-flipped streams — the PR 6 Huffman harness applied to the
+    /// new codec. Both paths implement the full validation rules
+    /// (state return, exact padded length) independently, so the
+    /// comparison is strict: identical output or both reject.
+    /// `ENTROLLM_FUZZ_CASES` bounds the case count; failures print a
+    /// replay seed for [`crate::prop::forall_seeded`].
+    #[test]
+    fn differential_fuzz_ans_decode_into_vs_bit_serial() {
+        let cases: usize = std::env::var("ENTROLLM_FUZZ_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(200);
+        crate::prop::forall(
+            0xA45_0D1F,
+            cases,
+            |rng| {
+                let syms = crate::prop::gen::symbols(rng, 1200);
+                let table = table_for(&syms);
+                let mut bytes = Encoder::new(&table).encode_to_vec(&syms).unwrap();
+                let label = match rng.below(3) {
+                    0 => "valid",
+                    1 => {
+                        bytes.truncate(rng.below(bytes.len() + 1));
+                        "truncated"
+                    }
+                    _ => {
+                        if bytes.is_empty() {
+                            "valid"
+                        } else {
+                            for _ in 0..1 + rng.below(8) {
+                                let i = rng.below(bytes.len());
+                                bytes[i] ^= 1 << rng.below(8);
+                            }
+                            "bit-flipped"
+                        }
+                    }
+                };
+                (label, syms, bytes)
+            },
+            |(label, syms, bytes)| {
+                let table = table_for(syms);
+                let dec = Decoder::new(&table).unwrap();
+
+                let mut buf = vec![0u8; syms.len()];
+                let fast = dec.decode_into(bytes, &mut buf).map(|()| buf);
+                let oracle = dec.decode_bit_serial(bytes, syms.len());
+
+                match (fast, oracle) {
+                    (Ok(a), Ok(b)) if a != b => {
+                        Err(format!("{label}: both decoded but outputs differ"))
+                    }
+                    (Ok(a), Ok(_)) if *label == "valid" && a != *syms => {
+                        Err(format!("{label}: decoded output differs from the encoded symbols"))
+                    }
+                    (Ok(_), Ok(_)) | (Err(_), Err(_)) => Ok(()),
+                    (Ok(_), Err(e)) => {
+                        Err(format!("{label}: table path accepted a stream the oracle rejects ({e})"))
+                    }
+                    (Err(e), Ok(_)) => {
+                        Err(format!("{label}: table path rejected a stream the oracle accepts ({e})"))
+                    }
+                }
+            },
+        );
+    }
+}

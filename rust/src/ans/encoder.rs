@@ -1,0 +1,186 @@
+//! tANS encoding against an [`AnsTable`] (L2).
+//!
+//! ANS encodes *backward*: the encoder walks the symbols last-to-first
+//! pushing bits, and the decoder pops them first-to-last. To keep the
+//! container's streams forward-readable (MSB-first, like the Huffman
+//! segments), the encoder buffers its per-step bit fields and writes
+//! them in reverse step order behind a 12-bit final-state header — the
+//! decoder then reads header, then fields, strictly left to right.
+//!
+//! Stream layout of one encoded tile (see docs/FORMAT.md §v3):
+//!
+//! ```text
+//! [final_state - L : TABLE_LOG bits][field for sym 1][field for sym 2]…
+//! ```
+//!
+//! zero-padded in the low bits of the last byte AND zero-padded up to
+//! `ceil(n_symbols/8)` bytes — the uniform one-bit-per-symbol floor
+//! that keeps the container's allocation-bomb bound codec-independent.
+
+use super::code::{AnsTable, ALPHABET, TABLE_LOG, TABLE_SIZE};
+use crate::bitio::BitWriter;
+use crate::{Error, Result};
+
+/// Precomputed encode tables for one [`AnsTable`].
+#[derive(Debug, Clone)]
+pub struct Encoder {
+    norm: [u16; ALPHABET],
+    cumul: [u32; ALPHABET + 1],
+    /// `state_of[cumul[s] + (slot - norm[s])]` = the state index in
+    /// `0..TABLE_SIZE` whose decode entry emits symbol `s` from slot
+    /// value `slot ∈ [norm[s], 2·norm[s])`. Exact inverse of the
+    /// decoder's state walk.
+    state_of: Vec<u16>,
+}
+
+/// Minimum legal byte length of a tANS stream decoding `n` symbols:
+/// the same one-bit-per-symbol floor Huffman streams satisfy
+/// naturally. Encoders pad up to it; decoders use it to validate
+/// stream length exactly.
+pub fn min_stream_bytes(n_symbols: usize) -> usize {
+    n_symbols.div_ceil(8)
+}
+
+impl Encoder {
+    /// Build the encode table (the inverse of the decode state walk:
+    /// scan states in order, hand each to the next slot of its spread
+    /// symbol).
+    pub fn new(table: &AnsTable) -> Self {
+        let mut state_of = vec![0u16; TABLE_SIZE];
+        let mut next = [0u32; ALPHABET];
+        for (s, slot) in next.iter_mut().enumerate() {
+            *slot = table.norm()[s] as u32;
+        }
+        for (state, &sym) in table.spread().iter().enumerate() {
+            let s = sym as usize;
+            let slot = next[s];
+            next[s] += 1;
+            state_of[(table.cumul()[s] + (slot - table.norm()[s] as u32)) as usize] =
+                state as u16;
+        }
+        Encoder {
+            norm: *table.norm(),
+            cumul: *table.cumul(),
+            state_of,
+        }
+    }
+
+    /// Encode `symbols` into a fresh, byte-aligned stream (the layout
+    /// in the module docs). Errors on any symbol with zero slots.
+    /// Empty input encodes to an empty stream — the container's empty
+    /// tiles stay zero bytes under every codec.
+    pub fn encode_to_vec(&self, symbols: &[u8]) -> Result<Vec<u8>> {
+        if symbols.is_empty() {
+            return Ok(Vec::new());
+        }
+        // Backward pass: collect (bits, nbits) per step. x ∈ [L, 2L).
+        let mut fields: Vec<(u32, u8)> = Vec::with_capacity(symbols.len());
+        let mut x: u32 = TABLE_SIZE as u32;
+        for &sym in symbols.iter().rev() {
+            let q = self.norm[sym as usize] as u32;
+            if q == 0 {
+                return Err(Error::InvalidArg(format!(
+                    "symbol {sym} has no tANS slots (not in the frequency table)"
+                )));
+            }
+            // Minimal shift putting x>>nbits into [q, 2q): halving
+            // from ≥2q lands ≥q, and nbits=0 is fine since x ≥ L ≥ q.
+            let mut nbits = 0u8;
+            while (x >> nbits) >= 2 * q {
+                nbits += 1;
+            }
+            fields.push((x & ((1u32 << nbits) - 1), nbits));
+            let slot = (x >> nbits) - q;
+            x = TABLE_SIZE as u32
+                + self.state_of[(self.cumul[sym as usize] + slot) as usize] as u32;
+        }
+        // Forward pass: final state first, then the fields reversed —
+        // the decoder re-walks the chain reading left to right.
+        let mut w = BitWriter::with_capacity(symbols.len() / 2 + 8);
+        w.write_bits((x - TABLE_SIZE as u32) as u64, TABLE_LOG);
+        for &(bits, nbits) in fields.iter().rev() {
+            w.write_bits(bits as u64, nbits);
+        }
+        w.align_byte();
+        let mut out = w.into_bytes();
+        // Pad to the codec-independent one-bit-per-symbol floor.
+        if out.len() < min_stream_bytes(symbols.len()) {
+            out.resize(min_stream_bytes(symbols.len()), 0);
+        }
+        Ok(out)
+    }
+
+    /// Exact bit cost of `symbols` under this table (header included,
+    /// before byte alignment and the min-length pad).
+    pub fn bit_len(&self, symbols: &[u8]) -> Result<usize> {
+        if symbols.is_empty() {
+            return Ok(0);
+        }
+        let mut bits = TABLE_LOG as usize;
+        let mut x: u32 = TABLE_SIZE as u32;
+        for &sym in symbols.iter().rev() {
+            let q = self.norm[sym as usize] as u32;
+            if q == 0 {
+                return Err(Error::InvalidArg(format!(
+                    "symbol {sym} has no tANS slots (not in the frequency table)"
+                )));
+            }
+            let mut nbits = 0u8;
+            while (x >> nbits) >= 2 * q {
+                nbits += 1;
+            }
+            bits += nbits as usize;
+            let slot = (x >> nbits) - q;
+            x = TABLE_SIZE as u32
+                + self.state_of[(self.cumul[sym as usize] + slot) as usize] as u32;
+        }
+        Ok(bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::huffman::FreqTable;
+
+    #[test]
+    fn empty_input_encodes_to_zero_bytes() {
+        let mut freq = FreqTable::new();
+        freq.add_symbols(&[1, 2, 3]);
+        let enc = Encoder::new(&AnsTable::build(&freq).unwrap());
+        assert!(enc.encode_to_vec(&[]).unwrap().is_empty());
+        assert_eq!(enc.bit_len(&[]).unwrap(), 0);
+    }
+
+    #[test]
+    fn unknown_symbol_is_rejected() {
+        let mut freq = FreqTable::new();
+        freq.add_symbols(&[1, 2, 3]);
+        let enc = Encoder::new(&AnsTable::build(&freq).unwrap());
+        assert!(enc.encode_to_vec(&[9]).is_err());
+    }
+
+    #[test]
+    fn degenerate_run_pads_to_one_bit_per_symbol_floor() {
+        let mut freq = FreqTable::new();
+        freq.add_symbols(&[7; 100]);
+        let enc = Encoder::new(&AnsTable::build(&freq).unwrap());
+        let bytes = enc.encode_to_vec(&[7; 100]).unwrap();
+        // Raw stream is just the 12-bit header (every step emits 0
+        // bits); the pad lifts it to ceil(100/8) = 13 bytes.
+        assert_eq!(enc.bit_len(&[7; 100]).unwrap(), TABLE_LOG as usize);
+        assert_eq!(bytes.len(), 13);
+    }
+
+    #[test]
+    fn encoded_len_matches_bit_len_modulo_padding() {
+        let mut rng = crate::rng::Rng::new(0xA5);
+        let syms: Vec<u8> = (0..4000).map(|_| (rng.below(16) * rng.below(2)) as u8).collect();
+        let mut freq = FreqTable::new();
+        freq.add_symbols(&syms);
+        let enc = Encoder::new(&AnsTable::build(&freq).unwrap());
+        let bytes = enc.encode_to_vec(&syms).unwrap();
+        let bits = enc.bit_len(&syms).unwrap();
+        assert_eq!(bytes.len(), bits.div_ceil(8).max(min_stream_bytes(syms.len())));
+    }
+}

@@ -1,0 +1,222 @@
+//! Table-driven asymmetric numeral system (tANS) entropy codec (L2).
+//!
+//! The second codec arm next to [`crate::huffman`]: where Huffman
+//! charges an integer number of bits per symbol, tANS spreads symbols
+//! over a `2^12`-state machine and charges fractional bits, closing
+//! most of the gap to the Shannon bound on the skewed post-quantization
+//! distributions EntroLLM lives on (PAPERS.md: "Approaching Shannon
+//! Bound with Lossless LLM Weight Compression"). Same canonical-table
+//! discipline as `huffman::code`: the container serializes only the
+//! normalized slot counts ([`AnsTable::to_bytes`], 512 bytes) and every
+//! reader derives identical spread/encode/decode tables with
+//! integer-only rules.
+//!
+//! Segment/tile streams are MSB-first and byte-aligned like the
+//! Huffman ones, carry a 12-bit final-state header, and are padded to
+//! a one-bit-per-symbol floor so the ELM container's allocation-bomb
+//! bound (`n_symbols ≤ 8 × encoded_len`) holds for every codec — see
+//! docs/FORMAT.md §v3.
+//!
+//! ```
+//! use entrollm::ans::{encode_with_own_table, Decoder};
+//!
+//! let symbols = vec![7u8, 7, 7, 3, 7, 7, 1, 7];
+//! let (table, encoded) = encode_with_own_table(&symbols).unwrap();
+//! let decoded = Decoder::new(&table).unwrap().decode(&encoded, symbols.len()).unwrap();
+//! assert_eq!(decoded, symbols);
+//! ```
+
+pub mod code;
+pub mod decoder;
+pub mod encoder;
+
+pub use code::{AnsTable, ALPHABET, SERIALIZED_BYTES, TABLE_LOG, TABLE_SIZE};
+pub use decoder::Decoder;
+pub use encoder::{min_stream_bytes, Encoder};
+
+use crate::huffman::FreqTable;
+use crate::Result;
+
+/// Build a table from the symbols' own frequencies and encode them —
+/// the tANS twin of [`crate::huffman::encode_with_own_code`].
+pub fn encode_with_own_table(symbols: &[u8]) -> Result<(AnsTable, Vec<u8>)> {
+    let table = AnsTable::build(&FreqTable::from_symbols(symbols))?;
+    let encoded = Encoder::new(&table).encode_to_vec(symbols)?;
+    Ok((table, encoded))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{forall, gen};
+
+    fn roundtrip(symbols: &[u8]) -> Result<Vec<u8>> {
+        let (table, bytes) = encode_with_own_table(symbols)?;
+        Decoder::new(&table)?.decode(&bytes, symbols.len())
+    }
+
+    /// Property: roundtrip across the generator's distribution mix
+    /// (uniform-256, uniform-16, heavy-mode, discretized Gaussian),
+    /// mirroring the huffman prop suite.
+    #[test]
+    fn prop_roundtrip_random_distributions() {
+        forall(
+            0xA45_0001,
+            60,
+            |rng| gen::symbols(rng, 5000),
+            |syms| match roundtrip(syms) {
+                Ok(out) if out == *syms => Ok(()),
+                Ok(_) => Err("decoded symbols differ".into()),
+                Err(e) => Err(format!("roundtrip failed: {e}")),
+            },
+        );
+    }
+
+    /// Adversarial distribution: a single symbol. The table gives it
+    /// every state, each step costs 0 bits, and the stream collapses
+    /// to the state header plus the one-bit-per-symbol floor pad.
+    #[test]
+    fn prop_single_symbol_degenerate_table() {
+        for n in [1usize, 7, 8, 9, 4096] {
+            let syms = vec![200u8; n];
+            let (table, bytes) = encode_with_own_table(&syms).unwrap();
+            assert_eq!(table.norm()[200], TABLE_SIZE as u16);
+            assert_eq!(bytes.len(), 2usize.max(n.div_ceil(8)));
+            assert_eq!(Decoder::new(&table).unwrap().decode(&bytes, n).unwrap(), syms);
+        }
+    }
+
+    /// Adversarial distribution: two symbols, heavily skewed — the
+    /// case where Huffman is pinned at 1 bit/symbol but tANS charges
+    /// the true fractional entropy (≈0.08 bits at 1%). The floor pad
+    /// keeps the stream at exactly n/8 bytes, still 8× under Huffman's
+    /// best case for 8-bit symbols… and equal to it for this one.
+    #[test]
+    fn prop_two_symbol_heavy_skew() {
+        let mut rng = crate::rng::Rng::new(0xA45_0002);
+        let n = 50_000usize;
+        let syms: Vec<u8> = (0..n)
+            .map(|_| if rng.below(100) == 0 { 9 } else { 4 })
+            .collect();
+        let (table, bytes) = encode_with_own_table(&syms).unwrap();
+        // Raw tANS cost is ~entropy (≈0.08 bits/sym) — far below the
+        // 1-bit floor, so the pad dominates.
+        assert_eq!(bytes.len(), n.div_ceil(8));
+        assert_eq!(
+            Decoder::new(&table).unwrap().decode(&bytes, n).unwrap(),
+            syms
+        );
+    }
+
+    /// Adversarial distribution: uniform over all 256 symbols — the
+    /// incompressible end. tANS must stay within rounding of 8
+    /// bits/symbol and still roundtrip.
+    #[test]
+    fn prop_uniform_256_symbols() {
+        let mut rng = crate::rng::Rng::new(0xA45_0003);
+        let n = 40_000usize;
+        let syms: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let (table, bytes) = encode_with_own_table(&syms).unwrap();
+        let bits_per_sym = 8.0 * bytes.len() as f64 / n as f64;
+        assert!(
+            (7.9..8.2).contains(&bits_per_sym),
+            "uniform-256 must cost ~8 bits/symbol, got {bits_per_sym:.3}"
+        );
+        assert_eq!(
+            Decoder::new(&table).unwrap().decode(&bytes, n).unwrap(),
+            syms
+        );
+    }
+
+    /// Adversarial distribution: the empty segment. No table can be
+    /// built from zero symbols (same contract as huffman), but a
+    /// decoder built from any table must accept the 0-symbol/0-byte
+    /// stream — that is what the container's empty tiles decode.
+    #[test]
+    fn prop_empty_segment() {
+        assert!(encode_with_own_table(&[]).is_err());
+        let (table, _) = encode_with_own_table(&[1, 2, 3]).unwrap();
+        let enc = Encoder::new(&table);
+        assert!(enc.encode_to_vec(&[]).unwrap().is_empty());
+        assert!(Decoder::new(&table).unwrap().decode(&[], 0).unwrap().is_empty());
+    }
+
+    /// Adversarial frequencies: counts near u64 saturation. The
+    /// normalization must not overflow (u128 internally) and must
+    /// still hand every present symbol at least one slot.
+    #[test]
+    fn prop_max_frequency_saturation() {
+        let mut saturated = FreqTable::new();
+        saturated.add_count(0, u64::MAX / 2);
+        saturated.add_count(1, u64::MAX / 2);
+        saturated.add_count(2, 1);
+        let table = AnsTable::build(&saturated).unwrap();
+        assert_eq!(
+            table.norm().iter().map(|&n| n as u64).sum::<u64>(),
+            TABLE_SIZE as u64
+        );
+        assert!(table.norm()[2] >= 1, "rare symbol must stay encodable");
+        // And the table actually codes: mostly-heavy symbols + rares.
+        let syms: Vec<u8> = (0..1000).map(|i| if i % 300 == 0 { 2 } else { (i % 2) as u8 }).collect();
+        let bytes = Encoder::new(&table).encode_to_vec(&syms).unwrap();
+        assert_eq!(
+            Decoder::new(&table).unwrap().decode(&bytes, syms.len()).unwrap(),
+            syms
+        );
+    }
+
+    /// Table serialization roundtrip: counts → bytes → counts must be
+    /// the identity, and the rebuilt table must be indistinguishable
+    /// (same spread, same streams) — the huffman
+    /// `spec_survives_length_serialization` property for tANS.
+    #[test]
+    fn prop_table_survives_count_serialization() {
+        forall(
+            0xA45_0004,
+            40,
+            |rng| gen::symbols(rng, 3000),
+            |syms| {
+                let (table, bytes) = encode_with_own_table(syms).map_err(|e| e.to_string())?;
+                let rebuilt = AnsTable::from_bytes(&table.to_bytes()).map_err(|e| e.to_string())?;
+                if rebuilt != table {
+                    return Err("rebuilt table differs from original".into());
+                }
+                let re_bytes = Encoder::new(&rebuilt)
+                    .encode_to_vec(syms)
+                    .map_err(|e| e.to_string())?;
+                if re_bytes != bytes {
+                    return Err("rebuilt table encodes a different stream".into());
+                }
+                let out = Decoder::new(&rebuilt)
+                    .and_then(|d| d.decode(&bytes, syms.len()))
+                    .map_err(|e| e.to_string())?;
+                if out != *syms {
+                    return Err("rebuilt table decodes to different symbols".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// On the fig4-style skewed (discretized Gaussian) distributions,
+    /// tANS encoded size must be ≤ Huffman's — the whole point of the
+    /// codec arm (both sides measured without container overheads).
+    #[test]
+    fn ans_beats_or_matches_huffman_on_skewed_distributions() {
+        let mut rng = crate::rng::Rng::new(0xA45_0005);
+        for (mu, sigma) in [(128.0, 6.0), (128.0, 24.0), (8.0, 2.0)] {
+            let n = 60_000usize;
+            let syms: Vec<u8> = (0..n)
+                .map(|_| rng.gaussian_f32(mu, sigma).round().clamp(0.0, 255.0) as u8)
+                .collect();
+            let (_, ans_bytes) = encode_with_own_table(&syms).unwrap();
+            let (_, huff_bytes) = crate::huffman::encode_with_own_code(&syms).unwrap();
+            assert!(
+                ans_bytes.len() <= huff_bytes.len(),
+                "tANS ({}) must not lose to Huffman ({}) on N({mu},{sigma})",
+                ans_bytes.len(),
+                huff_bytes.len()
+            );
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Codec negotiation (L2): the per-segment codec id and the
+//! [`TileCodec`] seam that makes everything above the container parser
+//! codec-agnostic.
+//!
+//! Since container v3 every layer manifest entry names its codec
+//! ([`Codec::Huffman`] or [`Codec::Ans`]); v1/v2 containers predate
+//! the field and default to Huffman. Decode consumers — eager parallel
+//! decode, the streaming window, the residency prefetcher — never
+//! branch on the codec themselves: they build one [`CodecSet`] from
+//! the container's tables and fetch `&dyn TileCodec` per layer. A tile
+//! is the unit of decode work for both codecs (byte-aligned,
+//! independently decodable, CRC-guarded), so tiled parallel decode
+//! works identically whichever codec wrote the bytes.
+
+use crate::ans::{self, AnsTable};
+use crate::huffman::{self, CodeSpec};
+use crate::{Error, Result};
+
+/// Wire-level codec id of a layer's segment (v3 manifest field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Codec {
+    /// Canonical length-limited Huffman (tag 0) — the only codec of
+    /// container v1/v2, still the default.
+    #[default]
+    Huffman,
+    /// Table-driven asymmetric numeral system (tag 1), v3+.
+    Ans,
+}
+
+impl Codec {
+    /// Manifest byte for this codec.
+    pub fn tag(self) -> u8 {
+        match self {
+            Codec::Huffman => 0,
+            Codec::Ans => 1,
+        }
+    }
+
+    /// Parse a manifest byte; unknown ids are a format error (a v3
+    /// reader must not guess how unknown payload bytes decode).
+    pub fn from_tag(tag: u8) -> Result<Self> {
+        match tag {
+            0 => Ok(Codec::Huffman),
+            1 => Ok(Codec::Ans),
+            other => Err(Error::Format(format!(
+                "unknown codec id {other} (known: 0 = huffman, 1 = tans)"
+            ))),
+        }
+    }
+
+    /// Human-facing name (CLI `inspect`/`compress` output).
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::Huffman => "huffman",
+            Codec::Ans => "tans",
+        }
+    }
+}
+
+impl std::fmt::Display for Codec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One tile's worth of decode work, codec-blind: exactly `out.len()`
+/// symbols from one byte-aligned, independently decodable stream.
+/// Implementations must validate the stream (truncation, trailing
+/// garbage, codec-specific integrity) — callers only add CRC checks.
+pub trait TileCodec: Send + Sync {
+    /// Decode `bytes` into `out`, filling it exactly.
+    fn decode_tile(&self, bytes: &[u8], out: &mut [u8]) -> Result<()>;
+}
+
+impl TileCodec for huffman::Decoder {
+    fn decode_tile(&self, bytes: &[u8], out: &mut [u8]) -> Result<()> {
+        self.decode_into(bytes, out)
+    }
+}
+
+impl TileCodec for ans::Decoder {
+    fn decode_tile(&self, bytes: &[u8], out: &mut [u8]) -> Result<()> {
+        self.decode_into(bytes, out)
+    }
+}
+
+/// The decoders a container's tables support, built once per
+/// decode session and shared (read-only) across worker threads.
+#[derive(Debug)]
+pub struct CodecSet {
+    huffman: huffman::Decoder,
+    /// Present iff the container carried a tANS table (v3 with a
+    /// non-zero table section).
+    ans: Option<ans::Decoder>,
+}
+
+impl CodecSet {
+    /// Build the per-codec decoders from a container's tables.
+    pub fn new(code: &CodeSpec, ans_table: Option<&AnsTable>) -> Result<Self> {
+        Ok(CodecSet {
+            huffman: huffman::Decoder::new(code)?,
+            ans: ans_table.map(ans::Decoder::new).transpose()?,
+        })
+    }
+
+    /// The decoder for one layer's codec. `Codec::Ans` without a tANS
+    /// table is unreachable through a validated container
+    /// (`read_manifest` rejects that combination at open) but still an
+    /// error, not a panic, for hand-built models.
+    pub fn get(&self, codec: Codec) -> Result<&dyn TileCodec> {
+        match codec {
+            Codec::Huffman => Ok(&self.huffman),
+            Codec::Ans => self
+                .ans
+                .as_ref()
+                .map(|d| d as &dyn TileCodec)
+                .ok_or_else(|| {
+                    Error::Format(
+                        "layer coded with tANS but the container carries no tANS table".into(),
+                    )
+                }),
+        }
+    }
+
+    /// The Huffman decoder (always present; pre-v3 paths and
+    /// benchmarks that want it directly).
+    pub fn huffman(&self) -> &huffman::Decoder {
+        &self.huffman
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::huffman::FreqTable;
+
+    #[test]
+    fn codec_tags_roundtrip_and_unknown_rejected() {
+        for codec in [Codec::Huffman, Codec::Ans] {
+            assert_eq!(Codec::from_tag(codec.tag()).unwrap(), codec);
+        }
+        for bad in [2u8, 3, 0x7F, 0xFF] {
+            assert!(Codec::from_tag(bad).is_err(), "codec id {bad} must be rejected");
+        }
+        assert_eq!(Codec::default(), Codec::Huffman);
+    }
+
+    #[test]
+    fn codec_set_dispatches_both_codecs_on_the_same_symbols() {
+        let syms: Vec<u8> = (0..800).map(|i| ((i * 7) % 16) as u8).collect();
+        let freq = FreqTable::from_symbols(&syms);
+        let spec = CodeSpec::build(&freq).unwrap();
+        let table = AnsTable::build(&freq).unwrap();
+
+        let h_bytes = huffman::Encoder::new(&spec).encode_to_vec(&syms).unwrap();
+        let a_bytes = ans::Encoder::new(&table).encode_to_vec(&syms).unwrap();
+
+        let set = CodecSet::new(&spec, Some(&table)).unwrap();
+        let mut h_out = vec![0u8; syms.len()];
+        let mut a_out = vec![0u8; syms.len()];
+        set.get(Codec::Huffman).unwrap().decode_tile(&h_bytes, &mut h_out).unwrap();
+        set.get(Codec::Ans).unwrap().decode_tile(&a_bytes, &mut a_out).unwrap();
+        assert_eq!(h_out, syms);
+        assert_eq!(a_out, syms, "both codecs must decode to identical symbols");
+    }
+
+    #[test]
+    fn ans_codec_without_table_errors_cleanly() {
+        let syms = [1u8, 2, 3];
+        let spec = CodeSpec::build(&FreqTable::from_symbols(&syms)).unwrap();
+        let set = CodecSet::new(&spec, None).unwrap();
+        assert!(set.get(Codec::Huffman).is_ok());
+        assert!(set.get(Codec::Ans).is_err());
+    }
+}

@@ -6,7 +6,11 @@
 //! sidesteps this by never concatenating tensors into one stream: the
 //! ELM container keeps one byte-aligned segment per weight tensor, so
 //! segment boundaries are known *before* decoding and `T` threads can
-//! decode disjoint segments with zero synchronization.
+//! decode disjoint segments with zero synchronization. Since container
+//! v3 the same machinery is codec-agnostic: workers fetch each tile's
+//! decoder from a shared [`crate::codec::CodecSet`], so a tANS-coded
+//! layer rides the identical schedule (tANS streams are just as serial
+//! within a tile, and just as independent across tiles).
 //!
 //! Because per-segment decode times are skewed (different sizes, and
 //! skewed symbol mixes make some segments bit-denser than others), the
@@ -24,7 +28,7 @@ pub use stream::{
     DecodedLayer, LayerStream, SegmentDecoder, StreamConfig, StreamStats, StreamingDecoder,
 };
 
-use crate::huffman::Decoder;
+use crate::codec::CodecSet;
 use crate::quant::QuantizedTensor;
 use crate::store::ElmModel;
 use crate::tensor::TensorU8;
@@ -92,7 +96,8 @@ impl DecodeStats {
     }
 }
 
-/// Parallel Huffman decoder over an [`ElmModel`].
+/// Parallel entropy decoder over an [`ElmModel`] (Huffman or tANS
+/// tiles alike).
 #[derive(Debug, Clone)]
 pub struct ParallelDecoder {
     /// Worker thread count (`T` in Algorithm 1; the paper uses 4 on the
@@ -125,7 +130,10 @@ impl ParallelDecoder {
     /// is exactly the classic per-layer schedule.
     pub fn decode_model(&self, model: &ElmModel) -> Result<(Vec<QuantizedTensor>, DecodeStats)> {
         let n = model.layers.len();
-        let decoder = Decoder::new(&model.code)?;
+        // One codec set for the whole decode: workers look up each
+        // tile's decoder by its layer's codec id, so the schedule and
+        // the assembly below never branch on the codec.
+        let codecs = CodecSet::new(&model.code, model.ans.as_ref())?;
         let (tiles, sizes) = flat_tiles(&model.layers);
         let assignment = self.strategy.assign_sizes(&sizes, self.threads);
 
@@ -138,7 +146,7 @@ impl ParallelDecoder {
                 .per_thread
                 .iter()
                 .map(|indices| {
-                    let decoder = &decoder;
+                    let codecs = &codecs;
                     let tiles = &tiles;
                     let indices = indices.clone();
                     s.spawn(move || {
@@ -151,7 +159,9 @@ impl ParallelDecoder {
                             let tile = &model.layers[layer].tiles[t];
                             model.verify_tile(layer, t)?;
                             let mut buf = vec![0u8; tile.n_symbols];
-                            decoder.decode_into(model.tile_bytes(layer, t), &mut buf)?;
+                            codecs
+                                .get(model.layers[layer].codec)?
+                                .decode_tile(model.tile_bytes(layer, t), &mut buf)?;
                             encoded_bytes += tile.encoded_len;
                             symbols += tile.n_symbols;
                             out.push((layer, t, buf));
@@ -243,6 +253,44 @@ mod tests {
             for (i, (_, w)) in layers.iter().enumerate() {
                 let direct = quantize_mixed(w, BitWidth::U8);
                 assert_eq!(tensors[i].symbols.data(), direct.symbols.data());
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_codec_arms_decode_identically() {
+        // A tANS container (and a mixed Auto one) must parallel-decode
+        // to exactly what the Huffman container decodes to, at any
+        // thread count.
+        use crate::store::{compress_with_options, CodecChoice};
+        let mut rng = Rng::new(0xA45);
+        let layers: Vec<(String, TensorF32)> = (0..9)
+            .map(|i| {
+                let n = 256 + rng.below(5000);
+                (
+                    format!("layer.{i}"),
+                    TensorF32::new(vec![n], rng.gaussian_vec(n, 0.0, 0.05)).unwrap(),
+                )
+            })
+            .collect();
+        let want: Vec<Vec<u8>> = layers
+            .iter()
+            .map(|(_, w)| quantize_mixed(w, BitWidth::U8).symbols.data().to_vec())
+            .collect();
+        for choice in [CodecChoice::Huffman, CodecChoice::Ans, CodecChoice::Auto] {
+            let (model, _) =
+                compress_with_options(&layers, BitWidth::U8, Some(512), choice).unwrap();
+            for threads in [1, 4] {
+                let (tensors, stats) =
+                    ParallelDecoder::new(threads).decode_model(&model).unwrap();
+                assert_eq!(stats.total_symbols(), model.n_params());
+                for (i, w) in want.iter().enumerate() {
+                    assert_eq!(
+                        tensors[i].symbols.data(),
+                        &w[..],
+                        "{choice:?} x{threads}: layer {i}"
+                    );
+                }
             }
         }
     }

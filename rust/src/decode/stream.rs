@@ -37,7 +37,7 @@
 
 use super::schedule::Strategy;
 use super::ThreadStats;
-use crate::huffman::Decoder;
+use crate::codec::CodecSet;
 use crate::quant::QuantizedTensor;
 use crate::store::{ElmModel, SegmentSource};
 use crate::tensor::TensorU8;
@@ -195,7 +195,7 @@ impl StreamingDecoder {
     /// streaming load is `O(prefetch window)` decoded layers plus
     /// `O(window)` encoded segments — never the whole payload.
     pub fn stream_source(&self, source: Arc<SegmentSource>) -> Result<LayerStream> {
-        let decoder = Arc::new(Decoder::new(source.code())?);
+        let codecs = Arc::new(CodecSet::new(source.code(), source.ans_table())?);
         let n = source.n_layers();
         // The unit of claim is the **tile** (v2): a hot layer's tiles
         // are dealt across the pool, so every worker can help the front
@@ -228,11 +228,11 @@ impl StreamingDecoder {
             // already sorted.
             indices.sort_unstable();
             let source = Arc::clone(&source);
-            let decoder = Arc::clone(&decoder);
+            let codecs = Arc::clone(&codecs);
             let shared = Arc::clone(&shared);
             let tiles = Arc::clone(&tiles);
             handles.push(std::thread::spawn(move || {
-                worker(&source, &decoder, &shared, &tiles, indices)
+                worker(&source, &codecs, &shared, &tiles, indices)
             }));
         }
         Ok(LayerStream {
@@ -276,14 +276,16 @@ impl StreamingDecoder {
 /// the sequential walk.
 pub struct SegmentDecoder {
     source: Arc<SegmentSource>,
-    decoder: Decoder,
+    codecs: CodecSet,
 }
 
 impl SegmentDecoder {
-    /// Build the decode table once for the source's model-global code.
+    /// Build the decode tables once for the source's model-global
+    /// code(s) — Huffman always, tANS when the container carries its
+    /// table.
     pub fn new(source: Arc<SegmentSource>) -> Result<Self> {
-        let decoder = Decoder::new(source.code())?;
-        Ok(SegmentDecoder { source, decoder })
+        let codecs = CodecSet::new(source.code(), source.ans_table())?;
+        Ok(SegmentDecoder { source, codecs })
     }
 
     /// The source this decoder reads from.
@@ -300,7 +302,7 @@ impl SegmentDecoder {
                 self.source.n_layers()
             )));
         }
-        decode_one(&self.source, &self.decoder, index)
+        decode_one(&self.source, &self.codecs, index)
     }
 
     /// [`SegmentDecoder::decode_layer`] plus the per-worker accounting
@@ -335,22 +337,23 @@ impl SegmentDecoder {
                 self.source.n_layers()
             )));
         }
-        decode_one_tile(&self.source, &self.decoder, index, t)
+        decode_one_tile(&self.source, &self.codecs, index, t)
     }
 }
 
 /// The one per-layer decode body: per-tile CRC-verified reads → table
-/// decode into the layer's symbol buffer → tensor. Shared by the
-/// serving fault path and the re-entrant [`SegmentDecoder`] so decode
-/// output is bit-identical to the eager and streaming paths, for v1
-/// (one synthesized tile) and v2 containers alike.
-fn decode_one(source: &SegmentSource, decoder: &Decoder, index: usize) -> Result<QuantizedTensor> {
+/// decode (with the layer's own codec) into the layer's symbol buffer
+/// → tensor. Shared by the serving fault path and the re-entrant
+/// [`SegmentDecoder`] so decode output is bit-identical to the eager
+/// and streaming paths, for v1/v2/v3 containers alike.
+fn decode_one(source: &SegmentSource, codecs: &CodecSet, index: usize) -> Result<QuantizedTensor> {
     let meta = source.meta(index);
+    let dec = codecs.get(meta.codec)?;
     let mut buf = vec![0u8; meta.n_symbols];
     for (t, tile) in meta.tiles.iter().enumerate() {
         let seg = source.verified_tile(index, t)?;
         let out = &mut buf[tile.sym_offset..tile.sym_offset + tile.n_symbols];
-        decoder.decode_into(&seg, out)?;
+        dec.decode_tile(&seg, out)?;
     }
     Ok(QuantizedTensor {
         symbols: TensorU8::new(meta.shape.clone(), buf)?,
@@ -359,23 +362,24 @@ fn decode_one(source: &SegmentSource, decoder: &Decoder, index: usize) -> Result
 }
 
 /// Decode one tile of a layer into its own symbol buffer, behind the
-/// tile's CRC.
+/// tile's CRC, with the layer's codec.
 fn decode_one_tile(
     source: &SegmentSource,
-    decoder: &Decoder,
+    codecs: &CodecSet,
     index: usize,
     t: usize,
 ) -> Result<Vec<u8>> {
-    let tile = &source.meta(index).tiles[t];
+    let meta = source.meta(index);
+    let tile = &meta.tiles[t];
     let seg = source.verified_tile(index, t)?;
     let mut buf = vec![0u8; tile.n_symbols];
-    decoder.decode_into(&seg, &mut buf)?;
+    codecs.get(meta.codec)?.decode_tile(&seg, &mut buf)?;
     Ok(buf)
 }
 
 fn worker(
     source: &SegmentSource,
-    decoder: &Decoder,
+    codecs: &CodecSet,
     shared: &Shared,
     tiles: &[(usize, usize)],
     indices: Vec<usize>,
@@ -408,7 +412,7 @@ fn worker(
         let t0 = Instant::now();
         let meta = source.meta(layer);
         let tile = &meta.tiles[t];
-        let result = decode_one_tile(source, decoder, layer, t);
+        let result = decode_one_tile(source, codecs, layer, t);
         stats.busy += t0.elapsed();
 
         let mut st = shared.state.lock().unwrap();
@@ -750,6 +754,64 @@ mod tests {
         }
         assert_eq!(stats.total_symbols(), model.n_params());
         assert!(stats.max_layers_ahead <= 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tans_containers_stream_and_reenter_bitexact() {
+        // The whole streaming stack — windowed workers, file-backed
+        // source, re-entrant SegmentDecoder — over a tANS container
+        // must reproduce exactly what the Huffman container yields.
+        use crate::store::{compress_with_options, CodecChoice, SegmentSource};
+        let mut rng = Rng::new(0x5A);
+        let layers: Vec<(String, TensorF32)> = (0..12)
+            .map(|i| {
+                let n = 64 + rng.below(3000);
+                (
+                    format!("blocks.{i}.w"),
+                    TensorF32::new(vec![n], rng.gaussian_vec(n, 0.0, 0.05)).unwrap(),
+                )
+            })
+            .collect();
+        let (hm, _) =
+            compress_with_options(&layers, BitWidth::U8, Some(512), CodecChoice::Huffman).unwrap();
+        let (am, _) =
+            compress_with_options(&layers, BitWidth::U8, Some(512), CodecChoice::Ans).unwrap();
+        let (want, _) = ParallelDecoder::new(2).decode_model(&hm).unwrap();
+
+        let dir = std::env::temp_dir().join(format!("elm_anstream_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ans.elm");
+        am.save(&path).unwrap();
+
+        // In-memory streaming.
+        let (streamed, stats) = StreamingDecoder::new(3, 2)
+            .decode_model(Arc::new(am))
+            .unwrap();
+        assert_eq!(stats.total_symbols(), hm.n_params());
+        for (a, b) in want.iter().zip(&streamed) {
+            assert_eq!(a.symbols.data(), b.symbols.data());
+        }
+
+        // File-backed streaming + random re-entry.
+        let lazy = Arc::new(SegmentSource::open(&path).unwrap());
+        assert!(lazy.ans_table().is_some());
+        let mut stream = StreamingDecoder::new(2, 2)
+            .stream_source(Arc::clone(&lazy))
+            .unwrap();
+        let mut i = 0usize;
+        while let Some(layer) = stream.next_layer() {
+            assert_eq!(layer.unwrap().tensor.symbols.data(), want[i].symbols.data());
+            i += 1;
+        }
+        assert_eq!(i, layers.len());
+        let reent = SegmentDecoder::new(lazy).unwrap();
+        for &i in &[11usize, 0, 5, 11, 3] {
+            assert_eq!(
+                reent.decode_layer(i).unwrap().symbols.data(),
+                want[i].symbols.data()
+            );
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -56,6 +56,14 @@ impl FreqTable {
         }
     }
 
+    /// Add `count` occurrences of one symbol directly (saturating).
+    /// Lets tests and table builders express frequencies too large to
+    /// enumerate symbol by symbol (e.g. near-u64 saturation).
+    pub fn add_count(&mut self, symbol: u8, count: u64) {
+        let slot = &mut self.counts[symbol as usize];
+        *slot = slot.saturating_add(count);
+    }
+
     /// Merge another table into this one.
     pub fn merge(&mut self, other: &FreqTable) {
         for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {

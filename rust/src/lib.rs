@@ -25,6 +25,8 @@
 //! |---|---|---|
 //! | [`quant`] | §III-A | mixed symmetric-unsigned / asymmetric quantization |
 //! | [`huffman`] | §III-B | canonical, length-limited Huffman codec |
+//! | [`ans`] | §III-B | tANS codec arm (closes the Huffman-to-Shannon gap) |
+//! | [`codec`] | §III-B | per-segment codec ids + the `TileCodec` decode seam |
 //! | [`decode`] | §III-C | parameter-space segmentation + parallel decoding |
 //! | [`decode::stream`] | §III-C | streaming layer-ahead decode with a bounded prefetch window |
 //! | [`store`] | §III-B | ELM compressed-model container (eager + lazy segment access) |
@@ -40,10 +42,12 @@
 //! PJRT stub) are implemented in-tree because this build is fully
 //! offline.
 
+pub mod ans;
 pub mod baselines;
 pub mod bench;
 pub mod bitio;
 pub mod cli;
+pub mod codec;
 pub mod coordinator;
 pub mod corpus;
 pub mod crc32;

@@ -4,6 +4,7 @@
 //! entrollm compress   --artifacts DIR --bits u8|u4 --out model.elm
 //!                     [--synthetic N --seed S]   (no artifacts needed)
 //!                     [--tile-kb K]   (ELM v2 tile granularity, 0 = auto)
+//!                     [--codec huffman|ans|auto]   (per-layer entropy codec)
 //! entrollm inspect    --model model.elm [--histogram]
 //! entrollm decompress --model model.elm --out weights.eqw [--threads N]
 //!                     [--stream --prefetch-layers K]
@@ -55,9 +56,10 @@ use entrollm::decode::{ParallelDecoder, StreamingDecoder};
 use entrollm::device::{table2_workloads, LatencyModel, JETSON_P3450};
 use entrollm::entropy::{distribution_stats, Histogram};
 use entrollm::huffman::FreqTable;
-use entrollm::pipeline::{build_elm_tiled, load_backend, Flavor};
+use entrollm::codec::Codec;
+use entrollm::pipeline::{build_elm_with, load_backend, Flavor};
 use entrollm::quant::BitWidth;
-use entrollm::store::ElmModel;
+use entrollm::store::{CodecChoice, ElmModel};
 use entrollm::{Error, Result};
 
 fn main() {
@@ -101,15 +103,19 @@ fn run(args: &Args) -> Result<()> {
 const HELP: &str = r#"entrollm — entropy-encoded weight compression for edge LLM inference
 
 commands:
-  compress      quantize (mixed scheme) + Huffman-encode -> .elm container
+  compress      quantize (mixed scheme) + entropy-encode -> .elm container
                 (--synthetic N builds a seeded synthetic model, no artifacts;
                 --tile-kb K writes independently decodable tiles of K KiB
-                decoded symbols each — 0/default auto-sizes ~4-8 per layer)
+                decoded symbols each — 0/default auto-sizes ~4-8 per layer;
+                --codec huffman|ans|auto picks the entropy coder per layer:
+                huffman = canonical Huffman (default, v2-compatible),
+                ans = tabled asymmetric numeral system (tANS, writes v3),
+                auto = measure both per layer and keep the smaller)
   inspect       print an .elm container's manifest and symbol statistics
   decompress    decode an .elm container back to raw quantized weights
                 (--stream decodes layer-ahead with a bounded prefetch
                 window, reading the payload lazily from disk)
-  decode-bench  measure parallel Huffman decode throughput
+  decode-bench  measure parallel entropy-decode throughput
   eval-ppl      held-out perplexity via the AOT score executable
   generate      one-shot generation through the serving engine
                 (--stream loads weights via the streaming decoder;
@@ -148,6 +154,30 @@ fn tile_symbols_from_kb(kb: f64) -> Result<Option<usize>> {
     Ok(Some(((kb * 1024.0) as usize).max(1)))
 }
 
+/// Parse the `--codec` flag into the compressor's per-layer choice.
+fn codec_choice_from_flag(raw: &str) -> Result<CodecChoice> {
+    match raw {
+        "huffman" => Ok(CodecChoice::Huffman),
+        "ans" | "tans" => Ok(CodecChoice::Ans),
+        "auto" => Ok(CodecChoice::Auto),
+        other => Err(Error::InvalidArg(format!(
+            "--codec must be huffman, ans, or auto, got {other:?}"
+        ))),
+    }
+}
+
+/// Human summary of which entropy coders a container's layers use.
+fn codec_summary(layers: &[entrollm::store::LayerMeta]) -> String {
+    let n_ans = layers.iter().filter(|m| m.codec == Codec::Ans).count();
+    if n_ans == 0 {
+        Codec::Huffman.name().to_string()
+    } else if n_ans == layers.len() {
+        Codec::Ans.name().to_string()
+    } else {
+        format!("mixed: {} huffman / {n_ans} tans", layers.len() - n_ans)
+    }
+}
+
 fn cmd_compress(args: &Args) -> Result<()> {
     let bits = BitWidth::parse(args.opt("bits", "u8"))?;
     let default_out = format!("model_{bits}.elm");
@@ -155,13 +185,14 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let synthetic: usize = args.opt_parse("synthetic", 0usize)?;
     let tile_kb: f64 = args.opt_parse("tile-kb", 0.0f64)?;
     let tile_symbols = tile_symbols_from_kb(tile_kb)?;
+    let choice = codec_choice_from_flag(args.opt("codec", "huffman"))?;
     let (model, report) = if synthetic > 0 {
         let seed: u64 = args.opt_parse("seed", 0x5EED_u64)?;
         let layers = entrollm::pipeline::synthetic_layers(synthetic, seed);
         println!("synthetic model: {synthetic} layers (seed {seed:#x})");
-        entrollm::store::compress_with_tile_size(&layers, bits, tile_symbols)?
+        entrollm::store::compress_with_options(&layers, bits, tile_symbols, choice)?
     } else {
-        build_elm_tiled(args.opt("artifacts", "artifacts"), bits, tile_symbols)?
+        build_elm_with(args.opt("artifacts", "artifacts"), bits, tile_symbols, choice)?
     };
     model.save(out)?;
     println!("wrote {out}");
@@ -173,7 +204,11 @@ fn cmd_compress(args: &Args) -> Result<()> {
     println!("  parameters      : {}", report.n_params);
     println!("  fp16 baseline   : {}", fmt_bytes(report.fp16_bytes));
     println!("  fixed {}    : {}", bits, fmt_bytes(report.fixed_bytes));
-    println!("  huffman payload : {}", fmt_bytes(report.encoded_bytes));
+    println!(
+        "  encoded payload : {} ({})",
+        fmt_bytes(report.encoded_bytes),
+        codec_summary(&model.layers)
+    );
     println!("  entropy         : {:.3} bits/param", report.entropy_bits);
     println!("  effective bits  : {:.3} bits/param", report.effective_bits);
     let sym = report
@@ -192,6 +227,15 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     let model = ElmModel::load(args.req("model")?)?;
     println!("ELM container: {} layers, {}", model.layers.len(), model.bits);
     println!("  payload        : {}", fmt_bytes(model.payload.len()));
+    println!(
+        "  codecs         : {}{}",
+        codec_summary(&model.layers),
+        if model.ans.is_some() {
+            " (tANS table present)"
+        } else {
+            ""
+        }
+    );
     println!("  parameters     : {}", model.n_params());
     println!("  effective bits : {:.3}", model.effective_bits());
     if model.layers.is_empty() {
@@ -216,7 +260,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     }
     for m in model.layers.iter().take(8) {
         println!(
-            "  layer {:<24} {} {:?} s={:+.5} z={:+.5} {} -> {} ({} tiles)",
+            "  layer {:<24} {} {:?} s={:+.5} z={:+.5} {} -> {} ({} tiles, {})",
             m.name,
             m.shape,
             m.params.scheme,
@@ -225,6 +269,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             fmt_bytes(m.n_symbols * if model.bits == BitWidth::U8 { 1 } else { 1 } / 1),
             fmt_bytes(m.encoded_len),
             m.tiles.len(),
+            m.codec.name(),
         );
     }
     if model.layers.len() > 8 {
@@ -386,7 +431,7 @@ fn load_serving_backend(
             )?,
         };
         println!(
-            "huffman streaming decode: {} symbols | first layer {} | total {} | prefetch {} \
+            "streaming decode: {} symbols | first layer {} | total {} | prefetch {} \
              (runtime upload follows the full set)",
             stats.total_symbols(),
             fmt_secs(stats.time_to_first_layer.as_secs_f64()),
@@ -398,7 +443,7 @@ fn load_serving_backend(
         let (backend, decode_stats) = load_backend(artifacts, flavor, threads)?;
         if let Some(s) = &decode_stats {
             println!(
-                "huffman parallel decode: {} in {} ({:.1} Msym/s)",
+                "parallel decode: {} in {} ({:.1} Msym/s)",
                 s.total_symbols(),
                 fmt_secs(s.wall.as_secs_f64()),
                 s.symbols_per_sec() / 1e6

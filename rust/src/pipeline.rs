@@ -17,7 +17,9 @@ use crate::residency::{
 };
 use crate::rng::Rng;
 use crate::runtime::{load_weights_bin, Manifest, ModelRuntime, Variant, WeightSet};
-use crate::store::{compress, compress_with_tile_size, CompressionReport, ElmModel, SegmentSource};
+use crate::store::{
+    compress, compress_with_options, CodecChoice, CompressionReport, ElmModel, SegmentSource,
+};
 use crate::tensor::TensorF32;
 use crate::{Error, Result};
 use std::path::Path;
@@ -87,7 +89,7 @@ pub fn build_elm(
 }
 
 /// [`build_elm`] with explicit tile granularity: `tile_symbols` caps
-/// how many decoded symbols each ELM v2 tile covers (`None` = auto).
+/// how many decoded symbols each ELM tile covers (`None` = auto).
 /// This is the `compress --tile-kb N` path — smaller tiles buy more
 /// intra-layer decode parallelism for a few manifest bytes per tile.
 pub fn build_elm_tiled(
@@ -95,11 +97,23 @@ pub fn build_elm_tiled(
     bits: BitWidth,
     tile_symbols: Option<usize>,
 ) -> Result<(ElmModel, CompressionReport)> {
+    build_elm_with(artifacts, bits, tile_symbols, CodecChoice::Huffman)
+}
+
+/// [`build_elm_tiled`] plus codec negotiation: the `compress --codec`
+/// path. Every layer's tiles are written with the chosen codec
+/// (`Auto` = per-layer smaller-of-both), recorded in the v3 manifest.
+pub fn build_elm_with(
+    artifacts: impl AsRef<Path>,
+    bits: BitWidth,
+    tile_symbols: Option<usize>,
+    choice: CodecChoice,
+) -> Result<(ElmModel, CompressionReport)> {
     let dir = artifacts.as_ref();
     let manifest = Manifest::load(dir.join("manifest.json"))?;
     let weights = load_weights_bin(dir.join("weights.bin"))?;
     let (quantizable, _) = split_weights(&manifest, weights);
-    compress_with_tile_size(&quantizable, bits, tile_symbols)
+    compress_with_options(&quantizable, bits, tile_symbols, choice)
 }
 
 /// Load a serving backend for a flavor (Algorithm 1 `EDGE DEVICE

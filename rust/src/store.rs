@@ -5,16 +5,21 @@
 //! Layout (little-endian):
 //!
 //! ```text
-//! magic "ELM1" | version u32 (= 2) | bitwidth u8 | n_layers u32
+//! magic "ELM1" | version u32 (= 3) | bitwidth u8 | n_layers u32
 //! global canonical code lengths: 256 × u8      (this is "H" — canonical
 //!                                               codes rebuild from lengths)
+//! global tANS slot counts: 256 × u16           (v3 only; all-zero =
+//!                                               no tANS table present)
 //! per layer:
 //!   name_len u16 | name utf-8
 //!   rank u8 | dims: rank × u64
 //!   scheme u8 | scale f32 | zero_point f32
 //!   n_symbols u64 | encoded_len u64 | crc32 u32
-//!   n_tiles u32                                  (v2 only)
+//!   codec u8                                     (v3 only: 0=huffman 1=tans)
+//!   n_tiles u32                                  (v2+)
 //!   per tile: n_symbols u64 | encoded_len u64 | crc32 u32
+//!             | codec u8                         (v3 only; must equal
+//!                                                 the layer's)
 //! payload: concatenated byte-aligned encoded segments (one per layer),
 //!          each segment the concatenation of its byte-aligned tiles
 //! ```
@@ -30,10 +35,15 @@
 //! worker can attack a single hot layer instead of serializing behind
 //! it. Tile byte offsets and symbol offsets are derived by accumulation
 //! (never stored); each tile carries its own CRC-32 so corruption is
-//! isolated to one tile. **v1 containers remain readable forever**:
-//! [`read_manifest`] dispatches on the version field and synthesizes one
-//! whole-segment tile per layer for v1, so every tile-aware consumer
-//! sees a uniform model.
+//! isolated to one tile. **v3 codec negotiation** makes the entropy
+//! codec a per-layer manifest field ([`crate::codec::Codec`]): a layer
+//! is either Huffman- or tANS-coded, chosen at compression time
+//! ([`CodecChoice`], with `Auto` picking per layer by measured encoded
+//! size). **v1 and v2 containers remain readable forever**:
+//! [`read_manifest`] dispatches on the version field, synthesizes one
+//! whole-segment tile per layer for v1, and defaults the codec to
+//! Huffman for both pre-v3 versions, so every tile-aware consumer sees
+//! a uniform model.
 //!
 //! The byte-level specification third parties need to write their own
 //! encoders/decoders lives in `docs/FORMAT.md` at the repository root;
@@ -49,8 +59,10 @@
 //!   cache-resident consumer ([`crate::decode::StreamingDecoder`],
 //!   [`crate::residency::WeightCache`]) never pays `O(model)` RSS.
 
+use crate::ans::AnsTable;
+use crate::codec::{Codec, CodecSet};
 use crate::entropy::shannon_entropy;
-use crate::huffman::{CodeSpec, Decoder, Encoder, FreqTable};
+use crate::huffman::{CodeSpec, Encoder, FreqTable};
 use crate::quant::{quantize_mixed, BitWidth, QuantParams, QuantizedTensor, Scheme};
 use crate::tensor::{Shape, TensorF32, TensorU8};
 use crate::{Error, Result};
@@ -60,13 +72,21 @@ use std::path::Path;
 use std::sync::Arc;
 
 const MAGIC: &[u8; 4] = b"ELM1";
-/// Version written by this build (v2: tiled layer segments).
-const VERSION: u32 = 2;
+/// Version written by this build (v3: per-layer codec negotiation).
+const VERSION: u32 = 3;
+/// The tiled, Huffman-only predecessor, still readable.
+const VERSION_V2: u32 = 2;
 /// The original single-tile-per-layer format, still readable.
 const VERSION_V1: u32 = 1;
-/// Serialized bytes per tile-table entry: n_symbols u64 + encoded_len
-/// u64 + crc32 u32.
+/// Serialized bytes per v2 tile-table entry: n_symbols u64 +
+/// encoded_len u64 + crc32 u32.
 const TILE_ENTRY_BYTES: usize = 8 + 8 + 4;
+/// v3 tile-table entry: the v2 fields plus a codec id byte (which must
+/// equal the layer's).
+const TILE_ENTRY_BYTES_V3: usize = TILE_ENTRY_BYTES + 1;
+/// Serialized tANS table section (256 × u16 normalized slot counts);
+/// all-zero means "no tANS table in this container".
+const ANS_TABLE_BYTES: usize = crate::ans::SERIALIZED_BYTES;
 
 /// One independently decodable, byte-aligned **tile** of a layer
 /// segment — the v2 unit of parallel decode and prefetch claim.
@@ -102,6 +122,11 @@ pub struct LayerMeta {
     pub encoded_len: usize,
     /// CRC32 of the encoded segment.
     pub crc32: u32,
+    /// Entropy codec this layer's tiles were encoded with (v3 manifest
+    /// field; pre-v3 containers default to [`Codec::Huffman`]). All of
+    /// a layer's tiles share one codec — mixing happens *across*
+    /// layers (the `Auto` choice), never within one.
+    pub codec: Codec,
     /// Independently decodable tiles covering the segment, in symbol
     /// order. Always non-empty: v1 containers get one synthesized
     /// whole-segment tile.
@@ -115,6 +140,9 @@ pub struct ElmModel {
     pub bits: BitWidth,
     /// The model-global canonical Huffman code.
     pub code: CodeSpec,
+    /// The model-global tANS table — present iff at least one layer is
+    /// tANS-coded (serialized as the v3 slot-count section).
+    pub ans: Option<AnsTable>,
     /// Layer manifest, in storage order.
     pub layers: Vec<LayerMeta>,
     /// Concatenated encoded segments.
@@ -130,7 +158,7 @@ pub struct CompressionReport {
     pub fp16_bytes: usize,
     /// Fixed-width quantized size (bit-packed, no entropy coding).
     pub fixed_bytes: usize,
-    /// Huffman payload size.
+    /// Entropy-coded payload size (whichever codecs were chosen).
     pub encoded_bytes: usize,
     /// Shannon entropy of the pooled symbol histogram (bits/param).
     pub entropy_bits: f64,
@@ -138,6 +166,9 @@ pub struct CompressionReport {
     pub effective_bits: f64,
     /// Per-layer scheme chosen by the mixed rule.
     pub schemes: Vec<(String, Scheme)>,
+    /// Per-layer entropy codec actually stored (all Huffman unless the
+    /// [`CodecChoice`] said otherwise).
+    pub codecs: Vec<(String, Codec)>,
 }
 
 impl ElmModel {
@@ -210,12 +241,13 @@ impl ElmModel {
 }
 
 /// Serialized size of everything **before** the payload: magic, version,
-/// bit width, layer count, the 256-byte code-length table, and the layer
-/// manifest (v2: including each layer's tile table). This is also the
-/// payload's byte offset within a container file written by this build,
-/// which is what lazy segment reads seek relative to. (A *parsed* v1
-/// container's payload base differs — [`SegmentSource::open`] uses the
-/// header length accumulated during parsing, not this function.)
+/// bit width, layer count, the 256-byte code-length table, the 512-byte
+/// tANS slot-count section, and the layer manifest (each layer's codec
+/// byte and tile table included). This is also the payload's byte
+/// offset within a container file written by this build, which is what
+/// lazy segment reads seek relative to. (A *parsed* v1/v2 container's
+/// payload base differs — [`SegmentSource::open`] uses the header
+/// length accumulated during parsing, not this function.)
 pub fn header_bytes(layers: &[LayerMeta]) -> usize {
     let manifest: usize = layers
         .iter()
@@ -229,11 +261,12 @@ pub fn header_bytes(layers: &[LayerMeta]) -> usize {
                 + 8
                 + 8
                 + 4
+                + 1
                 + 4
-                + TILE_ENTRY_BYTES * l.tiles.len()
+                + TILE_ENTRY_BYTES_V3 * l.tiles.len()
         })
         .sum();
-    4 + 4 + 1 + 4 + 256 + manifest
+    4 + 4 + 1 + 4 + 256 + ANS_TABLE_BYTES + manifest
 }
 
 /// One independently decodable, byte-aligned segment of an
@@ -382,6 +415,7 @@ impl SharedFile {
 pub struct SegmentSource {
     bits: BitWidth,
     code: CodeSpec,
+    ans: Option<AnsTable>,
     layers: Vec<LayerMeta>,
     backing: Backing,
 }
@@ -393,6 +427,7 @@ impl SegmentSource {
         SegmentSource {
             bits: model.bits,
             code: model.code.clone(),
+            ans: model.ans.clone(),
             layers: model.layers.clone(),
             backing: Backing::Memory(model),
         }
@@ -429,6 +464,7 @@ impl SegmentSource {
         Ok(SegmentSource {
             bits: head.bits,
             code: head.code,
+            ans: head.ans,
             layers: head.layers,
             backing: Backing::File {
                 file: SharedFile::new(file),
@@ -445,6 +481,12 @@ impl SegmentSource {
     /// The model-global canonical Huffman code.
     pub fn code(&self) -> &CodeSpec {
         &self.code
+    }
+
+    /// The model-global tANS table, if any layer is tANS-coded — what
+    /// [`CodecSet::new`] takes next to [`SegmentSource::code`].
+    pub fn ans_table(&self) -> Option<&AnsTable> {
+        self.ans.as_ref()
     }
 
     /// Layer manifest, in storage order.
@@ -557,6 +599,20 @@ fn auto_tile_symbols(n_symbols: usize) -> usize {
     n_symbols.div_ceil(6).max(1024)
 }
 
+/// How [`compress_with_options`] picks each layer's entropy codec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CodecChoice {
+    /// Huffman for every layer (the pre-v3 behavior, still the
+    /// default).
+    #[default]
+    Huffman,
+    /// tANS for every layer.
+    Ans,
+    /// Per layer, encode with both and keep whichever measures smaller
+    /// (ties go to Huffman — the simpler decoder).
+    Auto,
+}
+
 /// Compress a set of named fp32 layers: mixed quantization (§III-A) →
 /// pooled frequency table → model-global Huffman code (§III-B) →
 /// per-layer byte-aligned segments (§III-C), tiled with the automatic
@@ -577,6 +633,47 @@ pub fn compress_with_tile_size(
     bits: BitWidth,
     tile_symbols: Option<usize>,
 ) -> Result<(ElmModel, CompressionReport)> {
+    compress_with_options(layers, bits, tile_symbols, CodecChoice::Huffman)
+}
+
+/// Tile spans `[start, end)` covering `n` symbols in chunks of (up to)
+/// `per_tile`; a zero-symbol layer still gets one empty span, so every
+/// layer has at least one tile.
+fn tile_spans(n: usize, per_tile: usize) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut s = 0usize;
+    loop {
+        let end = s.saturating_add(per_tile).min(n);
+        spans.push((s, end));
+        s = end;
+        if s >= n {
+            break;
+        }
+    }
+    spans
+}
+
+/// Encode one layer's symbols as per-span tile streams with whichever
+/// encoder the codec choice handed us.
+fn encode_tiles<F>(syms: &[u8], spans: &[(usize, usize)], enc: F) -> Result<Vec<Vec<u8>>>
+where
+    F: Fn(&[u8]) -> Result<Vec<u8>>,
+{
+    spans.iter().map(|&(a, b)| enc(&syms[a..b])).collect()
+}
+
+/// [`compress_with_tile_size`] plus codec negotiation: every layer's
+/// tiles are encoded with the codec the [`CodecChoice`] selects, and
+/// the choice is recorded per layer in the v3 manifest. Whatever the
+/// codec, tiles stay byte-aligned, independently decodable and
+/// CRC-guarded, and decoded output is bit-identical — the codec only
+/// changes how few bits the same symbols cost.
+pub fn compress_with_options(
+    layers: &[(String, TensorF32)],
+    bits: BitWidth,
+    tile_symbols: Option<usize>,
+    choice: CodecChoice,
+) -> Result<(ElmModel, CompressionReport)> {
     if layers.is_empty() {
         return Err(Error::InvalidArg("compress: no layers".into()));
     }
@@ -590,14 +687,23 @@ pub fn compress_with_tile_size(
         freq.add_symbols(q.symbols.data());
     }
 
-    // 3. One global canonical code (line 12).
+    // 3. One global canonical code (line 12), and — when tANS is in
+    //    play — one global tANS table from the same pooled histogram.
     let code = CodeSpec::build(&freq)?;
     let encoder = Encoder::new(&code);
+    let ans = match choice {
+        CodecChoice::Huffman => None,
+        CodecChoice::Ans | CodecChoice::Auto => {
+            let table = AnsTable::build(&freq)?;
+            let enc = crate::ans::Encoder::new(&table);
+            Some((table, enc))
+        }
+    };
 
     // 4. Encode each tensor as its own byte-aligned segment (lines
     //    13–15), carved into independently decodable tiles. Each
-    //    `encode_to_vec` call zero-pads to a whole byte, which is
-    //    exactly the byte alignment the tile table promises.
+    //    `encode_to_vec` call pads to a whole byte, which is exactly
+    //    the byte alignment the tile table promises.
     let mut payload = Vec::new();
     let mut metas = Vec::with_capacity(layers.len());
     for ((name, _), q) in layers.iter().zip(&quantized) {
@@ -605,26 +711,40 @@ pub fn compress_with_tile_size(
         let per_tile = tile_symbols
             .unwrap_or_else(|| auto_tile_symbols(syms.len()))
             .max(1);
+        let spans = tile_spans(syms.len(), per_tile);
+        let (codec, tile_bytes) = match (choice, &ans) {
+            (CodecChoice::Huffman, _) | (_, None) => (
+                Codec::Huffman,
+                encode_tiles(syms, &spans, |s| encoder.encode_to_vec(s))?,
+            ),
+            (CodecChoice::Ans, Some((_, aenc))) => (
+                Codec::Ans,
+                encode_tiles(syms, &spans, |s| aenc.encode_to_vec(s))?,
+            ),
+            (CodecChoice::Auto, Some((_, aenc))) => {
+                let h = encode_tiles(syms, &spans, |s| encoder.encode_to_vec(s))?;
+                let a = encode_tiles(syms, &spans, |s| aenc.encode_to_vec(s))?;
+                let h_total: usize = h.iter().map(Vec::len).sum();
+                let a_total: usize = a.iter().map(Vec::len).sum();
+                if a_total < h_total {
+                    (Codec::Ans, a)
+                } else {
+                    (Codec::Huffman, h)
+                }
+            }
+        };
+
         let layer_off = payload.len();
-        let mut tiles = Vec::new();
-        let mut s = 0usize;
-        loop {
-            let end = s.saturating_add(per_tile).min(syms.len());
-            let seg = encoder.encode_to_vec(&syms[s..end])?;
+        let mut tiles = Vec::with_capacity(spans.len());
+        for (&(a, b), seg) in spans.iter().zip(&tile_bytes) {
             tiles.push(TileMeta {
-                sym_offset: s,
-                n_symbols: end - s,
+                sym_offset: a,
+                n_symbols: b - a,
                 offset: payload.len(),
                 encoded_len: seg.len(),
-                crc32: crate::crc32::hash(&seg),
+                crc32: crate::crc32::hash(seg),
             });
-            payload.extend_from_slice(&seg);
-            s = end;
-            if s >= syms.len() {
-                // A zero-symbol layer still gets one (empty) tile, so
-                // `tiles` is never empty.
-                break;
-            }
+            payload.extend_from_slice(seg);
         }
         metas.push(LayerMeta {
             name: name.clone(),
@@ -634,9 +754,18 @@ pub fn compress_with_tile_size(
             offset: layer_off,
             encoded_len: payload.len() - layer_off,
             crc32: crate::crc32::hash(&payload[layer_off..]),
+            codec,
             tiles,
         });
     }
+
+    // Keep the table only if some layer actually uses it, so an
+    // Auto run that never picks tANS serializes an all-zero section.
+    let ans = if metas.iter().any(|m| m.codec == Codec::Ans) {
+        ans.map(|(table, _)| table)
+    } else {
+        None
+    };
 
     let n_params: usize = metas.iter().map(|m| m.n_symbols).sum();
     let report = CompressionReport {
@@ -651,10 +780,12 @@ pub fn compress_with_tile_size(
             .zip(&quantized)
             .map(|((n, _), q)| (n.clone(), q.params.scheme))
             .collect(),
+        codecs: metas.iter().map(|m| (m.name.clone(), m.codec)).collect(),
     };
     let model = ElmModel {
         bits,
         code,
+        ans,
         layers: metas,
         payload,
     };
@@ -663,16 +794,18 @@ pub fn compress_with_tile_size(
 
 /// Decode a single layer of a model (serial path; the parallel path
 /// lives in [`crate::decode`]). Walks the layer's tiles behind each
-/// tile's own CRC, so decode output is bit-identical whether the
-/// container is v1 (one synthesized tile) or v2 (many).
+/// tile's own CRC with the layer's own codec, so decode output is
+/// bit-identical whether the container is v1 (one synthesized tile,
+/// Huffman), v2 (many tiles, Huffman) or v3 (either codec).
 pub fn decode_layer(model: &ElmModel, i: usize) -> Result<QuantizedTensor> {
     let meta = &model.layers[i];
-    let dec = Decoder::new(&model.code)?;
+    let codecs = CodecSet::new(&model.code, model.ans.as_ref())?;
+    let dec = codecs.get(meta.codec)?;
     let mut symbols = vec![0u8; meta.n_symbols];
     for (t, tile) in meta.tiles.iter().enumerate() {
         model.verify_tile(i, t)?;
         let out = &mut symbols[tile.sym_offset..tile.sym_offset + tile.n_symbols];
-        dec.decode_into(model.tile_bytes(i, t), out)?;
+        dec.decode_tile(model.tile_bytes(i, t), out)?;
     }
     Ok(QuantizedTensor {
         symbols: TensorU8::new(meta.shape.clone(), symbols)?,
@@ -756,6 +889,7 @@ impl<R: Read> Reader<R> {
 struct ManifestHead {
     bits: BitWidth,
     code: CodeSpec,
+    ans: Option<AnsTable>,
     layers: Vec<LayerMeta>,
     /// Total payload length the manifest claims.
     payload_len: usize,
@@ -777,9 +911,10 @@ fn read_manifest<R: Read>(r: &mut Reader<R>) -> Result<ManifestHead> {
     }
     // Versioned dispatch, not equality: v1 containers (one implicit
     // whole-segment tile per layer) stay readable forever; v2 adds the
-    // explicit per-layer tile table.
+    // explicit per-layer tile table; v3 adds the tANS table section
+    // and per-layer/per-tile codec ids.
     let version = r.u32()?;
-    if version != VERSION_V1 && version != VERSION {
+    if version != VERSION_V1 && version != VERSION_V2 && version != VERSION {
         return Err(Error::Format(format!("unsupported ELM version {version}")));
     }
     let bits = match r.u8()? {
@@ -803,10 +938,30 @@ fn read_manifest<R: Read>(r: &mut Reader<R>) -> Result<ManifestHead> {
     } else {
         CodeSpec::from_lengths(&lengths)?
     };
+    // v3: the tANS slot-count section. All-zero means "no table"; any
+    // other content must be a *valid* table (counts summing to the
+    // state-space size) or the container is rejected here, before any
+    // payload is touched.
+    let ans = if version == VERSION {
+        let raw = r.bytes(ANS_TABLE_BYTES)?;
+        if raw.iter().all(|&b| b == 0) {
+            None
+        } else {
+            let mut sect = [0u8; ANS_TABLE_BYTES];
+            sect.copy_from_slice(&raw);
+            Some(AnsTable::from_bytes(&sect)?)
+        }
+    } else {
+        None
+    };
     let mut layers = Vec::with_capacity(n_layers);
     let mut offset = 0usize;
-    // magic + version + bits + n_layers + code lengths.
+    // magic + version + bits + n_layers + code lengths (+ the v3 tANS
+    // section).
     let mut header_len = 4 + 4 + 1 + 4 + 256;
+    if version == VERSION {
+        header_len += ANS_TABLE_BYTES;
+    }
     for _ in 0..n_layers {
         let name_len = r.u16()? as usize;
         let name = String::from_utf8(r.bytes(name_len)?)
@@ -853,6 +1008,21 @@ fn read_manifest<R: Read>(r: &mut Reader<R>) -> Result<ManifestHead> {
         let crc32 = r.u32()?;
         header_len += 2 + name_len + 1 + 8 * rank + 1 + 4 + 4 + 8 + 8 + 4;
 
+        // v3: the layer's codec id. Pre-v3 containers predate the
+        // field — every one of their layers is Huffman by definition.
+        let codec = if version == VERSION {
+            header_len += 1;
+            Codec::from_tag(r.u8()?)?
+        } else {
+            Codec::Huffman
+        };
+        if codec == Codec::Ans && ans.is_none() {
+            return Err(Error::Format(format!(
+                "layer {name:?} coded with tANS but the container carries \
+                 no tANS table"
+            )));
+        }
+
         let tiles = if version == VERSION_V1 {
             // v1: the whole segment is the one tile. Synthesizing it
             // here is what lets every downstream consumer be uniformly
@@ -874,7 +1044,12 @@ fn read_manifest<R: Read>(r: &mut Reader<R>) -> Result<ManifestHead> {
                      {encoded_len} encoded bytes"
                 )));
             }
-            header_len += 4 + TILE_ENTRY_BYTES * n_tiles;
+            header_len += 4
+                + if version == VERSION {
+                    TILE_ENTRY_BYTES_V3
+                } else {
+                    TILE_ENTRY_BYTES
+                } * n_tiles;
             let mut tiles = Vec::with_capacity(n_tiles);
             let mut sym_offset = 0usize;
             let mut tile_off = offset;
@@ -882,7 +1057,10 @@ fn read_manifest<R: Read>(r: &mut Reader<R>) -> Result<ManifestHead> {
                 let t_symbols = r.u64()? as usize;
                 let t_len = r.u64()? as usize;
                 // Same one-bit-per-symbol bound as the layer check:
-                // rejects allocation-bomb tile claims up front.
+                // rejects allocation-bomb tile claims up front. Both
+                // codecs honor it — tANS streams are padded to the
+                // one-bit-per-symbol floor precisely so this bound
+                // stays codec-uniform.
                 if t_symbols > t_len.saturating_mul(8) {
                     return Err(Error::Format(format!(
                         "layer {name:?}: tile {t}: {t_symbols} symbols cannot \
@@ -891,6 +1069,18 @@ fn read_manifest<R: Read>(r: &mut Reader<R>) -> Result<ManifestHead> {
                     )));
                 }
                 let t_crc = r.u32()?;
+                if version == VERSION {
+                    // A tile disagreeing with its layer's codec is a
+                    // forgery (the writer only ever emits one codec
+                    // per layer), not something to "handle".
+                    let t_codec = Codec::from_tag(r.u8()?)?;
+                    if t_codec != codec {
+                        return Err(Error::Format(format!(
+                            "layer {name:?}: tile {t} claims codec \
+                             {t_codec}, layer claims {codec}"
+                        )));
+                    }
+                }
                 tiles.push(TileMeta {
                     sym_offset,
                     n_symbols: t_symbols,
@@ -936,6 +1126,7 @@ fn read_manifest<R: Read>(r: &mut Reader<R>) -> Result<ManifestHead> {
             offset,
             encoded_len,
             crc32,
+            codec,
             tiles,
         });
         offset = offset
@@ -945,6 +1136,7 @@ fn read_manifest<R: Read>(r: &mut Reader<R>) -> Result<ManifestHead> {
     Ok(ManifestHead {
         bits,
         code,
+        ans,
         layers,
         payload_len: offset,
         header_len,
@@ -960,6 +1152,13 @@ impl ElmModel {
         w.u8(self.bits.bits() as u8)?;
         w.u32(self.layers.len() as u32)?;
         w.bytes(self.code.lengths())?;
+        // v3 tANS section: the table's slot counts, or all zeros when
+        // every layer is Huffman (zeros are unambiguous — a real table
+        // sums to the state-space size).
+        match &self.ans {
+            Some(table) => w.bytes(&table.to_bytes())?,
+            None => w.bytes(&[0u8; ANS_TABLE_BYTES])?,
+        }
         for m in &self.layers {
             if m.name.len() > u16::MAX as usize {
                 return Err(Error::InvalidArg(format!("layer name too long: {}", m.name.len())));
@@ -976,13 +1175,16 @@ impl ElmModel {
             w.u64(m.n_symbols as u64)?;
             w.u64(m.encoded_len as u64)?;
             w.u32(m.crc32)?;
+            w.u8(m.codec.tag())?;
             w.u32(m.tiles.len() as u32)?;
             for t in &m.tiles {
                 // Tile symbol/byte offsets are derived by accumulation
-                // on read — only the lengths and the CRC are stored.
+                // on read — only the lengths, the CRC and the codec
+                // echo are stored.
                 w.u64(t.n_symbols as u64)?;
                 w.u64(t.encoded_len as u64)?;
                 w.u32(t.crc32)?;
+                w.u8(m.codec.tag())?;
             }
         }
         w.bytes(&self.payload)?;
@@ -1014,6 +1216,7 @@ impl ElmModel {
         Ok(ElmModel {
             bits: head.bits,
             code: head.code,
+            ans: head.ans,
             layers: head.layers,
             payload,
         })
@@ -1283,6 +1486,7 @@ mod tests {
         let model = ElmModel {
             bits: BitWidth::U8,
             code: CodeSpec::from_lengths(&one).unwrap(),
+            ans: None,
             layers: Vec::new(),
             payload: Vec::new(),
         };
@@ -1615,6 +1819,350 @@ mod tests {
         forged.write_to(&mut buf).unwrap();
         let err = ElmModel::read_from(buf.as_slice()).unwrap_err();
         assert!(err.to_string().contains("implausible tile count"), "{err}");
+    }
+
+    /// Serialize a model in the **v2** wire format (tiled manifest, no
+    /// tANS section, no codec bytes) — what every pre-v3 build wrote.
+    /// Only valid for all-Huffman models, which is all v2 could hold.
+    fn write_v2(model: &ElmModel) -> Vec<u8> {
+        assert!(model.layers.iter().all(|m| m.codec == Codec::Huffman));
+        let mut w = Writer { inner: Vec::new() };
+        w.bytes(MAGIC).unwrap();
+        w.u32(VERSION_V2).unwrap();
+        w.u8(model.bits.bits() as u8).unwrap();
+        w.u32(model.layers.len() as u32).unwrap();
+        w.bytes(model.code.lengths()).unwrap();
+        for m in &model.layers {
+            w.u16(m.name.len() as u16).unwrap();
+            w.bytes(m.name.as_bytes()).unwrap();
+            w.u8(m.shape.rank() as u8).unwrap();
+            for &d in m.shape.dims() {
+                w.u64(d as u64).unwrap();
+            }
+            w.u8(m.params.scheme.tag()).unwrap();
+            w.f32(m.params.scale).unwrap();
+            w.f32(m.params.zero_point).unwrap();
+            w.u64(m.n_symbols as u64).unwrap();
+            w.u64(m.encoded_len as u64).unwrap();
+            w.u32(m.crc32).unwrap();
+            w.u32(m.tiles.len() as u32).unwrap();
+            for t in &m.tiles {
+                w.u64(t.n_symbols as u64).unwrap();
+                w.u64(t.encoded_len as u64).unwrap();
+                w.u32(t.crc32).unwrap();
+            }
+        }
+        w.bytes(&model.payload).unwrap();
+        w.inner
+    }
+
+    /// Serialize a model in the v3 wire format with injectable codec
+    /// bytes and tANS section — the forgery rig for the adversarial
+    /// codec tests ([`ElmModel::write_to`] can only emit consistent
+    /// containers).
+    fn write_v3_raw(
+        model: &ElmModel,
+        ans_section: &[u8; ANS_TABLE_BYTES],
+        layer_codec: impl Fn(usize) -> u8,
+        tile_codec: impl Fn(usize, usize) -> u8,
+    ) -> Vec<u8> {
+        let mut w = Writer { inner: Vec::new() };
+        w.bytes(MAGIC).unwrap();
+        w.u32(VERSION).unwrap();
+        w.u8(model.bits.bits() as u8).unwrap();
+        w.u32(model.layers.len() as u32).unwrap();
+        w.bytes(model.code.lengths()).unwrap();
+        w.bytes(ans_section).unwrap();
+        for (i, m) in model.layers.iter().enumerate() {
+            w.u16(m.name.len() as u16).unwrap();
+            w.bytes(m.name.as_bytes()).unwrap();
+            w.u8(m.shape.rank() as u8).unwrap();
+            for &d in m.shape.dims() {
+                w.u64(d as u64).unwrap();
+            }
+            w.u8(m.params.scheme.tag()).unwrap();
+            w.f32(m.params.scale).unwrap();
+            w.f32(m.params.zero_point).unwrap();
+            w.u64(m.n_symbols as u64).unwrap();
+            w.u64(m.encoded_len as u64).unwrap();
+            w.u32(m.crc32).unwrap();
+            w.u8(layer_codec(i)).unwrap();
+            w.u32(m.tiles.len() as u32).unwrap();
+            for (t, tile) in m.tiles.iter().enumerate() {
+                w.u64(tile.n_symbols as u64).unwrap();
+                w.u64(tile.encoded_len as u64).unwrap();
+                w.u32(tile.crc32).unwrap();
+                w.u8(tile_codec(i, t)).unwrap();
+            }
+        }
+        w.bytes(&model.payload).unwrap();
+        w.inner
+    }
+
+    #[test]
+    fn compress_codec_choice_marks_layers_and_tables() {
+        let layers = make_layers(30);
+        let (h, hr) = compress_with_options(&layers, BitWidth::U8, None, CodecChoice::Huffman).unwrap();
+        assert!(h.ans.is_none(), "all-Huffman model must not carry a tANS table");
+        assert!(hr.codecs.iter().all(|(_, c)| *c == Codec::Huffman));
+
+        let (a, ar) = compress_with_options(&layers, BitWidth::U8, None, CodecChoice::Ans).unwrap();
+        assert!(a.ans.is_some(), "tANS model must carry its table");
+        assert!(ar.codecs.iter().all(|(_, c)| *c == Codec::Ans));
+        assert!(a.layers.iter().all(|m| m.codec == Codec::Ans));
+
+        // Both decode to the same symbols as a fresh quantization.
+        for i in 0..layers.len() {
+            let want = quantize_mixed(&layers[i].1, BitWidth::U8);
+            assert_eq!(decode_layer(&h, i).unwrap().symbols.data(), want.symbols.data());
+            assert_eq!(decode_layer(&a, i).unwrap().symbols.data(), want.symbols.data());
+        }
+    }
+
+    #[test]
+    fn auto_codec_never_larger_than_either_pure_choice() {
+        let layers = make_layers(32);
+        for bits in [BitWidth::U4, BitWidth::U8] {
+            let (h, _) = compress_with_options(&layers, bits, None, CodecChoice::Huffman).unwrap();
+            let (a, _) = compress_with_options(&layers, bits, None, CodecChoice::Ans).unwrap();
+            let (auto, report) = compress_with_options(&layers, bits, None, CodecChoice::Auto).unwrap();
+            // Auto picks per layer, so its total can only match or beat
+            // both fixed choices.
+            assert!(auto.payload.len() <= h.payload.len().min(a.payload.len()));
+            assert_eq!(report.codecs.len(), layers.len());
+            for (m, (name, codec)) in auto.layers.iter().zip(&report.codecs) {
+                assert_eq!(&m.name, name);
+                assert_eq!(m.codec, *codec);
+            }
+            let mut buf = Vec::new();
+            auto.write_to(&mut buf).unwrap();
+            let loaded = ElmModel::read_from(buf.as_slice()).unwrap();
+            for i in 0..layers.len() {
+                assert_eq!(
+                    decode_layer(&loaded, i).unwrap().symbols.data(),
+                    quantize_mixed(&layers[i].1, bits).symbols.data()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_codec_layers_roundtrip_and_decode() {
+        // One container, codecs alternating per layer — what an Auto
+        // run produces when the win flips between layers. Hand-built so
+        // the mix is deterministic.
+        let layers = make_layers(33);
+        let quant: Vec<QuantizedTensor> = layers
+            .iter()
+            .map(|(_, w)| quantize_mixed(w, BitWidth::U8))
+            .collect();
+        let mut freq = FreqTable::new();
+        for q in &quant {
+            freq.add_symbols(q.symbols.data());
+        }
+        let code = CodeSpec::build(&freq).unwrap();
+        let table = AnsTable::build(&freq).unwrap();
+        let henc = Encoder::new(&code);
+        let aenc = crate::ans::Encoder::new(&table);
+
+        let mut payload = Vec::new();
+        let mut metas = Vec::new();
+        for (i, ((name, _), q)) in layers.iter().zip(&quant).enumerate() {
+            let syms = q.symbols.data();
+            let codec = if i % 2 == 0 { Codec::Huffman } else { Codec::Ans };
+            let seg = match codec {
+                Codec::Huffman => henc.encode_to_vec(syms).unwrap(),
+                Codec::Ans => aenc.encode_to_vec(syms).unwrap(),
+            };
+            let off = payload.len();
+            let crc = crate::crc32::hash(&seg);
+            payload.extend_from_slice(&seg);
+            metas.push(LayerMeta {
+                name: name.clone(),
+                shape: q.symbols.shape().clone(),
+                params: q.params,
+                n_symbols: syms.len(),
+                offset: off,
+                encoded_len: seg.len(),
+                crc32: crc,
+                codec,
+                tiles: vec![TileMeta {
+                    sym_offset: 0,
+                    n_symbols: syms.len(),
+                    offset: off,
+                    encoded_len: seg.len(),
+                    crc32: crc,
+                }],
+            });
+        }
+        let model = ElmModel {
+            bits: BitWidth::U8,
+            code,
+            ans: Some(table),
+            layers: metas,
+            payload,
+        };
+
+        let mut buf = Vec::new();
+        model.write_to(&mut buf).unwrap();
+        let loaded = ElmModel::read_from(buf.as_slice()).unwrap();
+        assert_eq!(loaded.layers[0].codec, Codec::Huffman);
+        assert_eq!(loaded.layers[1].codec, Codec::Ans);
+        for i in 0..layers.len() {
+            assert_eq!(
+                decode_layer(&loaded, i).unwrap().symbols.data(),
+                quant[i].symbols.data(),
+                "mixed-codec layer {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn golden_container_cross_version_codec_matrix() {
+        // The same tiny, seeded weight set written as every container
+        // generation (v1, v2, v3×huffman, v3×tans) must open on both
+        // readers and decode to identical EQW symbols.
+        let layers = make_layers(31);
+        let want: Vec<Vec<u8>> = layers
+            .iter()
+            .map(|(_, w)| quantize_mixed(w, BitWidth::U8).symbols.data().to_vec())
+            .collect();
+
+        let (flat, _) = compress_with_tile_size(&layers, BitWidth::U8, Some(usize::MAX)).unwrap();
+        let (tiled_h, _) =
+            compress_with_options(&layers, BitWidth::U8, Some(256), CodecChoice::Huffman).unwrap();
+        let (tiled_a, _) =
+            compress_with_options(&layers, BitWidth::U8, Some(256), CodecChoice::Ans).unwrap();
+
+        let mut variants: Vec<(String, Vec<u8>)> = vec![
+            ("v1_huffman".into(), write_v1(&flat)),
+            ("v2_huffman_flat".into(), write_v2(&flat)),
+            ("v2_huffman_tiled".into(), write_v2(&tiled_h)),
+        ];
+        for (label, m) in [("v3_huffman", &tiled_h), ("v3_tans", &tiled_a)] {
+            let mut buf = Vec::new();
+            m.write_to(&mut buf).unwrap();
+            variants.push((label.into(), buf));
+        }
+
+        let dir = std::env::temp_dir().join(format!("elm_matrix_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for (label, bytes) in &variants {
+            // Eager reader.
+            let loaded = ElmModel::read_from(bytes.as_slice()).unwrap();
+            for i in 0..want.len() {
+                assert_eq!(
+                    decode_layer(&loaded, i).unwrap().symbols.data(),
+                    &want[i][..],
+                    "{label}: eager decode, layer {i}"
+                );
+            }
+            // Lazy reader, tile-by-tile through the codec seam.
+            let path = dir.join(format!("{label}.elm"));
+            std::fs::write(&path, bytes).unwrap();
+            let lazy = SegmentSource::open(&path).unwrap();
+            let codecs = CodecSet::new(lazy.code(), lazy.ans_table()).unwrap();
+            for (i, meta) in lazy.layers().iter().enumerate() {
+                let dec = codecs.get(meta.codec).unwrap();
+                let mut out = vec![0u8; meta.n_symbols];
+                for (t, tile) in meta.tiles.iter().enumerate() {
+                    let tb = lazy.verified_tile(i, t).unwrap();
+                    dec.decode_tile(&tb, &mut out[tile.sym_offset..tile.sym_offset + tile.n_symbols])
+                        .unwrap();
+                }
+                assert_eq!(out, want[i], "{label}: lazy decode, layer {i}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn adversarial_v3_codec_fields_rejected() {
+        let layers = make_layers(34);
+        let (h, _) = compress_with_options(&layers, BitWidth::U8, None, CodecChoice::Huffman).unwrap();
+        let (a, _) = compress_with_options(&layers, BitWidth::U8, None, CodecChoice::Ans).unwrap();
+        let zeros = [0u8; ANS_TABLE_BYTES];
+        let table_bytes = a.ans.as_ref().unwrap().to_bytes();
+
+        // Unknown layer codec id: rejected at parse, before any
+        // payload allocation or decode.
+        let buf = write_v3_raw(&h, &zeros, |_| 7, |_, _| 0);
+        let err = ElmModel::read_from(buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("unknown codec id"), "{err}");
+
+        // A tile disagreeing with its layer's codec is a forgery.
+        let buf = write_v3_raw(&a, &table_bytes, |_| 1, |i, t| u8::from(!(i == 0 && t == 0)));
+        let err = ElmModel::read_from(buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("claims codec"), "{err}");
+
+        // A tANS layer in a container with no tANS table cannot decode
+        // — rejected up front.
+        let buf = write_v3_raw(&a, &zeros, |_| 1, |_, _| 1);
+        let err = ElmModel::read_from(buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("no tANS table"), "{err}");
+
+        // A garbage (non-zero, wrong-sum) table section is itself
+        // rejected, whatever the layers claim.
+        let mut bad = zeros;
+        bad[0] = 1;
+        let buf = write_v3_raw(&h, &bad, |_| 0, |_, _| 0);
+        assert!(ElmModel::read_from(buf.as_slice()).is_err());
+
+        // Same rejections through the lazy reader.
+        let dir = std::env::temp_dir().join(format!("elm_advc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("forged.elm");
+        std::fs::write(&path, write_v3_raw(&h, &zeros, |_| 7, |_, _| 0)).unwrap();
+        assert!(SegmentSource::open(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn differential_fuzz_cross_codec_containers_bitexact() {
+        // Differential sweep: the same random weight set compressed
+        // through both codec arms (and reloaded from serialized bytes)
+        // must decode to bit-identical EQW symbol streams.
+        let cases: usize = std::env::var("ENTROLLM_FUZZ_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(40);
+        let mut rng = Rng::new(0xA45_C0DE);
+        for case in 0..cases {
+            let n_layers = 1 + rng.below(3);
+            let layers: Vec<(String, TensorF32)> = (0..n_layers)
+                .map(|i| {
+                    let n = 1 + rng.below(800);
+                    (
+                        format!("f{case}.{i}"),
+                        TensorF32::new(vec![n], rng.gaussian_vec(n, 0.0, 0.05)).unwrap(),
+                    )
+                })
+                .collect();
+            let bits = if rng.below(2) == 0 { BitWidth::U4 } else { BitWidth::U8 };
+            let tile = match rng.below(3) {
+                0 => Some(1 + rng.below(300)),
+                1 => Some(usize::MAX),
+                _ => None,
+            };
+            let (hm, _) = compress_with_options(&layers, bits, tile, CodecChoice::Huffman).unwrap();
+            let (am, _) = compress_with_options(&layers, bits, tile, CodecChoice::Ans).unwrap();
+            let mut hbuf = Vec::new();
+            hm.write_to(&mut hbuf).unwrap();
+            let mut abuf = Vec::new();
+            am.write_to(&mut abuf).unwrap();
+            let hl = ElmModel::read_from(hbuf.as_slice()).unwrap();
+            let al = ElmModel::read_from(abuf.as_slice()).unwrap();
+            for i in 0..n_layers {
+                let h = decode_layer(&hl, i).unwrap();
+                let a = decode_layer(&al, i).unwrap();
+                assert_eq!(
+                    h.symbols.data(),
+                    a.symbols.data(),
+                    "case {case} layer {i}: codec arms disagree"
+                );
+                assert_eq!(h.params, a.params);
+            }
+        }
     }
 
     #[test]

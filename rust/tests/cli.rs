@@ -151,6 +151,78 @@ fn synthetic_compress_inspect_decompress_roundtrip() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The `--codec` flag end-to-end: the same synthetic model compressed
+/// with every codec choice must decompress — on both the parallel and
+/// the streaming path — to byte-identical EQW dumps, `inspect` must
+/// name the codec, and a bogus `--codec` value must fail at parse.
+#[test]
+fn codec_flag_cross_codec_decompress_is_bitexact() {
+    let dir = std::env::temp_dir().join(format!("cli_codec_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Tiled (multi-tile layers) so the v3 per-tile codec bytes and the
+    // parallel tile scheduler are both on the tested path.
+    let mut dumps: Vec<Vec<u8>> = Vec::new();
+    for codec in ["huffman", "ans", "auto"] {
+        let elm = dir.join(format!("{codec}.elm"));
+        let elm_s = elm.to_str().unwrap();
+        let (ok, text) = run(&[
+            "compress", "--synthetic", "9", "--seed", "21", "--bits", "u4", "--tile-kb",
+            "0.5", "--codec", codec, "--out", elm_s,
+        ]);
+        assert!(ok, "compress --codec {codec}: {text}");
+        assert!(text.contains("encoded payload"), "{text}");
+
+        let (ok, text) = run(&["inspect", "--model", elm_s]);
+        assert!(ok, "{text}");
+        assert!(text.contains("codecs"), "{text}");
+        if codec == "ans" {
+            assert!(text.contains("tans"), "inspect must name tans: {text}");
+        }
+
+        let eager = dir.join(format!("{codec}_eager.eqw"));
+        let (ok, text) = run(&[
+            "decompress", "--model", elm_s, "--out", eager.to_str().unwrap(), "--threads", "4",
+        ]);
+        assert!(ok, "{text}");
+        assert!(text.contains("CRC-clean"), "{text}");
+        let streamed = dir.join(format!("{codec}_stream.eqw"));
+        let (ok, text) = run(&[
+            "decompress",
+            "--model",
+            elm_s,
+            "--out",
+            streamed.to_str().unwrap(),
+            "--threads",
+            "2",
+            "--prefetch-layers",
+            "3",
+            "--stream",
+        ]);
+        assert!(ok, "{text}");
+        assert!(text.contains("streaming decode"), "{text}");
+
+        let a = std::fs::read(&eager).unwrap();
+        let b = std::fs::read(&streamed).unwrap();
+        assert_eq!(a, b, "--codec {codec}: parallel vs streaming dumps differ");
+        dumps.push(a);
+    }
+    assert_eq!(
+        dumps[0], dumps[1],
+        "huffman and tans containers must decode to identical weights"
+    );
+    assert_eq!(dumps[0], dumps[2], "auto must decode to identical weights");
+
+    let (ok, text) = run(&[
+        "compress", "--synthetic", "2", "--codec", "brotli", "--out",
+        dir.join("x.elm").to_str().unwrap(),
+    ]);
+    assert!(!ok, "bogus codec must fail: {text}");
+    assert!(text.contains("--codec"), "{text}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Artifact-free residency serving: a synthetic model generates through
 /// the LRU weight cache under a sub-model byte budget, and the CLI
 /// reports the cache counters.
@@ -254,6 +326,7 @@ fn decompress_zero_layer_container_writes_valid_empty_eqw() {
     ElmModel {
         bits: BitWidth::U8,
         code: CodeSpec::from_lengths(&one).unwrap(),
+        ans: None,
         layers: Vec::new(),
         payload: Vec::new(),
     }
