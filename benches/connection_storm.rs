@@ -1,0 +1,305 @@
+//! Connection storm against the sharded front door: **thousands of
+//! concurrent line-protocol clients against a fixed number of I/O
+//! threads**.
+//!
+//! Three phases:
+//!
+//! 1. **Thread ceiling** — open ~1100 concurrent idle connections
+//!    (quick: 128) from the main thread and assert the server's thread
+//!    count stays O(io-shards), not O(connections). The old
+//!    thread-per-connection front door spawned reader+writer threads
+//!    per socket (2200+ threads here); the event loops hold the whole
+//!    storm on `io_shards + 1`.
+//! 2. **Latency + fairness** — 1000 concurrent clients (quick: 64)
+//!    driven by a small worker pool, several round trips each; reports
+//!    p50/p99/max round-trip latency and a fairness ratio (p90/p10 of
+//!    per-connection mean latency).
+//! 3. **Never-reading client** — a client floods requests and never
+//!    reads a byte back against a server with a small per-connection
+//!    output cap; the server must shed it (`shed_output_overflow`)
+//!    with bounded memory while a healthy neighbor keeps serving.
+
+use entrollm::bench::quick_or;
+use entrollm::coordinator::{Engine, EngineConfig, MockBackend};
+use entrollm::metrics::Table;
+use entrollm::server::{process_thread_count, serve_with, Client, ServeConfig};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Raise the fd soft limit toward `want` (unix): the storm holds both
+/// ends of every connection in this one process, so the default soft
+/// limit of 1024 fds would cap the storm at ~500 clients.
+#[cfg(unix)]
+fn raise_fd_limit(want: u64) {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    #[cfg(any(target_os = "linux", target_os = "android"))]
+    const RLIMIT_NOFILE: i32 = 7;
+    #[cfg(not(any(target_os = "linux", target_os = "android")))]
+    const RLIMIT_NOFILE: i32 = 8;
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    unsafe {
+        let mut lim = RLimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut lim) != 0 || lim.cur >= want {
+            return;
+        }
+        let new = RLimit {
+            cur: want.min(lim.max),
+            max: lim.max,
+        };
+        let _ = setrlimit(RLIMIT_NOFILE, &new);
+    }
+}
+
+#[cfg(not(unix))]
+fn raise_fd_limit(_want: u64) {}
+
+fn spawn_server(
+    cfg: ServeConfig,
+    batch: usize,
+) -> (String, Arc<AtomicBool>, std::thread::JoinHandle<u64>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handle = std::thread::spawn(move || {
+        let mut engine = Engine::new(MockBackend::new(batch, 32, 128), EngineConfig::default());
+        serve_with(&mut engine, listener, stop2, &cfg).unwrap()
+    });
+    (addr, stop, handle)
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn main() {
+    let io_shards = 4usize;
+    let held_conns = quick_or(128usize, 1100);
+    let storm_conns = quick_or(64usize, 1000);
+    let workers = quick_or(8usize, 32);
+    let roundtrips = quick_or(2usize, 3);
+    raise_fd_limit(4 * (held_conns.max(storm_conns) as u64) + 256);
+
+    let mut table = Table::new(
+        "Connection storm: sharded event-loop front door",
+        &["metric", "value"],
+    );
+
+    // ---- Phase 1: thread ceiling under held-open connections -------
+    let (addr, stop, server) = spawn_server(
+        ServeConfig {
+            io_shards,
+            ..ServeConfig::default()
+        },
+        8,
+    );
+    let mut admin = Client::connect(&addr).unwrap();
+    admin.request("warm", 1, 0.0).unwrap();
+    let t_before = process_thread_count();
+
+    let mut held = Vec::with_capacity(held_conns);
+    for i in 0..held_conns {
+        held.push(TcpStream::connect(&addr).unwrap());
+        // Pace the burst below the listen backlog so no connect stalls
+        // on a kernel SYN retransmit while the acceptor catches up.
+        if i % 64 == 63 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    let t_during = process_thread_count();
+
+    // Liveness: a sample of fresh clients does full round trips while
+    // the storm of idle connections is held open.
+    for i in 0..8 {
+        let mut c = Client::connect(&addr).unwrap();
+        let r = c.request(&format!("live {i}"), 1, 0.0).unwrap();
+        assert_eq!(r.get("tokens").unwrap().as_usize().unwrap(), 1);
+    }
+    let stats = admin.stats().unwrap();
+    let io_threads = stats.get("io_threads").unwrap().as_usize().unwrap();
+    assert_eq!(
+        io_threads,
+        io_shards + 1,
+        "front door must run exactly shards + acceptor threads"
+    );
+    let accepted = stats.get("conns_accepted").unwrap().as_usize().unwrap();
+    assert!(accepted >= held_conns, "accepted {accepted} < {held_conns}");
+    let thread_delta = match (t_before, t_during) {
+        (Some(b), Some(d)) => {
+            let delta = d.saturating_sub(b);
+            // The whole storm must not grow the process by more than a
+            // handful of threads (the old design grew by 2 per conn).
+            assert!(
+                delta <= io_shards + 3,
+                "thread count grew O(connections): before {b}, during {d}"
+            );
+            format!("{delta}")
+        }
+        _ => "n/a".into(),
+    };
+    drop(held);
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+    table.row(&["held connections (phase 1)".into(), held_conns.to_string()]);
+    table.row(&["io_threads (stats)".into(), io_threads.to_string()]);
+    table.row(&["thread delta under storm".into(), thread_delta]);
+
+    // ---- Phase 2: latency + fairness under concurrent round trips --
+    let (addr, stop, server) = spawn_server(
+        ServeConfig {
+            io_shards,
+            ..ServeConfig::default()
+        },
+        8,
+    );
+    let mut clients = Vec::with_capacity(storm_conns);
+    for i in 0..storm_conns {
+        clients.push(Client::connect(&addr).unwrap());
+        if i % 64 == 63 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    // Distribute the connected clients across a small worker pool;
+    // each worker owns its share and round-robins it, so every
+    // connection stays concurrently open and repeatedly active.
+    let mut buckets: Vec<Vec<(usize, Client)>> = (0..workers).map(|_| Vec::new()).collect();
+    for (ci, c) in clients.into_iter().enumerate() {
+        buckets[ci % workers].push((ci, c));
+    }
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for mut mine in buckets {
+        joins.push(std::thread::spawn(move || {
+            let mut lat: Vec<(usize, f64)> = Vec::new();
+            for _ in 0..roundtrips {
+                for (ci, c) in mine.iter_mut() {
+                    let t = Instant::now();
+                    let r = c.request("storm", 1, 0.0).unwrap();
+                    assert_eq!(r.get("tokens").unwrap().as_usize().unwrap(), 1);
+                    lat.push((*ci, t.elapsed().as_secs_f64() * 1e3));
+                }
+            }
+            lat
+        }));
+    }
+    let mut all: Vec<(usize, f64)> = Vec::new();
+    for j in joins {
+        all.extend(j.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total_reqs = all.len();
+    assert_eq!(total_reqs, storm_conns * roundtrips);
+
+    let mut lats: Vec<f64> = all.iter().map(|(_, ms)| *ms).collect();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (p50, p99, pmax) = (
+        percentile(&lats, 0.50),
+        percentile(&lats, 0.99),
+        percentile(&lats, 1.0),
+    );
+    // Fairness: p90/p10 ratio of per-connection mean latency. 1.0 is
+    // perfectly fair; the assert is a loose sanity bound against one
+    // connection being starved by orders of magnitude.
+    let mut per_conn = vec![(0.0f64, 0usize); storm_conns];
+    for (ci, ms) in &all {
+        per_conn[*ci].0 += ms;
+        per_conn[*ci].1 += 1;
+    }
+    let mut means: Vec<f64> = per_conn.iter().map(|(s, n)| s / (*n as f64)).collect();
+    means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let fairness = percentile(&means, 0.90) / percentile(&means, 0.10).max(1e-9);
+    assert!(
+        fairness < 100.0,
+        "per-connection latency wildly unfair: p90/p10 = {fairness:.1}"
+    );
+
+    let mut admin = Client::connect(&addr).unwrap();
+    let stats = admin.stats().unwrap();
+    assert_eq!(
+        stats.get("io_threads").unwrap().as_usize().unwrap(),
+        io_shards + 1
+    );
+    assert_eq!(
+        stats.get("completed").unwrap().as_usize().unwrap(),
+        total_reqs
+    );
+    stop.store(true, Ordering::Relaxed);
+    let served = server.join().unwrap();
+    assert_eq!(served as usize, total_reqs);
+    table.row(&["concurrent clients (phase 2)".into(), storm_conns.to_string()]);
+    table.row(&["round trips".into(), total_reqs.to_string()]);
+    table.row(&["req/s".into(), format!("{:.0}", total_reqs as f64 / wall.max(1e-9))]);
+    table.row(&["p50 ms".into(), format!("{p50:.2}")]);
+    table.row(&["p99 ms".into(), format!("{p99:.2}")]);
+    table.row(&["max ms".into(), format!("{pmax:.2}")]);
+    table.row(&["fairness p90/p10".into(), format!("{fairness:.2}")]);
+
+    // ---- Phase 3: never-reading client vs small output cap ---------
+    let (addr, stop, server) = spawn_server(
+        ServeConfig {
+            io_shards: 2,
+            max_conn_buffered_bytes: 8 * 1024,
+            ..ServeConfig::default()
+        },
+        8,
+    );
+    let addr2 = addr.clone();
+    let flood = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(&addr2).unwrap();
+        let line = b"{\"stats\":true}\n";
+        // Tens of thousands of stats lines, never reading a byte back:
+        // replies overrun the kernel socket buffers, then the 8 KiB
+        // queue cap, and the server sheds the connection.
+        'outer: for _ in 0..200 {
+            for _ in 0..200 {
+                if s.write_all(line).is_err() {
+                    break 'outer;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    });
+    let mut healthy = Client::connect(&addr).unwrap();
+    let t0 = Instant::now();
+    let mut shed = 0usize;
+    while t0.elapsed() < Duration::from_secs(quick_or(5, 20)) {
+        let stats = healthy.stats().unwrap();
+        shed = stats
+            .get("shed_output_overflow")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        if shed >= 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    flood.join().unwrap();
+    assert!(
+        shed >= 1,
+        "never-reading client was not shed at its output cap"
+    );
+    let ok = healthy.request("after", 1, 0.0).unwrap();
+    assert_eq!(ok.get("tokens").unwrap().as_usize().unwrap(), 1);
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+    table.row(&["shed_output_overflow (phase 3)".into(), shed.to_string()]);
+
+    table.emit("connection_storm");
+    println!("\nconnection_storm bench OK");
+}

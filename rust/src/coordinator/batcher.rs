@@ -66,6 +66,14 @@ impl AdmissionQueue {
         r
     }
 
+    /// Remove a queued request by id (dead-waiter cancellation). The
+    /// admitted/dispatched counters are left untouched — the request
+    /// was admitted but never dispatched.
+    pub fn remove(&mut self, id: u64) -> Option<Request> {
+        let pos = self.q.iter().position(|r| r.id == id)?;
+        self.q.remove(pos)
+    }
+
     /// Number waiting.
     pub fn len(&self) -> usize {
         self.q.len()
@@ -122,6 +130,23 @@ mod tests {
         let mut q = AdmissionQueue::new(2);
         q.push(req(0)).unwrap();
         assert!(q.pop().unwrap().enqueued_at.is_some());
+    }
+
+    #[test]
+    fn remove_takes_out_the_matching_id_only() {
+        let mut q = AdmissionQueue::new(8);
+        for id in 0..4 {
+            q.push(req(id)).unwrap();
+        }
+        assert_eq!(q.remove(2).unwrap().id, 2);
+        assert!(q.remove(2).is_none(), "already removed");
+        assert!(q.remove(99).is_none(), "never enqueued");
+        // FIFO order of the survivors is untouched, and the counters
+        // treat the removal as neither a dispatch nor a rejection.
+        let rest: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(rest, vec![0, 1, 3]);
+        assert_eq!(q.stats().admitted, 4);
+        assert_eq!(q.stats().rejected, 0);
     }
 
     #[test]

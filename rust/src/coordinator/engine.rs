@@ -50,6 +50,9 @@ pub struct EngineStats {
     pub decode_steps: u64,
     /// Sum over decode steps of active-slot count (occupancy).
     pub occupancy_sum: u64,
+    /// Requests cancelled before completion (dead waiters, shutdown
+    /// drain).
+    pub cancelled: u64,
     /// Prefill latency distribution.
     pub prefill_lat: LatencyHistogram,
     /// Per-step decode latency distribution.
@@ -105,6 +108,25 @@ impl<B: Backend> Engine<B> {
     /// Submit a request (errors on backpressure).
     pub fn submit(&mut self, req: Request) -> Result<()> {
         self.queue.push(req)
+    }
+
+    /// Cancel a request by id: drop it from the admission queue or
+    /// free its batch slot (the generation's partial output is
+    /// discarded — there is nobody left to read it). Returns whether
+    /// anything was cancelled.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if self.queue.remove(id).is_some() {
+            self.stats.cancelled += 1;
+            return true;
+        }
+        for slot in self.slots.iter_mut() {
+            if slot.as_ref().is_some_and(|a| a.req.id == id) {
+                *slot = None;
+                self.stats.cancelled += 1;
+                return true;
+            }
+        }
+        false
     }
 
     /// Pending + active work?
@@ -388,6 +410,44 @@ mod tests {
         e.submit(Request::greedy(1, vec![1], 2)).unwrap();
         e.submit(Request::greedy(2, vec![1], 2)).unwrap();
         assert!(e.submit(Request::greedy(3, vec![1], 2)).is_err());
+    }
+
+    #[test]
+    fn cancel_removes_a_queued_request() {
+        let mut e = engine(1);
+        e.submit(Request::greedy(1, vec![1], 4)).unwrap();
+        e.submit(Request::greedy(2, vec![2], 4)).unwrap();
+        assert!(e.cancel(2), "queued request must be cancellable");
+        assert_eq!(e.stats().cancelled, 1);
+        let rs = e.run_to_completion(100).unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].id, 1, "only the surviving request completes");
+    }
+
+    #[test]
+    fn cancel_frees_an_active_slot_for_the_next_admission() {
+        let mut e = engine(1);
+        e.submit(Request::greedy(1, vec![1], 100)).unwrap();
+        e.step().unwrap(); // admit into the only slot, start generating
+        assert_eq!(e.active(), 1);
+        assert!(e.cancel(1), "active request must be cancellable");
+        assert_eq!(e.active(), 0, "cancel must free the batch slot");
+        assert_eq!(e.stats().cancelled, 1);
+        // The freed slot admits and completes the next request.
+        e.submit(Request::greedy(2, vec![2], 3)).unwrap();
+        let rs = e.run_to_completion(100).unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].id, 2);
+        assert_eq!(rs[0].tokens.len(), 3);
+    }
+
+    #[test]
+    fn cancel_unknown_id_is_a_no_op() {
+        let mut e = engine(1);
+        e.submit(Request::greedy(1, vec![1], 2)).unwrap();
+        assert!(!e.cancel(99));
+        assert_eq!(e.stats().cancelled, 0);
+        assert_eq!(e.run_to_completion(100).unwrap().len(), 1);
     }
 
     #[test]

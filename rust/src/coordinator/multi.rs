@@ -284,6 +284,12 @@ impl MultiModelServer {
         &mut self.entries[index].engine
     }
 
+    /// Cancel request `id` on model `index`'s engine (dead-waiter
+    /// sweep, shutdown drain). Returns whether anything was cancelled.
+    pub fn cancel(&mut self, index: usize, id: u64) -> bool {
+        self.entries[index].engine.cancel(id)
+    }
+
     /// The shared byte ledger.
     pub fn ledger(&self) -> &Arc<ResidencyLedger> {
         &self.ledger

@@ -131,7 +131,12 @@ commands:
                 models from one port behind one shared budget + decode
                 pool, routed by the request's "model" field —
                 reserve-mb guarantees a model residency peers can never
-                reclaim, weight sets shed aggressiveness
+                reclaim, weight sets shed aggressiveness; front-door
+                tuning: --io-shards N event-loop threads (thread count
+                is O(shards), not O(connections)), --max-conn-buffered-kb
+                K caps each connection's reply queue (non-reading
+                clients are shed at the cap), --drain-timeout-ms T
+                bounds the graceful drain at shutdown
   latency       Table II-style latency model for an edge profile,
                 including streaming (layer-ahead) first-token estimates
                 and residency fault-in costs (serial and decode-ahead
@@ -603,12 +608,47 @@ fn cmd_generate(args: &Args) -> Result<()> {
     generate_with(backend, &prompt, max_tokens, temperature)
 }
 
-fn serve_with<B: entrollm::coordinator::Backend>(backend: B, port: u16, tag: &str) -> Result<()> {
+/// Front-door tuning shared by single- and multi-model serving:
+/// `--io-shards N` (event-loop shard threads), `--max-conn-buffered-kb K`
+/// (per-connection reply-queue byte cap; a client that stops reading is
+/// shed at this bound), `--drain-timeout-ms T` (graceful-drain budget at
+/// shutdown).
+fn serve_config(args: &Args) -> Result<entrollm::server::ServeConfig> {
+    let defaults = entrollm::server::ServeConfig::default();
+    let io_shards: usize = args.opt_parse("io-shards", defaults.io_shards)?;
+    let buffered_kb: f64 = args.opt_parse(
+        "max-conn-buffered-kb",
+        defaults.max_conn_buffered_bytes as f64 / 1024.0,
+    )?;
+    if !buffered_kb.is_finite() || buffered_kb <= 0.0 {
+        return Err(Error::InvalidArg(format!(
+            "--max-conn-buffered-kb must be a positive finite number, got {buffered_kb}"
+        )));
+    }
+    let drain_ms: u64 =
+        args.opt_parse("drain-timeout-ms", defaults.drain_timeout.as_millis() as u64)?;
+    Ok(entrollm::server::ServeConfig {
+        io_shards,
+        max_conn_buffered_bytes: ((buffered_kb * 1024.0) as usize).max(1),
+        drain_timeout: std::time::Duration::from_millis(drain_ms),
+        ..defaults
+    })
+}
+
+fn serve_with<B: entrollm::coordinator::Backend>(
+    backend: B,
+    port: u16,
+    tag: &str,
+    cfg: &entrollm::server::ServeConfig,
+) -> Result<()> {
     let mut engine = Engine::new(backend, EngineConfig::default());
     let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
-    println!("serving {tag} on 127.0.0.1:{port} (ctrl-c to stop)");
+    println!(
+        "serving {tag} on 127.0.0.1:{port} ({} I/O shards; ctrl-c to stop)",
+        cfg.io_shards
+    );
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-    let served = entrollm::server::serve(&mut engine, listener, stop)?;
+    let served = entrollm::server::serve_with(&mut engine, listener, stop, cfg)?;
     println!("served {served} requests");
     Ok(())
 }
@@ -758,14 +798,16 @@ fn serve_multi_models(
             multi.engine(i).backend().weights().n_layers(),
         );
     }
+    let cfg = serve_config(args)?;
     let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
     println!(
-        "serving {} models on 127.0.0.1:{port} (route with the request's \
-         \"model\" field; ctrl-c to stop)",
-        multi.n_models()
+        "serving {} models on 127.0.0.1:{port} ({} I/O shards; route with the \
+         request's \"model\" field; ctrl-c to stop)",
+        multi.n_models(),
+        cfg.io_shards,
     );
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-    let served = entrollm::server::serve_multi(&mut multi, listener, stop)?;
+    let served = entrollm::server::serve_multi_with(&mut multi, listener, stop, &cfg)?;
     println!("served {served} requests");
     Ok(())
 }
@@ -775,11 +817,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(specs) = multi_model_specs(args)? {
         return serve_multi_models(args, specs, port);
     }
+    let cfg = serve_config(args)?;
     if wants_residency(args) {
         return match resident_serving(args)? {
-            ResidentServing::Plain(b) => serve_with(b, port, "resident (digest backend)"),
+            ResidentServing::Plain(b) => serve_with(b, port, "resident (digest backend)", &cfg),
             ResidentServing::Prefetching(b) => {
-                serve_with(b, port, "resident (decode-ahead digest backend)")
+                serve_with(b, port, "resident (decode-ahead digest backend)", &cfg)
             }
         };
     }
@@ -787,7 +830,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let flavor = Flavor::parse(args.opt("flavor", "u8"))?;
     let threads: usize = args.opt_parse("threads", 4)?;
     let backend = load_serving_backend(args, artifacts, flavor, threads)?;
-    serve_with(backend, port, flavor.tag())
+    serve_with(backend, port, flavor.tag(), &cfg)
 }
 
 fn cmd_latency(args: &Args) -> Result<()> {

@@ -1,0 +1,772 @@
+//! The sharded event-loop front door: a small *fixed* number of I/O
+//! threads owning every connection, replacing the old
+//! thread-per-connection + thread-per-writer design.
+//!
+//! Thread budget is `io_shards + 1` (the shard loops plus one
+//! acceptor) regardless of how many clients connect — O(shards), not
+//! O(connections). Each shard owns a slab of nonblocking connections
+//! and multiplexes them through [`super::poll`]: read bytes, split
+//! complete protocol lines, hand them to the engine loop through the
+//! bounded `Incoming` channel, and flush reply bytes back out.
+//!
+//! Backpressure is explicit at every seam:
+//!
+//! * **Per-connection output queues are byte-capped** ([`ConnOutput`]).
+//!   A client that stops reading gets a `shed_output_overflow` count
+//!   and its connection closed, instead of ballooning server memory.
+//! * **The `Incoming` channel is bounded.** When the engine loop falls
+//!   behind, the shard answers with a distinguishable load-shed error
+//!   line (`{"error":…,"shed":true}`) rather than queueing without
+//!   limit (`shed_incoming_full`).
+//! * **Shutdown drains instead of dropping**: the acceptor stops, new
+//!   lines are refused with `{"error":"shutting down"}`, in-flight
+//!   generations finish (or are answered at the drain deadline), and
+//!   pending reply bytes are flushed before the shards exit.
+
+use super::poll;
+use super::{classify_line, error_line, shed_line, Incoming, MAX_LINE_BYTES};
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Front-door tuning knobs, surfaced on the CLI as `--io-shards`,
+/// `--max-conn-buffered-kb`, and `--drain-timeout-ms`.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Number of I/O shard threads (clamped to 1..=64). Total I/O
+    /// thread count is `io_shards + 1` (one acceptor).
+    pub io_shards: usize,
+    /// Byte cap on one connection's queued reply lines. A connection
+    /// whose queue would exceed it is shed and closed.
+    pub max_conn_buffered_bytes: usize,
+    /// How long graceful shutdown may spend finishing in-flight
+    /// generations and flushing replies before forcing the exit.
+    pub drain_timeout: Duration,
+    /// Capacity of the bounded shard→engine `Incoming` channel.
+    pub incoming_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            io_shards: 2,
+            max_conn_buffered_bytes: 256 * 1024,
+            drain_timeout: Duration::from_secs(5),
+            incoming_capacity: 1024,
+        }
+    }
+}
+
+/// Result of pushing one reply line toward a connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SendOutcome {
+    /// Queued for delivery.
+    Sent,
+    /// The connection's output cap would be exceeded; the line was
+    /// dropped and the connection is being closed.
+    Shed,
+    /// The connection is already closed (client gone).
+    Closed,
+}
+
+/// Monotonic front-door counters (plus the `open` gauge), surfaced in
+/// the `{"stats":true}` admin line so overload behavior is observable
+/// without a side channel.
+#[derive(Debug, Default)]
+pub struct FrontDoorCounters {
+    /// Connections accepted since startup.
+    pub accepted: AtomicU64,
+    /// Currently open connections (gauge).
+    pub open: AtomicU64,
+    /// Connections closed (any reason).
+    pub closed: AtomicU64,
+    /// Submissions refused because the `AdmissionQueue` was full.
+    pub shed_queue_full: AtomicU64,
+    /// Lines refused because the shard→engine channel was full.
+    pub shed_incoming_full: AtomicU64,
+    /// Connections shed because their reply queue hit its byte cap.
+    pub shed_output_overflow: AtomicU64,
+    /// Lines refused because the server was draining for shutdown.
+    pub shed_shutdown: AtomicU64,
+    /// In-flight requests cancelled because their client disconnected.
+    pub dead_waiters_cancelled: AtomicU64,
+    /// Fixed I/O thread count (`io_shards + 1`), so a bench/test can
+    /// assert O(shards) threading straight off the admin line.
+    pub io_threads: AtomicU64,
+}
+
+/// Wakes a shard blocked in [`poll::wait`]. A loopback socketpair
+/// stands in for a pipe so the mechanism is portable; the write side is
+/// nonblocking and a full kernel buffer just means a wake is already
+/// pending.
+#[derive(Clone)]
+pub(crate) struct Wake(Arc<TcpStream>);
+
+impl Wake {
+    pub(crate) fn wake(&self) {
+        // An error (e.g. WouldBlock on a full buffer) means a wake is
+        // already pending, which is all this byte signals anyway.
+        let _ = (&*self.0).write_all(&[1]);
+    }
+}
+
+/// Build the (wake-sender, wake-receiver) loopback pair for one shard.
+fn wake_pair() -> std::io::Result<(Wake, TcpStream)> {
+    let l = TcpListener::bind("127.0.0.1:0")?;
+    let addr = l.local_addr()?;
+    let tx = TcpStream::connect(addr)?;
+    let (rx, _) = l.accept()?;
+    tx.set_nonblocking(true)?;
+    let _ = tx.set_nodelay(true);
+    // On unix the receive side is polled nonblocking; the portable
+    // fallback instead reads it with a timeout, so it stays blocking.
+    #[cfg(unix)]
+    rx.set_nonblocking(true)?;
+    Ok((Wake(Arc::new(tx)), rx))
+}
+
+struct OutInner {
+    queue: VecDeque<String>,
+    queued_bytes: usize,
+    closed: bool,
+    overflowed: bool,
+}
+
+/// One connection's bounded reply queue, shared between the engine
+/// loop (producer, via [`ReplyHandle`]) and the owning shard
+/// (consumer). The byte cap counts each line plus its newline.
+pub(crate) struct ConnOutput {
+    cap: usize,
+    wake: Option<Wake>,
+    counters: Option<Arc<FrontDoorCounters>>,
+    inner: Mutex<OutInner>,
+}
+
+impl ConnOutput {
+    fn new(cap: usize, wake: Option<Wake>, counters: Option<Arc<FrontDoorCounters>>) -> Self {
+        ConnOutput {
+            cap: cap.max(1),
+            wake,
+            counters,
+            inner: Mutex::new(OutInner {
+                queue: VecDeque::new(),
+                queued_bytes: 0,
+                closed: false,
+                overflowed: false,
+            }),
+        }
+    }
+
+    /// Poison-tolerant lock: a panicking producer must not take every
+    /// later reply down with it (same recovery idiom as `store`).
+    fn lock(&self) -> MutexGuard<'_, OutInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn push(&self, line: String) -> SendOutcome {
+        let mut g = self.lock();
+        if g.closed || g.overflowed {
+            return SendOutcome::Closed;
+        }
+        let add = line.len() + 1;
+        if g.queued_bytes + add > self.cap {
+            // Cap breached: mark the connection shed. The shard closes
+            // it on its next tick — the client was not reading anyway,
+            // so pending lines are forfeit by construction.
+            g.overflowed = true;
+            drop(g);
+            if let Some(c) = &self.counters {
+                c.shed_output_overflow.fetch_add(1, Ordering::Relaxed);
+            }
+            if let Some(w) = &self.wake {
+                w.wake();
+            }
+            return SendOutcome::Shed;
+        }
+        g.queued_bytes += add;
+        g.queue.push_back(line);
+        drop(g);
+        if let Some(w) = &self.wake {
+            w.wake();
+        }
+        SendOutcome::Sent
+    }
+
+    /// Move queued lines (newline-terminated) into `buf`, up to `max`
+    /// buffered bytes.
+    fn drain_into(&self, buf: &mut Vec<u8>, max: usize) {
+        let mut g = self.lock();
+        while buf.len() < max {
+            let Some(line) = g.queue.pop_front() else { break };
+            g.queued_bytes -= line.len() + 1;
+            buf.extend_from_slice(line.as_bytes());
+            buf.push(b'\n');
+        }
+    }
+
+    fn has_pending(&self) -> bool {
+        !self.lock().queue.is_empty()
+    }
+
+    fn close(&self) {
+        self.lock().closed = true;
+    }
+
+    fn overflowed(&self) -> bool {
+        self.lock().overflowed
+    }
+
+    fn is_dead(&self) -> bool {
+        let g = self.lock();
+        g.closed || g.overflowed
+    }
+}
+
+/// The engine loop's handle to one connection's reply queue — the
+/// replacement for the old unbounded `mpsc::Sender<String>` per
+/// waiter. Cloneable; every clone writes into the same capped queue.
+#[derive(Clone)]
+pub struct ReplyHandle(Arc<ConnOutput>);
+
+impl ReplyHandle {
+    pub(crate) fn from_output(out: Arc<ConnOutput>) -> Self {
+        ReplyHandle(out)
+    }
+
+    /// A handle with no socket behind it, for unit tests: lines queue
+    /// up to `cap` bytes and can be inspected with
+    /// [`ReplyHandle::drain_lines`].
+    pub fn detached(cap: usize) -> Self {
+        ReplyHandle(Arc::new(ConnOutput::new(cap, None, None)))
+    }
+
+    /// Queue one reply line (without trailing newline).
+    pub fn send(&self, line: String) -> SendOutcome {
+        self.0.push(line)
+    }
+
+    /// True once the connection is gone (closed or shed) — the signal
+    /// the engine loop's dead-waiter sweep keys off.
+    pub fn is_closed(&self) -> bool {
+        self.0.is_dead()
+    }
+
+    /// Pop every queued line (tests; a live shard drains bytes
+    /// instead).
+    pub fn drain_lines(&self) -> Vec<String> {
+        let mut g = self.0.lock();
+        let lines: Vec<String> = g.queue.drain(..).collect();
+        g.queued_bytes = 0;
+        lines
+    }
+}
+
+const PHASE_RUNNING: u8 = 0;
+const PHASE_DRAINING: u8 = 1;
+const PHASE_HALT: u8 = 2;
+
+/// State shared between the acceptor and one shard.
+struct ShardShared {
+    /// Connections accepted but not yet adopted by the shard loop.
+    new_conns: Mutex<Vec<TcpStream>>,
+    wake: Wake,
+    /// Set at shutdown: how long the shard may keep flushing pending
+    /// reply bytes before closing everything.
+    flush_deadline: Mutex<Option<Instant>>,
+}
+
+impl ShardShared {
+    fn add(&self, stream: TcpStream) {
+        self.new_conns
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(stream);
+        self.wake.wake();
+    }
+
+    fn take_new(&self) -> Vec<TcpStream> {
+        std::mem::take(&mut *self.new_conns.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    fn flush_deadline(&self) -> Option<Instant> {
+        *self.flush_deadline.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn set_flush_deadline(&self, d: Instant) {
+        *self.flush_deadline.lock().unwrap_or_else(|e| e.into_inner()) = Some(d);
+    }
+}
+
+/// One connection in a shard's slab.
+struct Conn {
+    stream: TcpStream,
+    /// Partial-line read buffer (bounded by [`MAX_LINE_BYTES`]).
+    rbuf: Vec<u8>,
+    out: Arc<ConnOutput>,
+    /// Bytes drained from `out` but not yet written to the socket.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Reading has stopped (EOF, protocol violation, or drain); the
+    /// connection closes once its pending output flushes.
+    closing: bool,
+}
+
+impl Conn {
+    fn wants_write(&self) -> bool {
+        self.wpos < self.wbuf.len() || self.out.has_pending()
+    }
+}
+
+/// Per-tick read budget per connection: one greedy client cannot
+/// monopolize its shard's loop.
+const READ_BUDGET: usize = 64 * 1024;
+/// Per-refill cap on a connection's write staging buffer.
+const WRITE_CHUNK: usize = 64 * 1024;
+/// Idle poll tick (shutdown/adoption latency bound on unix; the
+/// non-unix fallback clamps it lower internally).
+const POLL_TICK: Duration = Duration::from_millis(25);
+
+enum ReadOutcome {
+    Open,
+    Eof,
+    Err,
+}
+
+fn read_some(conn: &mut Conn) -> ReadOutcome {
+    let mut buf = [0u8; 8192];
+    let mut taken = 0usize;
+    loop {
+        match (&conn.stream).read(&mut buf) {
+            Ok(0) => return ReadOutcome::Eof,
+            Ok(n) => {
+                conn.rbuf.extend_from_slice(&buf[..n]);
+                taken += n;
+                if taken >= READ_BUDGET || conn.rbuf.len() > MAX_LINE_BYTES {
+                    return ReadOutcome::Open;
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => return ReadOutcome::Open,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return ReadOutcome::Err,
+        }
+    }
+}
+
+/// Split complete lines out of `conn.rbuf` and dispatch each. Marks
+/// the connection closing on an oversized line (the reply is queued
+/// first, matching the old reader's contract).
+fn consume_lines(
+    conn: &mut Conn,
+    tx: &SyncSender<Incoming>,
+    phase: &AtomicU8,
+    counters: &FrontDoorCounters,
+) {
+    loop {
+        let Some(pos) = conn.rbuf.iter().position(|&b| b == b'\n') else {
+            break;
+        };
+        if pos > MAX_LINE_BYTES {
+            oversize(conn);
+            return;
+        }
+        let line: Vec<u8> = conn.rbuf.drain(..=pos).take(pos).collect();
+        handle_line(conn, &line, tx, phase, counters);
+        if conn.closing {
+            return;
+        }
+    }
+    if conn.rbuf.len() > MAX_LINE_BYTES {
+        oversize(conn);
+    }
+}
+
+fn oversize(conn: &mut Conn) {
+    conn.out.push(error_line(&format!(
+        "request line exceeds {MAX_LINE_BYTES} bytes; closing connection"
+    )));
+    conn.rbuf.clear();
+    conn.closing = true;
+}
+
+fn handle_line(
+    conn: &mut Conn,
+    line: &[u8],
+    tx: &SyncSender<Incoming>,
+    phase: &AtomicU8,
+    counters: &FrontDoorCounters,
+) {
+    let reply = ReplyHandle::from_output(Arc::clone(&conn.out));
+    if phase.load(Ordering::Acquire) != PHASE_RUNNING {
+        // Draining: only non-blank lines earn the refusal.
+        if !line.iter().all(|b| b.is_ascii_whitespace()) {
+            counters.shed_shutdown.fetch_add(1, Ordering::Relaxed);
+            reply.send(error_line("shutting down"));
+        }
+        return;
+    }
+    let Some(msg) = classify_line(line, &reply) else {
+        return;
+    };
+    match tx.try_send(msg) {
+        Ok(()) => {}
+        Err(TrySendError::Full(_)) => {
+            // The engine loop is saturated: shed at the door with a
+            // distinguishable error so clients can back off, instead
+            // of queueing without bound.
+            counters.shed_incoming_full.fetch_add(1, Ordering::Relaxed);
+            reply.send(shed_line("server overloaded: incoming queue full"));
+        }
+        Err(TrySendError::Disconnected(_)) => {
+            reply.send(error_line("shutting down"));
+        }
+    }
+}
+
+/// Flush pending reply bytes. Returns `false` when the connection must
+/// close now (overflowed cap, write failure, or `closing` with nothing
+/// left to flush).
+fn flush_some(conn: &mut Conn) -> bool {
+    if conn.out.overflowed() {
+        return false;
+    }
+    loop {
+        if conn.wpos == conn.wbuf.len() {
+            conn.wbuf.clear();
+            conn.wpos = 0;
+            conn.out.drain_into(&mut conn.wbuf, WRITE_CHUNK);
+            if conn.wbuf.is_empty() {
+                break;
+            }
+        }
+        match (&conn.stream).write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => return false,
+            Ok(n) => conn.wpos += n,
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return false,
+        }
+    }
+    !(conn.closing && !conn.out.has_pending())
+}
+
+fn close_slot(slot: &mut Option<Conn>, counters: &FrontDoorCounters) {
+    if let Some(conn) = slot.take() {
+        conn.out.close();
+        counters.open.fetch_sub(1, Ordering::Relaxed);
+        counters.closed.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+fn shard_loop(
+    shared: Arc<ShardShared>,
+    wake_rx: TcpStream,
+    tx: SyncSender<Incoming>,
+    phase: Arc<AtomicU8>,
+    counters: Arc<FrontDoorCounters>,
+    max_buffered: usize,
+) {
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    loop {
+        // Adopt connections handed over by the acceptor.
+        for stream in shared.take_new() {
+            if phase.load(Ordering::Acquire) != PHASE_RUNNING
+                || stream.set_nonblocking(true).is_err()
+            {
+                counters.open.fetch_sub(1, Ordering::Relaxed);
+                counters.closed.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            let _ = stream.set_nodelay(true);
+            let out = Arc::new(ConnOutput::new(
+                max_buffered,
+                Some(shared.wake.clone()),
+                Some(Arc::clone(&counters)),
+            ));
+            let conn = Conn {
+                stream,
+                rbuf: Vec::new(),
+                out,
+                wbuf: Vec::new(),
+                wpos: 0,
+                closing: false,
+            };
+            match conns.iter_mut().find(|c| c.is_none()) {
+                Some(slot) => *slot = Some(conn),
+                None => conns.push(Some(conn)),
+            }
+        }
+
+        if phase.load(Ordering::Acquire) == PHASE_HALT {
+            halt_flush(&mut conns, &shared, &counters);
+            return;
+        }
+
+        // Wait for readiness. The immutable stream borrows live only
+        // inside this block, so the mutation below is borrow-clean.
+        let (ready, idxs) = {
+            let mut socks: Vec<(&TcpStream, bool)> = Vec::new();
+            let mut idxs: Vec<usize> = Vec::new();
+            for (i, c) in conns.iter().enumerate() {
+                if let Some(c) = c {
+                    socks.push((&c.stream, c.wants_write()));
+                    idxs.push(i);
+                }
+            }
+            (poll::wait(&wake_rx, &socks, POLL_TICK), idxs)
+        };
+
+        for (k, &i) in idxs.iter().enumerate() {
+            let Some(conn) = conns[i].as_mut() else { continue };
+            if ready[k].readable && !conn.closing {
+                match read_some(conn) {
+                    ReadOutcome::Open => {}
+                    // EOF/error: stop reading; any queued replies still
+                    // flush before the close below.
+                    ReadOutcome::Eof | ReadOutcome::Err => conn.closing = true,
+                }
+                consume_lines(conn, &tx, &phase, &counters);
+            }
+            // Always attempt the flush: a reply pushed after the poll
+            // call would otherwise wait a full tick.
+            if !flush_some(conn) {
+                close_slot(&mut conns[i], &counters);
+            }
+        }
+    }
+}
+
+/// Final flush pass at shutdown: keep writing pending reply bytes
+/// until everything drains or the deadline passes, then close all.
+fn halt_flush(
+    conns: &mut [Option<Conn>],
+    shared: &ShardShared,
+    counters: &FrontDoorCounters,
+) {
+    // Late arrivals the acceptor queued before it stopped.
+    for _ in shared.take_new() {
+        counters.open.fetch_sub(1, Ordering::Relaxed);
+        counters.closed.fetch_add(1, Ordering::Relaxed);
+    }
+    let deadline = shared.flush_deadline().unwrap_or_else(Instant::now);
+    loop {
+        let mut pending = false;
+        for slot in conns.iter_mut() {
+            let Some(conn) = slot.as_mut() else { continue };
+            conn.closing = true;
+            if !flush_some(conn) {
+                close_slot(slot, counters);
+            } else if slot.is_some() {
+                pending = true;
+            }
+        }
+        if !pending || Instant::now() >= deadline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    for slot in conns.iter_mut() {
+        close_slot(slot, counters);
+    }
+}
+
+fn acceptor_loop(
+    listener: TcpListener,
+    shards: Vec<Arc<ShardShared>>,
+    phase: Arc<AtomicU8>,
+    counters: Arc<FrontDoorCounters>,
+) {
+    let mut next = 0usize;
+    while phase.load(Ordering::Acquire) == PHASE_RUNNING {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                counters.accepted.fetch_add(1, Ordering::Relaxed);
+                counters.open.fetch_add(1, Ordering::Relaxed);
+                shards[next].add(stream);
+                next = (next + 1) % shards.len();
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                // Transient accept failure (e.g. fd exhaustion under a
+                // connection storm): back off briefly instead of dying.
+                // The phase flag — not an error — ends this loop.
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// Handle to the running front door: the shard threads, the acceptor,
+/// and the shared phase/counters. `serve`/`serve_multi` drive it
+/// through [`FrontDoor::drain`] and [`FrontDoor::shutdown`].
+pub(crate) struct FrontDoor {
+    counters: Arc<FrontDoorCounters>,
+    phase: Arc<AtomicU8>,
+    shards: Vec<Arc<ShardShared>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl FrontDoor {
+    /// Spawn `cfg.io_shards` shard loops plus the acceptor over a
+    /// nonblocking listener.
+    pub(crate) fn spawn(
+        listener: TcpListener,
+        tx: SyncSender<Incoming>,
+        cfg: &ServeConfig,
+    ) -> std::io::Result<FrontDoor> {
+        listener.set_nonblocking(true)?;
+        let counters = Arc::new(FrontDoorCounters::default());
+        let phase = Arc::new(AtomicU8::new(PHASE_RUNNING));
+        let n = cfg.io_shards.clamp(1, 64);
+        let mut shards = Vec::with_capacity(n);
+        let mut threads = Vec::with_capacity(n + 1);
+        for i in 0..n {
+            let (wake, wake_rx) = wake_pair()?;
+            let shared = Arc::new(ShardShared {
+                new_conns: Mutex::new(Vec::new()),
+                wake,
+                flush_deadline: Mutex::new(None),
+            });
+            let (sh, tx, ph, ct) = (
+                Arc::clone(&shared),
+                tx.clone(),
+                Arc::clone(&phase),
+                Arc::clone(&counters),
+            );
+            let cap = cfg.max_conn_buffered_bytes;
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("elm-io-{i}"))
+                    .spawn(move || shard_loop(sh, wake_rx, tx, ph, ct, cap))?,
+            );
+            shards.push(shared);
+        }
+        {
+            let (sh, ph, ct) = (shards.clone(), Arc::clone(&phase), Arc::clone(&counters));
+            threads.push(
+                std::thread::Builder::new()
+                    .name("elm-accept".into())
+                    .spawn(move || acceptor_loop(listener, sh, ph, ct))?,
+            );
+        }
+        counters.io_threads.store(n as u64 + 1, Ordering::Relaxed);
+        Ok(FrontDoor {
+            counters,
+            phase,
+            shards,
+            threads,
+        })
+    }
+
+    pub(crate) fn counters(&self) -> Arc<FrontDoorCounters> {
+        Arc::clone(&self.counters)
+    }
+
+    /// Enter the draining phase: the acceptor exits and shards answer
+    /// new lines with `{"error":"shutting down"}`. Existing replies
+    /// keep flowing.
+    pub(crate) fn drain(&self) {
+        self.phase.store(PHASE_DRAINING, Ordering::Release);
+        for s in &self.shards {
+            s.wake.wake();
+        }
+    }
+
+    /// Flush pending replies for up to `flush_timeout`, close every
+    /// connection, and join all I/O threads.
+    pub(crate) fn shutdown(self, flush_timeout: Duration) {
+        let deadline = Instant::now() + flush_timeout;
+        for s in &self.shards {
+            s.set_flush_deadline(deadline);
+        }
+        self.phase.store(PHASE_HALT, Ordering::Release);
+        for s in &self.shards {
+            s.wake.wake();
+        }
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Best-effort OS thread count of this process (Linux: the `Threads:`
+/// line of `/proc/self/status`; `None` elsewhere). The storm bench and
+/// the thread-ceiling gate use it to prove O(shards) threading.
+pub fn process_thread_count() -> Option<usize> {
+    #[cfg(target_os = "linux")]
+    {
+        let status = std::fs::read_to_string("/proc/self/status").ok()?;
+        status
+            .lines()
+            .find_map(|l| l.strip_prefix("Threads:"))
+            .and_then(|rest| rest.trim().parse().ok())
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conn_output_caps_queued_bytes_and_sheds() {
+        let reply = ReplyHandle::detached(32);
+        assert_eq!(reply.send("0123456789".into()), SendOutcome::Sent); // 11 bytes
+        assert_eq!(reply.send("0123456789".into()), SendOutcome::Sent); // 22 bytes
+        // 33 bytes would exceed the 32-byte cap: shed, and the handle
+        // reports closed from then on.
+        assert_eq!(reply.send("0123456789".into()), SendOutcome::Shed);
+        assert!(reply.is_closed());
+        assert_eq!(reply.send("x".into()), SendOutcome::Closed);
+    }
+
+    #[test]
+    fn conn_output_reports_closed_after_close() {
+        let out = Arc::new(ConnOutput::new(1024, None, None));
+        let reply = ReplyHandle::from_output(Arc::clone(&out));
+        assert_eq!(reply.send("a".into()), SendOutcome::Sent);
+        assert!(!reply.is_closed());
+        out.close();
+        assert!(reply.is_closed());
+        assert_eq!(reply.send("b".into()), SendOutcome::Closed);
+    }
+
+    #[test]
+    fn conn_output_drain_frees_cap_space() {
+        let out = Arc::new(ConnOutput::new(16, None, None));
+        let reply = ReplyHandle::from_output(Arc::clone(&out));
+        assert_eq!(reply.send("0123456789".into()), SendOutcome::Sent);
+        let mut buf = Vec::new();
+        out.drain_into(&mut buf, 1024);
+        assert_eq!(buf, b"0123456789\n");
+        // The drained bytes no longer count against the cap.
+        assert_eq!(reply.send("0123456789".into()), SendOutcome::Sent);
+    }
+
+    #[test]
+    fn overflow_counts_once_on_the_shared_counters() {
+        let counters = Arc::new(FrontDoorCounters::default());
+        let out = Arc::new(ConnOutput::new(4, None, Some(Arc::clone(&counters))));
+        let reply = ReplyHandle::from_output(out);
+        assert_eq!(reply.send("way too long".into()), SendOutcome::Shed);
+        assert_eq!(reply.send("again".into()), SendOutcome::Closed);
+        assert_eq!(counters.shed_output_overflow.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn serve_config_default_is_sane() {
+        let cfg = ServeConfig::default();
+        assert!(cfg.io_shards >= 1);
+        assert!(cfg.max_conn_buffered_bytes >= 1024);
+        assert!(cfg.incoming_capacity >= 1);
+    }
+}

@@ -1,0 +1,211 @@
+//! Readiness waiting for the sharded front door.
+//!
+//! Offline, zero-dependency build: on unix the shard loops block in
+//! `poll(2)` through an in-tree FFI declaration (std already links the
+//! platform C library, so no crate is added), watching every
+//! connection plus the shard's wake socket. Elsewhere a portable
+//! fallback blocks briefly on the wake socket alone and reports every
+//! connection "ready" — the caller's nonblocking reads/writes discover
+//! the true state via `WouldBlock`. The `#[cfg(unix)]` /
+//! `#[cfg(not(unix))]` split mirrors `store::SharedFile`'s positioned
+//! reads: the fast path is unix-specific, the fallback is correct
+//! everywhere.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Readiness of one polled socket. On the non-unix fallback both
+/// flags are optimistically `true` (level-triggered "try everything").
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct Readiness {
+    /// Data (or EOF/error) can be read without blocking.
+    pub readable: bool,
+    /// The send buffer can accept bytes without blocking.
+    pub writable: bool,
+}
+
+/// Block until one of `socks` is ready, the `wake` socket is written
+/// to, or `timeout` elapses. Each entry pairs a stream with its write
+/// interest (read interest is always on). Pending wake bytes are
+/// drained here, so one call also acts as the wake acknowledgment.
+pub(crate) fn wait(wake: &TcpStream, socks: &[(&TcpStream, bool)], timeout: Duration) -> Vec<Readiness> {
+    sys::wait(wake, socks, timeout)
+}
+
+#[cfg(unix)]
+mod sys {
+    use super::Readiness;
+    use std::io::Read;
+    use std::net::TcpStream;
+    use std::os::raw::{c_int, c_short};
+    use std::os::unix::io::AsRawFd;
+    use std::time::Duration;
+
+    /// `struct pollfd` from `<poll.h>` — identical layout on every
+    /// unix this crate targets.
+    #[repr(C)]
+    struct PollFd {
+        fd: c_int,
+        events: c_short,
+        revents: c_short,
+    }
+
+    const POLLIN: c_short = 0x001;
+    const POLLOUT: c_short = 0x004;
+    const POLLERR: c_short = 0x008;
+    const POLLHUP: c_short = 0x010;
+
+    // `nfds_t` is `unsigned long` on linux/android and `unsigned int`
+    // on the BSD family (macOS included).
+    #[cfg(any(target_os = "linux", target_os = "android"))]
+    type Nfds = std::os::raw::c_ulong;
+    #[cfg(not(any(target_os = "linux", target_os = "android")))]
+    type Nfds = std::os::raw::c_uint;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: Nfds, timeout: c_int) -> c_int;
+    }
+
+    pub(super) fn wait(
+        wake: &TcpStream,
+        socks: &[(&TcpStream, bool)],
+        timeout: Duration,
+    ) -> Vec<Readiness> {
+        let mut fds = Vec::with_capacity(socks.len() + 1);
+        fds.push(PollFd {
+            fd: wake.as_raw_fd(),
+            events: POLLIN,
+            revents: 0,
+        });
+        for (s, want_write) in socks {
+            let mut events = POLLIN;
+            if *want_write {
+                events |= POLLOUT;
+            }
+            fds.push(PollFd {
+                fd: s.as_raw_fd(),
+                events,
+                revents: 0,
+            });
+        }
+        let ms = timeout.as_millis().min(c_int::MAX as u128) as c_int;
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as Nfds, ms) };
+        if rc < 0 {
+            // EINTR or similar: report nothing ready; the caller loops.
+            return vec![Readiness::default(); socks.len()];
+        }
+        if fds[0].revents & (POLLIN | POLLERR | POLLHUP) != 0 {
+            drain_wake(wake);
+        }
+        fds[1..]
+            .iter()
+            .map(|f| Readiness {
+                // Error/hangup surface through a read (EOF or error),
+                // and must unblock a pending write too.
+                readable: f.revents & (POLLIN | POLLERR | POLLHUP) != 0,
+                writable: f.revents & (POLLOUT | POLLERR | POLLHUP) != 0,
+            })
+            .collect()
+    }
+
+    /// Swallow pending wake bytes (the wake socket is nonblocking).
+    fn drain_wake(wake: &TcpStream) {
+        let mut buf = [0u8; 256];
+        let mut r: &TcpStream = wake;
+        while matches!(r.read(&mut buf), Ok(n) if n > 0) {}
+    }
+}
+
+#[cfg(not(unix))]
+mod sys {
+    use super::Readiness;
+    use std::io::Read;
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    /// Portable fallback: no readiness syscall, so block (briefly) on
+    /// the wake socket alone — a pushed reply or a new connection cuts
+    /// the sleep short — and report every connection ready. The shard's
+    /// nonblocking reads/writes turn "optimistically ready" back into
+    /// `WouldBlock` where it was not true. The sleep is clamped low so
+    /// connection data (which cannot interrupt it) waits at most a few
+    /// milliseconds.
+    pub(super) fn wait(
+        wake: &TcpStream,
+        socks: &[(&TcpStream, bool)],
+        timeout: Duration,
+    ) -> Vec<Readiness> {
+        let nap = timeout
+            .min(Duration::from_millis(3))
+            .max(Duration::from_millis(1));
+        wake.set_read_timeout(Some(nap)).ok();
+        let mut buf = [0u8; 256];
+        let mut r: &TcpStream = wake;
+        let _ = r.read(&mut buf); // data or timeout — either way, proceed
+        vec![
+            Readiness {
+                readable: true,
+                writable: true,
+            };
+            socks.len()
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::TcpListener;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let tx = TcpStream::connect(addr).unwrap();
+        let (rx, _) = l.accept().unwrap();
+        (rx, tx)
+    }
+
+    #[test]
+    fn wake_byte_cuts_the_wait_short() {
+        let (wake_rx, wake_tx) = pair();
+        #[cfg(unix)]
+        wake_rx.set_nonblocking(true).unwrap();
+        let mut tx = &wake_tx;
+        tx.write_all(&[1]).unwrap();
+        let t0 = std::time::Instant::now();
+        let ready = wait(&wake_rx, &[], Duration::from_secs(5));
+        assert!(ready.is_empty());
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "a pending wake byte must not wait out the full timeout"
+        );
+    }
+
+    #[test]
+    fn readable_socket_reports_ready() {
+        let (wake_rx, _wake_tx) = pair();
+        #[cfg(unix)]
+        wake_rx.set_nonblocking(true).unwrap();
+        let (conn_rx, conn_tx) = pair();
+        let mut tx = &conn_tx;
+        tx.write_all(b"x").unwrap();
+        let ready = wait(&wake_rx, &[(&conn_rx, false)], Duration::from_secs(5));
+        assert_eq!(ready.len(), 1);
+        assert!(ready[0].readable);
+    }
+
+    #[test]
+    fn idle_wait_times_out() {
+        let (wake_rx, _wake_tx) = pair();
+        #[cfg(unix)]
+        wake_rx.set_nonblocking(true).unwrap();
+        let (conn_rx, _conn_tx) = pair();
+        let t0 = std::time::Instant::now();
+        let ready = wait(&wake_rx, &[(&conn_rx, false)], Duration::from_millis(20));
+        assert!(t0.elapsed() >= Duration::from_millis(1));
+        assert_eq!(ready.len(), 1);
+        #[cfg(unix)]
+        assert!(!ready[0].readable, "nothing was written to the socket");
+    }
+}
