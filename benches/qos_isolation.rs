@@ -17,9 +17,21 @@
 //!   move *where bytes are resident*, never *what models generate*;
 //! * a config whose reservations exceed the global budget is rejected
 //!   at startup.
+//!
+//! A second, **request-level** arm (PR 9) runs mixed traffic through a
+//! single engine: a low-class batch flood holds every batch slot while
+//! high-class interactive requests with deadlines land mid-stream. The
+//! same deterministic schedule runs with preemption off (FIFO slot
+//! tenure) and on; the bench asserts the deadline class's p99 latency
+//! (in decode steps — no wall clocks, so CI can't flake) is *strictly
+//! lower* with preemption, batch throughput stays within 10%, and every
+//! token stream — including the preempted-and-resumed ones — is
+//! bit-identical across arms.
 
 use entrollm::bench::{fmt_bytes, quick_or};
-use entrollm::coordinator::{ModelSpec, MultiModelConfig, MultiModelServer, Request};
+use entrollm::coordinator::{
+    DigestBackend, Engine, EngineConfig, ModelSpec, MultiModelConfig, MultiModelServer, Request,
+};
 use entrollm::metrics::Table;
 use entrollm::quant::BitWidth;
 use entrollm::rng::Rng;
@@ -163,6 +175,90 @@ fn run_arm(
     }
 }
 
+struct RequestArm {
+    /// Every completed (id, tokens), sorted — interactive and batch.
+    tokens: Vec<(u64, Vec<u32>)>,
+    /// p99 of interactive submit→completion latency, in decode steps.
+    interactive_p99_steps: usize,
+    /// Batch-class tokens per engine step over the whole run.
+    batch_tok_per_step: f64,
+    preemptions: u64,
+    expired: u64,
+}
+
+/// One engine, mixed traffic, step-deterministic: `batch_reqs`
+/// class −4 generations of `batch_len` tokens flood a 2-slot batch;
+/// class +4 interactive requests (4 tokens, generous deadline) are
+/// submitted at the fixed step indices in `submit_steps`. Latency is
+/// counted in engine steps, so both arms replay the exact same
+/// schedule and differ only in the `preemption` knob.
+fn run_request_arm(
+    preemption: bool,
+    batch_reqs: u64,
+    batch_len: usize,
+    submit_steps: &[usize],
+) -> RequestArm {
+    let mut engine = Engine::new(
+        DigestBackend::with_digest(0x9051_4EA7, 2, 4096, 512),
+        EngineConfig {
+            preemption,
+            // Aging reorders only within the queue and the interactive
+            // class already outranks everything here; disable it so the
+            // arms are wall-clock-independent.
+            aging: None,
+            ..EngineConfig::default()
+        },
+    );
+    for k in 0..batch_reqs {
+        engine
+            .submit(Request::greedy(k, vec![11 + k as u32, 3], batch_len).with_priority(-4))
+            .unwrap();
+    }
+
+    let mut submitted = 0usize;
+    let mut submit_step = std::collections::HashMap::new();
+    let mut latencies = Vec::new();
+    let mut tokens = Vec::new();
+    let mut batch_token_count = 0usize;
+    let mut step = 0usize;
+    while engine.has_work() || submitted < submit_steps.len() {
+        while submitted < submit_steps.len() && submit_steps[submitted] <= step {
+            let id = 1_000 + submitted as u64;
+            engine
+                .submit(
+                    Request::greedy(id, vec![5, submitted as u32], 4)
+                        .with_priority(4)
+                        .with_deadline(Duration::from_secs(120)),
+                )
+                .unwrap();
+            submit_step.insert(id, step);
+            submitted += 1;
+        }
+        for resp in engine.step().unwrap() {
+            if let Some(&s0) = submit_step.get(&resp.id) {
+                latencies.push(step + 1 - s0);
+            } else {
+                batch_token_count += resp.tokens.len();
+            }
+            tokens.push((resp.id, resp.tokens));
+        }
+        step += 1;
+        assert!(step < 1_000_000, "request-level arm did not converge");
+    }
+
+    tokens.sort();
+    latencies.sort_unstable();
+    assert!(!latencies.is_empty(), "no interactive request completed");
+    let p99_idx = ((latencies.len() - 1) as f64 * 0.99).ceil() as usize;
+    RequestArm {
+        tokens,
+        interactive_p99_steps: latencies[p99_idx],
+        batch_tok_per_step: batch_token_count as f64 / step.max(1) as f64,
+        preemptions: engine.stats().preemptions,
+        expired: engine.stats().expired,
+    }
+}
+
 fn main() {
     let rounds = quick_or(2usize, 6);
     let batch_reqs = quick_or(2u64, 4);
@@ -277,6 +373,68 @@ fn main() {
         qos.shed_by_peers.to_string(),
     ]);
     table.emit("qos_isolation");
+
+    // --- Request-level arm: priority/deadline scheduling inside ONE
+    // engine, preemption off vs on over the identical schedule. ---
+    let batch_len = quick_or(64usize, 96);
+    let submit_steps = [6usize, 12, 18, 24];
+    let off = run_request_arm(false, 6, batch_len, &submit_steps);
+    let on = run_request_arm(true, 6, batch_len, &submit_steps);
+
+    // Preemption changes *when* tokens appear, never *what* they are —
+    // preempted-and-resumed generations must match the FIFO arm bit for
+    // bit, batch and interactive alike.
+    assert_eq!(off.tokens, on.tokens, "preemption changed a token stream");
+    assert!(
+        on.preemptions > 0,
+        "the preemption arm never preempted — the flood applied no slot pressure"
+    );
+    assert_eq!(off.preemptions, 0, "preemption fired while disabled");
+    assert_eq!(on.expired, 0, "interactive deadline missed with preemption on");
+    assert_eq!(off.expired, 0, "generous deadline expired in the FIFO arm");
+    // The acceptance bar: deadline-class p99 strictly lower with
+    // preemption on, batch throughput within 10% of the FIFO arm.
+    assert!(
+        on.interactive_p99_steps < off.interactive_p99_steps,
+        "interactive p99 with preemption ({} steps) must be strictly lower than \
+         without ({} steps)",
+        on.interactive_p99_steps,
+        off.interactive_p99_steps
+    );
+    let thr_ratio = on.batch_tok_per_step / off.batch_tok_per_step.max(1e-12);
+    assert!(
+        (thr_ratio - 1.0).abs() <= 0.10,
+        "batch throughput drifted {:.1}% under preemption ({:.2} vs {:.2} tok/step)",
+        (thr_ratio - 1.0).abs() * 100.0,
+        on.batch_tok_per_step,
+        off.batch_tok_per_step
+    );
+
+    let mut rtable = Table::new(
+        "Interactive deadline class vs batch flood in one engine",
+        &[
+            "arm",
+            "interactive p99 steps",
+            "batch tok/step",
+            "preemptions",
+            "expired",
+        ],
+    );
+    rtable.row(&[
+        "preemption off (FIFO slot tenure)".into(),
+        off.interactive_p99_steps.to_string(),
+        format!("{:.2}", off.batch_tok_per_step),
+        off.preemptions.to_string(),
+        off.expired.to_string(),
+    ]);
+    rtable.row(&[
+        "preemption on".into(),
+        on.interactive_p99_steps.to_string(),
+        format!("{:.2}", on.batch_tok_per_step),
+        on.preemptions.to_string(),
+        on.expired.to_string(),
+    ]);
+    rtable.emit("qos_request_classes");
 
     std::fs::remove_dir_all(&dir).ok();
     println!("\nqos_isolation bench OK");

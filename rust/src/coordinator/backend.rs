@@ -56,6 +56,15 @@ pub trait Backend {
     fn prefetch(&self) -> Option<PrefetchCounters> {
         None
     }
+
+    /// Extract batch slot `slot`'s KV state so a preempted request can
+    /// later resume through [`Backend::set_slot`] bit-identically.
+    /// Backends whose generation carries no per-slot KV state (the
+    /// digest family) return `Ok(None)`: the preempted request resumes
+    /// from its token prefix alone.
+    fn take_slot(&mut self, _slot: usize) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        Ok(None)
+    }
 }
 
 // ------------------------------------------------------------------- PJRT
@@ -129,6 +138,16 @@ impl Backend for PjrtBackend {
         let out = self.rt.decode_step(tokens, pos, &kb, &vb)?;
         self.device_kv = Some((out.k_cache, out.v_cache));
         Ok(out.logits)
+    }
+
+    fn take_slot(&mut self, slot: usize) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        // Same slow path as set_slot: bring the device state home so
+        // the mirror sees the slot's current KV, then copy it out.
+        if let Some((kb, vb)) = self.device_kv.take() {
+            let (k, v) = self.rt.download_kv(&kb, &vb)?;
+            self.mirror.refresh_from(k, v)?;
+        }
+        Ok(Some(self.mirror.extract_slot(slot)?))
     }
 }
 
@@ -207,6 +226,10 @@ impl Backend for MockBackend {
             out.extend_from_slice(&self.onehot(next));
         }
         Ok(out)
+    }
+
+    fn take_slot(&mut self, slot: usize) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        Ok(Some(self.mirror.extract_slot(slot)?))
     }
 }
 
@@ -302,9 +325,13 @@ pub fn digest_prefill_next(digest: u64, prompt: &[u32], vocab: usize) -> u64 {
 }
 
 /// Next-token index for one decode lane of a digest-driven backend
-/// (see [`digest_prefill_next`]).
-pub fn digest_decode_next(digest: u64, slot: usize, token: u32, pos: u32, vocab: usize) -> u64 {
-    let mixed = digest.rotate_left((slot as u32 % 63) + 1)
+/// (see [`digest_prefill_next`]). A function of the sequence state
+/// (last token, position) and the weights only — never of the physical
+/// batch slot, just like real transformer logits. That invariance is
+/// what lets a preempted request resume in a *different* slot and still
+/// generate bit-identically.
+pub fn digest_decode_next(digest: u64, token: u32, pos: u32, vocab: usize) -> u64 {
+    let mixed = digest.rotate_left(9)
         ^ (token as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
         ^ ((pos as u64) << 20);
     mixed % vocab as u64
@@ -380,9 +407,9 @@ impl Backend for DigestBackend {
         assert_eq!(pos.len(), self.cfg.batch);
         self.steps += 1;
         let mut out = Vec::with_capacity(self.cfg.batch * self.cfg.vocab);
-        for (slot, (&t, &p)) in tokens.iter().zip(pos).enumerate() {
+        for (&t, &p) in tokens.iter().zip(pos) {
             out.extend_from_slice(
-                &self.onehot(digest_decode_next(self.digest, slot, t, p, self.cfg.vocab)),
+                &self.onehot(digest_decode_next(self.digest, t, p, self.cfg.vocab)),
             );
         }
         Ok(out)
@@ -472,5 +499,29 @@ mod tests {
         let mut other = DigestBackend::with_digest(b1.digest() ^ 1, 2, 16, 64);
         let (l3, _, _) = other.prefill(&[3, 4, 5]).unwrap();
         assert_ne!(l1, l3, "digest must steer generation");
+    }
+
+    #[test]
+    fn digest_decode_ignores_physical_slot() {
+        // Two lanes at the same (token, pos) must produce identical
+        // logits rows: sequence state, not slot index, drives the next
+        // token — the invariant preemptive slot reassignment rests on.
+        let mut b = DigestBackend::with_digest(0xABCD, 2, 16, 64);
+        let logits = b.decode(&[7, 7], &[3, 3]).unwrap();
+        assert_eq!(logits[..64], logits[64..]);
+    }
+
+    #[test]
+    fn mock_take_slot_round_trips_through_set_slot() {
+        let mut b = MockBackend::new(2, 16, 32);
+        let (_, k1, v1) = b.prefill(&[9, 2]).unwrap();
+        b.set_slot(1, &k1, &v1).unwrap();
+        let (ek, ev) = b.take_slot(1).unwrap().expect("mock mirrors KV");
+        assert_eq!(ek, k1);
+        assert_eq!(ev, v1);
+        // Splicing the extracted state back reproduces the mirror.
+        b.set_slot(1, &ek, &ev).unwrap();
+        let (ek2, ev2) = b.take_slot(1).unwrap().unwrap();
+        assert_eq!((ek2, ev2), (ek, ev));
     }
 }

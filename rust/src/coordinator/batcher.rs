@@ -1,16 +1,49 @@
-//! Bounded FIFO admission queue with occupancy statistics.
+//! Bounded, priority-aware admission queue with aging, deadlines, and
+//! occupancy statistics.
 //!
 //! The continuous batcher itself lives in [`super::engine`]; this module
-//! owns admission policy: bounded queue, FIFO order, rejection when
-//! full, and the queue-depth / wait-time statistics the serving bench
-//! reports.
+//! owns admission policy. Requests are ordered by *effective* priority
+//! (highest first), FIFO within a class. Effective priority rises with
+//! wait time ("aging") so low-priority work can never starve: a request
+//! that has waited `k` aging intervals sorts as `priority + k`, capped
+//! at [`PRIORITY_MAX`] — once everything old reaches the cap, order
+//! degenerates to pure FIFO. Aging affects *dequeue order only*; the
+//! engine's preemption decisions always compare static classes, so aged
+//! batch work can be scheduled fairly without ever preempting anyone.
+//!
+//! Deadlines are queue-side: [`AdmissionQueue::expire`] sweeps out
+//! requests whose deadline passed while they waited, so dead work is
+//! answered (with a distinguishable expired error upstream) instead of
+//! occupying a batch slot. An id → key index keeps [`remove`] and
+//! [`expire`] bookkeeping O(log n) per affected entry — dead-waiter
+//! sweeps on deep queues no longer pay a linear scan per cancel.
+//!
+//! [`remove`]: AdmissionQueue::remove
+//! [`PRIORITY_MAX`]: super::request::PRIORITY_MAX
 
-use super::request::Request;
+use super::request::{Request, PRIORITY_MAX};
 use crate::{Error, Result};
-use std::collections::VecDeque;
-use std::time::Instant;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, HashMap};
+use std::time::{Duration, Instant};
+
+/// BTreeMap ordering key: effective priority descending, then a
+/// sequence number ascending (FIFO within a class; preemption requeues
+/// use sequence numbers *below* every normal push so an interrupted
+/// generation resumes at the front of its class).
+type Key = (Reverse<i64>, u64);
+
+/// Sequence numbers above this are normal pushes (ascending), below it
+/// are preemption requeues (descending).
+const SEQ_ORIGIN: u64 = 1 << 32;
 
 /// Queue statistics snapshot.
+///
+/// Conservation invariant (asserted by property tests): every request
+/// that ever entered the queue left it exactly one way, so
+/// `admitted + requeued == depth + dispatched + removed + expired`
+/// holds after every operation — a gauge that drifts negative or leaks
+/// after cancels breaks this identity immediately.
 #[derive(Debug, Clone, Default)]
 pub struct QueueStats {
     /// Requests currently waiting.
@@ -21,23 +54,88 @@ pub struct QueueStats {
     pub rejected: u64,
     /// Total handed to the engine.
     pub dispatched: u64,
+    /// Total removed by id (dead-waiter cancels).
+    pub removed: u64,
+    /// Total swept out by deadline expiry.
+    pub expired: u64,
+    /// Preempted generations re-queued at the front of their class.
+    pub requeued: u64,
+    /// Entries whose effective priority was bumped by aging.
+    pub aging_promotions: u64,
+    /// Waiting requests per *static* class, highest class first.
+    pub by_class: Vec<(i32, usize)>,
 }
 
-/// Bounded FIFO admission queue.
+/// Bounded priority admission queue (see module docs).
 #[derive(Debug)]
 pub struct AdmissionQueue {
-    q: VecDeque<Request>,
+    q: BTreeMap<Key, Request>,
+    /// id → ordering key. Ids are unique queue-wide (the server remaps
+    /// wire ids upward to guarantee it).
+    index: HashMap<u64, Key>,
     capacity: usize,
+    aging: Option<Duration>,
+    next_seq: u64,
+    next_front_seq: u64,
     stats: QueueStats,
 }
 
 impl AdmissionQueue {
-    /// Queue holding at most `capacity` waiting requests.
+    /// Queue holding at most `capacity` waiting requests, no aging.
     pub fn new(capacity: usize) -> Self {
         AdmissionQueue {
-            q: VecDeque::new(),
+            q: BTreeMap::new(),
+            index: HashMap::new(),
             capacity: capacity.max(1),
+            aging: None,
+            next_seq: SEQ_ORIGIN + 1,
+            next_front_seq: SEQ_ORIGIN,
             stats: QueueStats::default(),
+        }
+    }
+
+    /// Set (or disable) the aging interval: every elapsed interval a
+    /// waiting request's effective priority rises one class.
+    pub fn set_aging(&mut self, aging: Option<Duration>) {
+        self.aging = aging.filter(|d| !d.is_zero());
+    }
+
+    /// Effective priority of `r` after waiting until `now`.
+    fn effective(&self, r: &Request, now: Instant) -> i64 {
+        let base = r.priority as i64;
+        let Some(interval) = self.aging else {
+            return base;
+        };
+        let waited = r
+            .enqueued_at
+            .map(|t| now.saturating_duration_since(t))
+            .unwrap_or(Duration::ZERO);
+        let steps = (waited.as_nanos() / interval.as_nanos().max(1)).min(64) as i64;
+        (base + steps).min(PRIORITY_MAX as i64)
+    }
+
+    /// Re-key every entry whose aged effective priority rose. O(n) when
+    /// it runs; callers (pop/expire) invoke it at dispatch points so a
+    /// deep idle queue pays nothing.
+    fn age(&mut self, now: Instant) {
+        if self.aging.is_none() {
+            return;
+        }
+        let promote: Vec<(Key, i64)> = self
+            .q
+            .iter()
+            .filter_map(|(&key, r)| {
+                let eff = self.effective(r, now);
+                (eff > key.0 .0).then_some((key, eff))
+            })
+            .collect();
+        for (key, eff) in promote {
+            if let Some(r) = self.q.remove(&key) {
+                let new_key = (Reverse(eff), key.1);
+                self.index.insert(r.id, new_key);
+                self.q.insert(new_key, r);
+                self.stats.aging_promotions += 1;
+            }
         }
     }
 
@@ -52,26 +150,87 @@ impl AdmissionQueue {
             )));
         }
         r.enqueued_at.get_or_insert_with(Instant::now);
-        self.q.push_back(r);
+        let key = (Reverse(r.priority as i64), self.next_seq);
+        self.next_seq += 1;
+        self.index.insert(r.id, key);
+        self.q.insert(key, r);
         self.stats.admitted += 1;
         Ok(())
     }
 
-    /// Pop the oldest waiting request.
+    /// Re-queue a preempted generation at the *front* of its static
+    /// class, bypassing the capacity check: the request already passed
+    /// admission once and its slot just freed, so net queue+batch
+    /// population is unchanged. `enqueued_at` is left as the caller set
+    /// it (the engine restarts it at preemption time so queue-wait
+    /// accounting does not double-count the first wait).
+    pub fn push_front(&mut self, r: Request) {
+        let key = (Reverse(r.priority as i64), self.next_front_seq);
+        self.next_front_seq -= 1;
+        self.index.insert(r.id, key);
+        self.q.insert(key, r);
+        self.stats.requeued += 1;
+    }
+
+    /// Pop the highest-effective-priority waiting request (FIFO within
+    /// a class). Runs an aging sweep first so promotions take effect at
+    /// exactly the dispatch points.
     pub fn pop(&mut self) -> Option<Request> {
-        let r = self.q.pop_front();
+        self.age(Instant::now());
+        let (key, r) = self.q.pop_first()?;
+        debug_assert_eq!(self.index.get(&r.id), Some(&key));
+        self.index.remove(&r.id);
+        self.stats.dispatched += 1;
+        Some(r)
+    }
+
+    /// The next request [`pop`] would return, ignoring any aging
+    /// promotions that have not been applied yet. The engine's
+    /// preemption check reads the head's *static* class from here.
+    ///
+    /// [`pop`]: AdmissionQueue::pop
+    pub fn peek(&self) -> Option<&Request> {
+        self.q.first_key_value().map(|(_, r)| r)
+    }
+
+    /// Remove a queued request by id (dead-waiter cancellation),
+    /// O(log n) through the id index. Counted under `removed` so the
+    /// depth gauge stays reconcilable with the admission counters.
+    pub fn remove(&mut self, id: u64) -> Option<Request> {
+        let key = self.index.remove(&id)?;
+        let r = self.q.remove(&key);
+        debug_assert!(r.is_some(), "index said {id} was queued");
         if r.is_some() {
-            self.stats.dispatched += 1;
+            self.stats.removed += 1;
         }
         r
     }
 
-    /// Remove a queued request by id (dead-waiter cancellation). The
-    /// admitted/dispatched counters are left untouched — the request
-    /// was admitted but never dispatched.
-    pub fn remove(&mut self, id: u64) -> Option<Request> {
-        let pos = self.q.iter().position(|r| r.id == id)?;
-        self.q.remove(pos)
+    /// Sweep out every queued request whose deadline has passed at
+    /// `now`, returning them (resume state intact) so the caller can
+    /// answer each with a distinguishable expired error. Active
+    /// requests are not affected — once admitted, work runs to
+    /// completion.
+    pub fn expire(&mut self, now: Instant) -> Vec<Request> {
+        self.age(now);
+        let dead: Vec<Key> = self
+            .q
+            .iter()
+            .filter_map(|(&key, r)| {
+                let deadline = r.deadline?;
+                let enq = r.enqueued_at?;
+                (now.saturating_duration_since(enq) > deadline).then_some(key)
+            })
+            .collect();
+        let mut out = Vec::with_capacity(dead.len());
+        for key in dead {
+            if let Some(r) = self.q.remove(&key) {
+                self.index.remove(&r.id);
+                self.stats.expired += 1;
+                out.push(r);
+            }
+        }
+        out
     }
 
     /// Number waiting.
@@ -84,10 +243,16 @@ impl AdmissionQueue {
         self.q.is_empty()
     }
 
-    /// Statistics snapshot.
+    /// Statistics snapshot (depth and per-class histogram computed from
+    /// the live queue).
     pub fn stats(&self) -> QueueStats {
+        let mut by_class: BTreeMap<Reverse<i32>, usize> = BTreeMap::new();
+        for r in self.q.values() {
+            *by_class.entry(Reverse(r.priority)).or_insert(0) += 1;
+        }
         QueueStats {
             depth: self.q.len(),
+            by_class: by_class.into_iter().map(|(Reverse(p), n)| (p, n)).collect(),
             ..self.stats.clone()
         }
     }
@@ -99,6 +264,18 @@ mod tests {
 
     fn req(id: u64) -> Request {
         Request::greedy(id, vec![1], 4)
+    }
+
+    /// The conservation identity from the [`QueueStats`] docs.
+    fn assert_conserved(q: &AdmissionQueue) {
+        let s = q.stats();
+        assert_eq!(
+            s.admitted + s.requeued,
+            s.depth as u64 + s.dispatched + s.removed + s.expired,
+            "queue accounting must conserve requests: {s:?}"
+        );
+        assert_eq!(s.depth, q.len());
+        assert_eq!(s.by_class.iter().map(|&(_, n)| n).sum::<usize>(), s.depth);
     }
 
     #[test]
@@ -114,6 +291,18 @@ mod tests {
     }
 
     #[test]
+    fn higher_priority_jumps_the_line_fifo_within_class() {
+        let mut q = AdmissionQueue::new(8);
+        q.push(req(0)).unwrap();
+        q.push(req(1).with_priority(2)).unwrap();
+        q.push(req(2).with_priority(-3)).unwrap();
+        q.push(req(3).with_priority(2)).unwrap();
+        q.push(req(4)).unwrap();
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(order, vec![1, 3, 0, 4, 2]);
+    }
+
+    #[test]
     fn rejects_when_full_and_counts() {
         let mut q = AdmissionQueue::new(2);
         q.push(req(0)).unwrap();
@@ -123,6 +312,7 @@ mod tests {
         assert_eq!(s.admitted, 2);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.depth, 2);
+        assert_conserved(&q);
     }
 
     #[test]
@@ -147,6 +337,8 @@ mod tests {
         assert_eq!(rest, vec![0, 1, 3]);
         assert_eq!(q.stats().admitted, 4);
         assert_eq!(q.stats().rejected, 0);
+        assert_eq!(q.stats().removed, 1);
+        assert_conserved(&q);
     }
 
     #[test]
@@ -157,5 +349,176 @@ mod tests {
         q.pop();
         assert_eq!(q.stats().dispatched, 1);
         assert_eq!(q.stats().depth, 1);
+    }
+
+    #[test]
+    fn push_front_resumes_before_equal_class_waiters() {
+        let mut q = AdmissionQueue::new(4);
+        q.push(req(0)).unwrap();
+        q.push(req(1)).unwrap();
+        // A preempted id 9 of the same class re-queues ahead of both,
+        // even at capacity.
+        q.push(req(2)).unwrap();
+        q.push(req(3)).unwrap();
+        assert!(q.push(req(4)).is_err(), "at capacity");
+        q.push_front(req(9));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(order, vec![9, 0, 1, 2, 3]);
+        assert_conserved(&q);
+    }
+
+    #[test]
+    fn push_front_still_yields_to_higher_class() {
+        let mut q = AdmissionQueue::new(4);
+        q.push(req(0).with_priority(5)).unwrap();
+        q.push_front(req(9).with_priority(-2));
+        assert_eq!(q.pop().unwrap().id, 0, "class beats requeue position");
+        assert_eq!(q.pop().unwrap().id, 9);
+    }
+
+    #[test]
+    fn aging_promotes_low_priority_instead_of_starving_it() {
+        let mut q = AdmissionQueue::new(8);
+        q.set_aging(Some(Duration::from_millis(1)));
+        let mut old = req(0).with_priority(-8);
+        // Backdate far enough that aging lifts it to PRIORITY_MAX.
+        old.enqueued_at = Some(Instant::now() - Duration::from_secs(1));
+        q.push(old).unwrap();
+        q.push(req(1).with_priority(3)).unwrap();
+        assert_eq!(
+            q.pop().unwrap().id,
+            0,
+            "aged batch request must outrank a fresh priority-3 one"
+        );
+        assert!(q.stats().aging_promotions >= 1);
+        // The *static* class is untouched by aging — preemption
+        // decisions keep seeing -8.
+        assert_eq!(q.pop().unwrap().priority, 3);
+        assert_conserved(&q);
+    }
+
+    #[test]
+    fn aging_disabled_means_static_order() {
+        let mut q = AdmissionQueue::new(8);
+        let mut old = req(0).with_priority(-1);
+        // checked_sub: a monotonic clock epoch under an hour old (fresh
+        // CI runner) must not panic the test; `None` keeps push's
+        // `enqueued_at = now`, which this test is equally correct under.
+        old.enqueued_at = Instant::now().checked_sub(Duration::from_secs(3600));
+        q.push(old).unwrap();
+        q.push(req(1)).unwrap();
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.stats().aging_promotions, 0);
+    }
+
+    #[test]
+    fn expire_sweeps_only_past_deadline_requests() {
+        let mut q = AdmissionQueue::new(8);
+        let mut dead = req(0).with_deadline(Duration::from_millis(10));
+        dead.enqueued_at = Some(Instant::now() - Duration::from_secs(1));
+        q.push(dead).unwrap();
+        q.push(req(1).with_deadline(Duration::from_secs(3600))).unwrap();
+        q.push(req(2)).unwrap(); // no deadline: never expires
+        let expired = q.expire(Instant::now());
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].id, 0);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.stats().expired, 1);
+        assert!(q.remove(0).is_none(), "expired entry left the index too");
+        assert_conserved(&q);
+    }
+
+    #[test]
+    fn by_class_histogram_counts_static_classes() {
+        let mut q = AdmissionQueue::new(8);
+        q.push(req(0)).unwrap();
+        q.push(req(1).with_priority(2)).unwrap();
+        q.push(req(2).with_priority(2)).unwrap();
+        q.push(req(3).with_priority(-1)).unwrap();
+        assert_eq!(q.stats().by_class, vec![(2, 2), (0, 1), (-1, 1)]);
+    }
+
+    /// Satellite regression: a 10k-deep queue with interleaved removes
+    /// stays correct and reconciled — the id index makes each remove
+    /// O(log n) instead of a linear scan, so this test is also the
+    /// canary that the index and the tree never drift apart.
+    #[test]
+    fn deep_queue_removes_stay_consistent() {
+        let mut q = AdmissionQueue::new(10_000);
+        for id in 0..10_000u64 {
+            q.push(req(id).with_priority((id % 5) as i32 - 2)).unwrap();
+        }
+        for id in (0..10_000u64).step_by(2) {
+            assert_eq!(q.remove(id).map(|r| r.id), Some(id));
+        }
+        assert_eq!(q.len(), 5_000);
+        assert_conserved(&q);
+        // Survivors drain strictly by (class desc, FIFO) and every
+        // removed id is really gone.
+        let mut last: Option<(i32, u64)> = None;
+        while let Some(r) = q.pop() {
+            assert_eq!(r.id % 2, 1);
+            if let Some((lp, lid)) = last {
+                assert!(r.priority < lp || (r.priority == lp && r.id > lid));
+            }
+            last = Some((r.priority, r.id));
+        }
+        assert_conserved(&q);
+    }
+
+    /// Satellite property test: drive a pseudo-random mix of
+    /// push/pop/remove/shed/expire/requeue operations and assert the
+    /// conservation identity after every single step.
+    #[test]
+    fn random_op_mix_conserves_accounting() {
+        let mut q = AdmissionQueue::new(32);
+        q.set_aging(Some(Duration::from_millis(250)));
+        let mut rng: u64 = 0x1234_5678_9ABC_DEF0;
+        let mut next_id: u64 = 0;
+        let mut live: Vec<u64> = Vec::new();
+        for _ in 0..2_000 {
+            rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            match rng >> 60 {
+                0..=5 => {
+                    let mut r = req(next_id).with_priority(((rng >> 8) % 9) as i32 - 4);
+                    if rng & 1 == 1 {
+                        r = r.with_deadline(Duration::from_nanos((rng >> 16) % 50));
+                        // Some deadlines are already past at push time.
+                        r.enqueued_at = Some(Instant::now() - Duration::from_micros(1));
+                    }
+                    if q.push(r).is_ok() {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                6..=9 => {
+                    if let Some(r) = q.pop() {
+                        live.retain(|&id| id != r.id);
+                        // Occasionally preempt-requeue what we popped.
+                        if rng & 2 == 2 {
+                            live.push(r.id);
+                            q.push_front(r);
+                        }
+                    }
+                }
+                10..=12 => {
+                    if !live.is_empty() {
+                        let id = live[(rng as usize >> 4) % live.len()];
+                        if q.remove(id).is_some() {
+                            live.retain(|&x| x != id);
+                        }
+                    }
+                    // Removing a bogus id must be a counted no-op.
+                    assert!(q.remove(u64::MAX).is_none());
+                }
+                _ => {
+                    for r in q.expire(Instant::now()) {
+                        live.retain(|&id| id != r.id);
+                    }
+                }
+            }
+            assert_conserved(&q);
+            assert_eq!(q.len(), live.len(), "shadow model and queue agree");
+        }
     }
 }

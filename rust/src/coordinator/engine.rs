@@ -15,11 +15,11 @@
 
 use super::backend::Backend;
 use super::batcher::{AdmissionQueue, QueueStats};
-use super::request::{FinishReason, Request, Response, Timing};
+use super::request::{FinishReason, Request, Response, ResumeState, Timing};
 use super::sampler::{SampleCfg, Sampler};
 use crate::metrics::LatencyHistogram;
 use crate::Result;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Engine construction parameters.
 #[derive(Debug, Clone)]
@@ -28,6 +28,16 @@ pub struct EngineConfig {
     pub queue_capacity: usize,
     /// Sampler seed (generation is deterministic given request order).
     pub sample_seed: u64,
+    /// Preempt the lowest-class in-flight generation when a strictly
+    /// higher-class request waits and the batch is full. The preempted
+    /// request re-queues at the front of its class with its generated
+    /// prefix (KV extracted via [`Backend::take_slot`]) and resumes
+    /// bit-identically.
+    pub preemption: bool,
+    /// Queue aging interval: each elapsed interval a waiting request's
+    /// *effective* priority rises one class (dequeue order only — never
+    /// preemption decisions). `None` disables aging.
+    pub aging: Option<Duration>,
 }
 
 impl Default for EngineConfig {
@@ -35,6 +45,8 @@ impl Default for EngineConfig {
         EngineConfig {
             queue_capacity: 256,
             sample_seed: 0xE47,
+            preemption: true,
+            aging: Some(Duration::from_millis(1000)),
         }
     }
 }
@@ -53,6 +65,10 @@ pub struct EngineStats {
     /// Requests cancelled before completion (dead waiters, shutdown
     /// drain).
     pub cancelled: u64,
+    /// In-flight generations preempted by a higher-class request.
+    pub preemptions: u64,
+    /// Queued requests answered as expired (deadline passed waiting).
+    pub expired: u64,
     /// Prefill latency distribution.
     pub prefill_lat: LatencyHistogram,
     /// Per-step decode latency distribution.
@@ -90,18 +106,22 @@ pub struct Engine<B: Backend> {
     slots: Vec<Option<Active>>,
     sampler: Sampler,
     stats: EngineStats,
+    preemption: bool,
 }
 
 impl<B: Backend> Engine<B> {
     /// New engine over a backend.
     pub fn new(backend: B, cfg: EngineConfig) -> Self {
         let slots = (0..backend.cfg().batch).map(|_| None).collect();
+        let mut queue = AdmissionQueue::new(cfg.queue_capacity);
+        queue.set_aging(cfg.aging);
         Engine {
             backend,
-            queue: AdmissionQueue::new(cfg.queue_capacity),
+            queue,
             slots,
             sampler: Sampler::new(cfg.sample_seed),
             stats: EngineStats::default(),
+            preemption: cfg.preemption,
         }
     }
 
@@ -175,21 +195,34 @@ impl<B: Backend> Engine<B> {
         }
     }
 
-    /// Admit requests into free slots. Returns responses for requests
-    /// that finish during admission (e.g. max_new_tokens == 1).
-    fn admit(&mut self) -> Result<Vec<Response>> {
-        let mut done = Vec::new();
-        for slot in 0..self.slots.len() {
-            if self.slots[slot].is_some() {
-                continue;
-            }
-            let Some(req) = self.queue.pop() else { break };
-            let admitted = Instant::now();
-            let queued = req
-                .enqueued_at
-                .map(|t| admitted.duration_since(t))
-                .unwrap_or_default();
+    /// Admit one request into the (free) slot `slot`. Fresh requests
+    /// prefill and sample their first token; preempted requests resume
+    /// from their [`ResumeState`] — KV re-spliced if the backend
+    /// carries any, no prefill, no sampler draw (the prefix already
+    /// consumed its draws). Returns a response if the request finishes
+    /// during admission (e.g. `max_new_tokens == 1`).
+    fn admit_one(&mut self, slot: usize, mut req: Request) -> Result<Option<Response>> {
+        let admitted = Instant::now();
+        let queued = req
+            .enqueued_at
+            .map(|t| admitted.duration_since(t))
+            .unwrap_or_default();
 
+        let act = if let Some(state) = req.resume.take() {
+            let state = *state;
+            if let Some((k1, v1)) = &state.kv {
+                self.backend.set_slot(slot, k1, v1)?;
+            }
+            let mut timing = state.timing;
+            timing.queued += queued;
+            Active {
+                timing,
+                req,
+                generated: state.generated,
+                pos: state.pos,
+                last: state.last,
+            }
+        } else {
             let t0 = Instant::now();
             let prompt_cap = self.backend.cfg().prefill_len;
             let prompt_len = req.prompt.len().min(prompt_cap).max(1);
@@ -202,7 +235,7 @@ impl<B: Backend> Engine<B> {
             let first_token = admitted.elapsed() + queued;
             self.stats.first_token_lat.record(first_token);
 
-            let act = Active {
+            Active {
                 timing: Timing {
                     queued,
                     prefill,
@@ -213,14 +246,124 @@ impl<B: Backend> Engine<B> {
                 generated: vec![first],
                 pos: prompt_len,
                 last: first,
-            };
-            if let Some(reason) = self.finish_reason(&act) {
-                done.push(self.retire(act, reason));
-            } else {
-                self.slots[slot] = Some(act);
+            }
+        };
+        if let Some(reason) = self.finish_reason(&act) {
+            Ok(Some(self.retire(act, reason)))
+        } else {
+            self.slots[slot] = Some(act);
+            Ok(None)
+        }
+    }
+
+    /// Admit requests into free slots. Returns responses for requests
+    /// that finish during admission (e.g. max_new_tokens == 1).
+    fn admit(&mut self) -> Result<Vec<Response>> {
+        let mut done = Vec::new();
+        for slot in 0..self.slots.len() {
+            if self.slots[slot].is_some() {
+                continue;
+            }
+            let Some(req) = self.queue.pop() else { break };
+            if let Some(resp) = self.admit_one(slot, req)? {
+                done.push(resp);
             }
         }
         Ok(done)
+    }
+
+    /// While a strictly higher-class request heads the queue and the
+    /// batch is full, preempt the lowest-class in-flight generation:
+    /// extract its KV state, checkpoint its generated prefix, re-queue
+    /// it at the front of its class, and admit the waiting request into
+    /// the freed slot. Decisions compare *static* classes (aging never
+    /// promotes anyone into preempting), the tie-break victims the
+    /// longest remaining generation, and the strict `<` comparison
+    /// makes equal-class thrash impossible. Each iteration dispatches
+    /// one queued request, so the loop terminates.
+    fn preempt(&mut self) -> Result<Vec<Response>> {
+        let mut done = Vec::new();
+        loop {
+            let Some(head_class) = self.queue.peek().map(|r| r.priority) else {
+                break;
+            };
+            // A slot freed mid-loop (an admitted request retiring
+            // instantly) is plain-admitted into, never preempted for.
+            if let Some(free) = self.slots.iter().position(|s| s.is_none()) {
+                let head = self.queue.pop().expect("peeked above");
+                if let Some(resp) = self.admit_one(free, head)? {
+                    done.push(resp);
+                }
+                continue;
+            }
+            // Lowest static class among active slots; ties prefer the
+            // generation with the most tokens still to go.
+            let mut victim: Option<(usize, i32, usize)> = None;
+            for (i, s) in self.slots.iter().enumerate() {
+                let Some(a) = s else { continue };
+                let remaining = a.req.max_new_tokens.saturating_sub(a.generated.len());
+                let better = match victim {
+                    None => true,
+                    Some((_, vp, vr)) => {
+                        a.req.priority < vp || (a.req.priority == vp && remaining > vr)
+                    }
+                };
+                if better {
+                    victim = Some((i, a.req.priority, remaining));
+                }
+            }
+            let Some((slot, victim_class, _)) = victim else { break };
+            if victim_class >= head_class {
+                break;
+            }
+
+            let a = self.slots[slot].take().expect("victim is active");
+            let kv = self.backend.take_slot(slot)?;
+            let mut req = a.req;
+            // Queue-wait accounting restarts now; the wait already paid
+            // is preserved inside the checkpointed timing.
+            req.enqueued_at = Some(Instant::now());
+            req.resume = Some(Box::new(ResumeState {
+                generated: a.generated,
+                pos: a.pos,
+                last: a.last,
+                kv,
+                timing: a.timing,
+            }));
+            self.queue.push_front(req);
+            self.stats.preemptions += 1;
+
+            let head = self.queue.pop().expect("queue was non-empty");
+            if let Some(resp) = self.admit_one(slot, head)? {
+                done.push(resp);
+            }
+        }
+        Ok(done)
+    }
+
+    /// Answer every queued request whose deadline passed while it
+    /// waited with a [`FinishReason::Expired`] response instead of
+    /// running dead work. A preempted-then-expired request reports its
+    /// generated prefix.
+    fn expire_queued(&mut self) -> Vec<Response> {
+        let now = Instant::now();
+        self.queue
+            .expire(now)
+            .into_iter()
+            .map(|mut r| {
+                self.stats.expired += 1;
+                let (tokens, timing) = match r.resume.take() {
+                    Some(state) => (state.generated, state.timing),
+                    None => (Vec::new(), Timing::default()),
+                };
+                Response {
+                    id: r.id,
+                    tokens,
+                    finish_reason: FinishReason::Expired,
+                    timing,
+                }
+            })
+            .collect()
     }
 
     fn finish_reason(&self, a: &Active) -> Option<FinishReason> {
@@ -247,10 +390,14 @@ impl<B: Backend> Engine<B> {
         }
     }
 
-    /// One engine step: admit + one batched decode. Returns any
-    /// responses completed during this step.
+    /// One engine step: expire + admit (+ preempt) + one batched
+    /// decode. Returns any responses completed during this step.
     pub fn step(&mut self) -> Result<Vec<Response>> {
-        let mut done = self.admit()?;
+        let mut done = self.expire_queued();
+        done.extend(self.admit()?);
+        if self.preemption && !self.queue.is_empty() {
+            done.extend(self.preempt()?);
+        }
         let active = self.active();
         if active == 0 {
             return Ok(done);
@@ -313,7 +460,7 @@ impl<B: Backend> Engine<B> {
 
 #[cfg(test)]
 mod tests {
-    use super::super::backend::MockBackend;
+    use super::super::backend::{DigestBackend, MockBackend};
     use super::*;
 
     fn engine(batch: usize) -> Engine<MockBackend> {
@@ -404,7 +551,7 @@ mod tests {
             MockBackend::new(1, 32, 64),
             EngineConfig {
                 queue_capacity: 2,
-                sample_seed: 0,
+                ..EngineConfig::default()
             },
         );
         e.submit(Request::greedy(1, vec![1], 2)).unwrap();
@@ -460,5 +607,170 @@ mod tests {
         let total: usize = rs.iter().map(|r| r.tokens.len()).sum();
         assert_eq!(e.stats().tokens as usize, total);
         assert_eq!(e.stats().completed, 4);
+    }
+
+    #[test]
+    fn high_priority_preempts_and_victim_resumes_bit_identically() {
+        // Baseline: the victim generating alone, never preempted.
+        let mut base = engine(1);
+        base.submit(Request::greedy(1, vec![5, 6], 8)).unwrap();
+        let baseline = base.run_to_completion(100).unwrap();
+
+        let mut e = engine(1);
+        e.submit(Request::greedy(1, vec![5, 6], 8).with_priority(-2))
+            .unwrap();
+        e.step().unwrap();
+        e.step().unwrap();
+        // Interactive request arrives mid-generation; the only slot is
+        // held by a strictly lower class → preempt.
+        e.submit(Request::greedy(2, vec![1], 2).with_priority(3))
+            .unwrap();
+        let rs = e.run_to_completion(200).unwrap();
+        assert_eq!(e.stats().preemptions, 1);
+        let victim = rs.iter().find(|r| r.id == 1).unwrap();
+        let vip = rs.iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(vip.tokens.len(), 2);
+        assert_eq!(
+            victim.tokens, baseline[0].tokens,
+            "preempt + KV-splice resume must be lossless"
+        );
+        assert_eq!(victim.finish_reason, FinishReason::Length);
+    }
+
+    #[test]
+    fn victim_resuming_in_a_different_slot_stays_bit_identical() {
+        let be = || DigestBackend::with_digest(0x5EED, 2, 64, 256);
+        let baseline_for = |id: u64, prompt: Vec<u32>, n: usize| {
+            let mut b = Engine::new(be(), EngineConfig::default());
+            b.submit(Request::greedy(id, prompt, n)).unwrap();
+            b.run_to_completion(1000).unwrap().remove(0).tokens
+        };
+        let base1 = baseline_for(1, vec![9, 9], 20);
+        let base2 = baseline_for(2, vec![8], 30);
+
+        let mut e = Engine::new(be(), EngineConfig::default());
+        e.submit(Request::greedy(1, vec![9, 9], 20).with_priority(-1))
+            .unwrap();
+        e.submit(Request::greedy(2, vec![8], 30).with_priority(-1))
+            .unwrap();
+        e.step().unwrap(); // both admitted, one decode step
+        // Two interactive arrivals evict BOTH low-class generations;
+        // the shorter one finishes first, so victims resume in slots
+        // they did not originally occupy.
+        e.submit(Request::greedy(3, vec![7], 2).with_priority(4))
+            .unwrap();
+        e.submit(Request::greedy(4, vec![6], 6).with_priority(4))
+            .unwrap();
+        let rs = e.run_to_completion(1000).unwrap();
+        assert_eq!(e.stats().preemptions, 2);
+        assert_eq!(rs.len(), 4);
+        assert_eq!(
+            rs.iter().find(|r| r.id == 1).unwrap().tokens,
+            base1,
+            "slot reassignment must not leak into tokens"
+        );
+        assert_eq!(rs.iter().find(|r| r.id == 2).unwrap().tokens, base2);
+    }
+
+    #[test]
+    fn preemption_off_never_interrupts_active_work() {
+        let mut e = Engine::new(
+            MockBackend::new(1, 32, 64),
+            EngineConfig {
+                preemption: false,
+                ..EngineConfig::default()
+            },
+        );
+        e.submit(Request::greedy(1, vec![1], 10).with_priority(-5))
+            .unwrap();
+        e.step().unwrap();
+        e.submit(Request::greedy(2, vec![2], 2).with_priority(5))
+            .unwrap();
+        let rs = e.run_to_completion(100).unwrap();
+        assert_eq!(e.stats().preemptions, 0);
+        let order: Vec<u64> = rs.iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![1, 2], "batch work ran to completion first");
+    }
+
+    #[test]
+    fn equal_class_never_preempts() {
+        let mut e = engine(1);
+        e.submit(Request::greedy(1, vec![1], 10)).unwrap();
+        e.step().unwrap();
+        e.submit(Request::greedy(2, vec![2], 2)).unwrap();
+        e.run_to_completion(100).unwrap();
+        assert_eq!(e.stats().preemptions, 0, "strict < comparison, no thrash");
+    }
+
+    #[test]
+    fn queued_past_deadline_requests_expire_instead_of_running() {
+        let mut e = engine(1);
+        e.submit(Request::greedy(1, vec![1], 50)).unwrap();
+        e.step().unwrap(); // occupies the only slot
+        e.submit(Request::greedy(2, vec![2], 5).with_deadline(Duration::ZERO))
+            .unwrap();
+        let rs = e.step().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].id, 2);
+        assert_eq!(rs[0].finish_reason, FinishReason::Expired);
+        assert!(rs[0].tokens.is_empty());
+        assert_eq!(e.stats().expired, 1);
+        assert_eq!(e.stats().completed, 0, "expiry is not a completion");
+        // The blocker still finishes normally.
+        let rest = e.run_to_completion(100).unwrap();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].id, 1);
+    }
+
+    #[test]
+    fn expired_preempted_request_reports_its_generated_prefix() {
+        let mut e = engine(1);
+        let mut r = Request::greedy(7, vec![1], 50).with_deadline(Duration::ZERO);
+        r.resume = Some(Box::new(ResumeState {
+            generated: vec![3, 4],
+            pos: 5,
+            last: 4,
+            kv: None,
+            timing: Timing::default(),
+        }));
+        e.submit(r).unwrap();
+        let rs = e.step().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].finish_reason, FinishReason::Expired);
+        assert_eq!(rs[0].tokens, vec![3, 4], "partial prefix survives expiry");
+    }
+
+    #[test]
+    fn cancel_after_same_step_retirement_is_a_clean_no_op() {
+        // Single-threaded analogue of "cancel lands after pop, before
+        // batch insert": a 1-token request is popped and retired inside
+        // one step, so a dead-waiter cancel arriving right after finds
+        // it neither queued nor active. The cancel must report false
+        // and leave every gauge reconciled.
+        let mut e = engine(1);
+        e.submit(Request::greedy(1, vec![1], 1)).unwrap();
+        let rs = e.step().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert!(!e.cancel(1));
+        assert_eq!(e.stats().cancelled, 0);
+        let qs = e.queue_stats();
+        assert_eq!(qs.depth, 0);
+        assert_eq!(qs.admitted, qs.dispatched, "no request leaked in the gap");
+    }
+
+    #[test]
+    fn cancel_reaches_a_preempted_requeued_request() {
+        let mut e = engine(1);
+        e.submit(Request::greedy(1, vec![5, 6], 30).with_priority(-1))
+            .unwrap();
+        e.step().unwrap();
+        e.submit(Request::greedy(2, vec![1], 10).with_priority(3))
+            .unwrap();
+        e.step().unwrap(); // preempts id 1; id 2 now holds the slot
+        assert_eq!(e.stats().preemptions, 1);
+        assert!(e.cancel(1), "checkpointed victim must be cancellable while re-queued");
+        assert_eq!(e.stats().cancelled, 1);
+        let rs = e.run_to_completion(100).unwrap();
+        assert!(rs.iter().all(|r| r.id == 2), "victim never resurfaces");
     }
 }

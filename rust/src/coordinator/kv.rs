@@ -89,6 +89,32 @@ impl KvMirror {
         Ok(())
     }
 
+    /// Copy batch slot `slot` out as a single-slot cache
+    /// `[L, 1, MS, H, HD]` — the exact inverse of [`splice_slot`],
+    /// so `splice_slot(s, &extract_slot(s))` is an identity. This is
+    /// how a preempted request's KV state leaves the batch: extract on
+    /// preemption, splice back on resume (possibly into a different
+    /// slot).
+    ///
+    /// [`splice_slot`]: KvMirror::splice_slot
+    pub fn extract_slot(&self, slot: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        if slot >= self.batch {
+            return Err(Error::InvalidArg(format!(
+                "slot {slot} out of range (batch {})",
+                self.batch
+            )));
+        }
+        let n = self.layers * self.slot_stride;
+        let mut k1 = Vec::with_capacity(n);
+        let mut v1 = Vec::with_capacity(n);
+        for l in 0..self.layers {
+            let base = l * self.layer_stride + slot * self.slot_stride;
+            k1.extend_from_slice(&self.k[base..base + self.slot_stride]);
+            v1.extend_from_slice(&self.v[base..base + self.slot_stride]);
+        }
+        Ok((k1, v1))
+    }
+
     /// Read back one slot (testing / debugging).
     pub fn slot_k(&self, slot: usize, layer: usize) -> &[f32] {
         let base = layer * self.layer_stride + slot * self.slot_stride;
@@ -121,6 +147,22 @@ mod tests {
         let mut m = KvMirror::new(1, 2, 4, 1, 2);
         assert!(m.splice_slot(5, &[], &[]).is_err());
         assert!(m.splice_slot(0, &[0.0; 3], &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn extract_inverts_splice() {
+        let mut m = KvMirror::new(2, 3, 4, 2, 2);
+        let per_slot = 2 * 4 * 2 * 2;
+        let k1: Vec<f32> = (0..per_slot).map(|i| i as f32 + 1.0).collect();
+        let v1: Vec<f32> = (0..per_slot).map(|i| -(i as f32) - 1.0).collect();
+        m.splice_slot(2, &k1, &v1).unwrap();
+        let (ek, ev) = m.extract_slot(2).unwrap();
+        assert_eq!(ek, k1);
+        assert_eq!(ev, v1);
+        // Untouched slots extract as zeros; bad slot is refused.
+        let (zk, _) = m.extract_slot(0).unwrap();
+        assert!(zk.iter().all(|&x| x == 0.0));
+        assert!(m.extract_slot(3).is_err());
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //! * [`backend`] — the [`Backend`](backend::Backend) trait the engine
 //!   drives: a PJRT implementation ([`backend::PjrtBackend`]) for
 //!   production and a deterministic mock for hermetic engine tests;
-//! * [`kv`] — host-side KV mirror + slot splicing;
-//! * [`batcher`] — bounded FIFO admission queue with stats;
+//! * [`kv`] — host-side KV mirror + slot splicing/extraction;
+//! * [`batcher`] — bounded priority admission queue with aging,
+//!   deadlines, and stats;
 //! * [`sampler`] — greedy / temperature / top-k sampling;
 //! * [`engine`] — the step loop: admit → prefill → batched decode →
 //!   sample → retire, with continuous slot refill;
@@ -34,5 +35,5 @@ pub use batcher::{AdmissionQueue, QueueStats};
 pub use engine::{Engine, EngineConfig, EngineStats};
 pub use kv::KvMirror;
 pub use multi::{ModelSpec, MultiModelConfig, MultiModelServer};
-pub use request::{Request, Response, Timing};
+pub use request::{Request, Response, ResumeState, Timing, PRIORITY_MAX, PRIORITY_MIN};
 pub use sampler::{SampleCfg, Sampler};

@@ -123,6 +123,11 @@ pub struct MultiModelServer {
     ledger: Arc<ResidencyLedger>,
     entries: Vec<ModelEntry>,
     by_name: HashMap<String, usize>,
+    /// Per-model decode-ahead floors (bytes), in ledger-slot order.
+    /// Captured at construction so live reservation retunes can re-run
+    /// the same `sum of max(floor, reserve) <= budget` check as
+    /// startup.
+    floors: Vec<usize>,
 }
 
 impl MultiModelServer {
@@ -174,6 +179,7 @@ impl MultiModelServer {
             )));
         }
         let mut floor_sum = 0usize;
+        let mut floors = Vec::with_capacity(specs.len());
         for spec in &specs {
             let window = cfg
                 .decode_ahead
@@ -190,6 +196,7 @@ impl MultiModelServer {
             // ahead floor on top of every peer's commitment, so each
             // member contributes the larger of the two.
             floor_sum = floor_sum.saturating_add(floor.max(spec.reserve_bytes));
+            floors.push(floor);
         }
         if cfg.budget_bytes < floor_sum {
             return Err(Error::InvalidArg(format!(
@@ -242,6 +249,7 @@ impl MultiModelServer {
             ledger,
             entries,
             by_name,
+            floors,
         })
     }
 
@@ -300,6 +308,66 @@ impl MultiModelServer {
     /// spec order, so slot `index` is model `index`.
     pub fn model_counters(&self, index: usize) -> crate::residency::ModelQosCounters {
         self.ledger.model_counters(index)
+    }
+
+    /// Re-tune residency reservations **live**, without restarting the
+    /// server (the admin line's `{"reserve":{model: mb}}` verb).
+    ///
+    /// `updates` maps model names to new reservation byte counts;
+    /// models not named keep their current reserve. The new assignment
+    /// passes the exact validation `new` applies at startup — every
+    /// name must be hosted, the reservations must sum within the
+    /// global budget (checked atomically inside the ledger), and the
+    /// budget must still hold the sum of every model's
+    /// `max(decode-ahead floor, reserve)`. On any error nothing
+    /// changes; on success the new floors bind immediately (peer sheds
+    /// stop at the new reserve, and unfilled headroom is committed).
+    pub fn retune_reserves(&self, updates: &[(String, usize)]) -> Result<()> {
+        let mut slot_updates = Vec::with_capacity(updates.len());
+        for (name, bytes) in updates {
+            slot_updates.push((self.resolve(Some(name))?, *bytes));
+        }
+        // Startup's two checks, replayed against the proposed
+        // assignment in the same order (last update wins when a name
+        // repeats, matching the ledger's own resolution). The ledger
+        // re-runs the sum check atomically inside its lock below; this
+        // pre-check just earns the same error wording as `new`.
+        let new_reserve = |i: usize| -> usize {
+            slot_updates
+                .iter()
+                .rev()
+                .find(|&&(slot, _)| slot == i)
+                .map(|&(_, b)| b)
+                .unwrap_or_else(|| self.ledger.reserve_of(i))
+        };
+        let budget = self.ledger.counters().budget_bytes;
+        let reserve_sum = (0..self.floors.len())
+            .fold(0usize, |acc, i| acc.saturating_add(new_reserve(i)));
+        if reserve_sum > budget {
+            return Err(Error::InvalidArg(format!(
+                "residency reservations would sum to {} B but the global weight \
+                 budget is {} B — every reserve is a hard guarantee, so their \
+                 sum must fit the budget; lower the reserves or raise the budget",
+                reserve_sum, budget
+            )));
+        }
+        let mut floor_sum = 0usize;
+        for (i, &floor) in self.floors.iter().enumerate() {
+            floor_sum = floor_sum.saturating_add(floor.max(new_reserve(i)));
+        }
+        if budget < floor_sum {
+            return Err(Error::InvalidArg(format!(
+                "global weight budget {} B cannot hold every model's decode-ahead \
+                 floor under the new reservations (sum of max(floor, reserve) = \
+                 {} B across {} models) — lower the reserves or raise the budget",
+                budget,
+                floor_sum,
+                self.entries.len()
+            )));
+        }
+        self.ledger
+            .set_reserves(&slot_updates)
+            .map_err(Error::InvalidArg)
     }
 
     /// The shared decode worker pool.
@@ -533,6 +601,65 @@ mod tests {
         // Both models moved their own cache counters.
         assert!(multi.engine(0).residency().unwrap().misses > 0);
         assert!(multi.engine(1).residency().unwrap().misses > 0);
+    }
+
+    /// Live reservation retune: shifting a guarantee between models
+    /// applies the same startup validation (unknown names, floor sums,
+    /// budget sums) and either lands atomically or changes nothing.
+    #[test]
+    fn retune_reserves_revalidates_and_applies_atomically() {
+        let a = spec("latency", 4, 30);
+        let b = spec("batch", 4, 31);
+        let budget = total_bytes(&a) + total_bytes(&b);
+        let half = budget / 2;
+        let multi = MultiModelServer::new(
+            vec![a.with_qos(half, 2.0), b],
+            MultiModelConfig {
+                budget_bytes: budget,
+                ..MultiModelConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(multi.model_counters(0).reserved_bytes, half);
+        assert_eq!(multi.model_counters(1).reserved_bytes, 0);
+
+        // Shift the guarantee: latency gives most of it up, batch
+        // picks some up. One atomic verb, both visible after.
+        multi
+            .retune_reserves(&[("latency".to_string(), half / 4), ("batch".to_string(), half / 2)])
+            .unwrap();
+        assert_eq!(multi.model_counters(0).reserved_bytes, half / 4);
+        assert_eq!(multi.model_counters(1).reserved_bytes, half / 2);
+        assert_eq!(multi.ledger().counters().reserved_bytes, half / 4 + half / 2);
+
+        // Unknown model name: refused, nothing moves.
+        let err = multi.retune_reserves(&[("gamma".to_string(), 1)]).unwrap_err();
+        assert!(err.to_string().contains("unknown model"), "{err}");
+        assert_eq!(multi.model_counters(0).reserved_bytes, half / 4);
+
+        // New sum past the budget: refused atomically — even though
+        // the first update alone would fit.
+        let err = multi
+            .retune_reserves(&[("latency".to_string(), 0), ("batch".to_string(), budget + 1)])
+            .unwrap_err();
+        assert!(err.to_string().contains("reservations"), "{err}");
+        assert!(err.to_string().contains("guarantee"), "{err}");
+        assert_eq!(multi.model_counters(0).reserved_bytes, half / 4);
+        assert_eq!(multi.model_counters(1).reserved_bytes, half / 2);
+
+        // Overflow must not wrap past the check.
+        assert!(multi
+            .retune_reserves(&[
+                ("latency".to_string(), usize::MAX),
+                ("batch".to_string(), usize::MAX),
+            ])
+            .is_err());
+
+        // A repeated name resolves last-wins, like the ledger.
+        multi
+            .retune_reserves(&[("batch".to_string(), budget + 1), ("batch".to_string(), 0)])
+            .unwrap();
+        assert_eq!(multi.model_counters(1).reserved_bytes, 0);
     }
 
     /// QoS moves *where bytes are resident*, never *what the models

@@ -2,6 +2,11 @@
 
 use std::time::{Duration, Instant};
 
+/// Highest priority a request may carry on the wire (inclusive).
+pub const PRIORITY_MAX: i32 = 8;
+/// Lowest priority a request may carry on the wire (inclusive).
+pub const PRIORITY_MIN: i32 = -8;
+
 /// A generation request.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -19,6 +24,18 @@ pub struct Request {
     pub stop_token: Option<u32>,
     /// Enqueue timestamp (set by the engine if `None`-equivalent).
     pub enqueued_at: Option<Instant>,
+    /// Scheduling class: higher runs sooner, may preempt lower. 0 is
+    /// the normal interactive class, negatives are batch traffic.
+    /// Bounded to `[PRIORITY_MIN, PRIORITY_MAX]` at the protocol edge.
+    pub priority: i32,
+    /// Queue-side deadline relative to `enqueued_at`. A request still
+    /// *queued* past its deadline is answered with an expired error
+    /// instead of running dead work; once admitted it runs to
+    /// completion.
+    pub deadline: Option<Duration>,
+    /// Checkpoint of a preempted generation; `None` for fresh
+    /// requests. Boxed: the common path should not pay its size.
+    pub resume: Option<Box<ResumeState>>,
 }
 
 impl Request {
@@ -32,8 +49,41 @@ impl Request {
             top_k: 0,
             stop_token: None,
             enqueued_at: None,
+            priority: 0,
+            deadline: None,
+            resume: None,
         }
     }
+
+    /// Builder-style priority override.
+    pub fn with_priority(mut self, priority: i32) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Builder-style deadline override.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// Everything a preempted generation needs to continue bit-identically
+/// after re-admission: the tokens already emitted, the sequence
+/// position, and (for KV-stateful backends) the slot's extracted cache.
+#[derive(Debug, Clone)]
+pub struct ResumeState {
+    /// Tokens generated before preemption (prompt not included).
+    pub generated: Vec<u32>,
+    /// Sequence position the next decode step writes at.
+    pub pos: usize,
+    /// Last emitted token (the next decode step's input).
+    pub last: u32,
+    /// Extracted KV state (`None` for stateless digest backends).
+    pub kv: Option<(Vec<f32>, Vec<f32>)>,
+    /// Timings accumulated before preemption; the resumed run adds to
+    /// them so the response reports whole-request phase costs.
+    pub timing: Timing,
 }
 
 /// Phase timings for one request (the per-request Table II analogue).
@@ -71,6 +121,9 @@ pub enum FinishReason {
     Stop,
     /// Ran out of KV-cache capacity.
     Capacity,
+    /// Deadline passed while still queued; never ran (any tokens in
+    /// the response are a preempted prefix).
+    Expired,
 }
 
 #[cfg(test)]
@@ -84,5 +137,17 @@ mod tests {
         assert_eq!(r.temperature, 0.0);
         assert_eq!(r.top_k, 0);
         assert!(r.stop_token.is_none());
+        assert_eq!(r.priority, 0);
+        assert!(r.deadline.is_none());
+        assert!(r.resume.is_none());
+    }
+
+    #[test]
+    fn builders_set_class_fields() {
+        let r = Request::greedy(1, vec![1], 4)
+            .with_priority(-3)
+            .with_deadline(Duration::from_millis(250));
+        assert_eq!(r.priority, -3);
+        assert_eq!(r.deadline, Some(Duration::from_millis(250)));
     }
 }

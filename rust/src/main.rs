@@ -136,7 +136,17 @@ commands:
                 is O(shards), not O(connections)), --max-conn-buffered-kb
                 K caps each connection's reply queue (non-reading
                 clients are shed at the cap), --drain-timeout-ms T
-                bounds the graceful drain at shutdown
+                bounds the graceful drain at shutdown; request QoS:
+                requests may carry "priority" (-8..8, higher first) and
+                "deadline_ms" (queued requests past it are answered
+                with {"error":...,"expired":true}); --preemption on|off
+                lets a higher-class arrival checkpoint the lowest-class
+                running generation and resume it bit-identically later
+                (default on), --aging-ms N promotes a waiting request
+                one class per N ms so low classes never starve (0
+                disables, default 1000); on a multi-model host the
+                admin line {"reserve":{model:mb}} re-tunes residency
+                reservations live under startup's validation
   latency       Table II-style latency model for an edge profile,
                 including streaming (layer-ahead) first-token estimates
                 and residency fault-in costs (serial and decode-ahead
@@ -635,13 +645,43 @@ fn serve_config(args: &Args) -> Result<entrollm::server::ServeConfig> {
     })
 }
 
+/// Request-QoS tuning shared by single- and multi-model serving:
+/// `--preemption on|off` (a higher-class arrival may checkpoint and
+/// requeue the lowest-class in-flight generation; default on) and
+/// `--aging-ms N` (a queued request gains one effective priority step
+/// per N ms waited, so low classes never starve; 0 disables).
+fn engine_config(args: &Args) -> Result<EngineConfig> {
+    let defaults = EngineConfig::default();
+    let preemption = match args.opt("preemption", "on") {
+        "on" => true,
+        "off" => false,
+        other => {
+            return Err(Error::InvalidArg(format!(
+                "--preemption must be on or off, got {other:?}"
+            )))
+        }
+    };
+    let default_aging_ms = defaults.aging.map(|d| d.as_millis() as u64).unwrap_or(0);
+    let aging_ms: u64 = args.opt_parse("aging-ms", default_aging_ms)?;
+    Ok(EngineConfig {
+        preemption,
+        aging: if aging_ms > 0 {
+            Some(std::time::Duration::from_millis(aging_ms))
+        } else {
+            None
+        },
+        ..defaults
+    })
+}
+
 fn serve_with<B: entrollm::coordinator::Backend>(
     backend: B,
     port: u16,
     tag: &str,
     cfg: &entrollm::server::ServeConfig,
+    engine_cfg: EngineConfig,
 ) -> Result<()> {
-    let mut engine = Engine::new(backend, EngineConfig::default());
+    let mut engine = Engine::new(backend, engine_cfg);
     let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
     println!(
         "serving {tag} on 127.0.0.1:{port} ({} I/O shards; ctrl-c to stop)",
@@ -771,8 +811,13 @@ fn serve_multi_models(
     let budget = entrollm::pipeline::weight_budget_bytes(mb)?;
     let decode_ahead: usize = args.opt_parse("decode-ahead", 2usize)?;
     let workers: usize = args.opt_parse("prefetch-workers", 2usize)?.clamp(1, 32);
-    let mut multi =
-        entrollm::pipeline::open_multi_model_server(specs, budget, decode_ahead, workers)?;
+    let mut multi = entrollm::pipeline::open_multi_model_server(
+        specs,
+        budget,
+        decode_ahead,
+        workers,
+        engine_config(args)?,
+    )?;
     println!(
         "multi-model serving: {} models | shared budget {} | decode-ahead {} | \
          {} pool workers",
@@ -818,11 +863,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return serve_multi_models(args, specs, port);
     }
     let cfg = serve_config(args)?;
+    let ecfg = engine_config(args)?;
     if wants_residency(args) {
         return match resident_serving(args)? {
-            ResidentServing::Plain(b) => serve_with(b, port, "resident (digest backend)", &cfg),
+            ResidentServing::Plain(b) => {
+                serve_with(b, port, "resident (digest backend)", &cfg, ecfg)
+            }
             ResidentServing::Prefetching(b) => {
-                serve_with(b, port, "resident (decode-ahead digest backend)", &cfg)
+                serve_with(b, port, "resident (decode-ahead digest backend)", &cfg, ecfg)
             }
         };
     }
@@ -830,7 +878,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let flavor = Flavor::parse(args.opt("flavor", "u8"))?;
     let threads: usize = args.opt_parse("threads", 4)?;
     let backend = load_serving_backend(args, artifacts, flavor, threads)?;
-    serve_with(backend, port, flavor.tag(), &cfg)
+    serve_with(backend, port, flavor.tag(), &cfg, ecfg)
 }
 
 fn cmd_latency(args: &Args) -> Result<()> {

@@ -391,6 +391,7 @@ pub fn open_multi_model_server(
     budget_bytes: usize,
     decode_ahead: usize,
     workers: usize,
+    engine: crate::coordinator::EngineConfig,
 ) -> Result<crate::coordinator::MultiModelServer> {
     let mut model_specs = Vec::with_capacity(specs.len());
     for spec in specs {
@@ -406,6 +407,7 @@ pub fn open_multi_model_server(
         budget_bytes,
         decode_ahead,
         workers,
+        engine,
         ..crate::coordinator::MultiModelConfig::default()
     };
     crate::coordinator::MultiModelServer::new(model_specs, cfg)
@@ -565,7 +567,14 @@ mod tests {
         // spec: it must land in the ledger.
         paths[0].reserve_bytes = budget / 8;
         paths[0].weight = 2.0;
-        let multi = open_multi_model_server(paths, budget, 2, 1).unwrap();
+        let multi = open_multi_model_server(
+            paths,
+            budget,
+            2,
+            1,
+            crate::coordinator::EngineConfig::default(),
+        )
+        .unwrap();
         assert_eq!(multi.n_models(), 2);
         assert_eq!(multi.name(0), "a");
         assert_eq!(multi.resolve(Some("b")).unwrap(), 1);
@@ -581,7 +590,8 @@ mod tests {
             )],
             budget,
             2,
-            1
+            1,
+            crate::coordinator::EngineConfig::default()
         )
         .is_err());
         std::fs::remove_dir_all(&dir).ok();

@@ -291,6 +291,45 @@ impl ResidencyLedger {
         self.lock().models[slot].weight
     }
 
+    /// Atomically replace several models' reservations — the live
+    /// analogue of startup's reserve configuration, driving the admin
+    /// line's `{"reserve":{model:mb}}` verb. Validates inside ONE
+    /// critical section that the *new* total reserve sum fits the
+    /// budget, so two concurrent re-tunes can never both pass a stale
+    /// check and overshoot together; on error nothing changes. Slots
+    /// absent from `updates` keep their current reserve. Floor
+    /// validation (decode-ahead working sets) belongs to the
+    /// coordinator, which layers it on top before calling this.
+    pub fn set_reserves(&self, updates: &[(usize, usize)]) -> Result<(), String> {
+        let mut st = self.lock();
+        for &(slot, _) in updates {
+            if slot >= st.models.len() {
+                return Err(format!("ledger slot {slot} out of range"));
+            }
+        }
+        let mut new_total: usize = 0;
+        for (i, m) in st.models.iter().enumerate() {
+            let reserve = updates
+                .iter()
+                .rev()
+                .find(|&&(slot, _)| slot == i)
+                .map(|&(_, r)| r)
+                .unwrap_or(m.reserve);
+            new_total = new_total.saturating_add(reserve);
+        }
+        if new_total > st.budget {
+            return Err(format!(
+                "reservations sum to {new_total} bytes, over the {} byte budget — \
+                 a set of guarantees that cannot all be honored",
+                st.budget
+            ));
+        }
+        for &(slot, reserve) in updates {
+            st.models[slot].reserve = reserve;
+        }
+        Ok(())
+    }
+
     /// Record a completed peer shed: `requester` reclaimed `bytes`
     /// from `victim` (QoS observability; the byte accounting itself
     /// moved through [`ResidencyLedger::release`] during the shed).
@@ -510,6 +549,32 @@ mod tests {
             let slot = ledger.register_with(0, w);
             assert_eq!(ledger.weight_of(slot), 1.0, "weight {w} must clamp");
         }
+    }
+
+    /// Live reservation re-tuning: sum-validated atomically, effective
+    /// immediately, refused without side effects when over budget.
+    #[test]
+    fn set_reserves_validates_the_new_sum_atomically() {
+        let ledger = ResidencyLedger::new(1000);
+        let a = ledger.register_with(600, 1.0);
+        let b = ledger.register();
+        // Shifting the guarantee from a to b is fine.
+        ledger.set_reserves(&[(a, 100), (b, 700)]).unwrap();
+        assert_eq!(ledger.reserve_of(a), 100);
+        assert_eq!(ledger.reserve_of(b), 700);
+        assert_eq!(ledger.counters().reserved_bytes, 800);
+        // An update that would overshoot — counting slots NOT in the
+        // update at their current reserve — is refused wholesale.
+        let err = ledger.set_reserves(&[(a, 400)]).unwrap_err();
+        assert!(err.contains("cannot all be honored"), "{err}");
+        assert_eq!(ledger.reserve_of(a), 100, "refused update changes nothing");
+        assert_eq!(ledger.reserve_of(b), 700);
+        // Out-of-range slots are refused before any mutation.
+        assert!(ledger.set_reserves(&[(a, 0), (99, 1)]).is_err());
+        assert_eq!(ledger.reserve_of(a), 100);
+        // The new reserve constrains admission right away.
+        assert!(!ledger.try_charge(a, 201), "b's unfilled 700 committed");
+        assert!(ledger.try_charge(a, 200));
     }
 
     /// Shed bookkeeping: `note_shed` moves both directional counters.

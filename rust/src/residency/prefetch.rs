@@ -1136,9 +1136,9 @@ impl Backend for PrefetchingDigestBackend {
         // decodes on the pool while layer `i`'s digest fold runs here.
         let digest = self.weights.digest()?;
         let mut out = Vec::with_capacity(self.cfg.batch * self.cfg.vocab);
-        for (slot, (&t, &p)) in tokens.iter().zip(pos).enumerate() {
+        for (&t, &p) in tokens.iter().zip(pos) {
             out.extend_from_slice(
-                &self.onehot(digest_decode_next(digest, slot, t, p, self.cfg.vocab)),
+                &self.onehot(digest_decode_next(digest, t, p, self.cfg.vocab)),
             );
         }
         Ok(out)

@@ -48,7 +48,9 @@ pub use frontdoor::{
 
 use frontdoor::FrontDoor;
 
-use crate::coordinator::{Backend, Engine, MultiModelServer, Request, Response};
+use crate::coordinator::{
+    Backend, Engine, MultiModelServer, Request, Response, PRIORITY_MAX, PRIORITY_MIN,
+};
 use crate::corpus::ByteTokenizer;
 use crate::json::{self, Value};
 use crate::{Error, Result};
@@ -89,6 +91,34 @@ pub fn parse_request_value(v: &Value, next_id: u64) -> Result<Request> {
             Error::InvalidArg("\"id\" must be a non-negative integer below 2^53".into())
         })?,
     };
+    // Same strictness for the request class: a fractional or
+    // out-of-range priority silently clamped would reorder *other*
+    // clients' requests. Reject instead.
+    let priority = match v.get_opt("priority") {
+        None => 0,
+        Some(x) => {
+            let bad = || {
+                Error::InvalidArg(format!(
+                    "\"priority\" must be an integer in [{PRIORITY_MIN}, {PRIORITY_MAX}]"
+                ))
+            };
+            let n = x.as_f64().map_err(|_| bad())?;
+            if n.fract() != 0.0 || n < PRIORITY_MIN as f64 || n > PRIORITY_MAX as f64 {
+                return Err(bad());
+            }
+            n as i32
+        }
+    };
+    let deadline = v
+        .get_opt("deadline_ms")
+        .map(|x| {
+            x.as_u64().map(Duration::from_millis).map_err(|_| {
+                Error::InvalidArg(
+                    "\"deadline_ms\" must be a non-negative integer below 2^53".into(),
+                )
+            })
+        })
+        .transpose()?;
     Ok(Request {
         id,
         prompt,
@@ -109,6 +139,9 @@ pub fn parse_request_value(v: &Value, next_id: u64) -> Result<Request> {
             .unwrap_or(0),
         stop_token: Some(u32::from(b'.')),
         enqueued_at: None,
+        priority,
+        deadline,
+        resume: None,
     })
 }
 
@@ -125,6 +158,7 @@ pub fn format_response(r: &Response) -> String {
                 crate::coordinator::request::FinishReason::Length => "length",
                 crate::coordinator::request::FinishReason::Stop => "stop",
                 crate::coordinator::request::FinishReason::Capacity => "capacity",
+                crate::coordinator::request::FinishReason::Expired => "expired",
             }),
         ),
         (
@@ -142,6 +176,10 @@ pub(crate) enum Incoming {
     /// A generation request plus its optional `"model"` routing name.
     Req(Request, Option<String>, ReplyHandle),
     Stats(ReplyHandle),
+    /// The admin line's live reservation retune
+    /// (`{"reserve":{model: mb}}`), already parsed into
+    /// (name, bytes) pairs.
+    Reserve(Vec<(String, usize)>, ReplyHandle),
     Bad(String, ReplyHandle),
 }
 
@@ -159,6 +197,54 @@ fn error_line(msg: &str) -> String {
 /// full. Clients distinguish it from protocol errors and back off.
 fn shed_line(msg: &str) -> String {
     json::obj(vec![("error", json::s(msg)), ("shed", Value::Bool(true))]).to_json()
+}
+
+/// The reply for a request whose deadline passed while it was still
+/// queued (`"expired": true`): it never ran to completion — any tokens
+/// on the line are a preempted prefix — so clients distinguish it from
+/// protocol errors (no marker) and load shedding (`"shed": true`).
+fn expired_line(resp: &Response) -> String {
+    json::obj(vec![
+        ("id", json::num(resp.id as f64)),
+        ("error", json::s("deadline expired while queued")),
+        ("expired", Value::Bool(true)),
+        ("text", json::s(&ByteTokenizer.decode(&resp.tokens))),
+        ("tokens", json::num(resp.tokens.len() as f64)),
+    ])
+    .to_json()
+}
+
+/// Serialize one engine response for its waiter: the normal response
+/// line, or the distinguishable expired line for a queued request
+/// whose deadline passed before it ran.
+fn reply_line(resp: &Response) -> String {
+    if matches!(
+        resp.finish_reason,
+        crate::coordinator::request::FinishReason::Expired
+    ) {
+        expired_line(resp)
+    } else {
+        format_response(resp)
+    }
+}
+
+/// Parse the admin line's `{"reserve":{model: mb}}` verb: each value is
+/// the model's new reservation in MiB (matching the `reserve-mb=N`
+/// startup syntax), strictly parsed like request ids.
+fn parse_reserve(v: &Value) -> Result<Vec<(String, usize)>> {
+    let map = v.get("reserve")?.as_object().map_err(|_| {
+        Error::InvalidArg("\"reserve\" must be an object mapping model names to MiB".into())
+    })?;
+    let mut updates = Vec::with_capacity(map.len());
+    for (name, mb) in map {
+        let mb = mb.as_u64().map_err(|_| {
+            Error::InvalidArg(format!(
+                "\"reserve\".{name:?} must be a non-negative integer (MiB)"
+            ))
+        })?;
+        updates.push((name.clone(), (mb as usize).saturating_mul(1 << 20)));
+    }
+    Ok(updates)
 }
 
 /// Extract the optional `"model"` routing field (must be a string when
@@ -210,6 +296,21 @@ fn engine_stats_fields<B: Backend>(engine: &Engine<B>) -> Vec<(&'static str, Val
         ("admitted", json::num(q.admitted as f64)),
         ("rejected", json::num(q.rejected as f64)),
         ("cancelled", json::num(s.cancelled as f64)),
+        ("preemptions", json::num(s.preemptions as f64)),
+        ("expired", json::num(s.expired as f64)),
+        ("aging_promotions", json::num(q.aging_promotions as f64)),
+        // Queue composition by *static* request class (highest first in
+        // the source, sorted by the JSON object's key order on the
+        // wire), so an operator can see who is waiting behind whom.
+        (
+            "queue_by_class",
+            Value::Object(
+                q.by_class
+                    .iter()
+                    .map(|&(class, n)| (class.to_string(), json::num(n as f64)))
+                    .collect(),
+            ),
+        ),
     ];
     if let Some(c) = engine.residency() {
         fields.push(("cache_hits", json::num(c.hits as f64)));
@@ -273,6 +374,8 @@ fn multi_stats_fields(multi: &MultiModelServer) -> Vec<(&'static str, Value)> {
     let mut decode_steps = 0u64;
     let mut occupancy_sum = 0u64;
     let mut cancelled = 0u64;
+    let mut preemptions = 0u64;
+    let mut expired = 0u64;
     let mut active = 0usize;
     let mut depth = 0usize;
     let mut admitted = 0u64;
@@ -287,6 +390,8 @@ fn multi_stats_fields(multi: &MultiModelServer) -> Vec<(&'static str, Value)> {
         decode_steps += s.decode_steps;
         occupancy_sum += s.occupancy_sum;
         cancelled += s.cancelled;
+        preemptions += s.preemptions;
+        expired += s.expired;
         active += engine.active();
         depth += q.depth;
         admitted += q.admitted;
@@ -319,6 +424,8 @@ fn multi_stats_fields(multi: &MultiModelServer) -> Vec<(&'static str, Value)> {
         ("admitted", json::num(admitted as f64)),
         ("rejected", json::num(rejected as f64)),
         ("cancelled", json::num(cancelled as f64)),
+        ("preemptions", json::num(preemptions as f64)),
+        ("expired", json::num(expired as f64)),
         ("ledger_budget_bytes", json::num(ledger.budget_bytes as f64)),
         ("ledger_used_bytes", json::num(ledger.used_bytes as f64)),
         (
@@ -348,12 +455,16 @@ fn classify_line(line: &[u8], reply: &ReplyHandle) -> Option<Incoming> {
     if trimmed.is_empty() {
         return None;
     }
-    // Parse once; `{"stats": true}` is the admin line, anything else is
-    // a generation request.
+    // Parse once; `{"stats": true}` and `{"reserve": {...}}` are admin
+    // lines, anything else is a generation request.
     match Value::parse(trimmed) {
         Ok(ref v) if matches!(v.get_opt("stats"), Some(Value::Bool(true))) => {
             Some(Incoming::Stats(reply.clone()))
         }
+        Ok(ref v) if v.get_opt("reserve").is_some() => match parse_reserve(v) {
+            Ok(updates) => Some(Incoming::Reserve(updates, reply.clone())),
+            Err(e) => Some(Incoming::Bad(e.to_string(), reply.clone())),
+        },
         Ok(ref v) => match parse_model(v)
             .and_then(|model| parse_request_value(v, 0).map(|req| (req, model)))
         {
@@ -488,6 +599,12 @@ fn admit_single<B: Backend>(
         Incoming::Stats(reply) => {
             reply.send(format_stats_with(engine, counters));
         }
+        Incoming::Reserve(_, reply) => {
+            reply.send(error_line(
+                "this server hosts a single unnamed model; live reservation \
+                 re-tuning needs the multi-model server (--model name=path)",
+            ));
+        }
         Incoming::Bad(err, reply) => {
             reply.send(error_line(&err));
         }
@@ -517,7 +634,7 @@ fn sweep_dead_waiters<B: Backend>(
 fn route_reply(waiters: &mut Vec<(u64, ReplyHandle)>, resp: &Response) {
     if let Some(i) = waiters.iter().position(|(id, _)| *id == resp.id) {
         let (_, reply) = waiters.swap_remove(i);
-        reply.send(format_response(resp));
+        reply.send(reply_line(resp));
     }
 }
 
@@ -536,6 +653,9 @@ fn refuse_during_drain<B: Backend>(
         }
         Incoming::Stats(reply) => {
             reply.send(format_stats_with(engine, counters));
+        }
+        Incoming::Reserve(_, reply) => {
+            reply.send(error_line("shutting down"));
         }
         Incoming::Bad(err, reply) => {
             reply.send(error_line(&err));
@@ -667,6 +787,28 @@ fn admit_multi(
         Incoming::Stats(reply) => {
             reply.send(format_multi_stats_with(multi, counters));
         }
+        Incoming::Reserve(updates, reply) => match multi.retune_reserves(&updates) {
+            Ok(()) => {
+                // Echo the full post-retune assignment so the operator
+                // sees exactly what is now guaranteed, per model.
+                let reserved: std::collections::BTreeMap<String, Value> = (0..multi.n_models())
+                    .map(|i| {
+                        (
+                            multi.name(i).to_string(),
+                            json::num(multi.model_counters(i).reserved_bytes as f64),
+                        )
+                    })
+                    .collect();
+                reply.send(
+                    json::obj(vec![
+                        ("ok", Value::Bool(true)),
+                        ("reserved_bytes", Value::Object(reserved)),
+                    ])
+                    .to_json(),
+                );
+            }
+            Err(e) => reply.send(error_line(&e.to_string())),
+        },
         Incoming::Bad(err, reply) => {
             reply.send(error_line(&err));
         }
@@ -695,7 +837,7 @@ fn route_reply_multi(waiters: &mut Vec<(usize, u64, ReplyHandle)>, model: usize,
         .position(|(m, id, _)| *m == model && *id == resp.id)
     {
         let (_, _, reply) = waiters.swap_remove(i);
-        reply.send(format_response(resp));
+        reply.send(reply_line(resp));
     }
 }
 
@@ -711,6 +853,9 @@ fn refuse_during_drain_multi(
         }
         Incoming::Stats(reply) => {
             reply.send(format_multi_stats_with(multi, counters));
+        }
+        Incoming::Reserve(_, reply) => {
+            reply.send(error_line("shutting down"));
         }
         Incoming::Bad(err, reply) => {
             reply.send(error_line(&err));
@@ -802,6 +947,44 @@ mod tests {
         assert_eq!(r.max_new_tokens, 5);
         assert!((r.temperature - 0.5).abs() < 1e-6);
         assert_eq!(r.top_k, 3);
+        // Class fields default to normal priority, no deadline.
+        assert_eq!(r.priority, 0);
+        assert_eq!(r.deadline, None);
+        let r = parse_request(r#"{"prompt":"x","priority":4,"deadline_ms":250}"#, 1).unwrap();
+        assert_eq!(r.priority, 4);
+        assert_eq!(r.deadline, Some(Duration::from_millis(250)));
+    }
+
+    /// The class fields parse with the same strictness as ids: a
+    /// fractional, out-of-range, or mistyped priority/deadline is
+    /// rejected, never silently clamped into someone else's class.
+    #[test]
+    fn parse_request_rejects_bad_class_fields() {
+        for line in [
+            r#"{"prompt":"x","priority":1.5}"#,
+            r#"{"prompt":"x","priority":9}"#,
+            r#"{"prompt":"x","priority":-9}"#,
+            r#"{"prompt":"x","priority":"high"}"#,
+            r#"{"prompt":"x","priority":1e20}"#,
+            r#"{"prompt":"x","deadline_ms":-1}"#,
+            r#"{"prompt":"x","deadline_ms":1.5}"#,
+            r#"{"prompt":"x","deadline_ms":"soon"}"#,
+        ] {
+            let err = parse_request(line, 1).unwrap_err();
+            assert!(
+                err.to_string().contains("priority") || err.to_string().contains("deadline"),
+                "{line}: {err}"
+            );
+        }
+        // The extreme legal classes parse unchanged.
+        let hi = parse_request(r#"{"prompt":"x","priority":8}"#, 1).unwrap();
+        assert_eq!(hi.priority, PRIORITY_MAX);
+        let lo = parse_request(r#"{"prompt":"x","priority":-8}"#, 1).unwrap();
+        assert_eq!(lo.priority, PRIORITY_MIN);
+        // deadline_ms: 0 is legal — "already due" — and distinct from
+        // absent.
+        let due = parse_request(r#"{"prompt":"x","deadline_ms":0}"#, 1).unwrap();
+        assert_eq!(due.deadline, Some(Duration::ZERO));
     }
 
     #[test]
@@ -862,6 +1045,34 @@ mod tests {
         // Ordinary error lines carry no shed marker.
         let v = Value::parse(&error_line("nope")).unwrap();
         assert!(v.get_opt("shed").is_none());
+    }
+
+    /// The expired reply is a third distinguishable line shape: an
+    /// error with `"expired": true` plus the preempted prefix, distinct
+    /// from both protocol errors and load shedding.
+    #[test]
+    fn expired_replies_are_distinguishable_json() {
+        let r = Response {
+            id: 9,
+            tokens: vec![104, 105],
+            finish_reason: crate::coordinator::request::FinishReason::Expired,
+            timing: Default::default(),
+        };
+        let v = Value::parse(&expired_line(&r)).unwrap();
+        assert!(matches!(v.get_opt("expired"), Some(Value::Bool(true))));
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("deadline"), "{v:?}");
+        assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 9);
+        // A preempted-then-expired request's prefix rides along.
+        assert_eq!(v.get("text").unwrap().as_str().unwrap(), "hi");
+        assert_eq!(v.get("tokens").unwrap().as_usize().unwrap(), 2);
+        // `reply_line` picks the expired shape from the finish reason;
+        // the plain serializer names it too.
+        assert!(Value::parse(&reply_line(&r)).unwrap().get_opt("expired").is_some());
+        let v = Value::parse(&format_response(&r)).unwrap();
+        assert_eq!(v.get("finish").unwrap().as_str().unwrap(), "expired");
+        // Shed lines and ordinary errors carry no expired marker.
+        assert!(Value::parse(&shed_line("x")).unwrap().get_opt("expired").is_none());
+        assert!(Value::parse(&error_line("x")).unwrap().get_opt("expired").is_none());
     }
 
     #[test]
@@ -1063,6 +1274,11 @@ mod tests {
             r#"{"model":"m","prompt":"x"}"#, // single-model server: no routing
             r#"{"model":3,"prompt":"x"}"#,   // model must be a string
             r#"{"prompt":""}"#,
+            r#"{"prompt":"x","priority":99}"#, // out-of-range class
+            r#"{"prompt":"x","deadline_ms":-5}"#, // negative deadline
+            r#"{"reserve":{"m":1}}"#, // retune verb: multi-model only
+            r#"{"reserve":{"m":1.5}}"#, // fractional MiB
+            r#"{"reserve":[1]}"#,     // reserve must be an object
         ] {
             let reply = c.roundtrip(line).unwrap();
             assert!(
@@ -1072,10 +1288,11 @@ mod tests {
         }
         // The "model" rejection tells the client what went wrong.
         let reply = c.roundtrip(r#"{"model":"m","prompt":"x"}"#).unwrap();
-        assert!(
-            reply.get("error").unwrap().as_str().unwrap().contains("single"),
-            "{reply:?}"
-        );
+        assert!(reply.get("error").unwrap().as_str().unwrap().contains("single"), "{reply:?}");
+        // So does the reserve-verb rejection: this host has no named
+        // models to retune.
+        let reply = c.roundtrip(r#"{"reserve":{"m":1}}"#).unwrap();
+        assert!(reply.get("error").unwrap().as_str().unwrap().contains("single"), "{reply:?}");
 
         // After all that abuse, the same connection still serves.
         let ok = c.request("ab", 2, 0.0).unwrap();
@@ -1245,8 +1462,9 @@ mod tests {
         // fed through `parse_request` so request shape (stop token,
         // defaults) is exactly what the server builds. Requests run one
         // at a time: a TCP client blocks on each reply, so the serving
-        // engine sees them sequentially too (slot occupancy — which the
-        // digest backend folds into its tokens — must match).
+        // engine sees them sequentially too. (Decode digests are
+        // slot-independent — sequence state, not physical slot, drives
+        // each token — so this matches pacing, not token values.)
         let isolated = |src: &Arc<SegmentSource>, budget: usize, prompts: &[&str]| {
             let ws = PrefetchingWeightSet::new(
                 Arc::clone(src),
@@ -1371,9 +1589,34 @@ mod tests {
             "shared budget must hold under interleaved load"
         );
 
+        // Live reservation retune over the admin line: dropping alpha's
+        // guarantee to zero answers `{"ok":true}` with the post-retune
+        // assignment, and the next stats line reflects it. (These test
+        // models are far smaller than 1 MiB, so zero is the only
+        // interesting in-budget value at the verb's MiB granularity.)
+        let ok = ca.roundtrip(r#"{"reserve":{"alpha":0}}"#).unwrap();
+        assert!(matches!(ok.get_opt("ok"), Some(Value::Bool(true))), "{ok:?}");
+        let reserved = ok.get("reserved_bytes").unwrap();
+        assert_eq!(reserved.get("alpha").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(reserved.get("beta").unwrap().as_usize().unwrap(), 0);
+        let stats = ca.stats().unwrap();
+        assert_eq!(
+            stats.get("ledger_reserved_bytes").unwrap().as_usize().unwrap(),
+            0,
+            "retune must land in the shared ledger"
+        );
+        // Unknown names and over-budget retunes are refused with the
+        // connection intact.
+        let bad = ca.roundtrip(r#"{"reserve":{"gamma":1}}"#).unwrap();
+        assert!(bad.get("error").unwrap().as_str().unwrap().contains("unknown model"), "{bad:?}");
+        let bad = ca.roundtrip(r#"{"reserve":{"alpha":4096}}"#).unwrap();
+        assert!(bad.get("error").unwrap().as_str().unwrap().contains("reservations"), "{bad:?}");
+        let ok = ca.request_model("beta", prompts_b[1], 6, 0.0).unwrap();
+        assert_eq!(ok.get("text").unwrap().as_str().unwrap(), want_b[1]);
+
         stop.store(true, Ordering::Relaxed);
         let (served, multi) = server.join().unwrap();
-        assert_eq!(served, 6);
+        assert_eq!(served, 7);
         drop(multi);
     }
 
@@ -1586,6 +1829,64 @@ mod tests {
         stop.store(true, Ordering::Relaxed);
         let served = server.join().unwrap();
         assert_eq!(served, 1, "only the healthy request completes");
+    }
+
+    /// Request-level deadlines over loopback: a request whose deadline
+    /// passes while it waits behind a same-class blocker (equal classes
+    /// never preempt) is answered with the distinguishable
+    /// `{"error":…,"expired":true}` line, and the admin line's new
+    /// counters record it.
+    #[test]
+    fn queued_deadline_requests_expire_with_distinguishable_replies() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let server = std::thread::spawn(move || {
+            let mut engine = Engine::new(
+                SlowBackend {
+                    inner: MockBackend::new(1, 256, 128),
+                    delay: Duration::from_millis(5),
+                },
+                EngineConfig::default(),
+            );
+            serve(&mut engine, listener, stop2).unwrap()
+        });
+
+        // The blocker holds the only slot. Prompt "." sums to 46, so
+        // the mock's first token is 47 and the +1-per-step chain takes
+        // 128 steps to wrap back to the protocol stop token '.' (46) —
+        // all 60 tokens run, ~300 ms of wall clock.
+        let addr2 = addr.clone();
+        let blocker = std::thread::spawn(move || {
+            let mut c = Client::connect(&addr2).unwrap();
+            c.request(".", 60, 0.0).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(40));
+
+        // Deadline far below the blocker's remaining runtime: the
+        // request expires in the queue and never runs.
+        let mut c = Client::connect(&addr).unwrap();
+        let reply = c
+            .roundtrip(r#"{"prompt":"urgent","max_tokens":4,"deadline_ms":1}"#)
+            .unwrap();
+        assert!(matches!(reply.get_opt("expired"), Some(Value::Bool(true))), "{reply:?}");
+        assert!(reply.get("error").unwrap().as_str().unwrap().contains("deadline"), "{reply:?}");
+
+        let stats = c.stats().unwrap();
+        assert!(stats.get("expired").unwrap().as_usize().unwrap() >= 1);
+        // The new QoS counter family rides along on the admin line.
+        for key in ["preemptions", "aging_promotions"] {
+            assert!(stats.get(key).is_ok(), "missing {key}: {stats:?}");
+        }
+        assert!(stats.get_opt("queue_by_class").is_some(), "{stats:?}");
+
+        let b = blocker.join().unwrap();
+        assert_eq!(b.get("tokens").unwrap().as_usize().unwrap(), 60);
+        stop.store(true, Ordering::Relaxed);
+        // Both reply lines (completion + expiry) count as served.
+        let served = server.join().unwrap();
+        assert_eq!(served, 2);
     }
 
     /// Regression for shutdown dropping in-flight work: a request
