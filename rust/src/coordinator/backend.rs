@@ -65,6 +65,27 @@ pub trait Backend {
     fn take_slot(&mut self, _slot: usize) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
         Ok(None)
     }
+
+    /// Stateless batched greedy evaluation for speculative decoding:
+    /// for each row `i`, return the argmax next token the model emits
+    /// after `tokens[i]` at sequence position `pos[i]`, **without**
+    /// reading or advancing any per-slot KV state. Rows are arbitrary
+    /// `(token, pos)` pairs — they need not correspond to live batch
+    /// slots — which is what lets one call verify a whole proposal
+    /// block (`k + 1` rows per speculating slot) or advance a draft
+    /// model's proposal chain one token across every slot at once.
+    ///
+    /// Backends whose decode depends on slot-bound KV state (the PJRT
+    /// backend) return `Ok(None)`: they cannot evaluate rows detached
+    /// from their slots, and the engine falls back to plain per-token
+    /// decode instead of speculating. Digest-family backends implement
+    /// it as one full weight pass per call (same residency pressure as
+    /// a decode step) followed by the pure per-row next-token map, so
+    /// speculation exercises the residency/ledger machinery exactly
+    /// like real decode traffic.
+    fn argmax_rows(&mut self, _tokens: &[u32], _pos: &[u32]) -> Result<Option<Vec<u32>>> {
+        Ok(None)
+    }
 }
 
 // ------------------------------------------------------------------- PJRT
@@ -414,6 +435,17 @@ impl Backend for DigestBackend {
         }
         Ok(out)
     }
+
+    fn argmax_rows(&mut self, tokens: &[u32], pos: &[u32]) -> Result<Option<Vec<u32>>> {
+        self.steps += 1;
+        Ok(Some(
+            tokens
+                .iter()
+                .zip(pos)
+                .map(|(&t, &p)| digest_decode_next(self.digest, t, p, self.cfg.vocab) as u32)
+                .collect(),
+        ))
+    }
 }
 
 #[cfg(test)]
@@ -509,6 +541,34 @@ mod tests {
         let mut b = DigestBackend::with_digest(0xABCD, 2, 16, 64);
         let logits = b.decode(&[7, 7], &[3, 3]).unwrap();
         assert_eq!(logits[..64], logits[64..]);
+    }
+
+    #[test]
+    fn argmax_rows_matches_decode_argmax_row_for_row() {
+        // The verification seam must agree with plain decode on every
+        // (token, pos) pair — that identity is what makes speculative
+        // acceptance greedy-equivalent.
+        let mut b = DigestBackend::with_digest(0xFEED, 2, 16, 64);
+        let tokens = [7u32, 41];
+        let pos = [3u32, 9];
+        let logits = b.decode(&tokens, &pos).unwrap();
+        let rows = b.argmax_rows(&tokens, &pos).unwrap().expect("digest verifies");
+        for (i, &r) in rows.iter().enumerate() {
+            let row = &logits[i * 64..(i + 1) * 64];
+            assert_eq!(r as usize, crate::coordinator::sampler::argmax(row));
+        }
+        // Rows are slot-free: lengths other than the batch width work.
+        let one = b.argmax_rows(&[7], &[3]).unwrap().unwrap();
+        assert_eq!(one[0], rows[0]);
+    }
+
+    #[test]
+    fn kv_bound_backends_decline_argmax_rows() {
+        // MockBackend's decode is deliberately slot-dependent, so it
+        // keeps the default decline: speculation falls back to plain
+        // decode rather than accepting slot-skewed verification.
+        let mut b = MockBackend::new(2, 16, 32);
+        assert!(b.argmax_rows(&[1, 2], &[0, 0]).unwrap().is_none());
     }
 
     #[test]

@@ -11,10 +11,12 @@
 //! engine's preemption decisions always compare static classes, so aged
 //! batch work can be scheduled fairly without ever preempting anyone.
 //!
-//! Deadlines are queue-side: [`AdmissionQueue::expire`] sweeps out
-//! requests whose deadline passed while they waited, so dead work is
-//! answered (with a distinguishable expired error upstream) instead of
-//! occupying a batch slot. An id → key index keeps [`remove`] and
+//! This queue owns the *queued* half of deadline enforcement:
+//! [`AdmissionQueue::expire`] sweeps out requests whose deadline passed
+//! while they waited, so dead work is answered (with a distinguishable
+//! expired error upstream) instead of occupying a batch slot. The
+//! engine enforces the *running* half, stopping an admitted generation
+//! whose deadline passes mid-flight. An id → key index keeps [`remove`] and
 //! [`expire`] bookkeeping O(log n) per affected entry — dead-waiter
 //! sweeps on deep queues no longer pay a linear scan per cancel.
 //!
@@ -208,9 +210,9 @@ impl AdmissionQueue {
 
     /// Sweep out every queued request whose deadline has passed at
     /// `now`, returning them (resume state intact) so the caller can
-    /// answer each with a distinguishable expired error. Active
-    /// requests are not affected — once admitted, work runs to
-    /// completion.
+    /// answer each with a distinguishable expired error. This sweep
+    /// covers the *queued* side only; the engine separately stops
+    /// running generations whose deadline passes mid-flight.
     pub fn expire(&mut self, now: Instant) -> Vec<Request> {
         self.age(now);
         let dead: Vec<Key> = self

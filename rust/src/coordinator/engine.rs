@@ -17,6 +17,7 @@ use super::backend::Backend;
 use super::batcher::{AdmissionQueue, QueueStats};
 use super::request::{FinishReason, Request, Response, ResumeState, Timing};
 use super::sampler::{SampleCfg, Sampler};
+use super::speculative::{accept_longest_prefix, SpecStats};
 use crate::metrics::LatencyHistogram;
 use crate::Result;
 use std::time::{Duration, Instant};
@@ -172,6 +173,14 @@ impl<B: Backend> Engine<B> {
     /// Borrow the backend (eval tooling).
     pub fn backend(&self) -> &B {
         &self.backend
+    }
+
+    /// Mutably borrow the backend. The multi-model coordinator uses
+    /// this to drive one model's backend as the *draft* proposer while
+    /// another model's engine runs the speculative verify step
+    /// ([`Engine::step_speculative`]).
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
     }
 
     /// Weight-residency cache counters, when the backend faults weights
@@ -366,6 +375,37 @@ impl<B: Backend> Engine<B> {
             .collect()
     }
 
+    /// Stop every *running* generation whose deadline has passed: the
+    /// slot is freed and the request is answered with the prefix it had
+    /// generated, marked [`FinishReason::Expired`]. Together with
+    /// [`Engine::expire_queued`] this makes `deadline_ms` a bound on
+    /// **total** time since enqueue, not just queue wait — a caller who
+    /// stopped waiting at its deadline no longer keeps a batch slot
+    /// burning on an answer nobody reads.
+    fn expire_running(&mut self) -> Vec<Response> {
+        let now = Instant::now();
+        let mut done = Vec::new();
+        for slot in self.slots.iter_mut() {
+            let expired = slot.as_ref().is_some_and(|a| {
+                match (a.req.deadline, a.req.enqueued_at) {
+                    (Some(d), Some(t0)) => now.saturating_duration_since(t0) > d,
+                    _ => false,
+                }
+            });
+            if expired {
+                let a = slot.take().expect("checked above");
+                self.stats.expired += 1;
+                done.push(Response {
+                    id: a.req.id,
+                    tokens: a.generated,
+                    finish_reason: FinishReason::Expired,
+                    timing: a.timing,
+                });
+            }
+        }
+        done
+    }
+
     fn finish_reason(&self, a: &Active) -> Option<FinishReason> {
         if a.generated.len() >= a.req.max_new_tokens {
             return Some(FinishReason::Length);
@@ -390,14 +430,23 @@ impl<B: Backend> Engine<B> {
         }
     }
 
-    /// One engine step: expire + admit (+ preempt) + one batched
-    /// decode. Returns any responses completed during this step.
-    pub fn step(&mut self) -> Result<Vec<Response>> {
+    /// Scheduling phase shared by [`Engine::step`] and
+    /// [`Engine::step_speculative`]: expire (queued *and* running),
+    /// admit, preempt.
+    fn pre_step(&mut self) -> Result<Vec<Response>> {
         let mut done = self.expire_queued();
+        done.extend(self.expire_running());
         done.extend(self.admit()?);
         if self.preemption && !self.queue.is_empty() {
             done.extend(self.preempt()?);
         }
+        Ok(done)
+    }
+
+    /// One plain batched decode over the active slots: decode, sample
+    /// per slot, retire finished sequences.
+    fn decode_once(&mut self) -> Result<Vec<Response>> {
+        let mut done = Vec::new();
         let active = self.active();
         if active == 0 {
             return Ok(done);
@@ -441,6 +490,184 @@ impl<B: Backend> Engine<B> {
                 } else {
                     self.slots[i] = Some(a);
                 }
+            }
+        }
+        Ok(done)
+    }
+
+    /// One engine step: expire + admit (+ preempt) + one batched
+    /// decode. Returns any responses completed during this step.
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        let mut done = self.pre_step()?;
+        done.extend(self.decode_once()?);
+        Ok(done)
+    }
+
+    /// One **speculative** engine step: the scheduling phase of
+    /// [`Engine::step`], then — instead of one plain decode — `draft`
+    /// proposes up to `k` greedy tokens per active slot and this
+    /// engine's (target) backend verifies every proposal block in
+    /// batched [`Backend::argmax_rows`] calls. Acceptance is the
+    /// longest-matching-prefix walk of
+    /// [`crate::coordinator::speculative`]: the emitted stream is
+    /// bit-identical to what plain [`Engine::step`]s would have
+    /// produced, but a step can emit up to `k + 1` tokens per slot.
+    ///
+    /// Falls back to one plain decode (counted in
+    /// [`SpecStats::fallback_steps`]) when any active request samples
+    /// (`temperature > 0` — speculation is greedy-only, and greedy
+    /// sampling never draws from the RNG, so mixing speculative and
+    /// plain steps cannot drift sampler state) or when either backend
+    /// declines stateless verification ([`Backend::argmax_rows`]
+    /// returning `None`).
+    ///
+    /// Preemption interacts coherently: proposals are ephemeral within
+    /// one step, so a checkpoint taken between steps ([`ResumeState`])
+    /// never contains speculative state — a preempted request resumes
+    /// bit-identically whether either run speculated or not.
+    pub fn step_speculative<D: Backend>(
+        &mut self,
+        draft: &mut D,
+        k: usize,
+        spec: &mut SpecStats,
+    ) -> Result<Vec<Response>> {
+        let mut done = self.pre_step()?;
+        let active = self.active();
+        if active == 0 {
+            return Ok(done);
+        }
+        let all_greedy = self
+            .slots
+            .iter()
+            .flatten()
+            .all(|a| a.req.temperature <= 0.0);
+        if !all_greedy {
+            spec.fallback_steps += 1;
+            done.extend(self.decode_once()?);
+            return Ok(done);
+        }
+
+        let max_seq = self.backend.cfg().max_seq;
+        // Per-slot proposal depth: never propose past the KV capacity
+        // (verify rows sit at positions P .. P+kᵢ, all < max_seq) or
+        // past the request's remaining token budget (kᵢ + 1 emitted
+        // tokens at most).
+        let plans: Vec<(usize, usize)> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| {
+                s.as_ref().map(|a| {
+                    let cap = (max_seq - 1).saturating_sub(a.pos);
+                    let rem = a.req.max_new_tokens.saturating_sub(a.generated.len());
+                    (i, k.min(cap).min(rem.saturating_sub(1)))
+                })
+            })
+            .collect();
+
+        let t0 = Instant::now();
+
+        // Draft proposal chains, advanced one token per batched round:
+        // round j extends every slot whose depth exceeds j.
+        let mut proposals: Vec<Vec<u32>> = vec![Vec::new(); plans.len()];
+        let max_k = plans.iter().map(|&(_, ki)| ki).max().unwrap_or(0);
+        let draft_batch = draft.cfg().batch.max(1);
+        for round in 0..max_k {
+            let mut lanes: Vec<usize> = Vec::new();
+            let mut toks: Vec<u32> = Vec::new();
+            let mut pos: Vec<u32> = Vec::new();
+            for (pi, &(slot, ki)) in plans.iter().enumerate() {
+                if round < ki {
+                    let a = self.slots[slot].as_ref().expect("planned slot is active");
+                    let tail = proposals[pi].last().copied().unwrap_or(a.last);
+                    lanes.push(pi);
+                    toks.push(tail);
+                    pos.push((a.pos + round) as u32);
+                }
+            }
+            if lanes.is_empty() {
+                break;
+            }
+            let mut verdicts: Vec<u32> = Vec::with_capacity(lanes.len());
+            for chunk in 0..lanes.len().div_ceil(draft_batch) {
+                let lo = chunk * draft_batch;
+                let hi = (lo + draft_batch).min(lanes.len());
+                match draft.argmax_rows(&toks[lo..hi], &pos[lo..hi])? {
+                    Some(v) => verdicts.extend(v),
+                    None => {
+                        // Draft cannot verify detached rows: no
+                        // speculation possible with this pairing.
+                        spec.fallback_steps += 1;
+                        done.extend(self.decode_once()?);
+                        return Ok(done);
+                    }
+                }
+            }
+            for (&pi, &tok) in lanes.iter().zip(&verdicts) {
+                proposals[pi].push(tok);
+            }
+        }
+        spec.proposed += proposals.iter().map(|p| p.len() as u64).sum::<u64>();
+
+        // Target verification: one row block of kᵢ + 1 rows per slot,
+        // chunked to the target's batch width.
+        let mut vtoks: Vec<u32> = Vec::new();
+        let mut vpos: Vec<u32> = Vec::new();
+        for (pi, &(slot, _)) in plans.iter().enumerate() {
+            let a = self.slots[slot].as_ref().expect("planned slot is active");
+            vtoks.push(a.last);
+            vpos.push(a.pos as u32);
+            for (j, &d) in proposals[pi].iter().enumerate() {
+                vtoks.push(d);
+                vpos.push((a.pos + j + 1) as u32);
+            }
+        }
+        let target_batch = self.backend.cfg().batch.max(1);
+        let mut verdicts: Vec<u32> = Vec::with_capacity(vtoks.len());
+        for chunk in 0..vtoks.len().div_ceil(target_batch) {
+            let lo = chunk * target_batch;
+            let hi = (lo + target_batch).min(vtoks.len());
+            match self.backend.argmax_rows(&vtoks[lo..hi], &vpos[lo..hi])? {
+                Some(v) => verdicts.extend(v),
+                None => {
+                    spec.fallback_steps += 1;
+                    done.extend(self.decode_once()?);
+                    return Ok(done);
+                }
+            }
+        }
+
+        let step_time = t0.elapsed();
+        self.stats.decode_lat.record(step_time);
+        self.stats.decode_steps += 1;
+        self.stats.occupancy_sum += active as u64;
+        spec.steps += 1;
+
+        // Acceptance + emission, one token at a time so every finish
+        // condition truncates at exactly the token target-only decode
+        // would have stopped at.
+        let mut off = 0usize;
+        for (pi, &(slot, _)) in plans.iter().enumerate() {
+            let block = &verdicts[off..off + proposals[pi].len() + 1];
+            off += proposals[pi].len() + 1;
+            let emit = accept_longest_prefix(&proposals[pi], block);
+            spec.accepted += (emit.len() - 1) as u64;
+            let mut a = self.slots[slot].take().expect("planned slot is active");
+            a.timing.decode += step_time;
+            let mut finished = None;
+            for tok in emit {
+                a.generated.push(tok);
+                a.last = tok;
+                a.pos += 1;
+                spec.emitted += 1;
+                if let Some(reason) = self.finish_reason(&a) {
+                    finished = Some(reason);
+                    break;
+                }
+            }
+            match finished {
+                Some(reason) => done.push(self.retire(a, reason)),
+                None => self.slots[slot] = Some(a),
             }
         }
         Ok(done)
@@ -738,6 +965,176 @@ mod tests {
         assert_eq!(rs.len(), 1);
         assert_eq!(rs[0].finish_reason, FinishReason::Expired);
         assert_eq!(rs[0].tokens, vec![3, 4], "partial prefix survives expiry");
+    }
+
+    /// Satellite regression: `deadline_ms` bounds **total** time, not
+    /// just queue wait — an in-flight generation whose deadline passes
+    /// is stopped at the next engine step and answered with the prefix
+    /// it had produced.
+    #[test]
+    fn running_past_deadline_generations_stop_with_their_prefix() {
+        let mut e = engine(1);
+        e.submit(Request::greedy(1, vec![5, 6], 50).with_deadline(Duration::from_millis(20)))
+            .unwrap();
+        e.step().unwrap(); // admits + first token, well inside the deadline
+        e.step().unwrap(); // second token
+        std::thread::sleep(Duration::from_millis(60));
+        let rs = e.step().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].id, 1);
+        assert_eq!(rs[0].finish_reason, FinishReason::Expired);
+        // Mock chain from prompt [5,6]: 12, 13, ... — the prefix the
+        // two in-deadline steps produced rides on the expired reply.
+        assert_eq!(rs[0].tokens, vec![12, 13], "prefix survives running expiry");
+        assert_eq!(e.stats().expired, 1);
+        assert_eq!(e.stats().completed, 0, "expiry is not a completion");
+        assert!(!e.has_work(), "the slot was actually freed");
+    }
+
+    /// The tentpole property: for seeded prompts, every proposal depth
+    /// `k ∈ {1,2,4,8}`, preemption on and off, and both a perfectly
+    /// aligned draft (same digest → 100% acceptance) and an unrelated
+    /// one (~zero acceptance), speculative decode emits streams
+    /// bit-identical to plain target-only greedy decode — finish
+    /// reasons (length, stop token, KV capacity) included.
+    #[test]
+    fn speculative_decode_is_bit_identical_to_plain_greedy() {
+        const TARGET: u64 = 0xAB5EED;
+        let target = || DigestBackend::with_digest(TARGET, 2, 64, 256);
+
+        // Seeded request mix: varied budgets, one capacity-bound run,
+        // one stop-token truncation (probed from the greedy chain so it
+        // actually fires mid-stream).
+        let probe = {
+            let mut e = Engine::new(target(), EngineConfig::default());
+            e.submit(Request::greedy(2, vec![20, 21], 8)).unwrap();
+            e.run_to_completion(100).unwrap()[0].tokens[2]
+        };
+        let requests = || -> Vec<Request> {
+            let mut rs = vec![
+                Request::greedy(0, vec![1, 2, 3], 7),
+                Request::greedy(1, vec![9], 12),
+                Request::greedy(2, vec![20, 21], 8),
+                Request::greedy(3, vec![4, 4, 4], 100), // KV-capacity bound
+                Request::greedy(4, vec![7, 8], 5),
+            ];
+            rs[2].stop_token = Some(probe);
+            rs
+        };
+
+        let mut baseline: Vec<(u64, Vec<u32>, FinishReason)> = {
+            let mut e = Engine::new(target(), EngineConfig::default());
+            for r in requests() {
+                e.submit(r).unwrap();
+            }
+            e.run_to_completion(10_000)
+                .unwrap()
+                .into_iter()
+                .map(|r| (r.id, r.tokens, r.finish_reason))
+                .collect()
+        };
+        baseline.sort_by_key(|x| x.0);
+        assert!(
+            baseline.iter().any(|(_, _, f)| *f == FinishReason::Stop),
+            "probe stop token never fired — weak test"
+        );
+        assert!(
+            baseline.iter().any(|(_, _, f)| *f == FinishReason::Capacity),
+            "no capacity-bound request — weak test"
+        );
+
+        for draft_digest in [TARGET, 0xD00D] {
+            for k in [1usize, 2, 4, 8] {
+                for preemption in [false, true] {
+                    let mut e = Engine::new(
+                        target(),
+                        EngineConfig {
+                            preemption,
+                            ..EngineConfig::default()
+                        },
+                    );
+                    let mut draft = DigestBackend::with_digest(draft_digest, 2, 64, 256);
+                    let mut st = SpecStats::default();
+                    // Stagger submissions so a high-class arrival meets
+                    // a running low-class batch (preemption fires when
+                    // enabled); priorities must not change the tokens.
+                    let mut reqs = requests().into_iter();
+                    let mut out = Vec::new();
+                    for r in reqs.by_ref().take(2) {
+                        e.submit(r.with_priority(-2)).unwrap();
+                    }
+                    out.extend(e.step_speculative(&mut draft, k, &mut st).unwrap());
+                    for r in reqs {
+                        e.submit(r.with_priority(3)).unwrap();
+                    }
+                    let mut steps = 0;
+                    while e.has_work() && steps < 10_000 {
+                        out.extend(e.step_speculative(&mut draft, k, &mut st).unwrap());
+                        steps += 1;
+                    }
+                    let mut got: Vec<(u64, Vec<u32>, FinishReason)> = out
+                        .into_iter()
+                        .map(|r| (r.id, r.tokens, r.finish_reason))
+                        .collect();
+                    got.sort_by_key(|x| x.0);
+                    assert_eq!(
+                        got, baseline,
+                        "stream diverged: draft {draft_digest:#x}, k={k}, \
+                         preemption={preemption}"
+                    );
+                    assert_eq!(st.fallback_steps, 0, "all-greedy load fell back");
+                    assert!(st.steps > 0 && st.emitted > 0, "{st:?}");
+                    if draft_digest == TARGET {
+                        // A perfectly aligned draft is always accepted.
+                        assert_eq!(st.accepted, st.proposed, "{st:?}");
+                        assert!(
+                            st.emitted_per_step() > 1.0,
+                            "aligned draft never amortized a step: {st:?}"
+                        );
+                    }
+                    if preemption {
+                        assert!(
+                            e.stats().preemptions > 0,
+                            "staggered classes never preempted — weak test"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Sampled requests force plain decode: speculation is greedy-only,
+    /// and the fallback must leave the RNG-driven stream exactly as a
+    /// plain engine produces it.
+    #[test]
+    fn sampled_requests_fall_back_to_plain_decode() {
+        let run = |speculative: bool| -> (Vec<u32>, u64) {
+            let mut e = Engine::new(
+                DigestBackend::with_digest(0xCAFE, 2, 64, 256),
+                EngineConfig::default(),
+            );
+            let mut r = Request::greedy(1, vec![3, 1], 6);
+            r.temperature = 0.8;
+            r.top_k = 16;
+            e.submit(r).unwrap();
+            let mut st = SpecStats::default();
+            let mut out = Vec::new();
+            let mut steps = 0;
+            while e.has_work() && steps < 1_000 {
+                if speculative {
+                    let mut draft = DigestBackend::with_digest(0xBEEF, 2, 64, 256);
+                    out.extend(e.step_speculative(&mut draft, 4, &mut st).unwrap());
+                } else {
+                    out.extend(e.step().unwrap());
+                }
+                steps += 1;
+            }
+            (out.pop().unwrap().tokens, st.fallback_steps)
+        };
+        let (plain, _) = run(false);
+        let (spec, fallbacks) = run(true);
+        assert_eq!(spec, plain, "fallback changed a sampled stream");
+        assert!(fallbacks > 0, "sampled request never tripped the fallback");
     }
 
     #[test]

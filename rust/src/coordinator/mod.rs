@@ -16,7 +16,12 @@
 //!   sample → retire, with continuous slot refill;
 //! * [`multi`] — the multi-model coordinator: one engine per hosted
 //!   model, all drawing on a shared decode worker pool and one global
-//!   weight budget ([`MultiModelServer`]).
+//!   weight budget ([`MultiModelServer`]);
+//! * [`speculative`] — draft-proposes / target-verifies speculative
+//!   decoding across two co-resident models, with the bit-exact
+//!   greedy-equivalent acceptance rule.
+
+#![warn(missing_docs)]
 
 pub mod backend;
 pub mod batcher;
@@ -25,6 +30,7 @@ pub mod kv;
 pub mod multi;
 pub mod request;
 pub mod sampler;
+pub mod speculative;
 
 pub use backend::{
     digest_decode_next, digest_f32_entry, digest_prefill_next, digest_quant_entry,
@@ -37,3 +43,4 @@ pub use kv::KvMirror;
 pub use multi::{ModelSpec, MultiModelConfig, MultiModelServer};
 pub use request::{Request, Response, ResumeState, Timing, PRIORITY_MAX, PRIORITY_MIN};
 pub use sampler::{SampleCfg, Sampler};
+pub use speculative::{accept_longest_prefix, SpecConfig, SpecStats, SPEC_K_MAX};

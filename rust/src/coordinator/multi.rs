@@ -23,6 +23,8 @@
 //! when the field is omitted, and unknown names earn an error line.
 
 use super::engine::{Engine, EngineConfig};
+use super::request::Response;
+use super::speculative::{SpecConfig, SpecStats, SPEC_K_MAX};
 use crate::residency::{
     Policy, PrefetchConfig, PrefetchPool, PrefetchingDigestBackend, PrefetchingWeightSet,
     ResidencyLedger,
@@ -112,6 +114,14 @@ struct ModelEntry {
     engine: Engine<PrefetchingDigestBackend>,
 }
 
+/// Active speculation pairing: model indices plus the live counters.
+struct SpecState {
+    draft: usize,
+    target: usize,
+    k: usize,
+    stats: SpecStats,
+}
+
 /// N models, one port: per-model engines over a shared byte ledger and
 /// a shared decode worker pool. The TCP front end lives in
 /// [`crate::server::serve_multi`]; this type owns the engines and the
@@ -128,6 +138,8 @@ pub struct MultiModelServer {
     /// the same `sum of max(floor, reserve) <= budget` check as
     /// startup.
     floors: Vec<usize>,
+    /// Speculative decoding pairing, when `--speculate` is active.
+    spec: Option<SpecState>,
 }
 
 impl MultiModelServer {
@@ -250,7 +262,80 @@ impl MultiModelServer {
             entries,
             by_name,
             floors,
+            spec: None,
         })
+    }
+
+    /// Turn on speculative decoding (the `--speculate
+    /// draft=NAME,target=NAME,k=K` flag): requests routed to the
+    /// *target* model run [`Engine::step_speculative`] with the
+    /// *draft* model's backend proposing `k` greedy tokens per step;
+    /// every other model (including the draft's own request traffic)
+    /// keeps stepping plainly. Both names must be hosted and distinct,
+    /// `k` in `1..=`[`SPEC_K_MAX`].
+    pub fn enable_speculation(&mut self, cfg: &SpecConfig) -> Result<()> {
+        let draft = self.resolve(Some(cfg.draft.as_str()))?;
+        let target = self.resolve(Some(cfg.target.as_str()))?;
+        if draft == target {
+            return Err(Error::InvalidArg(
+                "--speculate: draft and target must be different models".into(),
+            ));
+        }
+        if cfg.k == 0 || cfg.k > SPEC_K_MAX {
+            return Err(Error::InvalidArg(format!(
+                "--speculate: k must be in 1..={SPEC_K_MAX}, got {}",
+                cfg.k
+            )));
+        }
+        self.spec = Some(SpecState {
+            draft,
+            target,
+            k: cfg.k,
+            stats: SpecStats::default(),
+        });
+        Ok(())
+    }
+
+    /// The active speculation pairing, if any: `(draft name, target
+    /// name, k, counters)` — the source of the `{"stats":true}` line's
+    /// `spec_*` family.
+    pub fn speculation(&self) -> Option<(&str, &str, usize, &SpecStats)> {
+        self.spec.as_ref().map(|s| {
+            (
+                self.entries[s.draft].name.as_str(),
+                self.entries[s.target].name.as_str(),
+                s.k,
+                &s.stats,
+            )
+        })
+    }
+
+    /// One engine step for model `index`, dispatching to the
+    /// speculative step when `index` is the configured speculation
+    /// target (the draft model's backend is borrowed for the proposal
+    /// phase; its own engine still serves its own traffic through
+    /// plain steps). This is what the serving loop calls instead of
+    /// `engine_mut(index).step()`.
+    pub fn step_model(&mut self, index: usize) -> Result<Vec<Response>> {
+        match &mut self.spec {
+            Some(s) if s.target == index => {
+                let (ti, di, k) = (s.target, s.draft, s.k);
+                // Split borrow: the target engine and the draft backend
+                // live in different `entries` cells (validated distinct
+                // at enable time).
+                let (target, draft) = if ti < di {
+                    let (lo, hi) = self.entries.split_at_mut(di);
+                    (&mut lo[ti], &mut hi[0])
+                } else {
+                    let (lo, hi) = self.entries.split_at_mut(ti);
+                    (&mut hi[0], &mut lo[di])
+                };
+                target
+                    .engine
+                    .step_speculative(draft.engine.backend_mut(), k, &mut s.stats)
+            }
+            _ => self.entries[index].engine.step(),
+        }
     }
 
     /// Hosted model count.
@@ -716,5 +801,210 @@ mod tests {
             out
         };
         assert_eq!(run(false), run(true), "QoS changed a token stream");
+    }
+
+    #[test]
+    fn enable_speculation_validates_names() {
+        let a = spec("draftee", 4, 40);
+        let b = spec("verifier", 4, 41);
+        let budget = total_bytes(&a) + total_bytes(&b);
+        let mut multi = MultiModelServer::new(
+            vec![a, b],
+            MultiModelConfig {
+                budget_bytes: budget,
+                ..MultiModelConfig::default()
+            },
+        )
+        .unwrap();
+        assert!(multi.speculation().is_none());
+
+        let err = multi
+            .enable_speculation(&SpecConfig {
+                draft: "ghost".into(),
+                target: "verifier".into(),
+                k: 4,
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown model"), "{err}");
+
+        // Same model both sides must be refused even when the config
+        // was built by hand rather than through `SpecConfig::parse`.
+        let err = multi
+            .enable_speculation(&SpecConfig {
+                draft: "verifier".into(),
+                target: "verifier".into(),
+                k: 4,
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("different"), "{err}");
+
+        let err = multi
+            .enable_speculation(&SpecConfig {
+                draft: "draftee".into(),
+                target: "verifier".into(),
+                k: 0,
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("k must be"), "{err}");
+        assert!(multi.speculation().is_none(), "failed enables leave it off");
+
+        multi
+            .enable_speculation(&SpecConfig {
+                draft: "draftee".into(),
+                target: "verifier".into(),
+                k: 4,
+            })
+            .unwrap();
+        let (d, t, k, stats) = multi.speculation().unwrap();
+        assert_eq!((d, t, k), ("draftee", "verifier", 4));
+        assert_eq!(stats.steps, 0);
+    }
+
+    /// The tentpole acceptance at the coordinator level: with
+    /// speculation on, the target model's streams are bit-identical to
+    /// the same multi-model serve without speculation (which PR 8
+    /// already pinned to isolated single-engine decode), the draft
+    /// model's own traffic is untouched, and the `spec_*` counters
+    /// account for every target token.
+    #[test]
+    fn speculative_multi_matches_plain_multi_streams() {
+        let run = |spec_on: bool| {
+            let d = spec("small", 4, 0x94);
+            let t = spec("big", 8, 0x95);
+            let budget = total_bytes(&d) + total_bytes(&t);
+            let mut multi = MultiModelServer::new(
+                vec![d, t],
+                MultiModelConfig {
+                    budget_bytes: budget,
+                    ..MultiModelConfig::default()
+                },
+            )
+            .unwrap();
+            if spec_on {
+                multi
+                    .enable_speculation(&SpecConfig::parse("draft=small,target=big,k=4").unwrap())
+                    .unwrap();
+            }
+            for i in 0..3u64 {
+                multi
+                    .engine_mut(1)
+                    .submit(Request::greedy(i, vec![7 + i as u32, 3], 8))
+                    .unwrap();
+                multi
+                    .engine_mut(0)
+                    .submit(Request::greedy(100 + i, vec![1, 5 + i as u32], 5))
+                    .unwrap();
+            }
+            let mut out = vec![Vec::new(), Vec::new()];
+            let mut steps = 0;
+            while multi.has_work() && steps < 10_000 {
+                for mi in 0..2 {
+                    for resp in multi.step_model(mi).unwrap() {
+                        out[mi].push((resp.id, resp.tokens));
+                    }
+                }
+                steps += 1;
+            }
+            for m in &mut out {
+                m.sort();
+            }
+            if spec_on {
+                let (_, _, _, st) = multi.speculation().unwrap();
+                assert!(st.steps > 0, "no speculative steps ran: {st:?}");
+                assert!(st.proposed > 0, "draft never proposed: {st:?}");
+                assert_eq!(st.fallback_steps, 0, "all-greedy load fell back: {st:?}");
+                let target_tokens: usize = out[1].iter().map(|(_, t)| t.len()).sum();
+                assert_eq!(
+                    st.emitted, target_tokens as u64,
+                    "every target token must come from a speculative step"
+                );
+                assert!(st.emitted >= st.steps, "a step emits at least one token");
+            }
+            out
+        };
+        assert_eq!(
+            run(false),
+            run(true),
+            "speculation changed a token stream"
+        );
+    }
+
+    /// The residency half of the tentpole (and the satellite ledger
+    /// test): a correlated draft+target burst — every speculative step
+    /// faults both models' weight sets in the same engine step — may
+    /// shed either model down **to** its reservation, never through
+    /// it, under a budget tight enough to force cross-model eviction.
+    #[test]
+    fn speculative_burst_never_sheds_either_model_below_reserve() {
+        let d = spec("small", 6, 0x96);
+        let t = spec("big", 6, 0x97);
+        let floor = |s: &ModelSpec| {
+            3 * s
+                .source
+                .layers()
+                .iter()
+                .map(|m| m.n_symbols)
+                .max()
+                .unwrap()
+        };
+        let (rd, rt) = (floor(&d), floor(&t));
+        // Tight: both reserves fit, the two full models do not.
+        let budget = (rd + rt).max((total_bytes(&d) + total_bytes(&t)) * 2 / 3);
+        let mut multi = MultiModelServer::new(
+            vec![d.with_qos(rd, 1.0), t.with_qos(rt, 1.0)],
+            MultiModelConfig {
+                budget_bytes: budget,
+                ..MultiModelConfig::default()
+            },
+        )
+        .unwrap();
+        multi
+            .enable_speculation(&SpecConfig::parse("draft=small,target=big,k=4").unwrap())
+            .unwrap();
+        for i in 0..4u64 {
+            multi
+                .engine_mut(1)
+                .submit(Request::greedy(i, vec![2 + i as u32, 9], 10))
+                .unwrap();
+            multi
+                .engine_mut(0)
+                .submit(Request::greedy(100 + i, vec![6, 1 + i as u32], 6))
+                .unwrap();
+        }
+        let mut warmed = [false, false];
+        let mut steps = 0;
+        while multi.has_work() && steps < 10_000 {
+            for mi in 0..2 {
+                multi.step_model(mi).unwrap();
+            }
+            // Once a model's working set has grown past its reserve,
+            // peer pressure must never push it back below.
+            for (mi, reserve) in [(0usize, rd), (1usize, rt)] {
+                let used = multi.model_counters(mi).used_bytes;
+                if warmed[mi] {
+                    assert!(
+                        used >= reserve,
+                        "model {mi} shed below reserve at step {steps}: \
+                         used {used} < reserved {reserve}"
+                    );
+                } else {
+                    warmed[mi] = used >= reserve;
+                }
+            }
+            steps += 1;
+        }
+        assert!(warmed[0] && warmed[1], "burst never warmed both models");
+        let (_, _, _, st) = multi.speculation().unwrap();
+        assert!(st.steps > 0 && st.emitted > 0, "{st:?}");
+        let lc = multi.ledger().counters();
+        assert!(lc.peak_used_bytes <= lc.budget_bytes, "{lc:?}");
+        // The budget was actually contested: at least one direction of
+        // cross-model shedding fired during the burst.
+        let q0 = multi.model_counters(0);
+        let q1 = multi.model_counters(1);
+        assert!(
+            q0.shed_by_peers + q1.shed_by_peers > 0,
+            "budget never contested — loosen it: {q0:?} {q1:?}"
+        );
     }
 }

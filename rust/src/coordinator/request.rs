@@ -28,10 +28,13 @@ pub struct Request {
     /// the normal interactive class, negatives are batch traffic.
     /// Bounded to `[PRIORITY_MIN, PRIORITY_MAX]` at the protocol edge.
     pub priority: i32,
-    /// Queue-side deadline relative to `enqueued_at`. A request still
-    /// *queued* past its deadline is answered with an expired error
-    /// instead of running dead work; once admitted it runs to
-    /// completion.
+    /// Deadline relative to `enqueued_at`, covering queue wait **and**
+    /// generation. A request still *queued* past its deadline is
+    /// answered with an expired error instead of running dead work; a
+    /// request already *generating* is stopped at the next engine step
+    /// and answered with the prefix it had produced. (Preemption
+    /// restarts `enqueued_at`, so a checkpointed victim's deadline
+    /// clock restarts with its re-queued wait.)
     pub deadline: Option<Duration>,
     /// Checkpoint of a preempted generation; `None` for fresh
     /// requests. Boxed: the common path should not pay its size.
@@ -121,8 +124,9 @@ pub enum FinishReason {
     Stop,
     /// Ran out of KV-cache capacity.
     Capacity,
-    /// Deadline passed while still queued; never ran (any tokens in
-    /// the response are a preempted prefix).
+    /// Deadline passed — while still queued (tokens are then an empty
+    /// or preempted prefix) or mid-generation (tokens are the prefix
+    /// generated before the engine stopped it).
     Expired,
 }
 

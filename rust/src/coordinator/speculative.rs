@@ -1,0 +1,217 @@
+//! Speculative decoding across two co-resident models.
+//!
+//! A small **draft** model proposes `k` greedy tokens per speculating
+//! slot; the **target** model verifies the whole proposal block in one
+//! batched evaluation ([`crate::coordinator::Backend::argmax_rows`])
+//! and accepts the longest prefix that matches its own argmax chain.
+//! Acceptance is **bit-exact greedy-equivalent**: the emitted stream is
+//! identical, token for token, to what target-only greedy decode would
+//! have produced — speculation changes only how many target weight
+//! passes each token costs, never the tokens.
+//!
+//! ## The acceptance rule
+//!
+//! With target state (last token `L`, next write position `P`) and
+//! draft proposals `d₁ … d_k` (the draft's own greedy chain seeded from
+//! `(L, P)`), the target evaluates `k + 1` rows in one batched call:
+//!
+//! ```text
+//! row 0: (L,   P)      → v₀        (the target's own next token)
+//! row i: (dᵢ,  P + i)  → vᵢ        for i = 1 … k
+//! ```
+//!
+//! Emission walks the verdicts: emit `v₀`; if `d₁ = v₀` the row-1 input
+//! was the true next token, so `v₁` is the true token after it — emit it
+//! and continue; the first mismatch `dᵢ ≠ vᵢ₋₁` stops the walk *after*
+//! emitting the correction `vᵢ₋₁`. If all `k` proposals match, the
+//! bonus verdict `v_k` is emitted too. By induction every emitted token
+//! equals the target-only greedy token at its position, and each
+//! speculative step emits between 1 and `k + 1` tokens per slot.
+//!
+//! [`accept_longest_prefix`] implements exactly that walk;
+//! [`crate::coordinator::Engine::step_speculative`] wires it into the
+//! continuous batcher (per-token finish checks included, so stop
+//! tokens, length budgets, and KV capacity truncate the emission at
+//! precisely the token target-only decode would have stopped at).
+
+use crate::{Error, Result};
+
+/// Upper bound on the per-step proposal depth `k` (a draft chain this
+/// long would be all misprediction long before the cap matters).
+pub const SPEC_K_MAX: usize = 64;
+
+/// Parsed `--speculate draft=NAME,target=NAME,k=K` configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecConfig {
+    /// Routing name of the proposing (draft) model.
+    pub draft: String,
+    /// Routing name of the verifying (target) model.
+    pub target: String,
+    /// Proposal depth: draft tokens proposed per speculative step.
+    pub k: usize,
+}
+
+impl SpecConfig {
+    /// Parse the CLI flag value: comma-separated `draft=NAME`,
+    /// `target=NAME`, `k=K` (each exactly once, any order).
+    pub fn parse(value: &str) -> Result<Self> {
+        let (mut draft, mut target, mut k) = (None, None, None);
+        for part in value.split(',') {
+            let (key, val) = part.split_once('=').ok_or_else(|| {
+                Error::InvalidArg(format!(
+                    "--speculate expects draft=NAME,target=NAME,k=K, got {part:?}"
+                ))
+            })?;
+            let slot = match key {
+                "draft" => &mut draft,
+                "target" => &mut target,
+                "k" => &mut k,
+                other => {
+                    return Err(Error::InvalidArg(format!(
+                        "--speculate: unknown key {other:?} (expected draft, target, k)"
+                    )))
+                }
+            };
+            if slot.replace(val.to_string()).is_some() {
+                return Err(Error::InvalidArg(format!(
+                    "--speculate: duplicate key {key:?}"
+                )));
+            }
+        }
+        let draft = draft
+            .ok_or_else(|| Error::InvalidArg("--speculate: missing draft=NAME".into()))?;
+        let target = target
+            .ok_or_else(|| Error::InvalidArg("--speculate: missing target=NAME".into()))?;
+        let k_str =
+            k.ok_or_else(|| Error::InvalidArg("--speculate: missing k=K".into()))?;
+        let k: usize = k_str.parse().map_err(|_| {
+            Error::InvalidArg(format!("--speculate: k must be a positive integer, got {k_str:?}"))
+        })?;
+        if k == 0 || k > SPEC_K_MAX {
+            return Err(Error::InvalidArg(format!(
+                "--speculate: k must be in 1..={SPEC_K_MAX}, got {k}"
+            )));
+        }
+        if draft == target {
+            return Err(Error::InvalidArg(
+                "--speculate: draft and target must be different models".into(),
+            ));
+        }
+        Ok(SpecConfig { draft, target, k })
+    }
+}
+
+/// Counters for the speculative arm, surfaced as the `spec_*` family of
+/// the server's `{"stats":true}` line.
+#[derive(Debug, Clone, Default)]
+pub struct SpecStats {
+    /// Speculative verify steps executed (each: one draft proposal
+    /// chain + one batched target verification).
+    pub steps: u64,
+    /// Draft tokens proposed.
+    pub proposed: u64,
+    /// Proposed tokens the target's argmax confirmed.
+    pub accepted: u64,
+    /// Tokens actually emitted by speculative steps (accepted prefixes
+    /// plus the per-slot correction/bonus token, truncated at finish
+    /// conditions exactly like target-only decode).
+    pub emitted: u64,
+    /// Steps that fell back to plain decode (a sampled request in the
+    /// batch, or a KV-bound backend declining stateless verification).
+    pub fallback_steps: u64,
+}
+
+impl SpecStats {
+    /// Fraction of proposed draft tokens the target accepted.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+
+    /// Mean tokens emitted per speculative step and slot — the
+    /// headline speedup knob (target weight passes per token is its
+    /// reciprocal).
+    pub fn emitted_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.emitted as f64 / self.steps as f64
+        }
+    }
+}
+
+/// The acceptance walk from the module docs: given the draft's
+/// `proposals` (`d₁ … d_k`) and the target's `verdicts` (`v₀ … v_k`,
+/// one more than proposals), return the emitted tokens — the longest
+/// verified prefix plus the correction (on first mismatch) or the
+/// bonus verdict (all matched). Always emits at least one token.
+pub fn accept_longest_prefix(proposals: &[u32], verdicts: &[u32]) -> Vec<u32> {
+    debug_assert_eq!(verdicts.len(), proposals.len() + 1);
+    let mut out = Vec::with_capacity(verdicts.len());
+    for (i, &v) in verdicts.iter().enumerate() {
+        out.push(v);
+        if proposals.get(i).copied() != Some(v) {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_any_key_order() {
+        let c = SpecConfig::parse("draft=small,target=big,k=4").unwrap();
+        assert_eq!(
+            c,
+            SpecConfig {
+                draft: "small".into(),
+                target: "big".into(),
+                k: 4
+            }
+        );
+        assert_eq!(SpecConfig::parse("k=1,draft=a,target=b").unwrap().k, 1);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_values() {
+        for bad in [
+            "",
+            "draft=a",
+            "draft=a,target=b",
+            "draft=a,target=b,k=0",
+            "draft=a,target=b,k=-1",
+            "draft=a,target=b,k=nope",
+            "draft=a,target=b,k=65",
+            "draft=a,target=a,k=2",
+            "draft=a,draft=b,target=c,k=2",
+            "draft=a,target=b,k=2,zz=1",
+            "draftb,k=2",
+        ] {
+            assert!(SpecConfig::parse(bad).is_err(), "must reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn acceptance_walk_matches_the_rule() {
+        // All proposals match: accepted prefix + bonus verdict.
+        assert_eq!(
+            accept_longest_prefix(&[5, 6, 7], &[5, 6, 7, 8]),
+            vec![5, 6, 7, 8]
+        );
+        // First proposal wrong: single corrected token.
+        assert_eq!(accept_longest_prefix(&[9, 6, 7], &[5, 6, 7, 8]), vec![5]);
+        // Mismatch mid-chain: matched prefix + the correction.
+        assert_eq!(
+            accept_longest_prefix(&[5, 9, 7], &[5, 6, 7, 8]),
+            vec![5, 6]
+        );
+        // k = 0 (no proposals): plain greedy, one token.
+        assert_eq!(accept_longest_prefix(&[], &[3]), vec![3]);
+    }
+}

@@ -22,6 +22,7 @@
 //!                     | --model name=path[,reserve-mb=N][,weight=W] [--model ...]
 //!                     [--port 7433] [--weight-budget-mb M]
 //!                     [--decode-ahead N] [--prefetch-workers W]
+//!                     [--speculate draft=NAME,target=NAME,k=K]
 //! entrollm latency    [--params 3.8e9] [--prefill-tokens 512]
 //!                     [--layers L --prefetch-layers K]
 //! ```
@@ -46,7 +47,11 @@
 //! name=path,reserve-mb=N,weight=W` guarantees the model `N` MiB of
 //! residency that peers can never reclaim, and lets a higher `weight`
 //! shed hotter lower-weight peers; startup rejects reserves that sum
-//! past the budget. See `docs/SERVING.md`.
+//! past the budget. `--speculate draft=NAME,target=NAME,k=K` pairs two
+//! hosted models for speculative decoding: the draft proposes `k`
+//! greedy tokens per step, the target verifies them in one batched
+//! pass — the target's streams stay bit-identical to target-only
+//! decode. See `docs/SERVING.md`.
 
 use entrollm::bench::{fmt_bytes, fmt_secs};
 use entrollm::cli::Args;
@@ -144,9 +149,16 @@ commands:
                 running generation and resume it bit-identically later
                 (default on), --aging-ms N promotes a waiting request
                 one class per N ms so low classes never starve (0
-                disables, default 1000); on a multi-model host the
-                admin line {"reserve":{model:mb}} re-tunes residency
-                reservations live under startup's validation
+                disables, default 1000; a deadline also stops an
+                already-running generation at the next engine step,
+                answering with the generated prefix); on a multi-model
+                host the admin line {"reserve":{model:mb}} re-tunes
+                residency reservations live under startup's validation,
+                and --speculate draft=NAME,target=NAME,k=K turns on
+                speculative decoding between two hosted models (draft
+                proposes k greedy tokens/step, target verifies in one
+                batched pass; bit-identical to target-only decode;
+                spec_* fields join the stats line)
   latency       Table II-style latency model for an edge profile,
                 including streaming (layer-ahead) first-token estimates
                 and residency fault-in costs (serial and decode-ahead
@@ -826,6 +838,14 @@ fn serve_multi_models(
         decode_ahead,
         multi.pool().workers(),
     );
+    if let Some(spec) = args.flags.get("speculate") {
+        multi.enable_speculation(&entrollm::coordinator::SpecConfig::parse(spec)?)?;
+        let (draft, target, k, _) = multi.speculation().expect("just enabled");
+        println!(
+            "speculative decoding: draft {draft} proposes k={k} tokens/step, \
+             target {target} verifies (greedy bit-exact)"
+        );
+    }
     for i in 0..multi.n_models() {
         let q = multi.model_counters(i);
         let qos = if q.reserved_bytes > 0 || q.weight != 1.0 {
@@ -861,6 +881,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let port: u16 = args.opt_parse("port", 7433)?;
     if let Some(specs) = multi_model_specs(args)? {
         return serve_multi_models(args, specs, port);
+    }
+    if args.flags.contains_key("speculate") {
+        return Err(Error::InvalidArg(
+            "--speculate pairs two co-resident models — host both with repeated \
+             --elm or --model name=path"
+                .into(),
+        ));
     }
     let cfg = serve_config(args)?;
     let ecfg = engine_config(args)?;

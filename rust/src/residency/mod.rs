@@ -91,6 +91,8 @@
 //! # Ok::<(), entrollm::Error>(())
 //! ```
 
+#![warn(missing_docs)]
+
 mod cache;
 pub mod ledger;
 pub mod prefetch;

@@ -1151,6 +1151,22 @@ impl Backend for PrefetchingDigestBackend {
     fn prefetch(&self) -> Option<PrefetchCounters> {
         Some(self.weights.prefetch_counters())
     }
+
+    fn argmax_rows(&mut self, tokens: &[u32], pos: &[u32]) -> Result<Option<Vec<u32>>> {
+        self.steps += 1;
+        // One full weight pass per verification/proposal block, with
+        // decode-ahead workers racing the digest fold just like a plain
+        // decode step — speculative bursts stress the shared ledger
+        // with the same access pattern real decode traffic produces.
+        let digest = self.weights.digest()?;
+        Ok(Some(
+            tokens
+                .iter()
+                .zip(pos)
+                .map(|(&t, &p)| digest_decode_next(digest, t, p, self.cfg.vocab) as u32)
+                .collect(),
+        ))
+    }
 }
 
 #[cfg(test)]

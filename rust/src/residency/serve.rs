@@ -206,6 +206,21 @@ impl Backend for ResidentDigestBackend {
     fn residency(&self) -> Option<CacheCounters> {
         Some(self.weights.counters())
     }
+
+    fn argmax_rows(&mut self, tokens: &[u32], pos: &[u32]) -> Result<Option<Vec<u32>>> {
+        self.steps += 1;
+        // A verification/proposal block costs one full weight pass,
+        // exactly like a decode step — speculative bursts therefore
+        // fault and evict through the cache like real decode traffic.
+        let digest = self.weights.digest()?;
+        Ok(Some(
+            tokens
+                .iter()
+                .zip(pos)
+                .map(|(&t, &p)| digest_decode_next(digest, t, p, self.cfg.vocab) as u32)
+                .collect(),
+        ))
+    }
 }
 
 #[cfg(test)]

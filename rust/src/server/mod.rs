@@ -199,14 +199,16 @@ fn shed_line(msg: &str) -> String {
     json::obj(vec![("error", json::s(msg)), ("shed", Value::Bool(true))]).to_json()
 }
 
-/// The reply for a request whose deadline passed while it was still
-/// queued (`"expired": true`): it never ran to completion — any tokens
-/// on the line are a preempted prefix — so clients distinguish it from
-/// protocol errors (no marker) and load shedding (`"shed": true`).
+/// The reply for a request whose deadline passed before it finished —
+/// while still queued or mid-generation (`"expired": true`). It never
+/// ran to completion — any tokens on the line are the prefix generated
+/// (or checkpointed by preemption) before the deadline hit — so clients
+/// distinguish it from protocol errors (no marker) and load shedding
+/// (`"shed": true`).
 fn expired_line(resp: &Response) -> String {
     json::obj(vec![
         ("id", json::num(resp.id as f64)),
-        ("error", json::s("deadline expired while queued")),
+        ("error", json::s("deadline expired")),
         ("expired", Value::Bool(true)),
         ("text", json::s(&ByteTokenizer.decode(&resp.tokens))),
         ("tokens", json::num(resp.tokens.len() as f64)),
@@ -414,7 +416,7 @@ fn multi_stats_fields(multi: &MultiModelServer) -> Vec<(&'static str, Value)> {
         occupancy_sum as f64 / decode_steps as f64
     };
     let ledger = multi.ledger().counters();
-    vec![
+    let mut fields = vec![
         ("completed", json::num(completed as f64)),
         ("tokens", json::num(tokens as f64)),
         ("decode_steps", json::num(decode_steps as f64)),
@@ -437,7 +439,22 @@ fn multi_stats_fields(multi: &MultiModelServer) -> Vec<(&'static str, Value)> {
             json::num(ledger.reserved_bytes as f64),
         ),
         ("models", json::arr(models)),
-    ]
+    ];
+    if let Some((draft, target, k, st)) = multi.speculation() {
+        fields.extend([
+            ("spec_draft", json::s(draft)),
+            ("spec_target", json::s(target)),
+            ("spec_k", json::num(k as f64)),
+            ("spec_steps", json::num(st.steps as f64)),
+            ("spec_proposed", json::num(st.proposed as f64)),
+            ("spec_accepted", json::num(st.accepted as f64)),
+            ("spec_emitted", json::num(st.emitted as f64)),
+            ("spec_fallback_steps", json::num(st.fallback_steps as f64)),
+            ("spec_acceptance_rate", json::num(st.acceptance_rate())),
+            ("spec_emitted_per_step", json::num(st.emitted_per_step())),
+        ]);
+    }
+    fields
 }
 
 /// Classify one complete protocol line: the `{"stats": true}` admin
@@ -708,7 +725,7 @@ pub fn serve_multi_with(
                 continue;
             }
             idle = false;
-            for resp in multi.engine_mut(mi).step()? {
+            for resp in multi.step_model(mi)? {
                 served += 1;
                 route_reply_multi(&mut waiters, mi, &resp);
             }
@@ -735,7 +752,7 @@ pub fn serve_multi_with(
             if !multi.engine(mi).has_work() {
                 continue;
             }
-            for resp in multi.engine_mut(mi).step()? {
+            for resp in multi.step_model(mi)? {
                 served += 1;
                 route_reply_multi(&mut waiters, mi, &resp);
             }

@@ -1,0 +1,168 @@
+//! In-tree documentation link checker: every *relative* markdown link
+//! in `README.md` and `docs/*.md` must point at a file that exists in
+//! the checkout, and every `#anchor` must match a heading in its
+//! target file. No network: external (`http://`, `https://`,
+//! `mailto:`) links are deliberately out of scope — CI must not fetch.
+//!
+//! This is the checker the CI `docs` job runs
+//! (`cargo test --test doc_links`); it also runs under plain
+//! `cargo test`, so a dangling link fails locally before it ships.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Repository root: the crate lives in `rust/`, docs one level up.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .to_path_buf()
+}
+
+/// The documentation set under check: the README plus every markdown
+/// file in `docs/`.
+fn doc_files() -> Vec<PathBuf> {
+    let root = repo_root();
+    let mut files = vec![root.join("README.md")];
+    let docs = root.join("docs");
+    let mut entries: Vec<_> = fs::read_dir(&docs)
+        .unwrap_or_else(|e| panic!("read {}: {e}", docs.display()))
+        .map(|e| e.expect("readable dir entry").path())
+        .filter(|p| p.extension().is_some_and(|x| x == "md"))
+        .collect();
+    entries.sort();
+    files.extend(entries);
+    files
+}
+
+/// Strip fenced code blocks (``` ... ```): shell comments inside
+/// fences look like headings, and fenced text can contain `](`.
+fn without_code_fences(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    let mut fenced = false;
+    for line in text.lines() {
+        if line.trim_start().starts_with("```") {
+            fenced = !fenced;
+            continue;
+        }
+        if !fenced {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Extract inline markdown link targets: every `](target)`.
+fn link_targets(text: &str) -> Vec<String> {
+    let mut targets = Vec::new();
+    let bytes = text.as_bytes();
+    let mut i = 0;
+    while let Some(j) = text[i..].find("](") {
+        let start = i + j + 2;
+        let Some(len) = text[start..].find(')') else {
+            break;
+        };
+        if bytes[start..start + len].iter().all(|b| !b.is_ascii_whitespace()) {
+            targets.push(text[start..start + len].to_string());
+        }
+        i = start + len + 1;
+    }
+    targets
+}
+
+/// GitHub-style anchor slug: lowercase, alphanumerics / `-` / `_`
+/// kept, spaces become hyphens, everything else dropped.
+fn slug(heading: &str) -> String {
+    heading
+        .trim()
+        .chars()
+        .filter_map(|c| match c {
+            ' ' => Some('-'),
+            '-' | '_' => Some(c),
+            c if c.is_ascii_alphanumeric() => Some(c.to_ascii_lowercase()),
+            _ => None,
+        })
+        .collect()
+}
+
+/// All heading slugs of a markdown file (ATX headings outside fences).
+fn heading_slugs(text: &str) -> Vec<String> {
+    without_code_fences(text)
+        .lines()
+        .filter_map(|l| {
+            let h = l.trim_start().trim_start_matches('#');
+            (h.len() < l.trim_start().len()).then(|| slug(h))
+        })
+        .collect()
+}
+
+fn is_external(target: &str) -> bool {
+    ["http://", "https://", "mailto:"].iter().any(|p| target.starts_with(p))
+}
+
+#[test]
+fn every_relative_doc_link_resolves() {
+    let mut checked = 0usize;
+    let mut errors = Vec::new();
+    for file in doc_files() {
+        let text = fs::read_to_string(&file)
+            .unwrap_or_else(|e| panic!("read {}: {e}", file.display()));
+        let dir = file.parent().expect("doc file has a parent directory");
+        for target in link_targets(&without_code_fences(&text)) {
+            if is_external(&target) || target.is_empty() {
+                continue;
+            }
+            checked += 1;
+            let (path_part, anchor) = match target.split_once('#') {
+                Some((p, a)) => (p, Some(a.to_string())),
+                None => (target.as_str(), None),
+            };
+            // Resolve the file half relative to the linking document.
+            let linked = if path_part.is_empty() {
+                file.clone()
+            } else {
+                let resolved = dir.join(path_part);
+                if !resolved.is_file() {
+                    errors.push(format!(
+                        "{}: link '{target}' -> missing file {}",
+                        file.display(),
+                        resolved.display()
+                    ));
+                    continue;
+                }
+                resolved
+            };
+            // Resolve the anchor half against the target's headings.
+            if let Some(anchor) = anchor {
+                let linked_text = fs::read_to_string(&linked)
+                    .unwrap_or_else(|e| panic!("read {}: {e}", linked.display()));
+                if !heading_slugs(&linked_text).contains(&anchor) {
+                    errors.push(format!(
+                        "{}: link '{target}' -> no heading '#{anchor}' in {}",
+                        file.display(),
+                        linked.display()
+                    ));
+                }
+            }
+        }
+    }
+    assert!(errors.is_empty(), "dangling doc links:\n{}", errors.join("\n"));
+    // The docs genuinely cross-link; an empty scan means the extractor
+    // broke, not that the docs went linkless.
+    assert!(checked >= 8, "only {checked} relative links found — extractor regressed?");
+}
+
+#[test]
+fn architecture_map_stays_in_the_doc_set() {
+    // ARCHITECTURE.md is the subsystem map this crate's docs hang off;
+    // make its presence (and the README's pointer to it) explicit so a
+    // doc reshuffle cannot silently drop either.
+    let root = repo_root();
+    assert!(root.join("docs/ARCHITECTURE.md").is_file());
+    let readme = fs::read_to_string(root.join("README.md")).expect("read README.md");
+    assert!(
+        readme.contains("docs/ARCHITECTURE.md"),
+        "README.md no longer links the architecture map"
+    );
+}
